@@ -1,0 +1,72 @@
+//! End-to-end driver (DESIGN.md §7): the full system on a real workload.
+//!
+//!     make artifacts && cargo run --release --example e2e_mnist
+//!
+//! Trains the paper's MNIST-DNN (784-200-100-10, 178k parameters) for a
+//! few hundred synchronous data-parallel steps across 4 ranks — rank-0
+//! scatter → per-rank PJRT execution of the Pallas-backed AOT artifact →
+//! per-step weight-averaging all-reduce — and logs the loss curve plus the
+//! compute/communication split. This is the run recorded in
+//! EXPERIMENTS.md §End-to-end.
+
+use std::sync::Arc;
+
+use dtf::coordinator::{run_training, TrainConfig};
+use dtf::mpi::NetProfile;
+use dtf::runtime::Manifest;
+
+fn main() -> dtf::Result<()> {
+    let manifest = Arc::new(Manifest::load(Manifest::default_dir())?);
+    let ranks = 4;
+
+    // 0.35 × 60000 = 21000 samples → 82 steps/epoch/rank at batch 64;
+    // 4 epochs ≈ 330 synchronous steps.
+    let mut cfg = TrainConfig::new("mnist_dnn")
+        .with_epochs(4)
+        .with_lr(0.4)
+        .with_scale(0.35);
+    cfg.eval_every = 1;
+    cfg.verbose = true;
+
+    let t0 = std::time::Instant::now();
+    let report = run_training(cfg, manifest, ranks, NetProfile::haswell_cluster())?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n=== e2e_mnist: {} ranks, {} steps total ===", ranks,
+        report.per_rank.iter().map(|r| r.steps).sum::<u64>());
+    println!("loss curve:");
+    for (e, l) in report.losses().iter().enumerate() {
+        let bar = "#".repeat((l * 25.0) as usize);
+        println!("  epoch {e}: {l:.4} {bar}");
+    }
+    for r in report.per_rank.iter().filter(|r| !r.died) {
+        if !r.evals.is_empty() {
+            println!(
+                "  rank {} evals: {:?}",
+                r.world_rank,
+                r.evals
+                    .iter()
+                    .map(|e| format!("{:.1}%", e.accuracy * 100.0))
+                    .collect::<Vec<_>>()
+            );
+            break;
+        }
+    }
+    println!(
+        "wall {:.1}s | virtual train {:.3}s | compute/comm = {:.0}%/{:.0}%",
+        wall,
+        report.train_makespan_s(),
+        (1.0 - report.comm_fraction()) * 100.0,
+        report.comm_fraction() * 100.0
+    );
+
+    let losses = report.losses();
+    assert!(
+        losses.last().unwrap() < &(losses.first().unwrap() * 0.6),
+        "loss must fall substantially: {losses:?}"
+    );
+    let acc = report.final_eval().map(|e| e.accuracy).unwrap_or(0.0);
+    assert!(acc > 0.85, "10-class blob-MNIST should be easy: {acc}");
+    println!("e2e_mnist OK (final accuracy {:.1}%)", acc * 100.0);
+    Ok(())
+}

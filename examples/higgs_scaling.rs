@@ -1,0 +1,43 @@
+//! The paper's §4.6 headline at cluster scale: HIGGS-DNN (28-1024-2) on
+//! 20 → 80 simulated cores, reproducing the "2.6x speedup at 80 vs 20"
+//! claim with the calibrated virtual-time simulator.
+//!
+//!     make artifacts && cargo run --release --example higgs_scaling
+//!
+//! Compute time per sample is calibrated on this host with real PJRT
+//! execution; the collectives run as real ring/recursive-doubling message
+//! passing whose costs come from the Haswell-cluster fabric model.
+
+use std::sync::Arc;
+
+use dtf::figures::{figure, runner};
+use dtf::mpi::NetProfile;
+use dtf::runtime::Manifest;
+
+fn main() -> dtf::Result<()> {
+    let manifest = Arc::new(Manifest::load(Manifest::default_dir())?);
+    let spec = figure("higgs").expect("higgs figure spec");
+
+    println!("calibrating higgs_dnn step time on this host...");
+    let result = runner::run_figure(
+        spec,
+        &manifest,
+        &NetProfile::haswell_cluster(),
+        1,
+        None,
+    )?;
+    print!("{}", result.render());
+
+    let s80 = result
+        .points
+        .iter()
+        .find(|p| p.p == 80)
+        .expect("80-core point")
+        .speedup;
+    assert!(
+        s80 > 1.5 && s80 < 4.0,
+        "80-core speedup should be in the paper's regime (~2.6x): {s80:.2}"
+    );
+    println!("higgs_scaling OK ({s80:.2}x @ 80 vs paper's 2.6x)");
+    Ok(())
+}

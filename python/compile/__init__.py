@@ -1,0 +1,7 @@
+"""Build-time Python package: JAX model (L2) + Pallas kernels (L1) + AOT.
+
+Nothing in here runs at serving/training time — ``make artifacts`` invokes
+``python -m compile.aot`` once, which writes ``artifacts/*.hlo.txt`` and
+``artifacts/manifest.json``; the Rust coordinator is self-contained after
+that.
+"""

@@ -1,0 +1,179 @@
+"""Network architectures from Table 1 of the paper.
+
+| Data set | Algo | Network Architecture        |
+|----------|------|-----------------------------|
+| Adult    | DNN  | 123-200-100-2               |
+| Acoustic | DNN  | 50-200-100-3                |
+| MNIST    | DNN  | 784-200-100-10              |
+| MNIST    | CNN  | 32,64 (CONV), 1024 (FULL)   |
+| CIFAR10  | DNN  | 3072-200-100-10             |
+| CIFAR10  | CNN  | 32,64 (CONV), 1024 (FULL)   |
+| HIGGS    | DNN  | 28-1024-2                   |
+
+CNNs use 5x5 conv windows, stride 1, ReLU, each followed by 2x2 max-pooling;
+then fully-connected sigmoid layers and a softmax output (paper section 4.1).
+DNN hidden layers are sigmoid (the paper's FC layers are "sigmoid neurons").
+
+This module is the single source of truth for the shapes: aot.py embeds the
+specs into artifacts/manifest.json, which the Rust side (model/spec.rs)
+parses, so the two languages can never disagree about parameter layouts.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class MlpSpec:
+    """A fully-connected network: layer_sizes[0] inputs .. [-1] classes."""
+
+    name: str
+    layer_sizes: Tuple[int, ...]  # e.g. (784, 200, 100, 10)
+    n_train: int  # paper's training-set size (drives the figure workloads)
+    n_test: int
+    hidden_activation: str = "sigmoid"
+
+    @property
+    def kind(self) -> str:
+        return "mlp"
+
+    @property
+    def in_dim(self) -> int:
+        return self.layer_sizes[0]
+
+    @property
+    def n_classes(self) -> int:
+        return self.layer_sizes[-1]
+
+    def param_shapes(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Ordered (name, shape) pairs; this order IS the ABI with Rust."""
+        out = []
+        for i, (fan_in, fan_out) in enumerate(
+            zip(self.layer_sizes[:-1], self.layer_sizes[1:])
+        ):
+            out.append((f"w{i}", (fan_in, fan_out)))
+            out.append((f"b{i}", (fan_out,)))
+        return out
+
+    def flops_per_sample(self) -> int:
+        """2*K*N multiply-adds per dense layer, fwd+bwd ~ 3x fwd."""
+        fwd = sum(
+            2 * a * b for a, b in zip(self.layer_sizes[:-1], self.layer_sizes[1:])
+        )
+        return 3 * fwd
+
+    def n_params(self) -> int:
+        return sum(
+            a * b + b for a, b in zip(self.layer_sizes[:-1], self.layer_sizes[1:])
+        )
+
+
+@dataclass(frozen=True)
+class CnnSpec:
+    """Paper-style CNN: [conv5x5+ReLU+maxpool2x2]* then FC sigmoid, softmax."""
+
+    name: str
+    height: int
+    width: int
+    channels: int
+    conv_channels: Tuple[int, ...]  # (32, 64)
+    fc_size: int  # 1024
+    n_classes: int
+    n_train: int
+    n_test: int
+
+    @property
+    def kind(self) -> str:
+        return "cnn"
+
+    @property
+    def in_dim(self) -> int:
+        return self.height * self.width * self.channels
+
+    def spatial_after_convs(self) -> Tuple[int, int]:
+        h, w = self.height, self.width
+        for _ in self.conv_channels:
+            h, w = h // 2, w // 2  # SAME conv keeps H,W; pool halves
+        return h, w
+
+    def flat_dim(self) -> int:
+        h, w = self.spatial_after_convs()
+        return h * w * self.conv_channels[-1]
+
+    def param_shapes(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        out = []
+        cin = self.channels
+        for i, cout in enumerate(self.conv_channels):
+            out.append((f"k{i}", (5, 5, cin, cout)))  # HWIO
+            out.append((f"kb{i}", (cout,)))
+            cin = cout
+        out.append(("w_fc", (self.flat_dim(), self.fc_size)))
+        out.append(("b_fc", (self.fc_size,)))
+        out.append(("w_out", (self.fc_size, self.n_classes)))
+        out.append(("b_out", (self.n_classes,)))
+        return out
+
+    def flops_per_sample(self) -> int:
+        h, w, cin = self.height, self.width, self.channels
+        fwd = 0
+        for cout in self.conv_channels:
+            fwd += 2 * h * w * 25 * cin * cout
+            h, w, cin = h // 2, w // 2, cout
+        fwd += 2 * self.flat_dim() * self.fc_size
+        fwd += 2 * self.fc_size * self.n_classes
+        return 3 * fwd
+
+    def n_params(self) -> int:
+        return sum(prod(shape) for _, shape in self.param_shapes())
+
+
+def prod(shape) -> int:
+    p = 1
+    for s in shape:
+        p *= int(s)
+    return p
+
+
+#: Every (dataset, algorithm) pair from Table 1, keyed by the id the Rust CLI
+#: and the figures use. n_train/n_test come from the paper's dataset section.
+ARCHITECTURES = {
+    "adult_dnn": MlpSpec("adult_dnn", (123, 200, 100, 2), 32561, 16281),
+    "acoustic_dnn": MlpSpec("acoustic_dnn", (50, 200, 100, 3), 78823, 19705),
+    "mnist_dnn": MlpSpec("mnist_dnn", (784, 200, 100, 10), 60000, 10000),
+    "cifar10_dnn": MlpSpec("cifar10_dnn", (3072, 200, 100, 10), 50000, 10000),
+    # The paper trains HIGGS on 10.9M samples; the synthetic generator scales
+    # this down by default (the figure harness uses the full count in the
+    # analytic workload model).
+    "higgs_dnn": MlpSpec("higgs_dnn", (28, 1024, 2), 10_900_000, 100_000),
+    "mnist_cnn": CnnSpec("mnist_cnn", 28, 28, 1, (32, 64), 1024, 10, 60000, 10000),
+    "cifar10_cnn": CnnSpec("cifar10_cnn", 32, 32, 3, (32, 64), 1024, 10, 50000, 10000),
+}
+
+
+def arch_to_dict(spec) -> dict:
+    """JSON-serializable description for manifest.json."""
+    d = {
+        "name": spec.name,
+        "kind": spec.kind,
+        "n_train": spec.n_train,
+        "n_test": spec.n_test,
+        "n_classes": spec.n_classes if spec.kind == "cnn" else spec.layer_sizes[-1],
+        "in_dim": spec.in_dim,
+        "flops_per_sample": spec.flops_per_sample(),
+        "n_params": spec.n_params(),
+        "param_shapes": [
+            {"name": n, "shape": list(s)} for n, s in spec.param_shapes()
+        ],
+    }
+    if spec.kind == "mlp":
+        d["layer_sizes"] = list(spec.layer_sizes)
+        d["hidden_activation"] = spec.hidden_activation
+    else:
+        d.update(
+            height=spec.height,
+            width=spec.width,
+            channels=spec.channels,
+            conv_channels=list(spec.conv_channels),
+            fc_size=spec.fc_size,
+        )
+    return d

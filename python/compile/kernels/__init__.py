@@ -1,0 +1,16 @@
+"""L1 — Pallas kernels for the paper's compute hot spots.
+
+Public surface (each is checked against the pure-jnp oracle in ``ref.py``):
+
+* :func:`dense.dense`          — fused ``act(x @ w + b)`` with custom VJP
+* :func:`dense.matmul`         — tiled GEMM (+ optional bias/activation)
+* :mod:`dense_bwd`             — transposed GEMMs, act-grad, colsum
+* :func:`softmax_xent.softmax_xent` — fused softmax cross-entropy (+VJP)
+* :func:`pool.maxpool2x2`      — 2x2/stride-2 max pool (+VJP)
+* :func:`sgd.sgd_update_tree`  — axpy parameter update
+"""
+
+from .dense import dense, matmul  # noqa: F401
+from .pool import maxpool2x2  # noqa: F401
+from .sgd import sgd_update_flat, sgd_update_tree  # noqa: F401
+from .softmax_xent import predictions, softmax_xent  # noqa: F401

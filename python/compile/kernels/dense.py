@@ -1,0 +1,153 @@
+"""Fused dense-layer Pallas kernel: ``act(x @ w + b)``.
+
+This is the paper's compute hot spot. In the original system the dense
+layers run through TensorFlow's Eigen/BLAS GEMM on Haswell CPUs; here the
+GEMM is re-thought for the TPU memory system (DESIGN.md
+§Hardware-Adaptation):
+
+* the grid tiles the output into ``(bm, bn)`` MXU-shaped blocks,
+* the contraction dimension is streamed through VMEM in ``bk`` chunks
+  (grid axis 2, ``arbitrary`` semantics → sequential, accumulating), and
+* bias add + activation are fused into the final K-step so the activation
+  never round-trips to HBM.
+
+The kernel is exposed through :func:`dense` (a ``jax.custom_vjp``), whose
+backward pass is implemented with the same tiled GEMM kernel in
+``dense_bwd.py`` — so the *entire* training step is Pallas-backed.
+"""
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import dense_bwd
+from .util import (
+    apply_activation,
+    cdiv,
+    interpret_flag,
+    matmul_blocks,
+    pad_axis,
+)
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, k_steps: int, activation: str,
+                   has_bias: bool, b_ref=None):
+    """One (i, j, k) grid step: accumulate x_blk @ w_blk into o_blk.
+
+    Pallas note: when ``has_bias`` the refs arrive as (x, w, b, o); the
+    wrapper below fixes the argument order with functools.partial.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _finish():
+        acc = o_ref[...]
+        if has_bias:
+            acc = acc + b_ref[...]
+        o_ref[...] = apply_activation(acc, activation)
+
+
+def _kernel_with_bias(x_ref, w_ref, b_ref, o_ref, *, k_steps, activation):
+    _matmul_kernel(
+        x_ref, w_ref, o_ref,
+        k_steps=k_steps, activation=activation, has_bias=True, b_ref=b_ref,
+    )
+
+
+def _kernel_no_bias(x_ref, w_ref, o_ref, *, k_steps, activation):
+    _matmul_kernel(
+        x_ref, w_ref, o_ref,
+        k_steps=k_steps, activation=activation, has_bias=False,
+    )
+
+
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    activation: str = "identity",
+    block_shape=None,
+) -> jax.Array:
+    """Tiled Pallas GEMM with optional fused bias + activation.
+
+    ``x``: (M, K), ``w``: (K, N), ``b``: (N,) or None. Inputs are zero-padded
+    to block multiples (zero columns of x against zero rows of w contribute
+    nothing to the accumulator, and padded output rows/cols are sliced away
+    before the activation result is consumed).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {w.shape}"
+    out_dtype = jnp.result_type(x.dtype, w.dtype)
+
+    bm, bk, bn = block_shape or matmul_blocks(m, k, n)
+    xp = pad_axis(pad_axis(x, 0, bm), 1, bk)
+    wp = pad_axis(pad_axis(w, 0, bk), 1, bn)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    grid = (cdiv(mp, bm), cdiv(np_, bn), cdiv(kp, bk))
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    operands = [xp, wp]
+    if b is not None:
+        bp = pad_axis(b.astype(out_dtype), 0, bn)
+        in_specs.append(pl.BlockSpec((bn,), lambda i, j, kk: (j,)))
+        operands.append(bp)
+        kernel = functools.partial(
+            _kernel_with_bias, k_steps=grid[2], activation=activation
+        )
+    else:
+        kernel = functools.partial(
+            _kernel_no_bias, k_steps=grid[2], activation=activation
+        )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        interpret=interpret_flag(),
+    )(*operands)
+    return out[:m, :n]
+
+
+# --------------------------------------------------------------------------
+# The public dense op: custom_vjp so jax.grad of the whole model routes the
+# backward pass through the Pallas kernels in dense_bwd.py.
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, activation: str = "identity"):
+    """``act(x @ w + b)`` — fused forward, Pallas-tiled."""
+    return matmul(x, w, b, activation=activation)
+
+
+def _dense_fwd(x, w, b, activation):
+    y = matmul(x, w, b, activation=activation)
+    # Save the *activated* output: sigmoid'/relu' are cheap functions of it,
+    # so the pre-activation never needs to be materialized (memory win).
+    return y, (x, w, y)
+
+
+def _dense_bwd(activation, res, g):
+    x, w, y = res
+    return dense_bwd.dense_grads(x, w, y, g, activation)
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

@@ -1,0 +1,193 @@
+"""Backward-pass Pallas kernels for the fused dense layer.
+
+Given the forward ``y = act(x @ w + b)`` and the incoming cotangent ``g``:
+
+    g_pre = g * act'(y)          (elementwise kernel, fused in VMEM)
+    dx    = g_pre @ w^T          (tiled GEMM kernel, reused from dense.py)
+    dw    = x^T @ g_pre          (tiled GEMM kernel)
+    db    = sum_rows(g_pre)      (blocked column-sum kernel)
+
+The transposes are expressed through the GEMM's BlockSpec index maps rather
+than materialized — ``matmul_nt``/``matmul_tn`` below stream the same HBM
+layout through VMEM with swapped block indices, exactly how a TPU kernel
+avoids a relayout pass.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .util import (
+    activation_grad_from_output,
+    cdiv,
+    interpret_flag,
+    matmul_blocks,
+    pad_axis,
+)
+
+
+# --------------------------------------------------------------------------
+# Elementwise activation-gradient kernel: g_pre = g * act'(y)
+# --------------------------------------------------------------------------
+
+
+def _act_grad_kernel(g_ref, y_ref, o_ref, *, activation: str):
+    o_ref[...] = g_ref[...] * activation_grad_from_output(
+        y_ref[...], activation
+    )
+
+
+def act_grad(g: jax.Array, y: jax.Array, activation: str) -> jax.Array:
+    """Elementwise ``g * act'(y)`` as a blocked Pallas kernel."""
+    if activation in ("identity", None):
+        return g
+    m, n = g.shape
+    bm = min(m, 256)
+    gp = pad_axis(g, 0, bm)
+    yp = pad_axis(y, 0, bm)
+    out = pl.pallas_call(
+        functools.partial(_act_grad_kernel, activation=activation),
+        grid=(cdiv(gp.shape[0], bm),),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(gp.shape, g.dtype),
+        interpret=interpret_flag(),
+    )(gp, yp)
+    return out[:m]
+
+
+# --------------------------------------------------------------------------
+# Transposed GEMMs via index maps (no materialized transpose)
+# --------------------------------------------------------------------------
+
+
+def _nt_kernel(a_ref, b_ref, o_ref, *, k_steps: int):
+    """o += a_blk @ b_blk^T  where b arrives in its natural (N, K) layout."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...].T, preferred_element_type=o_ref.dtype
+    )
+
+
+def matmul_nt(a: jax.Array, b: jax.Array) -> jax.Array:
+    """``a @ b.T`` — a: (M, K), b: (N, K) → (M, N), b read untransposed."""
+    m, k = a.shape
+    n, k2 = b.shape
+    assert k == k2
+    bm, bk, bn = matmul_blocks(m, k, n)
+    ap = pad_axis(pad_axis(a, 0, bm), 1, bk)
+    bp = pad_axis(pad_axis(b, 0, bn), 1, bk)
+    grid = (cdiv(ap.shape[0], bm), cdiv(bp.shape[0], bn), cdiv(ap.shape[1], bk))
+    out = pl.pallas_call(
+        functools.partial(_nt_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(
+            (ap.shape[0], bp.shape[0]), jnp.result_type(a.dtype, b.dtype)
+        ),
+        interpret=interpret_flag(),
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def _tn_kernel(a_ref, b_ref, o_ref, *, k_steps: int):
+    """o += a_blk^T @ b_blk  where a arrives in its natural (K, M) layout."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].T, b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def matmul_tn(a: jax.Array, b: jax.Array) -> jax.Array:
+    """``a.T @ b`` — a: (K, M), b: (K, N) → (M, N), a read untransposed.
+
+    The contraction here is the *batch* dimension (K = minibatch), so the
+    k-grid streams batch blocks while each (i, j) output tile accumulates —
+    this is the dW computation, whose output (fan_in × fan_out) is exactly a
+    weight matrix and therefore MXU-tile shaped.
+    """
+    k, m = a.shape
+    k2, n = b.shape
+    assert k == k2
+    bm, bk, bn = matmul_blocks(m, k, n)
+    ap = pad_axis(pad_axis(a, 0, bk), 1, bm)
+    bp = pad_axis(pad_axis(b, 0, bk), 1, bn)
+    grid = (cdiv(ap.shape[1], bm), cdiv(bp.shape[1], bn), cdiv(ap.shape[0], bk))
+    out = pl.pallas_call(
+        functools.partial(_tn_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, i)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(
+            (ap.shape[1], bp.shape[1]), jnp.result_type(a.dtype, b.dtype)
+        ),
+        interpret=interpret_flag(),
+    )(ap, bp)
+    return out[:m, :n]
+
+
+# --------------------------------------------------------------------------
+# Blocked column-sum (bias gradient)
+# --------------------------------------------------------------------------
+
+
+def _colsum_kernel(g_ref, o_ref, *, m_steps: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(g_ref[...], axis=0)
+
+
+def colsum(g: jax.Array) -> jax.Array:
+    """``sum(g, axis=0)`` with the rows streamed through VMEM in blocks."""
+    m, n = g.shape
+    bm = min(m, 256)
+    gp = pad_axis(g, 0, bm)
+    grid = (cdiv(gp.shape[0], bm),)
+    return pl.pallas_call(
+        functools.partial(_colsum_kernel, m_steps=grid[0]),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), g.dtype),
+        interpret=interpret_flag(),
+    )(gp)
+
+
+# --------------------------------------------------------------------------
+# Assembled dense backward
+# --------------------------------------------------------------------------
+
+
+def dense_grads(x, w, y, g, activation: str):
+    """Cotangents (dx, dw, db) for ``y = act(x @ w + b)``."""
+    g_pre = act_grad(g, y, activation)
+    dx = matmul_nt(g_pre, w)  # (M,N) @ (K,N)^T → (M,K)
+    dw = matmul_tn(x, g_pre)  # (M,K)^T @ (M,N) → (K,N)
+    db = colsum(g_pre)
+    return dx, dw, db

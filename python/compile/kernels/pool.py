@@ -1,0 +1,84 @@
+"""2x2 max-pooling Pallas kernels (forward + backward) for the CNN path.
+
+The wrapper reshapes NHWC input to (B, H/2, 2, W/2, 2, C) so the kernel's
+reduction is a pure VMEM-resident ``max`` over two unit axes — the layout a
+TPU kernel wants (contiguous lane dimension C untouched). Backward routes
+the cotangent to every element equal to the block max (the same
+tie-handling as the pure-jnp oracle in ref.py, so they agree bit-for-bit).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .util import cdiv, interpret_flag
+
+
+def _fwd_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.max(x_ref[...], axis=(2, 4))
+
+
+def _bwd_kernel(x_ref, g_ref, o_ref):
+    x = x_ref[...]
+    mx = jnp.max(x, axis=(2, 4), keepdims=True)
+    mask = (x == mx).astype(x.dtype)
+    o_ref[...] = mask * g_ref[...][:, :, None, :, None, :]
+
+
+def _blocked(x6):
+    """Largest batch block ≤ 32 that divides the batch exactly (no padding:
+    pooled shapes are small enough that an uneven tail block never pays)."""
+    b = x6.shape[0]
+    bb = min(b, 32)
+    while b % bb != 0:
+        bb -= 1
+    return bb, (b // bb,)
+
+
+@jax.custom_vjp
+def maxpool2x2(x):
+    """Max-pool NHWC ``x`` with 2x2 windows, stride 2 (paper section 4.1)."""
+    b, h, w, c = x.shape
+    assert h % 2 == 0 and w % 2 == 0, (h, w)
+    x6 = x.reshape(b, h // 2, 2, w // 2, 2, c)
+    bb, grid = _blocked(x6)
+    blk = (bb, h // 2, 2, w // 2, 2, c)
+    out = pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(blk, lambda i: (i, 0, 0, 0, 0, 0))],
+        out_specs=pl.BlockSpec(
+            (bb, h // 2, w // 2, c), lambda i: (i, 0, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h // 2, w // 2, c), x.dtype),
+        interpret=interpret_flag(),
+    )(x6)
+    return out
+
+
+def _pool_fwd(x):
+    return maxpool2x2(x), x
+
+
+def _pool_bwd(x, g):
+    b, h, w, c = x.shape
+    x6 = x.reshape(b, h // 2, 2, w // 2, 2, c)
+    bb, grid = _blocked(x6)
+    blk6 = (bb, h // 2, 2, w // 2, 2, c)
+    dx6 = pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(blk6, lambda i: (i, 0, 0, 0, 0, 0)),
+            pl.BlockSpec((bb, h // 2, w // 2, c), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(blk6, lambda i: (i, 0, 0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(x6.shape, x.dtype),
+        interpret=interpret_flag(),
+    )(x6, g)
+    return (dx6.reshape(b, h, w, c),)
+
+
+maxpool2x2.defvjp(_pool_fwd, _pool_bwd)

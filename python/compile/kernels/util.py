@@ -1,0 +1,107 @@
+"""Shared helpers for the Pallas kernels.
+
+All kernels in this package are lowered with ``interpret=True`` so the CPU
+PJRT client (the Rust runtime) can execute the resulting HLO; real-TPU
+lowering would emit Mosaic custom-calls the CPU plugin cannot run. The
+block-shape choices below are nevertheless made for the TPU memory system —
+see DESIGN.md §Hardware-Adaptation — so the same kernels compile for TPU
+unchanged (minus the interpret flag).
+"""
+
+import functools
+
+import jax.numpy as jnp
+
+#: MXU systolic-array native tile edge. Blocks are chosen as multiples of
+#: this wherever the problem size allows.
+MXU_TILE = 128
+
+#: VMEM budget (bytes) we allow a single kernel instance to use for its
+#: resident blocks. Real TPUv4 VMEM is ~16 MiB/core; staying ≤4 MiB leaves
+#: room for double buffering by the Mosaic pipeline.
+VMEM_BUDGET = 4 * 1024 * 1024
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def pad_axis(x, axis: int, mult: int):
+    """Zero-pad ``x`` along ``axis`` up to a multiple of ``mult``."""
+    size = x.shape[axis]
+    target = round_up(size, mult)
+    if target == size:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - size)
+    return jnp.pad(x, widths)
+
+
+def pick_block(size: int, preferred: int) -> int:
+    """Largest block ≤ preferred that is 'nice': either the full (padded)
+    size or a multiple of 8 dividing the padded size."""
+    if size <= preferred:
+        return size
+    return preferred
+
+
+def matmul_blocks(m: int, k: int, n: int):
+    """Choose (bm, bk, bn) for a tiled GEMM under the VMEM budget.
+
+    Strategy: target MXU-native 128x128 output tiles and the *largest*
+    contraction block that fits — fewer K-steps means fewer grid
+    iterations (less pipeline overhead on TPU, and fewer interpret-mode
+    loop trips on the CPU validation path; see EXPERIMENTS.md §Perf for
+    the measured effect of raising the cap 512 → 2048).
+    """
+    bm = min(m, MXU_TILE)
+    bn = min(n, MXU_TILE)
+    bk = min(k, 2048)
+    while (bm * bk + bk * bn + bm * bn) * 4 > VMEM_BUDGET and bk > MXU_TILE:
+        bk //= 2
+    return bm, bk, bn
+
+
+def vmem_bytes(bm: int, bk: int, bn: int) -> int:
+    """Resident f32 bytes for one (x, w, out) block set."""
+    return (bm * bk + bk * bn + bm * bn) * 4
+
+
+def apply_activation(y, activation: str):
+    if activation == "identity" or activation is None:
+        return y
+    if activation == "sigmoid":
+        # Written with tanh for better numerics at large |y| than 1/(1+e^-y).
+        return 0.5 * (jnp.tanh(0.5 * y) + 1.0)
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def activation_grad_from_output(y_act, activation: str):
+    """d(act)/d(pre-activation) expressed in terms of the *activated* output
+    (what the fused dense kernel saves for backward)."""
+    if activation == "identity" or activation is None:
+        return jnp.ones_like(y_act)
+    if activation == "sigmoid":
+        return y_act * (1.0 - y_act)
+    if activation == "relu":
+        return (y_act > 0.0).astype(y_act.dtype)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def tolerance(dtype) -> float:
+    return 2e-2 if jnp.dtype(dtype) == jnp.bfloat16 else 1e-5
+
+
+@functools.lru_cache(maxsize=None)
+def interpret_flag() -> bool:
+    """Central switch: kernels run in interpret mode everywhere except a
+    hypothetical real-TPU build (env DTF_REAL_TPU=1)."""
+    import os
+
+    return os.environ.get("DTF_REAL_TPU", "0") != "1"

@@ -1,0 +1,189 @@
+"""L2 — the paper's networks (Table 1) as JAX functions over Pallas kernels.
+
+The three entry points mirror what the Rust coordinator needs per
+architecture (all AOT-lowered by ``aot.py``; Python never runs at training
+time):
+
+* ``train_step(*params, x, y, lr) -> (*new_params, loss)``
+    one local synchronous-SGD step — used in the paper's *weight-averaging*
+    mode, where ranks update locally and then all-reduce the weights;
+* ``grad_step(*params, x, y, lr) -> (*scaled_grads, loss)``
+    gradients pre-scaled by ``lr`` — used in *gradient-averaging* mode
+    (ranks all-reduce gradients, every rank applies the same update);
+* ``eval_step(*params, x, y) -> (loss_sum, correct)``
+    summed (not averaged) so the coordinator can aggregate across batches
+    and ranks exactly.
+
+Parameters travel as a *flat positional list* in the order defined by
+``architectures.param_shapes()`` — that ordering is the ABI shared with
+``rust/src/model/spec.rs`` via ``artifacts/manifest.json``.
+"""
+
+import functools
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .architectures import ARCHITECTURES, CnnSpec, MlpSpec
+from .kernels import dense, maxpool2x2, predictions, sgd_update_tree, softmax_xent
+
+# ---------------------------------------------------------------------------
+# Initialization — mirrored in rust/src/model/init.rs for the pure-Rust path;
+# tests only require *Python-side* self-consistency, the Rust coordinator
+# always initializes params itself and feeds them in as runtime inputs.
+# ---------------------------------------------------------------------------
+
+
+def init_params(spec, seed: int = 0) -> List[jax.Array]:
+    """Xavier-uniform weights, zero biases, in ABI order."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in spec.param_shapes():
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = int(jnp.prod(jnp.array(shape[:-1])))
+            fan_out = int(shape[-1])
+            limit = (6.0 / (fan_in + fan_out)) ** 0.5
+            out.append(
+                jax.random.uniform(
+                    sub, shape, jnp.float32, minval=-limit, maxval=limit
+                )
+            )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def mlp_logits(spec: MlpSpec, params: Sequence[jax.Array], x: jax.Array):
+    """Hidden layers are sigmoid (paper's FC neurons); output layer is raw
+    logits feeding the fused softmax-xent kernel."""
+    n_layers = len(spec.layer_sizes) - 1
+    h = x
+    for i in range(n_layers):
+        w, b = params[2 * i], params[2 * i + 1]
+        act = "identity" if i == n_layers - 1 else spec.hidden_activation
+        h = dense(h, w, b, act)
+    return h
+
+
+def cnn_logits(spec: CnnSpec, params: Sequence[jax.Array], x: jax.Array):
+    """Paper section 4.1: conv 5x5 stride-1 ReLU → 2x2 maxpool, repeated;
+    then a sigmoid FC layer and a softmax output layer.
+
+    Convolutions stay ``lax.conv_general_dilated`` (XLA lowers them onto the
+    MXU as matmuls already — DESIGN.md §Hardware-Adaptation); the FC layers,
+    which dominate the CNN parameter count and the all-reduce volume, run
+    through the Pallas dense kernel.
+    """
+    h = x  # NHWC
+    idx = 0
+    for _ in spec.conv_channels:
+        k, kb = params[idx], params[idx + 1]
+        idx += 2
+        h = jax.lax.conv_general_dilated(
+            h, k,
+            window_strides=(1, 1),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        h = jnp.maximum(h + kb, 0.0)
+        h = maxpool2x2(h)
+    b = h.shape[0]
+    h = h.reshape(b, -1)
+    w_fc, b_fc, w_out, b_out = params[idx : idx + 4]
+    h = dense(h, w_fc, b_fc, "sigmoid")
+    return dense(h, w_out, b_out, "identity")
+
+
+def logits_fn(spec, params, x):
+    if spec.kind == "mlp":
+        return mlp_logits(spec, params, x)
+    return cnn_logits(spec, params, x)
+
+
+def loss_fn(spec, params, x, y):
+    return softmax_xent(logits_fn(spec, params, x), y)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(spec):
+    n_params = len(spec.param_shapes())
+
+    def train_step(*args):
+        params = list(args[:n_params])
+        x, y, lr = args[n_params], args[n_params + 1], args[n_params + 2]
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(spec, p, x, y)
+        )(params)
+        new_params = sgd_update_tree(params, grads, lr)
+        return (*new_params, loss)
+
+    return train_step
+
+
+def make_grad_step(spec):
+    n_params = len(spec.param_shapes())
+
+    def grad_step(*args):
+        params = list(args[:n_params])
+        x, y, lr = args[n_params], args[n_params + 1], args[n_params + 2]
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(spec, p, x, y)
+        )(params)
+        # Pre-scale by lr so gradient-averaging mode is a pure allreduce +
+        # subtract on the Rust side (no second scaling pass over the model).
+        scaled = [lr * g for g in grads]
+        return (*scaled, loss)
+
+    return grad_step
+
+
+def make_eval_step(spec):
+    n_params = len(spec.param_shapes())
+
+    def eval_step(*args):
+        params = list(args[:n_params])
+        x, y = args[n_params], args[n_params + 1]
+        logits = logits_fn(spec, params, x)
+        batch = x.shape[0]
+        loss_sum = softmax_xent(logits, y) * batch
+        correct = jnp.sum((predictions(logits) == y).astype(jnp.int32))
+        return loss_sum, correct
+
+    return eval_step
+
+
+def input_shapes(spec, batch: int):
+    """ShapeDtypeStructs in the artifact ABI order (params, x, y[, lr])."""
+    params = [
+        jax.ShapeDtypeStruct(tuple(s), jnp.float32)
+        for _, s in spec.param_shapes()
+    ]
+    if spec.kind == "mlp":
+        x = jax.ShapeDtypeStruct((batch, spec.in_dim), jnp.float32)
+    else:
+        x = jax.ShapeDtypeStruct(
+            (batch, spec.height, spec.width, spec.channels), jnp.float32
+        )
+    y = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+    return params, x, y, lr
+
+
+def get_spec(name: str):
+    try:
+        return ARCHITECTURES[name]
+    except KeyError:
+        raise SystemExit(
+            f"unknown architecture {name!r}; known: {sorted(ARCHITECTURES)}"
+        )

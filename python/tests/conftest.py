@@ -1,0 +1,15 @@
+import os
+import sys
+
+# Make `compile.*` importable when pytest is run from python/ or repo root.
+_HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _HERE not in sys.path:
+    sys.path.insert(0, _HERE)
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)

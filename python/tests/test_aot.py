@@ -1,0 +1,78 @@
+"""AOT pipeline tests: HLO text generation + manifest ABI integrity."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile.architectures import ARCHITECTURES, arch_to_dict
+
+
+def test_lower_small_arch_produces_hlo_text():
+    spec = ARCHITECTURES["higgs_dnn"]
+    text, inputs, outputs = aot.lower_artifact(spec, "train_step", batch=8)
+    assert text.startswith("HloModule"), text[:80]
+    assert "ENTRY" in text
+    # params + x + y + lr
+    assert len(inputs) == len(spec.param_shapes()) + 3
+    # new params + loss
+    assert len(outputs) == len(spec.param_shapes()) + 1
+    assert outputs[-1]["name"] == "loss" and outputs[-1]["shape"] == []
+
+
+def test_lower_eval_step_io():
+    spec = ARCHITECTURES["adult_dnn"]
+    text, inputs, outputs = aot.lower_artifact(spec, "eval_step", batch=8)
+    assert [o["name"] for o in outputs] == ["loss_sum", "correct"]
+    assert outputs[1]["dtype"] == "i32"
+
+
+def test_manifest_roundtrip(tmp_path):
+    rc = aot.main(
+        ["--arch", "higgs_dnn", "--batch", "8", "--out-dir", str(tmp_path)]
+    )
+    assert rc == 0
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["batch_size"] == 8
+    assert set(manifest["artifacts"]) == {
+        "higgs_dnn.train_step",
+        "higgs_dnn.grad_step",
+        "higgs_dnn.eval_step",
+    }
+    for key, art in manifest["artifacts"].items():
+        path = tmp_path / art["file"]
+        assert path.exists(), key
+        assert path.read_text().startswith("HloModule")
+        for io in art["inputs"] + art["outputs"]:
+            assert io["dtype"] in ("f32", "i32")
+            assert all(isinstance(d, int) for d in io["shape"])
+
+
+def test_arch_dicts_are_json_serializable():
+    for name, spec in ARCHITECTURES.items():
+        d = arch_to_dict(spec)
+        json.dumps(d)
+        assert d["n_params"] > 0
+        assert d["flops_per_sample"] > 0
+        got = sum(
+            int(__import__("numpy").prod(ps["shape"]))
+            for ps in d["param_shapes"]
+        )
+        assert got == d["n_params"]
+
+
+def test_table1_architectures_match_paper():
+    """Pin Table 1 exactly — a regression here silently changes every
+    figure's workload."""
+    a = ARCHITECTURES
+    assert a["adult_dnn"].layer_sizes == (123, 200, 100, 2)
+    assert a["acoustic_dnn"].layer_sizes == (50, 200, 100, 3)
+    assert a["mnist_dnn"].layer_sizes == (784, 200, 100, 10)
+    assert a["cifar10_dnn"].layer_sizes == (3072, 200, 100, 10)
+    assert a["higgs_dnn"].layer_sizes == (28, 1024, 2)
+    for cnn in ("mnist_cnn", "cifar10_cnn"):
+        assert a[cnn].conv_channels == (32, 64)
+        assert a[cnn].fc_size == 1024
+    assert a["acoustic_dnn"].n_train == 78823  # paper section 4.4
+    assert a["higgs_dnn"].n_train + a["higgs_dnn"].n_test == 11_000_000

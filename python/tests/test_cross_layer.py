@@ -1,0 +1,131 @@
+"""Cross-layer oracle tests: the full Pallas-backed model (L2 calling L1)
+against an independent pure-jnp implementation of the same networks.
+
+This is the strongest correctness statement the Python side can make:
+logits, loss, AND gradients of the complete model agree with a version
+built exclusively from ref.py + jax primitives, for both MLPs and CNNs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.architectures import ARCHITECTURES
+from compile.kernels import ref
+from compile.model import init_params, logits_fn, loss_fn
+
+# ---------------------------------------------------------------------------
+# Pure-jnp reference model (no Pallas anywhere)
+# ---------------------------------------------------------------------------
+
+
+def ref_mlp_logits(spec, params, x):
+    n_layers = len(spec.layer_sizes) - 1
+    h = x
+    for i in range(n_layers):
+        w, b = params[2 * i], params[2 * i + 1]
+        act = "identity" if i == n_layers - 1 else spec.hidden_activation
+        h = ref.dense(h, w, b, act)
+    return h
+
+
+def ref_cnn_logits(spec, params, x):
+    h = x
+    idx = 0
+    for _ in spec.conv_channels:
+        k, kb = params[idx], params[idx + 1]
+        idx += 2
+        h = jax.lax.conv_general_dilated(
+            h, k, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        h = jnp.maximum(h + kb, 0.0)
+        h = ref.maxpool2x2(h)
+    h = h.reshape(h.shape[0], -1)
+    w_fc, b_fc, w_out, b_out = params[idx : idx + 4]
+    h = ref.dense(h, w_fc, b_fc, "sigmoid")
+    return ref.dense(h, w_out, b_out, "identity")
+
+
+def ref_loss(spec, params, x, y):
+    logits = (
+        ref_mlp_logits(spec, params, x)
+        if spec.kind == "mlp"
+        else ref_cnn_logits(spec, params, x)
+    )
+    return ref.softmax_xent(logits, y)
+
+
+def _batch(spec, batch, seed=0):
+    rng = np.random.default_rng(seed)
+    if spec.kind == "mlp":
+        x = rng.normal(size=(batch, spec.in_dim)).astype(np.float32)
+        classes = spec.layer_sizes[-1]
+    else:
+        x = rng.normal(
+            size=(batch, spec.height, spec.width, spec.channels)
+        ).astype(np.float32)
+        classes = spec.n_classes
+    y = rng.integers(0, classes, size=batch).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+MLPS = ["adult_dnn", "acoustic_dnn", "higgs_dnn", "mnist_dnn"]
+
+
+@pytest.mark.parametrize("name", MLPS)
+def test_mlp_logits_match_pure_jnp(name):
+    spec = ARCHITECTURES[name]
+    params = init_params(spec, seed=3)
+    x, _ = _batch(spec, 16)
+    np.testing.assert_allclose(
+        logits_fn(spec, params, x),
+        ref_mlp_logits(spec, params, x),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("name", ["adult_dnn", "higgs_dnn"])
+def test_mlp_full_gradients_match_pure_jnp(name):
+    spec = ARCHITECTURES[name]
+    params = init_params(spec, seed=5)
+    x, y = _batch(spec, 16)
+
+    loss_p, grads_p = jax.value_and_grad(
+        lambda p: loss_fn(spec, p, x, y)
+    )(params)
+    loss_r, grads_r = jax.value_and_grad(
+        lambda p: ref_loss(spec, p, x, y)
+    )(params)
+
+    np.testing.assert_allclose(loss_p, loss_r, rtol=1e-5, atol=1e-6)
+    for gp, gr, (n, _) in zip(grads_p, grads_r, spec.param_shapes()):
+        np.testing.assert_allclose(
+            gp, gr, rtol=1e-3, atol=1e-4, err_msg=f"grad of {n}"
+        )
+
+
+def test_cnn_logits_and_gradients_match_pure_jnp():
+    spec = ARCHITECTURES["mnist_cnn"]
+    params = init_params(spec, seed=9)
+    x, y = _batch(spec, 4)
+
+    np.testing.assert_allclose(
+        logits_fn(spec, params, x),
+        ref_cnn_logits(spec, params, x),
+        rtol=1e-3,
+        atol=1e-3,
+    )
+
+    loss_p, grads_p = jax.value_and_grad(
+        lambda p: loss_fn(spec, p, x, y)
+    )(params)
+    loss_r, grads_r = jax.value_and_grad(
+        lambda p: ref_loss(spec, p, x, y)
+    )(params)
+    np.testing.assert_allclose(loss_p, loss_r, rtol=1e-4, atol=1e-5)
+    for gp, gr, (n, _) in zip(grads_p, grads_r, spec.param_shapes()):
+        np.testing.assert_allclose(
+            gp, gr, rtol=5e-3, atol=5e-4, err_msg=f"grad of {n}"
+        )

@@ -1,0 +1,116 @@
+"""Hypothesis sweeps over kernel shapes/dtypes vs the ref oracle.
+
+The strategies draw arbitrary (small) M/K/N and batch/class shapes so the
+padding and grid logic is exercised far beyond the hand-picked grid in
+test_kernels.py. Kept to modest example counts: each example traces a
+Pallas interpret kernel, which is not free.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense, maxpool2x2, sgd_update_flat, softmax_xent
+from compile.kernels import dense_bwd, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+dims = st.integers(min_value=1, max_value=70)
+acts = st.sampled_from(["identity", "sigmoid", "relu"])
+dtypes = st.sampled_from([np.float32, np.float32, "bfloat16"])  # f32-weighted
+
+
+def _tol(dtype):
+    return (2e-1, 2e-1) if str(dtype) == "bfloat16" else (1e-3, 1e-3)
+
+
+def _arr(data, shape, dtype):
+    """Array whose *shape* is the fuzzed quantity; contents come from a
+    drawn seed (drawing O(n) floats trips Hypothesis' entropy limits for
+    the larger shapes, and shapes are what exercise the padding logic)."""
+    seed = data.draw(st.integers(0, 2**31))
+    rng = np.random.default_rng(seed)
+    vals = rng.uniform(-3.0, 3.0, size=shape).astype(np.float32)
+    return jnp.asarray(vals).astype(
+        jnp.bfloat16 if str(dtype) == "bfloat16" else dtype
+    )
+
+
+@settings(**SETTINGS)
+@given(st.data(), dims, dims, dims, acts, dtypes)
+def test_dense_forward_any_shape(data, m, k, n, act, dtype):
+    x = _arr(data, (m, k), dtype)
+    w = _arr(data, (k, n), dtype)
+    b = _arr(data, (n,), dtype)
+    rtol, atol = _tol(dtype)
+    got = np.asarray(dense(x, w, b, act), np.float32)
+    want = np.asarray(ref.dense(x, w, b, act), np.float32)
+    np.testing.assert_allclose(got, want, rtol=rtol, atol=atol)
+
+
+@settings(**SETTINGS)
+@given(st.data(), dims, dims, dims)
+def test_transposed_gemms_any_shape(data, m, k, n):
+    a = _arr(data, (m, k), np.float32)
+    b = _arr(data, (n, k), np.float32)
+    np.testing.assert_allclose(
+        dense_bwd.matmul_nt(a, b), ref.matmul_nt(a, b), rtol=1e-3, atol=1e-3
+    )
+    at = _arr(data, (k, m), np.float32)
+    bt = _arr(data, (k, n), np.float32)
+    np.testing.assert_allclose(
+        dense_bwd.matmul_tn(at, bt), ref.matmul_tn(at, bt), rtol=1e-3, atol=1e-3
+    )
+
+
+@settings(**SETTINGS)
+@given(st.data(), st.integers(1, 200), st.integers(2, 12))
+def test_softmax_xent_any_shape(data, b, c):
+    logits = _arr(data, (b, c), np.float32)
+    labels = jnp.asarray(
+        data.draw(st.lists(st.integers(0, c - 1), min_size=b, max_size=b)),
+        jnp.int32,
+    )
+    np.testing.assert_allclose(
+        softmax_xent(logits, labels),
+        ref.softmax_xent(logits, labels),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+    np.testing.assert_allclose(
+        jax.grad(softmax_xent)(logits, labels),
+        ref.softmax_xent_grad(logits, labels),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    st.data(),
+    st.integers(1, 40),
+    st.integers(1, 8),
+    st.integers(1, 8),
+    st.integers(1, 8),
+)
+def test_maxpool_any_shape(data, b, hh, wh, c):
+    h, w = 2 * hh, 2 * wh
+    x = _arr(data, (b, h, w, c), np.float32)
+    np.testing.assert_allclose(maxpool2x2(x), ref.maxpool2x2(x))
+
+
+@settings(**SETTINGS)
+@given(st.data(), st.integers(1, 200_000))
+def test_sgd_any_length(data, n):
+    # Content drawn cheaply: a seeded normal, length is the fuzzed part.
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    p = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    lr = data.draw(st.floats(0.0, 1.0, width=32))
+    np.testing.assert_allclose(
+        sgd_update_flat(p, g, jnp.float32(lr)),
+        ref.sgd_update_flat(p, g, np.float32(lr)),
+        rtol=1e-4,
+        atol=1e-5,
+    )

@@ -1,0 +1,187 @@
+"""Pallas kernels vs the pure-jnp oracle (ref.py) — the core L1 signal.
+
+Parametrized grids cover the exact shapes every Table-1 network uses, plus
+deliberately awkward shapes (primes, 1-row, non-block-multiple) to exercise
+the padding paths.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import (
+    dense,
+    matmul,
+    maxpool2x2,
+    predictions,
+    sgd_update_flat,
+    softmax_xent,
+)
+from compile.kernels import dense_bwd, ref
+from compile.kernels.util import matmul_blocks, vmem_bytes, VMEM_BUDGET
+
+ACTS = ("identity", "sigmoid", "relu")
+
+# (M, K, N): every dense-layer shape in Table 1 at batch 64, plus edge cases.
+DENSE_SHAPES = [
+    (64, 123, 200),  # adult layer 0
+    (64, 200, 100),  # shared hidden
+    (64, 100, 10),   # mnist head
+    (64, 784, 200),  # mnist layer 0
+    (64, 3072, 200),  # cifar10 layer 0
+    (64, 28, 1024),  # higgs layer 0
+    (64, 1024, 2),   # higgs head
+    (64, 3136, 1024),  # mnist_cnn fc
+    (1, 7, 3),       # degenerate
+    (17, 129, 131),  # primes, forces padding in all dims
+    (200, 513, 100),  # k not a block multiple
+]
+
+
+def _randn(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("m,k,n", DENSE_SHAPES)
+@pytest.mark.parametrize("act", ACTS)
+def test_dense_forward(rng, m, k, n, act):
+    x, w, b = _randn(rng, m, k), _randn(rng, k, n), _randn(rng, n)
+    np.testing.assert_allclose(
+        dense(x, w, b, act), ref.dense(x, w, b, act), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("m,k,n", DENSE_SHAPES[:6])
+def test_matmul_no_bias(rng, m, k, n):
+    x, w = _randn(rng, m, k), _randn(rng, k, n)
+    np.testing.assert_allclose(
+        matmul(x, w), x @ w, rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("m,k,n", DENSE_SHAPES)
+@pytest.mark.parametrize("act", ACTS)
+def test_dense_backward_matches_autodiff_oracle(rng, m, k, n, act):
+    x, w, b = _randn(rng, m, k), _randn(rng, k, n), _randn(rng, n)
+    g = _randn(rng, m, n)
+
+    def f(x_, w_, b_):
+        return jnp.vdot(g, dense(x_, w_, b_, act))
+
+    dx, dw, db = jax.grad(f, argnums=(0, 1, 2))(x, w, b)
+    rx, rw, rb = ref.dense_grads(x, w, b, g, act)
+    np.testing.assert_allclose(dx, rx, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(dw, rw, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(db, rb, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 200, 100), (17, 129, 31), (5, 3, 2)])
+def test_transposed_gemms(rng, m, k, n):
+    a, b = _randn(rng, m, k), _randn(rng, n, k)
+    np.testing.assert_allclose(
+        dense_bwd.matmul_nt(a, b), ref.matmul_nt(a, b), rtol=1e-4, atol=1e-4
+    )
+    at, bt = _randn(rng, k, m), _randn(rng, k, n)
+    np.testing.assert_allclose(
+        dense_bwd.matmul_tn(at, bt), ref.matmul_tn(at, bt), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("m,n", [(64, 10), (1, 1), (300, 7), (257, 128)])
+def test_colsum(rng, m, n):
+    g = _randn(rng, m, n)
+    np.testing.assert_allclose(
+        dense_bwd.colsum(g), ref.colsum(g), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("act", ("sigmoid", "relu"))
+def test_act_grad(rng, act):
+    y = ref.apply_activation(_randn(rng, 33, 17), act)
+    g = _randn(rng, 33, 17)
+    np.testing.assert_allclose(
+        dense_bwd.act_grad(g, y, act), ref.act_grad(g, y, act), rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("b,c", [(64, 10), (64, 2), (64, 3), (13, 10), (1, 2), (300, 10)])
+def test_softmax_xent_forward(rng, b, c):
+    logits = _randn(rng, b, c) * 3.0
+    labels = jnp.asarray(rng.integers(0, c, size=b).astype(np.int32))
+    np.testing.assert_allclose(
+        softmax_xent(logits, labels),
+        ref.softmax_xent(logits, labels),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("b,c", [(64, 10), (64, 2), (13, 3), (300, 10)])
+def test_softmax_xent_grad(rng, b, c):
+    logits = _randn(rng, b, c) * 3.0
+    labels = jnp.asarray(rng.integers(0, c, size=b).astype(np.int32))
+    np.testing.assert_allclose(
+        jax.grad(softmax_xent)(logits, labels),
+        ref.softmax_xent_grad(logits, labels),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+def test_softmax_xent_extreme_logits_stable(rng):
+    """The fused kernel must not overflow where naive softmax would."""
+    logits = jnp.asarray([[1e4, -1e4, 0.0], [-1e4, 1e4, 1e4]], jnp.float32)
+    labels = jnp.asarray([0, 1], jnp.int32)
+    got = softmax_xent(logits, labels)
+    assert bool(jnp.isfinite(got)), got
+
+
+@pytest.mark.parametrize(
+    "b,h,w,c", [(64, 28, 28, 32), (64, 14, 14, 64), (3, 4, 4, 1), (48, 8, 8, 3)]
+)
+def test_maxpool_forward(rng, b, h, w, c):
+    x = _randn(rng, b, h, w, c)
+    np.testing.assert_allclose(maxpool2x2(x), ref.maxpool2x2(x))
+
+
+@pytest.mark.parametrize("b,h,w,c", [(8, 8, 8, 3), (3, 4, 4, 1)])
+def test_maxpool_backward(rng, b, h, w, c):
+    x = _randn(rng, b, h, w, c)
+    g = _randn(rng, b, h // 2, w // 2, c)
+
+    def f(x_):
+        return jnp.vdot(g, maxpool2x2(x_))
+
+    np.testing.assert_allclose(
+        jax.grad(f)(x), ref.maxpool2x2_grad(x, g), rtol=1e-6, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("n", [1, 7, 65536, 65537, 1_000_003])
+def test_sgd_update(rng, n):
+    p = _randn(rng, n)
+    g = _randn(rng, n)
+    np.testing.assert_allclose(
+        sgd_update_flat(p, g, jnp.float32(0.05)),
+        ref.sgd_update_flat(p, g, 0.05),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+def test_predictions(rng):
+    logits = _randn(rng, 40, 10)
+    np.testing.assert_array_equal(
+        predictions(logits), np.argmax(np.asarray(logits), axis=1)
+    )
+
+
+def test_block_chooser_respects_vmem_budget():
+    for m, k, n in [(64, 3136, 1024), (4096, 4096, 4096), (1, 1, 1)]:
+        bm, bk, bn = matmul_blocks(m, k, n)
+        assert vmem_bytes(bm, bk, bn) <= max(
+            VMEM_BUDGET, 3 * 128 * 128 * 4
+        ), (bm, bk, bn)
+        assert bm <= max(m, 1) and bn <= max(n, 1) and bk <= max(k, 1)

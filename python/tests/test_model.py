@@ -1,0 +1,151 @@
+"""L2 model tests: shapes, ABI ordering, training-dynamics sanity.
+
+These run the same jitted functions aot.py lowers, so passing here means
+the HLO the Rust side executes computes the right thing.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.architectures import ARCHITECTURES, arch_to_dict
+from compile.model import (
+    init_params,
+    input_shapes,
+    logits_fn,
+    loss_fn,
+    make_eval_step,
+    make_grad_step,
+    make_train_step,
+)
+
+SMALL_BATCH = 16
+MLP_NAMES = [n for n, s in ARCHITECTURES.items() if s.kind == "mlp"]
+
+
+def _batch(spec, batch, seed=0):
+    rng = np.random.default_rng(seed)
+    if spec.kind == "mlp":
+        x = rng.normal(size=(batch, spec.in_dim)).astype(np.float32)
+    else:
+        x = rng.normal(
+            size=(batch, spec.height, spec.width, spec.channels)
+        ).astype(np.float32)
+    n_classes = arch_to_dict(spec)["n_classes"]
+    y = rng.integers(0, n_classes, size=batch).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.mark.parametrize("name", sorted(ARCHITECTURES))
+def test_param_shapes_match_init(name):
+    spec = ARCHITECTURES[name]
+    params = init_params(spec)
+    shapes = spec.param_shapes()
+    assert len(params) == len(shapes)
+    for p, (_, s) in zip(params, shapes):
+        assert p.shape == tuple(s)
+    assert sum(int(np.prod(p.shape)) for p in params) == spec.n_params()
+
+
+@pytest.mark.parametrize("name", sorted(ARCHITECTURES))
+def test_logits_shape(name):
+    spec = ARCHITECTURES[name]
+    params = init_params(spec)
+    x, _ = _batch(spec, SMALL_BATCH)
+    logits = logits_fn(spec, params, x)
+    assert logits.shape == (SMALL_BATCH, arch_to_dict(spec)["n_classes"])
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", MLP_NAMES)
+def test_train_step_io_contract(name):
+    """train_step returns (*new_params, loss) in ABI order."""
+    spec = ARCHITECTURES[name]
+    params = init_params(spec)
+    x, y = _batch(spec, SMALL_BATCH)
+    step = make_train_step(spec)
+    out = step(*params, x, y, jnp.float32(0.1))
+    assert len(out) == len(params) + 1
+    for new, old in zip(out[:-1], params):
+        assert new.shape == old.shape and new.dtype == old.dtype
+    assert out[-1].shape == ()
+
+
+@pytest.mark.parametrize("name", ["adult_dnn", "higgs_dnn"])
+def test_grad_step_equals_train_step_delta(name):
+    """weight-averaging and gradient-averaging ABIs must be consistent:
+    new_params == params - scaled_grads exactly (same kernels)."""
+    spec = ARCHITECTURES[name]
+    params = init_params(spec)
+    x, y = _batch(spec, SMALL_BATCH)
+    lr = jnp.float32(0.37)
+    new = make_train_step(spec)(*params, x, y, lr)
+    sg = make_grad_step(spec)(*params, x, y, lr)
+    assert np.allclose(new[-1], sg[-1])  # same loss
+    for p, np_, g in zip(params, new[:-1], sg[:-1]):
+        np.testing.assert_allclose(np_, p - g, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", ["adult_dnn", "mnist_dnn"])
+def test_eval_step_counts(name):
+    spec = ARCHITECTURES[name]
+    params = init_params(spec)
+    x, y = _batch(spec, SMALL_BATCH)
+    loss_sum, correct = make_eval_step(spec)(*params, x, y)
+    assert loss_sum.shape == () and correct.dtype == jnp.int32
+    assert 0 <= int(correct) <= SMALL_BATCH
+    # loss_sum == batch * mean loss
+    np.testing.assert_allclose(
+        loss_sum / SMALL_BATCH, loss_fn(spec, params, x, y), rtol=1e-5
+    )
+
+
+def _separable_batch(spec, batch, seed=0):
+    """Linearly separable two-cluster data — loss must fall fast."""
+    rng = np.random.default_rng(seed)
+    n_classes = arch_to_dict(spec)["n_classes"]
+    y = rng.integers(0, n_classes, size=batch).astype(np.int32)
+    centers = rng.normal(size=(n_classes, spec.in_dim)).astype(np.float32) * 3
+    x = centers[y] + rng.normal(size=(batch, spec.in_dim)).astype(np.float32) * 0.1
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.mark.parametrize("name", ["adult_dnn", "higgs_dnn"])
+def test_training_reduces_loss(name):
+    spec = ARCHITECTURES[name]
+    params = init_params(spec, seed=7)
+    x, y = _separable_batch(spec, 64)
+    step = jax.jit(make_train_step(spec))
+    lr = jnp.float32(0.5)
+    first = None
+    for i in range(30):
+        out = step(*params, x, y, lr)
+        params, loss = list(out[:-1]), float(out[-1])
+        if first is None:
+            first = loss
+    assert loss < 0.8 * first, (first, loss)
+
+
+def test_mnist_cnn_train_step_smoke():
+    """One CNN step end-to-end through conv + pallas pool + pallas dense."""
+    spec = ARCHITECTURES["mnist_cnn"]
+    params = init_params(spec)
+    x, y = _batch(spec, 4)
+    out = make_train_step(spec)(*params, x, y, jnp.float32(0.1))
+    assert len(out) == len(params) + 1
+    assert bool(jnp.isfinite(out[-1]))
+    # parameters actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a - b))) > 0 for a, b in zip(out[:-1], params)
+    )
+    assert moved
+
+
+@pytest.mark.parametrize("name", sorted(ARCHITECTURES))
+def test_input_shapes_abi(name):
+    spec = ARCHITECTURES[name]
+    params, x, y, lr = input_shapes(spec, 64)
+    assert len(params) == len(spec.param_shapes())
+    assert x.shape[0] == 64 and y.shape == (64,)
+    assert lr.shape == ()

@@ -1,0 +1,88 @@
+//! `cargo bench --bench collectives` — real wall-clock microbenchmarks of
+//! the MPI substrate (not virtual time): allreduce algorithms across
+//! message sizes and rank counts, plus barrier/bcast. This is the L3 §Perf
+//! instrument: the trainer's hot loop is one allreduce per step, so the
+//! substrate's wall cost must stay far below a PJRT step (~ms).
+
+use std::time::Duration;
+
+use dtf::mpi::{
+    allreduce_with, barrier, bcast, AllreduceAlgorithm, NetProfile, ReduceOp, World,
+};
+use dtf::util::stats::{bench_fn, header};
+
+fn bench_allreduce(alg: AllreduceAlgorithm, p: usize, n: usize) {
+    let name = format!("allreduce/{alg:?}/p{p}/n{n}");
+    let s = bench_fn(&name, 2, Duration::from_millis(400), || {
+        let w = World::new(p, NetProfile::zero());
+        w.run_unwrap(move |c| {
+            let mut v = vec![1.0f32; n];
+            allreduce_with(&c, alg, ReduceOp::Sum, &mut v)?;
+            Ok(())
+        });
+    });
+    println!("{}", s.line());
+}
+
+fn main() {
+    println!("{}", header());
+    // the model sizes of Table 1: higgs 32k, mnist_dnn 178k, cnn 3.3M
+    for &n in &[31_746usize, 178_110, 635_710] {
+        for &alg in &[
+            AllreduceAlgorithm::Ring,
+            AllreduceAlgorithm::RecursiveDoubling,
+            AllreduceAlgorithm::Tree,
+        ] {
+            bench_allreduce(alg, 8, n);
+        }
+    }
+    // rank scaling at the mnist_dnn size
+    for &p in &[2usize, 4, 8, 16] {
+        bench_allreduce(AllreduceAlgorithm::Ring, p, 178_110);
+    }
+
+    let s = bench_fn("barrier/p16", 2, Duration::from_millis(300), || {
+        let w = World::new(16, NetProfile::zero());
+        w.run_unwrap(|c| {
+            barrier(&c)?;
+            Ok(())
+        });
+    });
+    println!("{}", s.line());
+
+    let s = bench_fn("bcast/p16/n178k", 2, Duration::from_millis(300), || {
+        let w = World::new(16, NetProfile::zero());
+        w.run_unwrap(|c| {
+            let mut v = if c.rank() == 0 {
+                vec![1.0f32; 178_110]
+            } else {
+                vec![]
+            };
+            bcast(&c, 0, &mut v)?;
+            Ok(())
+        });
+    });
+    println!("{}", s.line());
+
+    // steady-state allreduce: reuse one world across iterations (isolates
+    // the collective from thread spawn/join cost)
+    let w = World::new(8, NetProfile::zero());
+    let out = w.run_unwrap(|c| {
+        let mut v = vec![1.0f32; 178_110];
+        // warmup
+        for _ in 0..3 {
+            allreduce_with(&c, AllreduceAlgorithm::Ring, ReduceOp::Sum, &mut v)?;
+        }
+        let iters = 50;
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            allreduce_with(&c, AllreduceAlgorithm::Ring, ReduceOp::Sum, &mut v)?;
+        }
+        Ok(t0.elapsed().as_secs_f64() / iters as f64)
+    });
+    let per = out.iter().cloned().fold(0.0, f64::max);
+    println!(
+        "{:<44} {:>10.3} ms   (steady-state, world reused, p=8 n=178k)",
+        "allreduce/steady/Ring/p8/n178k", per * 1e3
+    );
+}

@@ -1,0 +1,58 @@
+//! `cargo bench --bench figures` — regenerate every table and figure of
+//! the paper (DESIGN.md §6) and print the same rows the paper reports.
+//!
+//! One bench target per paper artifact: Table 1, Figures 1–6, the §4.6
+//! HIGGS experiment, and the three ablations. Results also land in
+//! `results/` when it exists (same renderer as `dtf figures --all`).
+
+use std::sync::Arc;
+
+use dtf::figures::{runner, ABLATIONS, FIGURES};
+use dtf::mpi::NetProfile;
+use dtf::runtime::Manifest;
+
+fn main() {
+    let manifest = match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => Arc::new(m),
+        Err(e) => {
+            eprintln!("figures bench requires artifacts: {e:#}");
+            eprintln!("run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    let profile = NetProfile::haswell_cluster();
+    let out_dir = std::path::Path::new("results");
+    let _ = std::fs::create_dir_all(out_dir);
+
+    println!("=== Table 1 ===\n{}", runner::render_table1(&manifest));
+
+    for fig in FIGURES {
+        let t0 = std::time::Instant::now();
+        match runner::run_figure(fig, &manifest, &profile, 1, None) {
+            Ok(result) => {
+                let rendered = result.render();
+                println!("{rendered}");
+                println!("  [harness wall: {:.1}s]\n", t0.elapsed().as_secs_f64());
+                let _ = std::fs::write(out_dir.join(format!("{}.md", fig.id)), rendered);
+            }
+            Err(e) => {
+                eprintln!("figure {} failed: {e:#}", fig.id);
+                std::process::exit(1);
+            }
+        }
+    }
+
+    for ab in ABLATIONS {
+        match runner::run_ablation(ab, &manifest, 1, None) {
+            Ok(rendered) => {
+                println!("{rendered}");
+                let _ = std::fs::write(out_dir.join(format!("{}.md", ab.id)), rendered);
+            }
+            Err(e) => {
+                eprintln!("ablation {} failed: {e:#}", ab.id);
+                std::process::exit(1);
+            }
+        }
+    }
+    println!("figures bench complete; tables written to results/");
+}

@@ -1,0 +1,106 @@
+//! `cargo bench --bench runtime_step` — PJRT execution latency per
+//! architecture and entry point: the L1/L2 §Perf instrument.
+//!
+//! Reports per-step and per-sample times for every Table-1 network, plus
+//! the input-marshalling overhead (literal construction) isolated from
+//! device execution.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dtf::model::init_xavier;
+use dtf::runtime::{Engine, HostSlice, Manifest};
+use dtf::util::rng::Rng;
+use dtf::util::stats::{bench_fn, fmt_secs, header};
+
+fn main() {
+    let manifest = match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => Arc::new(m),
+        Err(e) => {
+            eprintln!("runtime bench requires artifacts: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    let engine = Engine::new(manifest.clone()).expect("pjrt client");
+    let batch = manifest.batch_size;
+    println!("{}  (batch = {batch})", header());
+
+    let archs = [
+        "adult_dnn",
+        "acoustic_dnn",
+        "higgs_dnn",
+        "mnist_dnn",
+        "cifar10_dnn",
+        "mnist_cnn",
+        "cifar10_cnn",
+    ];
+    for arch in archs {
+        let spec = manifest.arch(arch).unwrap().clone();
+        let params = init_xavier(&spec, 7);
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..batch * spec.in_dim)
+            .map(|_| rng.normal() as f32)
+            .collect();
+        let y: Vec<i32> = (0..batch)
+            .map(|_| rng.below(spec.n_classes) as i32)
+            .collect();
+        let lr = [0.01f32];
+
+        for fn_name in ["train_step", "eval_step"] {
+            let exe = engine.executable(arch, fn_name).unwrap();
+            let mut inputs: Vec<HostSlice> = (0..params.n_tensors())
+                .map(|i| HostSlice::F32(params.view(i)))
+                .collect();
+            inputs.push(HostSlice::F32(&x));
+            inputs.push(HostSlice::I32(&y));
+            if fn_name != "eval_step" {
+                inputs.push(HostSlice::F32(&lr));
+            }
+            // CNNs are slow; keep their budget smaller.
+            let budget = if arch.ends_with("cnn") {
+                Duration::from_millis(1500)
+            } else {
+                Duration::from_millis(400)
+            };
+            let s = bench_fn(&format!("{arch}/{fn_name}"), 1, budget, || {
+                exe.run(&inputs).unwrap();
+            });
+            println!(
+                "{}   [{}/sample]",
+                s.line(),
+                fmt_secs(s.median / batch as f64)
+            );
+        }
+    }
+
+    // GFLOP/s summary for the DNN hot path
+    println!("\neffective throughput (train_step, median):");
+    for arch in ["mnist_dnn", "cifar10_dnn", "higgs_dnn"] {
+        let spec = manifest.arch(arch).unwrap().clone();
+        let exe = engine.executable(arch, "train_step").unwrap();
+        let params = init_xavier(&spec, 7);
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..batch * spec.in_dim)
+            .map(|_| rng.normal() as f32)
+            .collect();
+        let y: Vec<i32> = (0..batch)
+            .map(|_| rng.below(spec.n_classes) as i32)
+            .collect();
+        let lr = [0.01f32];
+        let mut inputs: Vec<HostSlice> = (0..params.n_tensors())
+            .map(|i| HostSlice::F32(params.view(i)))
+            .collect();
+        inputs.push(HostSlice::F32(&x));
+        inputs.push(HostSlice::I32(&y));
+        inputs.push(HostSlice::F32(&lr));
+        let s = bench_fn(arch, 2, Duration::from_millis(400), || {
+            exe.run(&inputs).unwrap();
+        });
+        let flops = spec.flops_per_sample as f64 * batch as f64;
+        println!(
+            "  {arch:<14} {:>8.2} GFLOP/s ({} per step)",
+            flops / s.median / 1e9,
+            fmt_secs(s.median)
+        );
+    }
+}

@@ -1,0 +1,156 @@
+//! Training configuration — every §3.3 design axis is a knob here, so the
+//! ablation benches can flip them one at a time.
+
+use crate::mpi::ulfm::FaultPlan;
+use crate::mpi::AllreduceAlgorithm;
+
+/// How replicas synchronize (§3.3.2–3.3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncMode {
+    /// The paper's design: local SGD step, then all-reduce-average the
+    /// weights and biases.
+    WeightAverage,
+    /// Equivalent algebra, different wire content: all-reduce the
+    /// (lr-prescaled) gradients and apply the averaged update everywhere.
+    GradientAverage,
+    /// Ablation: no synchronization at all (replicas drift — the baseline
+    /// that shows why the paper synchronizes).
+    None,
+}
+
+impl SyncMode {
+    pub fn by_name(s: &str) -> Option<Self> {
+        match s {
+            "weight" | "weight-average" => Some(Self::WeightAverage),
+            "grad" | "gradient-average" => Some(Self::GradientAverage),
+            "none" => Some(Self::None),
+            _ => None,
+        }
+    }
+}
+
+/// Synchronization granularity: the paper discusses updating "at the end
+/// of a batch/epoch"; per-step is the default (true synchronous SGD).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncEvery {
+    Step,
+    Epoch,
+}
+
+/// How replica compute executes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ExecMode {
+    /// Real PJRT execution of the AOT artifacts (per-rank CPU client).
+    Real,
+    /// Simulated compute: charge `secs_per_sample` to the virtual clock
+    /// instead of executing — used for cluster-scale figure runs where
+    /// `p` exceeds physical cores. Calibrated from a real run.
+    Sim { secs_per_sample: f64 },
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Table-1 architecture id (e.g. "mnist_dnn").
+    pub arch: String,
+    pub epochs: usize,
+    pub lr: f32,
+    pub sync: SyncMode,
+    pub sync_every: SyncEvery,
+    pub allreduce: AllreduceAlgorithm,
+    pub mode: ExecMode,
+    /// Scale factor on the paper's dataset sizes (1.0 = full size).
+    pub data_scale: f64,
+    /// Cap on steps per epoch (None = full shard) — keeps real-mode tests
+    /// and examples fast without changing the code path.
+    pub max_steps_per_epoch: Option<usize>,
+    /// Evaluate on the (scattered) test set every N epochs; 0 = only at end.
+    pub eval_every: usize,
+    /// Initialize on rank 0 and broadcast, instead of same-seed replication
+    /// (ablation for the init-consistency argument).
+    pub broadcast_init: bool,
+    pub seed: u64,
+    pub fault_plan: FaultPlan,
+    /// Print per-epoch progress lines from rank 0.
+    pub verbose: bool,
+}
+
+impl TrainConfig {
+    pub fn new(arch: impl Into<String>) -> Self {
+        TrainConfig {
+            arch: arch.into(),
+            epochs: 3,
+            lr: 0.1,
+            sync: SyncMode::WeightAverage,
+            sync_every: SyncEvery::Step,
+            allreduce: AllreduceAlgorithm::Auto,
+            mode: ExecMode::Real,
+            data_scale: 0.05,
+            max_steps_per_epoch: None,
+            eval_every: 0,
+            broadcast_init: false,
+            seed: 0xD7F,
+            fault_plan: FaultPlan::none(),
+            verbose: false,
+        }
+    }
+
+    pub fn with_epochs(mut self, e: usize) -> Self {
+        self.epochs = e;
+        self
+    }
+
+    pub fn with_lr(mut self, lr: f32) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    pub fn with_sync(mut self, s: SyncMode) -> Self {
+        self.sync = s;
+        self
+    }
+
+    pub fn with_mode(mut self, m: ExecMode) -> Self {
+        self.mode = m;
+        self
+    }
+
+    pub fn with_scale(mut self, s: f64) -> Self {
+        self.data_scale = s;
+        self
+    }
+
+    pub fn with_steps_cap(mut self, n: usize) -> Self {
+        self.max_steps_per_epoch = Some(n);
+        self
+    }
+
+    pub fn with_seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_mode_names() {
+        assert_eq!(SyncMode::by_name("weight"), Some(SyncMode::WeightAverage));
+        assert_eq!(SyncMode::by_name("grad"), Some(SyncMode::GradientAverage));
+        assert_eq!(SyncMode::by_name("none"), Some(SyncMode::None));
+        assert_eq!(SyncMode::by_name("x"), None);
+    }
+
+    #[test]
+    fn builder_chains() {
+        let c = TrainConfig::new("mnist_dnn")
+            .with_epochs(7)
+            .with_lr(0.5)
+            .with_sync(SyncMode::GradientAverage)
+            .with_steps_cap(3);
+        assert_eq!(c.epochs, 7);
+        assert_eq!(c.lr, 0.5);
+        assert_eq!(c.max_steps_per_epoch, Some(3));
+    }
+}

@@ -1,0 +1,43 @@
+//! Launcher: `mpirun -np P` for the in-process world — spawns the rank
+//! threads, runs the trainer on each, and assembles the aggregate report.
+
+use std::sync::Arc;
+
+use super::config::TrainConfig;
+use super::metrics::TrainReport;
+use super::trainer::train_rank;
+use crate::mpi::{NetProfile, World};
+use crate::runtime::Manifest;
+use crate::Result;
+use anyhow::anyhow;
+
+/// Run a full training job over `ranks` simulated MPI ranks.
+pub fn run_training(
+    cfg: TrainConfig,
+    manifest: Arc<Manifest>,
+    ranks: usize,
+    profile: NetProfile,
+) -> Result<TrainReport> {
+    let arch = cfg.arch.clone();
+    let mut cfg = cfg;
+    // Simulated compute pays the node-occupancy (DRAM contention) tax of
+    // the chosen topology profile — see NetProfile::compute_contention.
+    if let super::config::ExecMode::Sim { secs_per_sample } = cfg.mode {
+        cfg.mode = super::config::ExecMode::Sim {
+            secs_per_sample: secs_per_sample * profile.compute_contention(ranks),
+        };
+    }
+    let world = World::new(ranks, profile);
+    let cfg = Arc::new(cfg);
+    let results = world.run(move |comm| train_rank(comm, &cfg, manifest.clone()));
+
+    let mut per_rank = Vec::with_capacity(ranks);
+    for (r, res) in results.into_iter().enumerate() {
+        per_rank.push(res.map_err(|e| anyhow!("rank {r}: {e:#}"))?);
+    }
+    Ok(TrainReport {
+        arch,
+        ranks,
+        per_rank,
+    })
+}

@@ -1,0 +1,184 @@
+//! Per-rank and aggregate training metrics.
+//!
+//! The virtual-clock decomposition (compute vs communication vs IO) is what
+//! the figures are made of: speedup curves come from the makespan
+//! (`max_rank clock`), and the §Perf analysis comes from the comm share.
+
+use crate::mpi::CommStats;
+
+/// One evaluation point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalPoint {
+    pub epoch: usize,
+    pub loss: f64,
+    pub accuracy: f64,
+}
+
+/// What a single rank reports back after training.
+#[derive(Debug, Clone)]
+pub struct RankMetrics {
+    pub world_rank: usize,
+    /// Samples this rank actually trained on.
+    pub samples_trained: u64,
+    pub steps: u64,
+    /// Virtual seconds charged as compute.
+    pub compute_s: f64,
+    /// Virtual seconds charged as communication (from `CommStats`).
+    pub comm_s: f64,
+    /// Virtual seconds charged as data loading/scatter.
+    pub io_s: f64,
+    /// Final virtual clock (makespan contribution).
+    pub clock_s: f64,
+    /// Wall-clock seconds actually spent (real mode).
+    pub wall_s: f64,
+    pub bytes_sent: u64,
+    pub msgs_sent: u64,
+    /// Global mean training loss per epoch (identical across ranks after
+    /// the aggregation collective).
+    pub epoch_losses: Vec<f64>,
+    pub evals: Vec<EvalPoint>,
+    /// True if this rank was killed by the fault plan.
+    pub died: bool,
+    /// Communicator size at the end (after any shrinks).
+    pub final_world: usize,
+}
+
+impl RankMetrics {
+    pub fn new(world_rank: usize) -> Self {
+        RankMetrics {
+            world_rank,
+            samples_trained: 0,
+            steps: 0,
+            compute_s: 0.0,
+            comm_s: 0.0,
+            io_s: 0.0,
+            clock_s: 0.0,
+            wall_s: 0.0,
+            bytes_sent: 0,
+            msgs_sent: 0,
+            epoch_losses: Vec::new(),
+            evals: Vec::new(),
+            died: false,
+            final_world: 0,
+        }
+    }
+
+    pub fn absorb_comm(&mut self, s: CommStats) {
+        self.comm_s = s.comm_vtime;
+        self.bytes_sent = s.bytes_sent;
+        self.msgs_sent = s.msgs_sent;
+    }
+}
+
+/// Aggregate over a whole training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub arch: String,
+    pub ranks: usize,
+    pub per_rank: Vec<RankMetrics>,
+}
+
+impl TrainReport {
+    /// Virtual makespan: the moment the slowest rank finished.
+    pub fn makespan_s(&self) -> f64 {
+        self.per_rank
+            .iter()
+            .map(|r| r.clock_s)
+            .fold(0.0, f64::max)
+    }
+
+    /// Training-only makespan (IO/scatter excluded) — what the paper's
+    /// strong-scaling figures measure; the one-time rank-0 read is
+    /// amortized over a real training run ("the majority of time is spent
+    /// in training the network", §3.3.1).
+    pub fn train_makespan_s(&self) -> f64 {
+        self.per_rank
+            .iter()
+            .map(|r| r.clock_s - r.io_s)
+            .fold(0.0, f64::max)
+    }
+
+    pub fn total_samples(&self) -> u64 {
+        self.per_rank.iter().map(|r| r.samples_trained).sum()
+    }
+
+    /// Samples/virtual-second across the job.
+    pub fn throughput(&self) -> f64 {
+        self.total_samples() as f64 / self.makespan_s().max(1e-12)
+    }
+
+    /// Mean fraction of virtual time spent communicating (survivors only).
+    pub fn comm_fraction(&self) -> f64 {
+        let alive: Vec<_> = self.per_rank.iter().filter(|r| !r.died).collect();
+        if alive.is_empty() {
+            return 0.0;
+        }
+        alive
+            .iter()
+            .map(|r| r.comm_s / r.clock_s.max(1e-12))
+            .sum::<f64>()
+            / alive.len() as f64
+    }
+
+    /// Per-epoch global loss (taken from rank 0, identical everywhere).
+    pub fn losses(&self) -> &[f64] {
+        &self.per_rank[0].epoch_losses
+    }
+
+    pub fn final_eval(&self) -> Option<EvalPoint> {
+        self.per_rank
+            .iter()
+            .find(|r| !r.died)
+            .and_then(|r| r.evals.last().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> TrainReport {
+        let mut a = RankMetrics::new(0);
+        a.clock_s = 10.0;
+        a.comm_s = 2.0;
+        a.samples_trained = 500;
+        a.epoch_losses = vec![1.0, 0.5];
+        a.evals = vec![EvalPoint {
+            epoch: 1,
+            loss: 0.4,
+            accuracy: 0.9,
+        }];
+        let mut b = RankMetrics::new(1);
+        b.clock_s = 12.0;
+        b.comm_s = 6.0;
+        b.samples_trained = 500;
+        TrainReport {
+            arch: "t".into(),
+            ranks: 2,
+            per_rank: vec![a, b],
+        }
+    }
+
+    #[test]
+    fn makespan_is_max_clock() {
+        assert_eq!(report().makespan_s(), 12.0);
+    }
+
+    #[test]
+    fn throughput_uses_makespan() {
+        assert!((report().throughput() - 1000.0 / 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comm_fraction_averages_survivors() {
+        let f = report().comm_fraction();
+        assert!((f - (0.2 + 0.5) / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn final_eval_from_surviving_rank() {
+        let e = report().final_eval().unwrap();
+        assert_eq!(e.epoch, 1);
+        assert!((e.accuracy - 0.9).abs() < 1e-12);
+    }
+}

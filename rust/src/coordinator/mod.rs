@@ -1,0 +1,19 @@
+//! The paper's contribution: the distributed-TensorFlow coordinator.
+//!
+//! Synchronous data-parallel training over the MPI substrate — rank-0 data
+//! scatter, per-rank replicas executing AOT-compiled JAX/Pallas artifacts,
+//! weight/gradient averaging via all-reduce, ULFM fault recovery, and
+//! virtual-clock metrics.
+
+pub mod config;
+pub mod launcher;
+pub mod metrics;
+pub mod replica;
+pub mod sync;
+pub mod trainer;
+
+pub use config::{ExecMode, SyncEvery, SyncMode, TrainConfig};
+pub use launcher::run_training;
+pub use metrics::{EvalPoint, RankMetrics, TrainReport};
+pub use replica::{Replica, StepOutcome};
+pub use trainer::train_rank;

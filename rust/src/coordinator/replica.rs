@@ -1,0 +1,218 @@
+//! The per-rank model replica (§3.3.2: "the model is replicated on each
+//! device; each device learns the model independently using standard
+//! backpropagation").
+//!
+//! A replica owns the flat parameter store plus reusable batch buffers and
+//! executes local steps through one of two backends:
+//!
+//! * **Pjrt** — the real thing: the AOT-compiled JAX/Pallas artifact runs
+//!   on this rank's PJRT CPU client.
+//! * **Sim** — cluster-scale mode: charge calibrated compute time to the
+//!   virtual clock instead of executing (used when simulated `p` exceeds
+//!   physical cores; calibrated from a real run — see `figures::calibrate`).
+
+use std::rc::Rc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::config::{ExecMode, SyncMode};
+use crate::data::Dataset;
+use crate::model::{init_xavier, ParamSet};
+use crate::runtime::{Engine, Executable, HostSlice, Manifest};
+use crate::Result;
+use anyhow::bail;
+
+enum Backend {
+    Pjrt {
+        // Engine must outlive the executables compiled on its client.
+        _engine: Engine,
+        train: Rc<Executable>,
+        grad: Rc<Executable>,
+        eval: Rc<Executable>,
+    },
+    Sim {
+        secs_per_sample: f64,
+    },
+}
+
+/// Result of one local step.
+#[derive(Debug, Clone, Copy)]
+pub enum StepOutcome {
+    /// Parameters were updated in place (weight-averaging / no-sync modes).
+    Updated { loss: f32 },
+    /// Scaled gradients are in `grad_flat()` (gradient-averaging mode).
+    Grads { loss: f32 },
+}
+
+impl StepOutcome {
+    pub fn loss(&self) -> f32 {
+        match self {
+            StepOutcome::Updated { loss } | StepOutcome::Grads { loss } => *loss,
+        }
+    }
+}
+
+pub struct Replica {
+    pub params: ParamSet,
+    pub batch: usize,
+    arch: String,
+    in_dim: usize,
+    backend: Backend,
+    /// Reusable buffers — zero allocation inside the epoch loop.
+    pub x_buf: Vec<f32>,
+    pub y_buf: Vec<i32>,
+    lr_buf: [f32; 1],
+    grad_flat: Vec<f32>,
+}
+
+impl Replica {
+    pub fn new(
+        manifest: &Arc<Manifest>,
+        arch: &str,
+        mode: ExecMode,
+        lr: f32,
+        seed: u64,
+    ) -> Result<Replica> {
+        let spec = manifest.arch(arch)?;
+        let batch = manifest.batch_size;
+        let params = init_xavier(spec, seed);
+        let backend = match mode {
+            ExecMode::Real => {
+                let engine = Engine::new(manifest.clone())?;
+                let train = engine.executable(arch, "train_step")?;
+                let grad = engine.executable(arch, "grad_step")?;
+                let eval = engine.executable(arch, "eval_step")?;
+                Backend::Pjrt {
+                    _engine: engine,
+                    train,
+                    grad,
+                    eval,
+                }
+            }
+            ExecMode::Sim { secs_per_sample } => Backend::Sim { secs_per_sample },
+        };
+        let n = params.n_params();
+        Ok(Replica {
+            x_buf: vec![0.0; batch * spec.in_dim],
+            y_buf: vec![0; batch],
+            lr_buf: [lr],
+            grad_flat: vec![0.0; n],
+            params,
+            batch,
+            arch: arch.to_string(),
+            in_dim: spec.in_dim,
+            backend,
+        })
+    }
+
+    pub fn arch(&self) -> &str {
+        &self.arch
+    }
+
+    pub fn grad_flat(&self) -> &[f32] {
+        &self.grad_flat
+    }
+
+    pub fn set_lr(&mut self, lr: f32) {
+        self.lr_buf[0] = lr;
+    }
+
+    fn step_inputs<'a>(x: &'a [f32], y: &'a [i32], lr: &'a [f32], params: &'a ParamSet) -> Vec<HostSlice<'a>> {
+        let mut inputs: Vec<HostSlice> = (0..params.n_tensors())
+            .map(|i| HostSlice::F32(params.view(i)))
+            .collect();
+        inputs.push(HostSlice::F32(x));
+        inputs.push(HostSlice::I32(y));
+        inputs.push(HostSlice::F32(lr));
+        inputs
+    }
+
+    /// One local step over the batch currently in `x_buf`/`y_buf`.
+    /// Returns the outcome plus the compute seconds to charge.
+    pub fn step(&mut self, sync: SyncMode) -> Result<(StepOutcome, f64)> {
+        match &self.backend {
+            Backend::Sim { secs_per_sample } => {
+                let secs = secs_per_sample * self.batch as f64;
+                let out = match sync {
+                    SyncMode::GradientAverage => StepOutcome::Grads { loss: f32::NAN },
+                    _ => StepOutcome::Updated { loss: f32::NAN },
+                };
+                Ok((out, secs))
+            }
+            Backend::Pjrt { train, grad, .. } => {
+                let t0 = Instant::now();
+                match sync {
+                    SyncMode::GradientAverage => {
+                        let out = grad.run(&Self::step_inputs(
+                            &self.x_buf,
+                            &self.y_buf,
+                            &self.lr_buf,
+                            &self.params,
+                        ))?;
+                        // Pack per-tensor grads into the flat buffer so the
+                        // trainer can all-reduce them in one call.
+                        let mut off = 0usize;
+                        for i in 0..self.params.n_tensors() {
+                            let g = out[i].as_f32()?;
+                            self.grad_flat[off..off + g.len()].copy_from_slice(g);
+                            off += g.len();
+                        }
+                        let loss = out.last().unwrap().scalar_f32()?;
+                        Ok((StepOutcome::Grads { loss }, t0.elapsed().as_secs_f64()))
+                    }
+                    SyncMode::WeightAverage | SyncMode::None => {
+                        let out = train.run(&Self::step_inputs(
+                            &self.x_buf,
+                            &self.y_buf,
+                            &self.lr_buf,
+                            &self.params,
+                        ))?;
+                        for i in 0..self.params.n_tensors() {
+                            self.params.store(i, out[i].as_f32()?);
+                        }
+                        let loss = out.last().unwrap().scalar_f32()?;
+                        Ok((StepOutcome::Updated { loss }, t0.elapsed().as_secs_f64()))
+                    }
+                }
+            }
+        }
+    }
+
+    /// Evaluate on a dataset shard: returns (loss_sum, correct, n, secs).
+    pub fn eval(&mut self, data: &Dataset) -> Result<(f64, i64, usize, f64)> {
+        match &self.backend {
+            Backend::Sim { secs_per_sample } => {
+                // Eval FLOPs ≈ forward only ≈ 1/3 of a training sample.
+                Ok((0.0, 0, data.len(), secs_per_sample / 3.0 * data.len() as f64))
+            }
+            Backend::Pjrt { eval, .. } => {
+                if data.dim != self.in_dim {
+                    bail!("eval data dim {} != model {}", data.dim, self.in_dim);
+                }
+                let t0 = Instant::now();
+                let mut it = crate::data::BatchIter::eval(data, self.batch);
+                let (mut loss_sum, mut correct) = (0f64, 0i64);
+                let mut x = std::mem::take(&mut self.x_buf);
+                let mut y = std::mem::take(&mut self.y_buf);
+                while it.next_into(&mut x, &mut y).is_some() {
+                    let mut inputs: Vec<HostSlice> = (0..self.params.n_tensors())
+                        .map(|i| HostSlice::F32(self.params.view(i)))
+                        .collect();
+                    inputs.push(HostSlice::F32(&x));
+                    inputs.push(HostSlice::I32(&y));
+                    let out = eval.run(&inputs)?;
+                    loss_sum += out[0].scalar_f32()? as f64;
+                    correct += out[1].scalar_i32()? as i64;
+                }
+                self.x_buf = x;
+                self.y_buf = y;
+                Ok((loss_sum, correct, data.len(), t0.elapsed().as_secs_f64()))
+            }
+        }
+    }
+
+    /// Is this replica executing for real (losses are meaningful)?
+    pub fn is_real(&self) -> bool {
+        matches!(self.backend, Backend::Pjrt { .. })
+    }
+}

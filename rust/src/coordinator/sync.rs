@@ -1,0 +1,64 @@
+//! The paper's synchronization step (§3.3.3): synchronous averaging of the
+//! replicated model over MPI all-reduce.
+//!
+//! Weight-averaging mode all-reduces the full flat parameter vector and
+//! divides by the rank count; gradient-averaging all-reduces the
+//! (lr-prescaled) gradient vector and applies it. Both are a *single*
+//! allreduce of `n_params` floats — the communication volume the paper's
+//! performance model calls `n² · l`.
+
+use super::config::SyncMode;
+use super::replica::{Replica, StepOutcome};
+use crate::mpi::comm::Communicator;
+use crate::mpi::{allreduce_with, AllreduceAlgorithm, MpiResult, ReduceOp};
+
+/// Synchronize the replica after a local step.
+///
+/// Returns the number of bytes all-reduced (0 when `SyncMode::None` or
+/// single-rank).
+pub fn sync_replica(
+    comm: &Communicator,
+    replica: &mut Replica,
+    outcome: &StepOutcome,
+    mode: SyncMode,
+    alg: AllreduceAlgorithm,
+) -> MpiResult<usize> {
+    if comm.size() == 1 || mode == SyncMode::None {
+        // Gradient mode still has to apply its own local gradient.
+        if let (SyncMode::GradientAverage, StepOutcome::Grads { .. }) = (mode, outcome) {
+            let g = replica.grad_flat().to_vec();
+            replica.params.sub_assign(&g);
+        }
+        return Ok(0);
+    }
+    let p = comm.size() as f32;
+    match mode {
+        SyncMode::WeightAverage => {
+            allreduce_with(comm, alg, ReduceOp::Sum, replica.params.flat_mut())?;
+            replica.params.scale(1.0 / p);
+            Ok(replica.params.n_params() * 4)
+        }
+        SyncMode::GradientAverage => {
+            // Average gradients, then every rank applies the same update —
+            // replicas stay bitwise identical without a second pass.
+            let n = replica.grad_flat().len();
+            let mut g = vec![0.0f32; n];
+            g.copy_from_slice(replica.grad_flat());
+            allreduce_with(comm, alg, ReduceOp::Sum, &mut g)?;
+            for v in g.iter_mut() {
+                *v /= p;
+            }
+            replica.params.sub_assign(&g);
+            Ok(n * 4)
+        }
+        SyncMode::None => unreachable!(),
+    }
+}
+
+/// All-reduce a small metric vector (epoch loss aggregation).
+pub fn sync_metrics(comm: &Communicator, vals: &mut [f64]) -> MpiResult<()> {
+    if comm.size() > 1 {
+        allreduce_with(comm, AllreduceAlgorithm::RecursiveDoubling, ReduceOp::Sum, vals)?;
+    }
+    Ok(())
+}

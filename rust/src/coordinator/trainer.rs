@@ -1,0 +1,240 @@
+//! The synchronous data-parallel training loop — the paper's system.
+//!
+//! Per rank: receive a shard from rank 0 (§3.3.1), replicate the model
+//! (§3.3.2), then for every epoch run local backprop steps through the AOT
+//! artifact and synchronously average weights/biases over all-reduce
+//! (§3.3.3). ULFM recovery (§2.2) wraps the epoch: on a peer failure the
+//! survivors revoke, shrink, re-align their replicas with one averaging
+//! all-reduce, and keep training.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::config::{SyncEvery, SyncMode, TrainConfig};
+use super::metrics::{EvalPoint, RankMetrics};
+use super::replica::Replica;
+use super::sync::{sync_metrics, sync_replica};
+use crate::data::{load_train_test, scatter_dataset, BatchIter, Dataset};
+use crate::mpi::comm::Communicator;
+use crate::mpi::{allreduce_with, bcast, AllreduceAlgorithm, MpiError, ReduceOp};
+use crate::runtime::Manifest;
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Entry point executed by every rank thread.
+pub fn train_rank(
+    mut comm: Communicator,
+    cfg: &TrainConfig,
+    manifest: Arc<Manifest>,
+) -> Result<RankMetrics> {
+    let wall0 = Instant::now();
+    let mut metrics = RankMetrics::new(comm.world_rank());
+    let spec = manifest.arch(&cfg.arch)?.clone();
+
+    // ---- rank-0 read + scatter (§3.3.1) --------------------------------
+    let t_io = Instant::now();
+    let (full_train, full_test) = if comm.rank() == 0 {
+        let (tr, te, _src) = load_train_test(&spec, cfg.data_scale, cfg.seed)?;
+        (Some(tr), Some(te))
+    } else {
+        (None, None)
+    };
+    comm.advance(t_io.elapsed().as_secs_f64());
+    let train_shard = scatter_dataset(&comm, 0, full_train.as_ref())?;
+    let test_shard = scatter_dataset(&comm, 0, full_test.as_ref())?;
+    drop(full_train);
+    metrics.io_s = comm.clock();
+    // Comm accounting below is training-only: waiting on the rank-0
+    // scatter is IO, not synchronization overhead.
+    let comm_at_train_start = comm.stats().comm_vtime;
+
+    // ---- replicate the model (§3.3.2) ----------------------------------
+    let mut replica = Replica::new(&manifest, &cfg.arch, cfg.mode, cfg.lr, cfg.seed)?;
+    if cfg.broadcast_init {
+        // Ablation: explicit rank-0 broadcast instead of same-seed init.
+        let mut flat = if comm.rank() == 0 {
+            replica.params.flat().to_vec()
+        } else {
+            Vec::new()
+        };
+        bcast(&comm, 0, &mut flat)?;
+        replica.params.flat_mut().copy_from_slice(&flat);
+    }
+
+    // Per-rank shuffle stream: epoch order differs per rank and per epoch.
+    let mut rng = Rng::new(cfg.seed ^ (0xA5A5 + comm.world_rank() as u64));
+
+    // ---- epochs ----------------------------------------------------------
+    let mut epoch = 0usize;
+    while epoch < cfg.epochs {
+        if cfg.fault_plan.apply(epoch, &comm) {
+            metrics.died = true;
+            break;
+        }
+        match run_epoch(&comm, cfg, &mut replica, &train_shard, &mut rng, &mut metrics) {
+            Ok(mean_loss) => {
+                metrics.epoch_losses.push(mean_loss);
+                if cfg.verbose && comm.rank() == 0 && replica.is_real() {
+                    eprintln!(
+                        "[{}] epoch {:>3}  loss {:.4}  (p={}, vclock {:.3}s)",
+                        cfg.arch,
+                        epoch,
+                        mean_loss,
+                        comm.size(),
+                        comm.clock()
+                    );
+                }
+                if cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0 && replica.is_real()
+                {
+                    if let Ok(ev) = evaluate(&comm, &mut replica, &test_shard, epoch) {
+                        metrics.evals.push(ev);
+                    }
+                }
+                epoch += 1;
+            }
+            Err(MpiError::ProcFailed { .. }) | Err(MpiError::Revoked) => {
+                // ULFM recovery: revoke so every survivor aborts, shrink,
+                // re-align replicas, retry this epoch on the survivors.
+                comm.revoke();
+                comm = comm.shrink()?;
+                realign(&comm, &mut replica)?;
+                if cfg.verbose && comm.rank() == 0 {
+                    eprintln!(
+                        "[{}] recovered from rank failure; continuing with p={}",
+                        cfg.arch,
+                        comm.size()
+                    );
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+
+    // ---- final evaluation -------------------------------------------------
+    if !metrics.died && replica.is_real() {
+        match evaluate(&comm, &mut replica, &test_shard, cfg.epochs) {
+            Ok(ev) => metrics.evals.push(ev),
+            Err(MpiError::ProcFailed { .. }) | Err(MpiError::Revoked) => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+
+    let mut final_stats = comm.stats();
+    final_stats.comm_vtime -= comm_at_train_start;
+    metrics.absorb_comm(final_stats);
+    metrics.clock_s = comm.clock();
+    metrics.wall_s = wall0.elapsed().as_secs_f64();
+    metrics.final_world = comm.size();
+    Ok(metrics)
+}
+
+/// One epoch of lockstep local steps + synchronization.
+fn run_epoch(
+    comm: &Communicator,
+    cfg: &TrainConfig,
+    replica: &mut Replica,
+    shard: &Dataset,
+    rng: &mut Rng,
+    metrics: &mut RankMetrics,
+) -> std::result::Result<f64, MpiError> {
+    // Lockstep step count: shards differ by ≤1 sample, but a synchronous
+    // collective per step requires every rank to agree exactly.
+    let mut local_batches = [shard.len() as f64 / replica.batch as f64];
+    local_batches[0] = local_batches[0].floor();
+    allreduce_with(
+        comm,
+        AllreduceAlgorithm::RecursiveDoubling,
+        ReduceOp::Min,
+        &mut local_batches,
+    )?;
+    let mut steps = local_batches[0] as usize;
+    if let Some(cap) = cfg.max_steps_per_epoch {
+        steps = steps.min(cap);
+    }
+
+    let mut it = BatchIter::train(shard, replica.batch, rng);
+    let mut loss_sum = 0f64;
+    let mut loss_n = 0usize;
+    for _ in 0..steps {
+        let mut x = std::mem::take(&mut replica.x_buf);
+        let mut y = std::mem::take(&mut replica.y_buf);
+        let got = it.next_into(&mut x, &mut y);
+        replica.x_buf = x;
+        replica.y_buf = y;
+        if got.is_none() {
+            break; // cannot happen given the Min above; defensive
+        }
+        let (outcome, secs) = replica.step(cfg.sync).map_err(|e| {
+            MpiError::Inconsistent(format!("replica step failed: {e:#}"))
+        })?;
+        comm.advance(secs);
+        metrics.compute_s += secs;
+        metrics.steps += 1;
+        metrics.samples_trained += replica.batch as u64;
+        if outcome.loss().is_finite() {
+            loss_sum += outcome.loss() as f64;
+            loss_n += 1;
+        }
+        match cfg.sync_every {
+            SyncEvery::Step => {
+                sync_replica(comm, replica, &outcome, cfg.sync, cfg.allreduce)?;
+            }
+            SyncEvery::Epoch => {
+                // No communication inside the epoch; gradient mode still
+                // applies its *local* update.
+                if let super::replica::StepOutcome::Grads { .. } = outcome {
+                    let g = replica.grad_flat().to_vec();
+                    replica.params.sub_assign(&g);
+                }
+            }
+        }
+    }
+    if cfg.sync_every == SyncEvery::Epoch && cfg.sync != SyncMode::None {
+        // End-of-epoch weight average realigns the drifted replicas
+        // (the paper's coarser-granularity variant).
+        let outcome = super::replica::StepOutcome::Updated { loss: 0.0 };
+        sync_replica(comm, replica, &outcome, SyncMode::WeightAverage, cfg.allreduce)?;
+    }
+
+    // Global mean loss for the epoch.
+    let mut agg = [loss_sum, loss_n as f64];
+    sync_metrics(comm, &mut agg)?;
+    Ok(if agg[1] > 0.0 { agg[0] / agg[1] } else { f64::NAN })
+}
+
+/// Post-recovery re-alignment: one weight-average brings every surviving
+/// replica to the identical state (the paper's replication argument).
+fn realign(comm: &Communicator, replica: &mut Replica) -> Result<()> {
+    if comm.size() > 1 {
+        allreduce_with(
+            comm,
+            AllreduceAlgorithm::Ring,
+            ReduceOp::Sum,
+            replica.params.flat_mut(),
+        )
+        .map_err(anyhow::Error::from)?;
+        replica.params.scale(1.0 / comm.size() as f32);
+    }
+    Ok(())
+}
+
+/// Distributed evaluation: every rank scores its test shard; one small
+/// all-reduce produces the global loss/accuracy.
+fn evaluate(
+    comm: &Communicator,
+    replica: &mut Replica,
+    test_shard: &Dataset,
+    epoch: usize,
+) -> std::result::Result<EvalPoint, MpiError> {
+    let (loss_sum, correct, n, secs) = replica
+        .eval(test_shard)
+        .map_err(|e| MpiError::Inconsistent(format!("eval failed: {e:#}")))?;
+    comm.advance(secs);
+    let mut agg = [loss_sum, correct as f64, n as f64];
+    sync_metrics(comm, &mut agg)?;
+    Ok(EvalPoint {
+        epoch,
+        loss: agg[0] / agg[2].max(1.0),
+        accuracy: agg[1] / agg[2].max(1.0),
+    })
+}

@@ -1,0 +1,122 @@
+//! CIFAR-10 binary format reader/writer.
+//!
+//! The distribution's `data_batch_N.bin` files are sequences of 3073-byte
+//! records: 1 label byte + 3072 pixel bytes in *planar* RGB (1024 R, 1024
+//! G, 1024 B, row-major within each plane). The reader converts to the
+//! NHWC interleaved layout the CNN artifacts consume and normalizes to
+//! [0, 1].
+
+use super::dataset::Dataset;
+use crate::Result;
+use anyhow::bail;
+use std::path::Path;
+
+pub const H: usize = 32;
+pub const W: usize = 32;
+pub const C: usize = 3;
+pub const RECORD: usize = 1 + H * W * C;
+
+/// Parse one or more concatenated CIFAR-10 binary batches.
+pub fn parse(bytes: &[u8]) -> Result<Dataset> {
+    if bytes.is_empty() || bytes.len() % RECORD != 0 {
+        bail!(
+            "cifar: byte length {} is not a multiple of record size {RECORD}",
+            bytes.len()
+        );
+    }
+    let n = bytes.len() / RECORD;
+    let mut x = vec![0f32; n * H * W * C];
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let rec = &bytes[i * RECORD..(i + 1) * RECORD];
+        let label = rec[0];
+        if label > 9 {
+            bail!("cifar: label {label} out of range at record {i}");
+        }
+        y.push(label as i32);
+        let planes = &rec[1..];
+        // planar RGB → interleaved NHWC
+        for row in 0..H {
+            for col in 0..W {
+                for ch in 0..C {
+                    let src = ch * H * W + row * W + col;
+                    let dst = i * H * W * C + (row * W + col) * C + ch;
+                    x[dst] = planes[src] as f32 / 255.0;
+                }
+            }
+        }
+    }
+    Dataset::new("cifar10", x, y, H * W * C, 10)
+}
+
+pub fn load(path: &Path) -> Result<Dataset> {
+    let bytes = std::fs::read(path)?;
+    parse(&bytes)
+}
+
+/// Serialize a dataset back to CIFAR binary records (tests/fixtures).
+/// Pixels are expected in [0, 1] interleaved NHWC.
+pub fn write(d: &Dataset) -> Result<Vec<u8>> {
+    if d.dim != H * W * C {
+        bail!("cifar write: dim {} != {}", d.dim, H * W * C);
+    }
+    let mut out = Vec::with_capacity(d.len() * RECORD);
+    for i in 0..d.len() {
+        out.push(d.y[i] as u8);
+        let row = d.row(i);
+        for ch in 0..C {
+            for p in 0..H * W {
+                out.push((row[p * C + ch] * 255.0).round().clamp(0.0, 255.0) as u8);
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_preserves_pixels_and_labels() {
+        // build a tiny synthetic "cifar" of 3 records
+        let n = 3;
+        let mut x = vec![0f32; n * H * W * C];
+        for (i, v) in x.iter_mut().enumerate() {
+            *v = ((i * 7) % 256) as f32 / 255.0;
+        }
+        let y = vec![0, 5, 9];
+        let d = Dataset::new("cifar10", x, y, H * W * C, 10).unwrap();
+        let bytes = write(&d).unwrap();
+        assert_eq!(bytes.len(), n * RECORD);
+        let d2 = parse(&bytes).unwrap();
+        assert_eq!(d2.y, d.y);
+        let max_err = d
+            .x
+            .iter()
+            .zip(&d2.x)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err <= 1.0 / 255.0 + 1e-6, "{max_err}");
+    }
+
+    #[test]
+    fn rejects_bad_sizes_and_labels() {
+        assert!(parse(&[0u8; 10]).is_err());
+        let mut rec = vec![0u8; RECORD];
+        rec[0] = 11; // invalid label
+        assert!(parse(&rec).is_err());
+    }
+
+    #[test]
+    fn planar_to_interleaved_mapping() {
+        let mut rec = vec![0u8; RECORD];
+        rec[0] = 1;
+        rec[1] = 255; // R plane, pixel (0,0)
+        rec[1 + H * W] = 128; // G plane, pixel (0,0)
+        let d = parse(&rec).unwrap();
+        assert!((d.x[0] - 1.0).abs() < 1e-6); // R at (0,0)
+        assert!((d.x[1] - 128.0 / 255.0).abs() < 1e-3); // G at (0,0)
+        assert_eq!(d.x[2], 0.0); // B at (0,0)
+    }
+}

@@ -1,0 +1,129 @@
+//! In-memory dataset: flat row-major features + integer labels.
+//!
+//! The layout mirrors what the AOT artifacts consume: one `f32` row of
+//! `dim` features per sample (CNN inputs are row-major NHWC flattened), and
+//! one `i32` class label. Keeping features flat makes rank-0 scatter a pure
+//! `scatterv` over two buffers (§3.3.1).
+
+use crate::Result;
+use anyhow::bail;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dataset {
+    pub name: String,
+    /// `n * dim` features, sample-major.
+    pub x: Vec<f32>,
+    /// `n` labels in `0..n_classes`.
+    pub y: Vec<i32>,
+    pub dim: usize,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, x: Vec<f32>, y: Vec<i32>, dim: usize, n_classes: usize) -> Result<Dataset> {
+        if dim == 0 {
+            bail!("dataset dim must be positive");
+        }
+        if x.len() != y.len() * dim {
+            bail!(
+                "dataset size mismatch: {} features != {} labels * dim {}",
+                x.len(),
+                y.len(),
+                dim
+            );
+        }
+        if let Some(&bad) = y.iter().find(|&&l| l < 0 || l as usize >= n_classes) {
+            bail!("label {bad} outside 0..{n_classes}");
+        }
+        Ok(Dataset {
+            name: name.into(),
+            x,
+            y,
+            dim,
+            n_classes,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Feature row of sample `i`.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Sub-dataset of samples `[start, end)` (copies — used by tests and
+    /// the single-process fallback; the distributed path scatters instead).
+    pub fn slice(&self, start: usize, end: usize) -> Dataset {
+        Dataset {
+            name: self.name.clone(),
+            x: self.x[start * self.dim..end * self.dim].to_vec(),
+            y: self.y[start..end].to_vec(),
+            dim: self.dim,
+            n_classes: self.n_classes,
+        }
+    }
+
+    /// Per-class sample counts (diagnostics + generator tests).
+    pub fn class_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.n_classes];
+        for &l in &self.y {
+            h[l as usize] += 1;
+        }
+        h
+    }
+
+    /// Mean/std over all features — used to sanity-check normalization.
+    pub fn feature_moments(&self) -> (f64, f64) {
+        let n = self.x.len().max(1);
+        let mean = self.x.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+        let var = self
+            .x
+            .iter()
+            .map(|&v| (v as f64 - mean) * (v as f64 - mean))
+            .sum::<f64>()
+            / n as f64;
+        (mean, var.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_validates() {
+        assert!(Dataset::new("t", vec![0.0; 6], vec![0, 1], 3, 2).is_ok());
+        assert!(Dataset::new("t", vec![0.0; 5], vec![0, 1], 3, 2).is_err());
+        assert!(Dataset::new("t", vec![0.0; 6], vec![0, 2], 3, 2).is_err());
+        assert!(Dataset::new("t", vec![], vec![], 0, 2).is_err());
+    }
+
+    #[test]
+    fn rows_and_slices() {
+        let d = Dataset::new(
+            "t",
+            (0..12).map(|i| i as f32).collect(),
+            vec![0, 1, 0, 1],
+            3,
+            2,
+        )
+        .unwrap();
+        assert_eq!(d.row(2), &[6.0, 7.0, 8.0]);
+        let s = d.slice(1, 3);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.row(0), &[3.0, 4.0, 5.0]);
+        assert_eq!(s.y, vec![1, 0]);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let d = Dataset::new("t", vec![0.0; 8], vec![0, 1, 1, 3], 2, 4).unwrap();
+        assert_eq!(d.class_histogram(), vec![1, 2, 0, 1]);
+    }
+}

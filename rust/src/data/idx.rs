@@ -1,0 +1,130 @@
+//! IDX format (MNIST) reader/writer.
+//!
+//! The real MNIST distribution ships `train-images-idx3-ubyte` /
+//! `train-labels-idx1-ubyte`; this module parses that exact format (big-
+//! endian magic 0x0000_0803 for 3-D u8 tensors, 0x0000_0801 for labels),
+//! normalizing pixels to [0, 1]. The writer exists so tests can round-trip
+//! without shipping the dataset, and so users can drop the genuine files
+//! into `data/mnist/` and train on them unchanged.
+
+use super::dataset::Dataset;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::io::Read;
+use std::path::Path;
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("idx: truncated header")?;
+    Ok(u32::from_be_bytes(b))
+}
+
+/// Parse an images file (magic 0x803) into normalized rows.
+pub fn read_images(r: &mut impl Read) -> Result<(Vec<f32>, usize, usize)> {
+    let magic = read_u32(r)?;
+    if magic != 0x0000_0803 {
+        bail!("idx images: bad magic {magic:#010x}");
+    }
+    let n = read_u32(r)? as usize;
+    let h = read_u32(r)? as usize;
+    let w = read_u32(r)? as usize;
+    let mut raw = vec![0u8; n * h * w];
+    r.read_exact(&mut raw).context("idx: truncated pixel data")?;
+    Ok((
+        raw.iter().map(|&p| p as f32 / 255.0).collect(),
+        n,
+        h * w,
+    ))
+}
+
+/// Parse a labels file (magic 0x801).
+pub fn read_labels(r: &mut impl Read) -> Result<Vec<i32>> {
+    let magic = read_u32(r)?;
+    if magic != 0x0000_0801 {
+        bail!("idx labels: bad magic {magic:#010x}");
+    }
+    let n = read_u32(r)? as usize;
+    let mut raw = vec![0u8; n];
+    r.read_exact(&mut raw).context("idx: truncated labels")?;
+    Ok(raw.into_iter().map(|b| b as i32).collect())
+}
+
+/// Load an MNIST-style pair of files into a [`Dataset`].
+pub fn load(images: &Path, labels: &Path, n_classes: usize) -> Result<Dataset> {
+    let mut fi = std::fs::File::open(images)
+        .with_context(|| format!("open {}", images.display()))?;
+    let (x, n, dim) = read_images(&mut fi)?;
+    let mut fl = std::fs::File::open(labels)
+        .with_context(|| format!("open {}", labels.display()))?;
+    let y = read_labels(&mut fl)?;
+    if y.len() != n {
+        bail!("idx: {n} images but {} labels", y.len());
+    }
+    Dataset::new("mnist", x, y, dim, n_classes)
+}
+
+/// Serialize images (u8 pixels) + labels in IDX format (tests, fixtures).
+pub fn write_images(pixels: &[u8], n: usize, h: usize, w: usize) -> Vec<u8> {
+    assert_eq!(pixels.len(), n * h * w);
+    let mut out = Vec::with_capacity(16 + pixels.len());
+    out.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+    out.extend_from_slice(&(n as u32).to_be_bytes());
+    out.extend_from_slice(&(h as u32).to_be_bytes());
+    out.extend_from_slice(&(w as u32).to_be_bytes());
+    out.extend_from_slice(pixels);
+    out
+}
+
+pub fn write_labels(labels: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + labels.len());
+    out.extend_from_slice(&0x0000_0801u32.to_be_bytes());
+    out.extend_from_slice(&(labels.len() as u32).to_be_bytes());
+    out.extend_from_slice(labels);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let pixels: Vec<u8> = (0..2 * 4 * 4).map(|i| (i * 16) as u8).collect();
+        let img_bytes = write_images(&pixels, 2, 4, 4);
+        let (x, n, dim) = read_images(&mut img_bytes.as_slice()).unwrap();
+        assert_eq!((n, dim), (2, 16));
+        assert!((x[1] - 16.0 / 255.0).abs() < 1e-6);
+
+        let lab_bytes = write_labels(&[3, 7]);
+        let y = read_labels(&mut lab_bytes.as_slice()).unwrap();
+        assert_eq!(y, vec![3, 7]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bytes = write_images(&[0u8; 4], 1, 2, 2);
+        bytes[3] = 0x99;
+        assert!(read_images(&mut bytes.as_slice()).is_err());
+        assert!(read_labels(&mut bytes.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let bytes = write_images(&[0u8; 16], 1, 4, 4);
+        assert!(read_images(&mut &bytes[..10]).is_err());
+        assert!(read_images(&mut &bytes[..20]).is_err());
+    }
+
+    #[test]
+    fn load_pair_from_disk() {
+        let dir = std::env::temp_dir().join("dtf_idx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ip = dir.join("img");
+        let lp = dir.join("lab");
+        std::fs::write(&ip, write_images(&[10u8; 2 * 9], 2, 3, 3)).unwrap();
+        std::fs::write(&lp, write_labels(&[1, 0])).unwrap();
+        let d = load(&ip, &lp, 10).unwrap();
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.dim, 9);
+    }
+}

@@ -1,0 +1,150 @@
+//! LIBSVM text format parser — how Adult (`a9a`), Acoustic (`combined`)
+//! and HIGGS are actually distributed.
+//!
+//! Lines look like `+1 3:1 11:0.5 ...`: a label followed by sparse
+//! `index:value` pairs (1-based indices). Labels may be `+1/-1` (binary)
+//! or `0..k-1` / `1..k` (multiclass); we normalize to `0..k-1`.
+
+use super::dataset::Dataset;
+use crate::Result;
+use anyhow::{anyhow, bail, Context};
+use std::path::Path;
+
+/// Parse LIBSVM text. `dim` fixes the dense width (features beyond it are
+/// rejected — a truncated Adult line is data corruption, not a feature).
+pub fn parse(text: &str, name: &str, dim: usize, n_classes: usize) -> Result<Dataset> {
+    let mut x = Vec::new();
+    let mut raw_labels: Vec<f64> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label: f64 = parts
+            .next()
+            .ok_or_else(|| anyhow!("line {}: empty", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad label", lineno + 1))?;
+        raw_labels.push(label);
+        let row_start = x.len();
+        x.resize(row_start + dim, 0.0f32);
+        for pair in parts {
+            let (idx_s, val_s) = pair
+                .split_once(':')
+                .ok_or_else(|| anyhow!("line {}: bad pair {pair:?}", lineno + 1))?;
+            let idx: usize = idx_s
+                .parse()
+                .with_context(|| format!("line {}: bad index", lineno + 1))?;
+            let val: f32 = val_s
+                .parse()
+                .with_context(|| format!("line {}: bad value", lineno + 1))?;
+            if idx == 0 || idx > dim {
+                bail!("line {}: index {idx} outside 1..={dim}", lineno + 1);
+            }
+            x[row_start + idx - 1] = val;
+        }
+    }
+    let y = normalize_labels(&raw_labels, n_classes)?;
+    Dataset::new(name, x, y, dim, n_classes)
+}
+
+/// Map raw labels onto `0..k-1`: handles `{-1,+1}`, `{0..k-1}`, `{1..k}`.
+fn normalize_labels(raw: &[f64], n_classes: usize) -> Result<Vec<i32>> {
+    let is_pm1 = raw.iter().all(|&l| l == 1.0 || l == -1.0);
+    if is_pm1 && n_classes == 2 {
+        return Ok(raw.iter().map(|&l| i32::from(l > 0.0)).collect());
+    }
+    let min = raw.iter().cloned().fold(f64::INFINITY, f64::min);
+    let offset = if min >= 1.0 { 1.0 } else { 0.0 };
+    raw.iter()
+        .map(|&l| {
+            let v = l - offset;
+            if v < 0.0 || v >= n_classes as f64 || v.fract() != 0.0 {
+                bail!("label {l} not mappable to 0..{n_classes}");
+            }
+            Ok(v as i32)
+        })
+        .collect()
+}
+
+pub fn load(path: &Path, name: &str, dim: usize, n_classes: usize) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    parse(&text, name, dim, n_classes)
+}
+
+/// Serialize in LIBSVM format (sparse: zeros omitted) — fixtures/tests.
+pub fn write(d: &Dataset, pm1: bool) -> String {
+    let mut out = String::new();
+    for i in 0..d.len() {
+        let label = if pm1 {
+            if d.y[i] == 1 { "+1".into() } else { "-1".into() }
+        } else {
+            d.y[i].to_string()
+        };
+        out.push_str(&label);
+        for (j, &v) in d.row(i).iter().enumerate() {
+            if v != 0.0 {
+                out.push_str(&format!(" {}:{}", j + 1, v));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_pm1_sparse() {
+        let d = parse("+1 1:0.5 3:1\n-1 2:2\n", "adult", 3, 2).unwrap();
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.row(0), &[0.5, 0.0, 1.0]);
+        assert_eq!(d.row(1), &[0.0, 2.0, 0.0]);
+        assert_eq!(d.y, vec![1, 0]);
+    }
+
+    #[test]
+    fn parses_multiclass_one_based() {
+        let d = parse("1 1:1\n3 2:1\n2 3:1\n", "acoustic", 3, 3).unwrap();
+        assert_eq!(d.y, vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn skips_comments_and_blank_lines() {
+        let d = parse("# header\n\n+1 1:1\n", "t", 1, 2).unwrap();
+        assert_eq!(d.len(), 1);
+    }
+
+    #[test]
+    fn rejects_out_of_range_index() {
+        assert!(parse("+1 4:1\n", "t", 3, 2).is_err());
+        assert!(parse("+1 0:1\n", "t", 3, 2).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("+1 a:b\n", "t", 3, 2).is_err());
+        assert!(parse("x 1:1\n", "t", 3, 2).is_err());
+        assert!(parse("5 1:1\n", "t", 3, 3).is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let d = Dataset::new(
+            "t",
+            vec![0.5, 0.0, 1.0, 0.0, 2.0, 0.0],
+            vec![1, 0],
+            3,
+            2,
+        )
+        .unwrap();
+        let text = write(&d, true);
+        let d2 = parse(&text, "t", 3, 2).unwrap();
+        assert_eq!(d.x, d2.x);
+        assert_eq!(d.y, d2.y);
+    }
+}

@@ -1,0 +1,87 @@
+//! Dataset resolution: real files when present, synthetic otherwise.
+//!
+//! Looks under `$DTF_DATA` (default `data/`) for the canonical
+//! distribution files of each Table-1 dataset; anything missing falls back
+//! to the deterministic synthetic generator with the same geometry, so the
+//! whole system runs out of the box and upgrades to real data by dropping
+//! files in place.
+
+use std::path::PathBuf;
+
+use super::dataset::Dataset;
+use super::{cifar, idx, libsvm, synthetic};
+use crate::model::spec::ArchSpec;
+use crate::Result;
+
+/// Where to look for real dataset files.
+pub fn data_dir() -> PathBuf {
+    std::env::var_os("DTF_DATA")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("data"))
+}
+
+/// Source actually used — surfaced in logs and EXPERIMENTS.md.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Source {
+    RealFiles,
+    Synthetic,
+}
+
+/// Load the train/test pair for `spec`, preferring real files.
+/// `scale` shrinks the synthetic sizes (1.0 = paper-size).
+pub fn load_train_test(
+    spec: &ArchSpec,
+    scale: f64,
+    seed: u64,
+) -> Result<(Dataset, Dataset, Source)> {
+    if let Some(pair) = try_real(spec)? {
+        return Ok((pair.0, pair.1, Source::RealFiles));
+    }
+    let (tr, te) = synthetic::train_test(spec, scale, seed);
+    Ok((tr, te, Source::Synthetic))
+}
+
+fn try_real(spec: &ArchSpec) -> Result<Option<(Dataset, Dataset)>> {
+    let dir = data_dir();
+    let dataset = spec.name.split('_').next().unwrap_or("");
+    match dataset {
+        "mnist" => {
+            let paths = [
+                dir.join("mnist/train-images-idx3-ubyte"),
+                dir.join("mnist/train-labels-idx1-ubyte"),
+                dir.join("mnist/t10k-images-idx3-ubyte"),
+                dir.join("mnist/t10k-labels-idx1-ubyte"),
+            ];
+            if paths.iter().all(|p| p.exists()) {
+                let tr = idx::load(&paths[0], &paths[1], 10)?;
+                let te = idx::load(&paths[2], &paths[3], 10)?;
+                return Ok(Some((tr, te)));
+            }
+        }
+        "cifar10" => {
+            let batches: Vec<PathBuf> = (1..=5)
+                .map(|i| dir.join(format!("cifar10/data_batch_{i}.bin")))
+                .collect();
+            let test = dir.join("cifar10/test_batch.bin");
+            if batches.iter().all(|p| p.exists()) && test.exists() {
+                let mut bytes = Vec::new();
+                for b in &batches {
+                    bytes.extend(std::fs::read(b)?);
+                }
+                return Ok(Some((cifar::parse(&bytes)?, cifar::load(&test)?)));
+            }
+        }
+        "adult" | "acoustic" | "higgs" => {
+            let train = dir.join(format!("{dataset}/train.libsvm"));
+            let test = dir.join(format!("{dataset}/test.libsvm"));
+            if train.exists() && test.exists() {
+                return Ok(Some((
+                    libsvm::load(&train, dataset, spec.in_dim, spec.n_classes)?,
+                    libsvm::load(&test, dataset, spec.in_dim, spec.n_classes)?,
+                )));
+            }
+        }
+        _ => {}
+    }
+    Ok(None)
+}

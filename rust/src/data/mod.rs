@@ -1,0 +1,16 @@
+//! Data layer: the five paper datasets (real-format parsers + synthetic
+//! generators), rank-0 scatter distribution, and fixed-shape minibatching.
+
+pub mod batch;
+pub mod cifar;
+pub mod dataset;
+pub mod idx;
+pub mod libsvm;
+pub mod loader;
+pub mod shard;
+pub mod synthetic;
+
+pub use batch::{BatchIter, PAD_LABEL};
+pub use dataset::Dataset;
+pub use loader::{load_train_test, Source};
+pub use shard::scatter_dataset;

@@ -1,0 +1,108 @@
+//! Rank-0 data distribution (§3.3.1): "the default process reads the
+//! samples from the disk and splits them across processes".
+//!
+//! Rank 0 holds the full dataset; every other rank receives its contiguous
+//! even shard through two `scatterv` calls (features, labels). The paper
+//! notes this serial read "is not optimized for parallel reading" but is
+//! amortized by training time — `figures::` charges its cost faithfully.
+
+use super::dataset::Dataset;
+use crate::mpi::collectives::{bcast, scatterv};
+use crate::mpi::comm::Communicator;
+use crate::mpi::{chunk_range, MpiResult};
+
+/// Scatter `full` (present at `root` only) into per-rank shards.
+pub fn scatter_dataset(
+    comm: &Communicator,
+    root: usize,
+    full: Option<&Dataset>,
+) -> MpiResult<Dataset> {
+    // Header broadcast: [n, dim, n_classes] so non-roots can validate.
+    let mut header: Vec<i32> = if comm.rank() == root {
+        let d = full.expect("root must hold the dataset");
+        vec![d.len() as i32, d.dim as i32, d.n_classes as i32]
+    } else {
+        vec![]
+    };
+    bcast(comm, root, &mut header)?;
+    let (n, dim, n_classes) = (header[0] as usize, header[1] as usize, header[2] as usize);
+
+    let p = comm.size();
+    let sample_counts: Vec<usize> = (0..p)
+        .map(|r| {
+            let (s, e) = chunk_range(n, p, r);
+            e - s
+        })
+        .collect();
+    let x_counts: Vec<usize> = sample_counts.iter().map(|c| c * dim).collect();
+
+    let x = scatterv(
+        comm,
+        root,
+        full.map(|d| d.x.as_slice()),
+        &x_counts,
+    )?;
+    let y = scatterv(
+        comm,
+        root,
+        full.map(|d| d.y.as_slice()),
+        &sample_counts,
+    )?;
+    let name = full.map(|d| d.name.clone()).unwrap_or_else(|| "shard".into());
+    Ok(Dataset::new(name, x, y, dim, n_classes).expect("shard invariant"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::{NetProfile, World};
+
+    fn full() -> Dataset {
+        Dataset::new(
+            "t",
+            (0..20).map(|i| i as f32).collect(),
+            (0..10).map(|i| (i % 3) as i32).collect(),
+            2,
+            3,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn shards_partition_the_dataset() {
+        let w = World::new(3, NetProfile::zero());
+        let out = w.run_unwrap(|c| {
+            let d = if c.rank() == 0 { Some(full()) } else { None };
+            Ok(scatter_dataset(&c, 0, d.as_ref())?)
+        });
+        // 10 samples over 3 ranks → 4,3,3
+        assert_eq!(out.iter().map(|d| d.len()).collect::<Vec<_>>(), vec![4, 3, 3]);
+        let f = full();
+        let merged_x: Vec<f32> = out.iter().flat_map(|d| d.x.clone()).collect();
+        let merged_y: Vec<i32> = out.iter().flat_map(|d| d.y.clone()).collect();
+        assert_eq!(merged_x, f.x);
+        assert_eq!(merged_y, f.y);
+        assert!(out.iter().all(|d| d.dim == 2 && d.n_classes == 3));
+    }
+
+    #[test]
+    fn single_rank_gets_everything() {
+        let w = World::new(1, NetProfile::zero());
+        let out = w.run_unwrap(|c| {
+            let d = full();
+            Ok(scatter_dataset(&c, 0, Some(&d))?)
+        });
+        assert_eq!(out[0], full());
+    }
+
+    #[test]
+    fn scatter_cost_charged_to_clocks() {
+        let w = World::new(4, NetProfile::infiniband_fdr());
+        let clocks = w.run_unwrap(|c| {
+            let d = if c.rank() == 0 { Some(full()) } else { None };
+            scatter_dataset(&c, 0, d.as_ref())?;
+            Ok(c.clock())
+        });
+        assert!(clocks.iter().all(|&t| t > 0.0), "{clocks:?}");
+    }
+}

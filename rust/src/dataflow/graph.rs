@@ -1,0 +1,230 @@
+//! The computational graph — nodes are operations, edges carry tensors
+//! (paper §2.1). Placeholders are the only data entry point; variables are
+//! the only persistent state; control edges order side effects.
+
+use super::tensor::Tensor;
+
+pub type NodeId = usize;
+
+/// Operations — enough surface to express the paper's DNNs and their
+/// training update natively in the dataflow engine.
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// Named graph input; fed at `Session::run` time.
+    Placeholder { name: String },
+    /// Persistent state, initialized once, mutated by `AssignSub`.
+    Variable { name: String, init: Tensor },
+    Const(Tensor),
+    MatMul,
+    /// Elementwise add with trailing-dim broadcast (bias).
+    Add,
+    Mul,
+    Sub,
+    Sigmoid,
+    Relu,
+    /// Row softmax + cross-entropy against int labels: inputs
+    /// (logits, onehot); output scalar mean loss.
+    SoftmaxXent,
+    /// Transpose a rank-2 tensor.
+    Transpose,
+    /// Column sum (rank-2 → rank-1).
+    ColSum,
+    /// variable -= lr * grad ; inputs (var, grad, lr) — mutates the
+    /// variable, returns its new value.
+    AssignSub,
+    /// Identity; also the materialization point for cross-device edges
+    /// after send/recv insertion.
+    Identity,
+    /// d/dx relu(x) = 1 where x > 0 else 0 (gradient helper).
+    ReluMask,
+    /// (logits, onehot, upstream-scalar) → (softmax - onehot) * g / m.
+    SoftmaxXentGrad,
+    /// Inserted by `sendrecv`: transfer marker (device boundary).
+    Send { to_device: usize },
+    Recv { from_device: usize },
+}
+
+impl Op {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Placeholder { .. } => "Placeholder",
+            Op::Variable { .. } => "Variable",
+            Op::Const(_) => "Const",
+            Op::MatMul => "MatMul",
+            Op::Add => "Add",
+            Op::Mul => "Mul",
+            Op::Sub => "Sub",
+            Op::Sigmoid => "Sigmoid",
+            Op::Relu => "Relu",
+            Op::SoftmaxXent => "SoftmaxXent",
+            Op::Transpose => "Transpose",
+            Op::ColSum => "ColSum",
+            Op::ReluMask => "ReluMask",
+            Op::SoftmaxXentGrad => "SoftmaxXentGrad",
+            Op::AssignSub => "AssignSub",
+            Op::Identity => "Identity",
+            Op::Send { .. } => "Send",
+            Op::Recv { .. } => "Recv",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub op: Op,
+    /// Data inputs (edges carrying tensors).
+    pub inputs: Vec<NodeId>,
+    /// Control dependencies: must run after these, no data flows.
+    pub control: Vec<NodeId>,
+    /// Device assignment (filled by `placement`).
+    pub device: Option<usize>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn new() -> Graph {
+        Graph::default()
+    }
+
+    pub fn add(&mut self, op: Op, inputs: Vec<NodeId>) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            id,
+            op,
+            inputs,
+            control: Vec::new(),
+            device: None,
+        });
+        id
+    }
+
+    pub fn add_control(&mut self, node: NodeId, after: NodeId) {
+        self.nodes[node].control.push(after);
+    }
+
+    pub fn placeholder(&mut self, name: &str) -> NodeId {
+        self.add(
+            Op::Placeholder {
+                name: name.to_string(),
+            },
+            vec![],
+        )
+    }
+
+    pub fn variable(&mut self, name: &str, init: Tensor) -> NodeId {
+        self.add(
+            Op::Variable {
+                name: name.to_string(),
+                init,
+            },
+            vec![],
+        )
+    }
+
+    pub fn constant(&mut self, t: Tensor) -> NodeId {
+        self.add(Op::Const(t), vec![])
+    }
+
+    /// All dependencies (data + control) of `id`.
+    pub fn deps(&self, id: NodeId) -> impl Iterator<Item = NodeId> + '_ {
+        let n = &self.nodes[id];
+        n.inputs.iter().chain(n.control.iter()).copied()
+    }
+
+    /// Dependency-count topological order (exactly the paper's §2.1
+    /// description: keep a queue of nodes with no unresolved dependencies,
+    /// decrement dependents as nodes complete). Returns None on a cycle.
+    pub fn topo_order(&self) -> Option<Vec<NodeId>> {
+        let n = self.nodes.len();
+        let mut unresolved: Vec<usize> = vec![0; n];
+        let mut dependents: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+        for node in &self.nodes {
+            for dep in self.deps(node.id) {
+                unresolved[node.id] += 1;
+                dependents[dep].push(node.id);
+            }
+        }
+        let mut queue: std::collections::VecDeque<NodeId> = (0..n)
+            .filter(|&i| unresolved[i] == 0)
+            .collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(id) = queue.pop_front() {
+            order.push(id);
+            for &d in &dependents[id] {
+                unresolved[d] -= 1;
+                if unresolved[d] == 0 {
+                    queue.push_back(d);
+                }
+            }
+        }
+        (order.len() == n).then_some(order)
+    }
+
+    /// Nodes reachable (backwards) from `targets` — session runs only the
+    /// subgraph a fetch needs, like TensorFlow.
+    pub fn reachable(&self, targets: &[NodeId]) -> Vec<bool> {
+        let mut seen = vec![false; self.nodes.len()];
+        let mut stack: Vec<NodeId> = targets.to_vec();
+        while let Some(id) = stack.pop() {
+            if std::mem::replace(&mut seen[id], true) {
+                continue;
+            }
+            stack.extend(self.deps(id));
+        }
+        seen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topo_order_respects_deps() {
+        let mut g = Graph::new();
+        let a = g.placeholder("a");
+        let b = g.placeholder("b");
+        let c = g.add(Op::Add, vec![a, b]);
+        let d = g.add(Op::Sigmoid, vec![c]);
+        let order = g.topo_order().unwrap();
+        let pos = |id: NodeId| order.iter().position(|&x| x == id).unwrap();
+        assert!(pos(a) < pos(c) && pos(b) < pos(c) && pos(c) < pos(d));
+    }
+
+    #[test]
+    fn control_edges_order_execution() {
+        let mut g = Graph::new();
+        let a = g.placeholder("a");
+        let b = g.add(Op::Identity, vec![a]);
+        let c = g.add(Op::Identity, vec![a]);
+        g.add_control(b, c); // b must run after c despite no data edge
+        let order = g.topo_order().unwrap();
+        let pos = |id: NodeId| order.iter().position(|&x| x == id).unwrap();
+        assert!(pos(c) < pos(b));
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = Graph::new();
+        let a = g.placeholder("a");
+        let b = g.add(Op::Identity, vec![a]);
+        g.nodes[a].inputs.push(b); // manufacture a cycle
+        assert!(g.topo_order().is_none());
+    }
+
+    #[test]
+    fn reachability_prunes() {
+        let mut g = Graph::new();
+        let a = g.placeholder("a");
+        let _unused = g.add(Op::Sigmoid, vec![a]);
+        let used = g.add(Op::Relu, vec![a]);
+        let seen = g.reachable(&[used]);
+        assert!(seen[a] && seen[used]);
+        assert!(!seen[_unused]);
+    }
+}

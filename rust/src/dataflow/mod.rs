@@ -1,0 +1,25 @@
+//! A miniature TensorFlow — the §2.1 substrate the paper builds on.
+//!
+//! Computational graph (placeholders / variables / control edges),
+//! dependency-count session scheduler, reverse-mode autodiff that emits
+//! gradient *graph nodes*, greedy device placement driven by a cost
+//! simulation, and send/recv insertion with transfer deduplication.
+//!
+//! The distributed trainer does **not** route tensors through this engine
+//! (the hot path is the AOT-compiled PJRT artifact); this module exists
+//! because the paper's design discussion — and our tests of it — are about
+//! these exact mechanisms.
+
+pub mod grad;
+pub mod graph;
+pub mod placement;
+pub mod sendrecv;
+pub mod session;
+pub mod tensor;
+
+pub use grad::gradients;
+pub use graph::{Graph, Node, NodeId, Op};
+pub use placement::{cpu_device, gpu_device, place, Device, Placement};
+pub use sendrecv::{insert_send_recv, TransferPlan};
+pub use session::Session;
+pub use tensor::Tensor;

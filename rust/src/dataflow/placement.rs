@@ -1,0 +1,175 @@
+//! Greedy device placement — the paper's §2.1 description, implemented:
+//! "TensorFlow runs a simulation of the graph to determine approximately
+//! how long each node will take ... the greedy algorithm assigns nodes to
+//! devices based on whether or not there is a kernel for that operation on
+//! that device and based on which device is expected to be free when the
+//! computation is ready to be done."
+
+use super::graph::{Graph, NodeId, Op};
+
+/// A device the placer can schedule onto.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub name: String,
+    /// Relative compute speed (higher = faster). GPUs > CPUs.
+    pub speed: f64,
+    /// Whether this device has a kernel for the given op (the paper:
+    /// "not all operations have GPU implementations").
+    pub has_kernel: fn(&Op) -> bool,
+}
+
+pub fn cpu_device(name: &str) -> Device {
+    Device {
+        name: name.to_string(),
+        speed: 1.0,
+        has_kernel: |_| true,
+    }
+}
+
+pub fn gpu_device(name: &str) -> Device {
+    Device {
+        name: name.to_string(),
+        speed: 8.0,
+        // A GPU without kernels for stateful/host ops — mirrors TF.
+        has_kernel: |op| {
+            !matches!(
+                op,
+                Op::Placeholder { .. } | Op::Variable { .. } | Op::AssignSub
+            )
+        },
+    }
+}
+
+/// Approximate node cost in abstract time units (the paper's simulation
+/// phase). Matmul dominates; elementwise ops are cheap; sources are free.
+pub fn node_cost(op: &Op) -> f64 {
+    match op {
+        Op::MatMul => 100.0,
+        Op::SoftmaxXent | Op::SoftmaxXentGrad => 20.0,
+        Op::Sigmoid | Op::Relu | Op::ReluMask => 5.0,
+        Op::Add | Op::Sub | Op::Mul | Op::ColSum | Op::Transpose => 4.0,
+        Op::AssignSub => 4.0,
+        Op::Identity | Op::Send { .. } | Op::Recv { .. } => 1.0,
+        Op::Placeholder { .. } | Op::Variable { .. } | Op::Const(_) => 0.0,
+    }
+}
+
+/// Result of a placement pass.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    /// device index per node.
+    pub assignment: Vec<usize>,
+    /// Simulated finish time per device.
+    pub device_busy_until: Vec<f64>,
+    /// Simulated makespan.
+    pub makespan: f64,
+}
+
+/// Greedy earliest-available-device placement in dependency order. Writes
+/// the assignment back into `graph.nodes[..].device`.
+pub fn place(graph: &mut Graph, devices: &[Device]) -> Option<Placement> {
+    let order = graph.topo_order()?;
+    let n = graph.nodes.len();
+    let mut assignment = vec![0usize; n];
+    let mut ready_time = vec![0f64; n];
+    let mut busy = vec![0f64; devices.len()];
+
+    for id in order {
+        let node = &graph.nodes[id];
+        // earliest moment all inputs are done
+        let ready = graph
+            .deps(id)
+            .map(|d| ready_time[d])
+            .fold(0.0f64, f64::max);
+        // candidate devices = those with a kernel; pick the one that can
+        // *finish* earliest (availability + cost/speed)
+        let mut best: Option<(usize, f64)> = None;
+        for (di, dev) in devices.iter().enumerate() {
+            if !(dev.has_kernel)(&node.op) {
+                continue;
+            }
+            let start = ready.max(busy[di]);
+            let finish = start + node_cost(&node.op) / dev.speed;
+            if best.map_or(true, |(_, bf)| finish < bf) {
+                best = Some((di, finish));
+            }
+        }
+        let (di, finish) = best?; // None = op with no kernel anywhere
+        assignment[id] = di;
+        busy[di] = finish;
+        ready_time[id] = finish;
+        graph.nodes[id].device = Some(di);
+    }
+    let makespan = busy.iter().cloned().fold(0.0, f64::max);
+    Some(Placement {
+        assignment,
+        device_busy_until: busy,
+        makespan,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::tensor::Tensor;
+
+    fn mlp_graph() -> (Graph, NodeId) {
+        let mut g = Graph::new();
+        let x = g.placeholder("x");
+        let w = g.variable("w", Tensor::zeros(vec![4, 4]));
+        let z = g.add(Op::MatMul, vec![x, w]);
+        let h = g.add(Op::Sigmoid, vec![z]);
+        (g, h)
+    }
+
+    #[test]
+    fn single_cpu_gets_everything() {
+        let (mut g, _) = mlp_graph();
+        let p = place(&mut g, &[cpu_device("cpu:0")]).unwrap();
+        assert!(p.assignment.iter().all(|&d| d == 0));
+        assert!(p.makespan > 0.0);
+    }
+
+    #[test]
+    fn gpu_takes_matmul_cpu_keeps_stateful_ops() {
+        let (mut g, _) = mlp_graph();
+        let devs = [cpu_device("cpu:0"), gpu_device("gpu:0")];
+        place(&mut g, &devs).unwrap();
+        for node in &g.nodes {
+            match node.op {
+                // no GPU kernel → must sit on CPU
+                Op::Placeholder { .. } | Op::Variable { .. } => {
+                    assert_eq!(node.device, Some(0), "{}", node.op.name())
+                }
+                // heavy op → GPU wins on finish time
+                Op::MatMul => assert_eq!(node.device, Some(1)),
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn two_equal_cpus_split_parallel_branches() {
+        let mut g = Graph::new();
+        let x = g.placeholder("x");
+        // two independent heavy branches
+        let w1 = g.variable("w1", Tensor::zeros(vec![4, 4]));
+        let w2 = g.variable("w2", Tensor::zeros(vec![4, 4]));
+        let m1 = g.add(Op::MatMul, vec![x, w1]);
+        let m2 = g.add(Op::MatMul, vec![x, w2]);
+        let devs = [cpu_device("cpu:0"), cpu_device("cpu:1")];
+        let p = place(&mut g, &devs).unwrap();
+        assert_ne!(
+            p.assignment[m1], p.assignment[m2],
+            "independent matmuls should land on different devices"
+        );
+    }
+
+    #[test]
+    fn makespan_reflects_critical_path() {
+        let (mut g, _) = mlp_graph();
+        let slow = place(&mut g.clone(), &[cpu_device("cpu")]).unwrap();
+        let fast = place(&mut g, &[gpu_device("gpu"), cpu_device("cpu")]).unwrap();
+        assert!(fast.makespan < slow.makespan);
+    }
+}

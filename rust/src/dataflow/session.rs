@@ -1,0 +1,244 @@
+//! The session: owns variable state, interprets the graph with the
+//! dependency-count scheduler, feeds placeholders, fetches outputs
+//! (paper §2.1: "all graph computations take place within a session").
+
+use std::collections::HashMap;
+
+use super::graph::{Graph, NodeId, Op};
+use super::tensor::Tensor;
+use crate::Result;
+use anyhow::{anyhow, bail};
+
+pub struct Session {
+    pub graph: Graph,
+    /// Persistent variable values, keyed by node id.
+    variables: HashMap<NodeId, Tensor>,
+}
+
+impl Session {
+    pub fn new(graph: Graph) -> Session {
+        Session {
+            graph,
+            variables: HashMap::new(),
+        }
+    }
+
+    /// Initialize (or re-initialize) every variable from its init value.
+    pub fn init_variables(&mut self) {
+        self.variables.clear();
+        for node in &self.graph.nodes {
+            if let Op::Variable { init, .. } = &node.op {
+                self.variables.insert(node.id, init.clone());
+            }
+        }
+    }
+
+    pub fn variable_value(&self, id: NodeId) -> Option<&Tensor> {
+        self.variables.get(&id)
+    }
+
+    /// Overwrite a variable's current value (checkpoint restore, tests).
+    pub fn set_variable(&mut self, id: NodeId, value: Tensor) {
+        self.variables.insert(id, value);
+    }
+
+    /// Execute the subgraph needed for `fetches`, with `feeds` bound to
+    /// placeholders. Returns fetched tensors in order.
+    pub fn run(
+        &mut self,
+        feeds: &[(NodeId, Tensor)],
+        fetches: &[NodeId],
+    ) -> Result<Vec<Tensor>> {
+        let feed_map: HashMap<NodeId, &Tensor> =
+            feeds.iter().map(|(id, t)| (*id, t)).collect();
+        let needed = self.graph.reachable(fetches);
+        let order = self
+            .graph
+            .topo_order()
+            .ok_or_else(|| anyhow!("graph contains a cycle"))?;
+
+        let mut values: HashMap<NodeId, Tensor> = HashMap::new();
+        for id in order {
+            if !needed[id] {
+                continue;
+            }
+            let node = self.graph.nodes[id].clone();
+            let get = |i: usize| -> Result<&Tensor> {
+                values
+                    .get(&node.inputs[i])
+                    .ok_or_else(|| anyhow!("missing input {} of node {}", i, id))
+            };
+            let out = match &node.op {
+                Op::Placeholder { name } => feed_map
+                    .get(&id)
+                    .map(|t| (*t).clone())
+                    .ok_or_else(|| anyhow!("placeholder {name:?} not fed"))?,
+                Op::Variable { name, .. } => self
+                    .variables
+                    .get(&id)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("variable {name:?} not initialized"))?,
+                Op::Const(t) => t.clone(),
+                Op::MatMul => get(0)?.matmul(get(1)?)?,
+                Op::Add => get(0)?.zip(get(1)?, |a, b| a + b)?,
+                Op::Sub => get(0)?.zip(get(1)?, |a, b| a - b)?,
+                Op::Mul => get(0)?.zip(get(1)?, |a, b| a * b)?,
+                Op::Sigmoid => get(0)?.map(|v| 0.5 * ((0.5 * v).tanh() + 1.0)),
+                Op::Relu => get(0)?.map(|v| v.max(0.0)),
+                Op::Transpose => get(0)?.transpose()?,
+                Op::ColSum => get(0)?.colsum()?,
+                Op::SoftmaxXent => {
+                    let logits = get(0)?;
+                    let onehot = get(1)?;
+                    if logits.shape != onehot.shape {
+                        bail!(
+                            "xent shapes {:?} vs {:?}",
+                            logits.shape,
+                            onehot.shape
+                        );
+                    }
+                    let p = logits.softmax_rows()?;
+                    let m = logits.shape[0] as f32;
+                    let loss = -onehot
+                        .data
+                        .iter()
+                        .zip(&p.data)
+                        .map(|(&t, &q)| t * q.max(1e-12).ln())
+                        .sum::<f32>()
+                        / m;
+                    Tensor::scalar(loss)
+                }
+                Op::AssignSub => {
+                    let var_id = node.inputs[0];
+                    let grad = get(1)?.clone();
+                    let lr = get(2)?.data[0];
+                    let var = self
+                        .variables
+                        .get_mut(&var_id)
+                        .ok_or_else(|| anyhow!("AssignSub target is not a variable"))?;
+                    for (v, g) in var.data.iter_mut().zip(&grad.data) {
+                        *v -= lr * g;
+                    }
+                    var.clone()
+                }
+                Op::ReluMask => get(0)?.map(|v| if v > 0.0 { 1.0 } else { 0.0 }),
+                Op::SoftmaxXentGrad => {
+                    let logits = get(0)?;
+                    let onehot = get(1)?;
+                    let gy = get(2)?.data[0];
+                    let p = logits.softmax_rows()?;
+                    let m = logits.shape[0] as f32;
+                    let data = p
+                        .data
+                        .iter()
+                        .zip(&onehot.data)
+                        .map(|(&q, &t)| (q - t) * gy / m)
+                        .collect();
+                    Tensor::new(logits.shape.clone(), data)?
+                }
+                Op::Identity | Op::Send { .. } | Op::Recv { .. } => get(0)?.clone(),
+            };
+            values.insert(id, out);
+        }
+
+        fetches
+            .iter()
+            .map(|id| {
+                values
+                    .get(id)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("fetch {id} not computed"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feeds_and_fetches() {
+        let mut g = Graph::new();
+        let x = g.placeholder("x");
+        let w = g.constant(Tensor::new(vec![2, 1], vec![1.0, -1.0]).unwrap());
+        let y = g.add(Op::MatMul, vec![x, w]);
+        let s = g.add(Op::Sigmoid, vec![y]);
+        let mut sess = Session::new(g);
+        let out = sess
+            .run(
+                &[(x, Tensor::new(vec![1, 2], vec![3.0, 3.0]).unwrap())],
+                &[s],
+            )
+            .unwrap();
+        assert!((out[0].data[0] - 0.5).abs() < 1e-6); // sigmoid(0)
+    }
+
+    #[test]
+    fn missing_feed_is_an_error() {
+        let mut g = Graph::new();
+        let x = g.placeholder("x");
+        let mut sess = Session::new(g);
+        assert!(sess.run(&[], &[x]).is_err());
+    }
+
+    #[test]
+    fn variables_persist_and_update() {
+        let mut g = Graph::new();
+        let w = g.variable("w", Tensor::new(vec![2], vec![1.0, 2.0]).unwrap());
+        let grad = g.constant(Tensor::new(vec![2], vec![1.0, 1.0]).unwrap());
+        let lr = g.constant(Tensor::scalar(0.5));
+        let upd = g.add(Op::AssignSub, vec![w, grad, lr]);
+        let mut sess = Session::new(g);
+        sess.init_variables();
+        sess.run(&[], &[upd]).unwrap();
+        sess.run(&[], &[upd]).unwrap();
+        // two updates of -0.5 each
+        assert_eq!(sess.variable_value(w).unwrap().data, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn unfetched_subgraph_not_executed() {
+        // A placeholder that is NOT needed by the fetch must not require a
+        // feed — proof that only the reachable subgraph runs.
+        let mut g = Graph::new();
+        let x = g.placeholder("x");
+        let unused = g.placeholder("unused");
+        let _dead = g.add(Op::Sigmoid, vec![unused]);
+        let live = g.add(Op::Relu, vec![x]);
+        let mut sess = Session::new(g);
+        let out = sess
+            .run(
+                &[(x, Tensor::new(vec![1], vec![-3.0]).unwrap())],
+                &[live],
+            )
+            .unwrap();
+        assert_eq!(out[0].data, vec![0.0]);
+    }
+
+    #[test]
+    fn softmax_xent_matches_uniform_baseline() {
+        let mut g = Graph::new();
+        let logits = g.placeholder("logits");
+        let labels = g.placeholder("labels");
+        let loss = g.add(Op::SoftmaxXent, vec![logits, labels]);
+        let mut sess = Session::new(g);
+        let out = sess
+            .run(
+                &[
+                    (logits, Tensor::new(vec![2, 4], vec![0.0; 8]).unwrap()),
+                    (
+                        labels,
+                        Tensor::new(
+                            vec![2, 4],
+                            vec![1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0],
+                        )
+                        .unwrap(),
+                    ),
+                ],
+                &[loss],
+            )
+            .unwrap();
+        assert!((out[0].data[0] - (4f32).ln()).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,200 @@
+//! Dense f32 tensors for the dataflow engine.
+//!
+//! Deliberately simple row-major storage: the dataflow engine is the
+//! paper's §2.1 *substrate* (graph semantics, scheduling, placement); the
+//! performance-critical math lives in the Pallas/PJRT path. This tensor
+//! only needs to be correct.
+
+use crate::Result;
+use anyhow::bail;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} needs {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    fn dims2(&self) -> Result<(usize, usize)> {
+        match self.shape.as_slice() {
+            [m, n] => Ok((*m, *n)),
+            other => bail!("expected rank-2 tensor, got {:?}", other),
+        }
+    }
+
+    pub fn matmul(&self, rhs: &Tensor) -> Result<Tensor> {
+        let (m, k) = self.dims2()?;
+        let (k2, n) = rhs.dims2()?;
+        if k != k2 {
+            bail!("matmul mismatch {:?} x {:?}", self.shape, rhs.shape);
+        }
+        let mut out = vec![0.0f32; m * n];
+        // ikj loop order: streams rhs rows, decent cache behaviour.
+        for i in 0..m {
+            for kk in 0..k {
+                let a = self.data[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let row = &rhs.data[kk * n..(kk + 1) * n];
+                let dst = &mut out[i * n..(i + 1) * n];
+                for (d, &r) in dst.iter_mut().zip(row) {
+                    *d += a * r;
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    pub fn transpose(&self) -> Result<Tensor> {
+        let (m, n) = self.dims2()?;
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(vec![n, m], out)
+    }
+
+    /// Elementwise with broadcasting of a trailing-dim vector (bias add).
+    pub fn zip(&self, rhs: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor> {
+        if self.shape == rhs.shape {
+            let data = self
+                .data
+                .iter()
+                .zip(&rhs.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect();
+            return Tensor::new(self.shape.clone(), data);
+        }
+        // broadcast rhs (n,) across self (m, n)
+        if self.rank() == 2 && rhs.rank() == 1 && self.shape[1] == rhs.shape[0] {
+            let n = rhs.shape[0];
+            let data = self
+                .data
+                .iter()
+                .enumerate()
+                .map(|(i, &a)| f(a, rhs.data[i % n]))
+                .collect();
+            return Tensor::new(self.shape.clone(), data);
+        }
+        bail!("incompatible shapes {:?} vs {:?}", self.shape, rhs.shape);
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    /// Column-sum of a rank-2 tensor → rank-1 (bias gradients).
+    pub fn colsum(&self) -> Result<Tensor> {
+        let (m, n) = self.dims2()?;
+        let mut out = vec![0.0f32; n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j] += self.data[i * n + j];
+            }
+        }
+        Tensor::new(vec![n], out)
+    }
+
+    /// Row-wise softmax (rank-2).
+    pub fn softmax_rows(&self) -> Result<Tensor> {
+        let (m, n) = self.dims2()?;
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let row = &self.data[i * n..(i + 1) * n];
+            let mx = row.iter().cloned().fold(f32::MIN, f32::max);
+            let exps: Vec<f32> = row.iter().map(|&v| (v - mx).exp()).collect();
+            let sum: f32 = exps.iter().sum();
+            for (j, e) in exps.into_iter().enumerate() {
+                out[i * n + j] = e / sum;
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::new(vec![2, 2], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        assert_eq!(a.matmul(&b).unwrap().data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        let t = a.transpose().unwrap();
+        assert_eq!(t.shape, vec![3, 2]);
+        assert_eq!(t.transpose().unwrap(), a);
+    }
+
+    #[test]
+    fn bias_broadcast() {
+        let a = Tensor::new(vec![2, 2], vec![0.0, 0.0, 1.0, 1.0]).unwrap();
+        let b = Tensor::new(vec![2], vec![10.0, 20.0]).unwrap();
+        let c = a.zip(&b, |x, y| x + y).unwrap();
+        assert_eq!(c.data, vec![10.0, 20.0, 11.0, 21.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let a = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]).unwrap();
+        let s = a.softmax_rows().unwrap();
+        let r0: f32 = s.data[..3].iter().sum();
+        assert!((r0 - 1.0).abs() < 1e-6);
+        assert!(s.data[2] > s.data[1] && s.data[1] > s.data[0]);
+    }
+
+    #[test]
+    fn shape_validation() {
+        assert!(Tensor::new(vec![2, 2], vec![1.0]).is_err());
+        let a = Tensor::new(vec![2, 3], vec![0.0; 6]).unwrap();
+        let b = Tensor::new(vec![3, 3], vec![0.0; 9]).unwrap();
+        assert!(a.zip(&b, |x, _| x).is_err());
+        assert!(b.matmul(&a).is_err());
+    }
+}

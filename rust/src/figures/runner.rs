@@ -1,0 +1,279 @@
+//! Execute figure specs: calibrate, sweep core counts, print the series.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::{AblationAxis, AblationSpec, FigureSpec};
+use crate::coordinator::{run_training, ExecMode, SyncEvery, TrainConfig};
+use crate::mpi::{AllreduceAlgorithm, NetProfile};
+use crate::perfmodel::Workload;
+use crate::runtime::{Engine, HostSlice, Manifest};
+use crate::model::init_xavier;
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// One sweep point of a produced figure.
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub p: usize,
+    pub epoch_time_s: f64,
+    pub speedup: f64,
+    pub comm_fraction: f64,
+    /// Closed-form prediction from the perfmodel, for cross-validation.
+    pub analytic_speedup: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct FigureResult {
+    pub id: String,
+    pub title: String,
+    pub arch: String,
+    pub secs_per_sample: f64,
+    pub points: Vec<Point>,
+    pub paper_claim: Option<(usize, f64)>,
+}
+
+impl FigureResult {
+    /// Render as the text table EXPERIMENTS.md embeds.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "## {} — {}\n(arch {}, calibrated {:.3} µs/sample)\n\n\
+             | cores | epoch time | speedup | analytic | comm share |\n\
+             |------:|-----------:|--------:|---------:|-----------:|\n",
+            self.id,
+            self.title,
+            self.arch,
+            self.secs_per_sample * 1e6
+        );
+        for pt in &self.points {
+            s.push_str(&format!(
+                "| {:>4} | {:>9.4} s | {:>6.2}x | {:>7.2}x | {:>8.1}% |\n",
+                pt.p,
+                pt.epoch_time_s,
+                pt.speedup,
+                pt.analytic_speedup,
+                pt.comm_fraction * 100.0
+            ));
+        }
+        if let Some((p, claim)) = self.paper_claim {
+            let got = self
+                .points
+                .iter()
+                .find(|pt| pt.p == p)
+                .map(|pt| pt.speedup)
+                .unwrap_or(f64::NAN);
+            s.push_str(&format!(
+                "\npaper claims {claim:.2}x @ {p} cores; this harness measures {got:.2}x\n"
+            ));
+        }
+        s
+    }
+}
+
+/// Measure real per-sample step time on this host: run a handful of PJRT
+/// training steps and take the minimum (the steady-state step).
+pub fn calibrate(manifest: &Arc<Manifest>, arch: &str) -> Result<f64> {
+    let engine = Engine::new(manifest.clone())?;
+    let spec = manifest.arch(arch)?;
+    let exe = engine.executable(arch, "train_step")?;
+    let batch = manifest.batch_size;
+    let params = init_xavier(spec, 7);
+    let mut rng = Rng::new(11);
+    let x: Vec<f32> = (0..batch * spec.in_dim)
+        .map(|_| rng.normal() as f32)
+        .collect();
+    let y: Vec<i32> = (0..batch)
+        .map(|_| rng.below(spec.n_classes) as i32)
+        .collect();
+    let lr = [0.01f32];
+    let mut inputs: Vec<HostSlice> = (0..params.n_tensors())
+        .map(|i| HostSlice::F32(params.view(i)))
+        .collect();
+    inputs.push(HostSlice::F32(&x));
+    inputs.push(HostSlice::I32(&y));
+    inputs.push(HostSlice::F32(&lr));
+
+    let mut best = f64::INFINITY;
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        exe.run(&inputs)?;
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    Ok(best / batch as f64)
+}
+
+/// Run one figure sweep end-to-end (simulation-scale training runs).
+pub fn run_figure(
+    spec: &FigureSpec,
+    manifest: &Arc<Manifest>,
+    profile: &NetProfile,
+    epochs: usize,
+    secs_per_sample: Option<f64>,
+) -> Result<FigureResult> {
+    let sps = match secs_per_sample {
+        Some(v) => v,
+        None => calibrate(manifest, spec.arch)?,
+    };
+    let arch_spec = manifest.arch(spec.arch)?.clone();
+    let workload = Workload {
+        m: (arch_spec.n_train as f64 * spec.data_scale) as usize,
+        batch: manifest.batch_size,
+        secs_per_sample: sps,
+        sync_bytes: arch_spec.sync_bytes(),
+        sync_per_step: true,
+    };
+
+    // Guard: every sweep point must perform at least a few steps, or the
+    //integer step count distorts the ratio (and 0 steps divides by zero).
+    if let Some(&pmax) = spec.ps.iter().max() {
+        let steps_at_max = workload.steps(pmax);
+        if steps_at_max == 0 {
+            anyhow::bail!(
+                "figure {}: data_scale {} leaves 0 batches per rank at p={pmax}; raise the scale",
+                spec.id,
+                spec.data_scale
+            );
+        }
+    }
+    let mut times = Vec::new();
+    for &p in spec.ps {
+        let cfg = TrainConfig::new(spec.arch)
+            .with_epochs(epochs)
+            .with_mode(ExecMode::Sim {
+                secs_per_sample: sps,
+            })
+            .with_scale(spec.data_scale)
+            .with_seed(0xF16);
+        let report = run_training(cfg, manifest.clone(), p, profile.clone())?;
+        times.push((
+            p,
+            report.train_makespan_s() / epochs as f64,
+            report.comm_fraction(),
+        ));
+    }
+    let baseline_time = times
+        .iter()
+        .find(|(p, _, _)| *p == spec.baseline_p)
+        .map(|(_, t, _)| *t)
+        .expect("baseline p must be in the series");
+
+    let points = times
+        .into_iter()
+        .map(|(p, t, cf)| Point {
+            p,
+            epoch_time_s: t,
+            speedup: baseline_time / t,
+            comm_fraction: cf,
+            analytic_speedup: workload.speedup(
+                p,
+                spec.baseline_p,
+                profile,
+                AllreduceAlgorithm::Auto,
+            ),
+        })
+        .collect();
+
+    Ok(FigureResult {
+        id: spec.id.to_string(),
+        title: spec.title.to_string(),
+        arch: spec.arch.to_string(),
+        secs_per_sample: sps,
+        points,
+        paper_claim: spec.paper_claim,
+    })
+}
+
+/// Run one ablation sweep; returns rendered rows (axis label, epoch time).
+pub fn run_ablation(
+    spec: &AblationSpec,
+    manifest: &Arc<Manifest>,
+    epochs: usize,
+    secs_per_sample: Option<f64>,
+) -> Result<String> {
+    let sps = match secs_per_sample {
+        Some(v) => v,
+        None => calibrate(manifest, spec.arch)?,
+    };
+    let scale = 0.25; // keep ablation wall-clock modest; ratios invariant
+    let base_cfg = || {
+        TrainConfig::new(spec.arch)
+            .with_epochs(epochs)
+            .with_mode(ExecMode::Sim {
+                secs_per_sample: sps,
+            })
+            .with_scale(scale)
+            .with_seed(0xAB1)
+    };
+    let mut out = format!("## {} — {}\n\n| variant | epoch time | comm share |\n|---|---:|---:|\n", spec.id, spec.title);
+    let mut row = |label: &str, cfg: TrainConfig, profile: NetProfile| -> Result<()> {
+        let report = run_training(cfg, manifest.clone(), spec.p, profile)?;
+        out.push_str(&format!(
+            "| {label} | {:.4} s | {:.1}% |\n",
+            report.train_makespan_s() / epochs as f64,
+            report.comm_fraction() * 100.0
+        ));
+        Ok(())
+    };
+    match &spec.axis {
+        AblationAxis::AllreduceAlgorithm(algs) => {
+            for &alg in algs.iter() {
+                let mut cfg = base_cfg();
+                cfg.allreduce = alg;
+                row(&format!("{alg:?}"), cfg, NetProfile::infiniband_fdr())?;
+            }
+        }
+        AblationAxis::NetworkProfile(names) => {
+            for name in names.iter() {
+                let profile = NetProfile::by_name(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown profile {name}"))?;
+                row(name, base_cfg(), profile)?;
+            }
+        }
+        AblationAxis::SyncGranularity => {
+            row("per-step", base_cfg(), NetProfile::infiniband_fdr())?;
+            let mut cfg = base_cfg();
+            cfg.sync_every = SyncEvery::Epoch;
+            row("per-epoch", cfg, NetProfile::infiniband_fdr())?;
+        }
+    }
+    Ok(out)
+}
+
+/// Table 1 rendering (`dtf inspect --archs`).
+pub fn render_table1(manifest: &Manifest) -> String {
+    let mut s = String::from(
+        "Table 1: Deep Learning Algorithms and Network Architectures\n\n\
+         | arch | kind | input | params | train/test | MFLOPs/sample |\n\
+         |---|---|---:|---:|---|---:|\n",
+    );
+    for (name, spec) in &manifest.archs {
+        s.push_str(&format!(
+            "| {} | {} | {} | {} | {}/{} | {:.2} |\n",
+            name,
+            match &spec.kind {
+                crate::model::ArchKind::Mlp { layer_sizes, .. } => format!(
+                    "DNN {}",
+                    layer_sizes
+                        .iter()
+                        .map(|d| d.to_string())
+                        .collect::<Vec<_>>()
+                        .join("-")
+                ),
+                crate::model::ArchKind::Cnn {
+                    conv_channels,
+                    fc_size,
+                    ..
+                } => format!(
+                    "CNN {:?} (CONV), {} (FULL)",
+                    conv_channels, fc_size
+                ),
+            },
+            spec.in_dim,
+            spec.n_params,
+            spec.n_train,
+            spec.n_test,
+            spec.flops_per_sample as f64 / 1e6,
+        ));
+    }
+    s
+}

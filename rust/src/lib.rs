@@ -1,0 +1,43 @@
+//! # dtf — Distributed TensorFlow with MPI, as a Rust + JAX + Pallas stack
+//!
+//! Reproduction of *Distributed TensorFlow with MPI* (Vishnu, Siegel, Daily —
+//! PNNL, 2016). The paper's contribution is a coordination layer: replicate
+//! the model on every MPI rank, shard the training samples (rank 0 reads and
+//! scatters), run standard backpropagation locally, and synchronously average
+//! the weights/biases with an all-to-all reduction after every step.
+//!
+//! Layer map (see DESIGN.md):
+//!
+//! * [`mpi`] — an in-process MPI-like runtime: ranks as threads, tagged
+//!   point-to-point messaging, real collective algorithms (ring /
+//!   recursive-doubling / binomial tree), ULFM-style fault tolerance, and an
+//!   alpha-beta network cost model that advances per-rank *virtual clocks* so
+//!   cluster-scale runs can be simulated faithfully on one machine.
+//! * [`dataflow`] — a miniature TensorFlow: computational graph,
+//!   dependency-count scheduler, greedy device placement, send/recv node
+//!   insertion (the substrate the paper treats as a black box).
+//! * [`runtime`] — PJRT CPU client that loads the AOT-compiled
+//!   `artifacts/*.hlo.txt` (JAX/Pallas, lowered once at build time) and
+//!   executes them on the training hot path. Python never runs at train time.
+//! * [`model`] — Table-1 architecture specs, parameter store, initialization.
+//! * [`data`] — dataset parsers (IDX / CIFAR binary / LIBSVM), deterministic
+//!   synthetic generators for all five paper datasets, sharding, batching.
+//! * [`coordinator`] — the paper's system: synchronous data-parallel trainer
+//!   with weight-averaging or gradient-averaging over MPI allreduce.
+//! * [`perfmodel`] — the paper's analytic model ((m/p)·n²·l compute,
+//!   n²·l communication) used to cross-check the simulator.
+//! * [`figures`] — harness regenerating every figure/table in the paper.
+
+
+pub mod coordinator;
+pub mod data;
+pub mod dataflow;
+pub mod figures;
+pub mod model;
+pub mod mpi;
+pub mod perfmodel;
+pub mod runtime;
+pub mod util;
+
+/// Convenience result type used across the crate.
+pub type Result<T> = anyhow::Result<T>;

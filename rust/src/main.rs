@@ -1,0 +1,214 @@
+//! `dtf` — the distributed-TensorFlow-with-MPI coordinator CLI.
+//!
+//! Subcommands:
+//!   train     run a distributed training job (real PJRT or sim-scale)
+//!   figures   regenerate the paper's figures/tables (DESIGN.md §6)
+//!   inspect   print Table 1 / manifest details
+//!   calibrate measure per-sample step time for an architecture
+
+use std::sync::Arc;
+
+use dtf::coordinator::{run_training, ExecMode, SyncEvery, SyncMode, TrainConfig};
+use dtf::figures::{self, runner};
+use dtf::mpi::{AllreduceAlgorithm, NetProfile};
+use dtf::runtime::Manifest;
+use dtf::util::cli::Args;
+use dtf::Result;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("calibrate") => cmd_calibrate(&args),
+        Some("help") | None => {
+            print!("{}", USAGE);
+            Ok(())
+        }
+        Some(other) => {
+            anyhow::bail!("unknown subcommand {other:?}\n{USAGE}");
+        }
+    }
+}
+
+const USAGE: &str = "\
+dtf — Distributed TensorFlow with MPI (PNNL 2016), Rust+JAX+Pallas reproduction
+
+USAGE:
+  dtf train --arch <id> [--ranks N] [--epochs N] [--lr F] [--sync weight|grad|none]
+            [--sync-every step|epoch] [--alg auto|ring|rd|tree]
+            [--profile ib|socket|bgq|shm] [--sim <secs/sample>|auto]
+            [--scale F] [--steps-cap N] [--eval-every N] [--seed N] [--quiet]
+  dtf figures [--id fig1..fig6|higgs|ablate-*|all] [--epochs N] [--out-dir D]
+              [--profile ib|...] [--sps F]
+  dtf inspect [--archs] [--artifacts]
+  dtf calibrate --arch <id>
+
+Architectures (Table 1): adult_dnn acoustic_dnn mnist_dnn cifar10_dnn
+                         higgs_dnn mnist_cnn cifar10_cnn
+Artifacts dir: ./artifacts (override with DTF_ARTIFACTS). Run `make artifacts`.
+";
+
+fn load_manifest() -> Result<Arc<Manifest>> {
+    Ok(Arc::new(Manifest::load(Manifest::default_dir())?))
+}
+
+fn parse_profile(args: &Args) -> Result<NetProfile> {
+    let name = args.str_or("profile", if args.positional.first().map(|s| s.as_str()) == Some("figures") { "cluster" } else { "ib" });
+    NetProfile::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown --profile {name:?} (ib, socket, bgq, shm, zero)"))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "arch", "ranks", "epochs", "lr", "sync", "sync-every", "alg", "profile",
+        "sim", "scale", "steps-cap", "eval-every", "seed", "quiet", "broadcast-init",
+    ])?;
+    let manifest = load_manifest()?;
+    let arch = args
+        .get("arch")
+        .ok_or_else(|| anyhow::anyhow!("--arch is required (see `dtf inspect --archs`)"))?;
+    let ranks = args.usize_or("ranks", 2)?;
+
+    let mut cfg = TrainConfig::new(arch)
+        .with_epochs(args.usize_or("epochs", 3)?)
+        .with_lr(args.f64_or("lr", 0.1)? as f32)
+        .with_scale(args.f64_or("scale", 0.1)?)
+        .with_seed(args.usize_or("seed", 0xD7F)? as u64);
+    cfg.verbose = !args.has("quiet");
+    cfg.eval_every = args.usize_or("eval-every", 0)?;
+    cfg.broadcast_init = args.has("broadcast-init");
+    if let Some(cap) = args.get("steps-cap") {
+        cfg.max_steps_per_epoch = Some(cap.parse()?);
+    }
+    cfg.sync = SyncMode::by_name(args.str_or("sync", "weight"))
+        .ok_or_else(|| anyhow::anyhow!("--sync must be weight|grad|none"))?;
+    cfg.sync_every = match args.str_or("sync-every", "step") {
+        "step" => SyncEvery::Step,
+        "epoch" => SyncEvery::Epoch,
+        other => anyhow::bail!("--sync-every must be step|epoch, got {other}"),
+    };
+    cfg.allreduce = AllreduceAlgorithm::by_name(args.str_or("alg", "auto"))
+        .ok_or_else(|| anyhow::anyhow!("--alg must be auto|ring|rd|tree"))?;
+    if let Some(sim) = args.get("sim") {
+        let sps = if sim == "auto" {
+            let v = runner::calibrate(&manifest, arch)?;
+            eprintln!("calibrated {:.3} µs/sample", v * 1e6);
+            v
+        } else {
+            sim.parse()?
+        };
+        cfg.mode = ExecMode::Sim {
+            secs_per_sample: sps,
+        };
+    }
+
+    let profile = parse_profile(args)?;
+    let report = run_training(cfg, manifest, ranks, profile)?;
+
+    println!("\n=== training report: {} on {} ranks ===", report.arch, report.ranks);
+    println!(
+        "  virtual makespan   {:.4} s (training {:.4} s)",
+        report.makespan_s(),
+        report.train_makespan_s()
+    );
+    println!("  throughput         {:.0} samples/s (virtual)", report.throughput());
+    println!("  comm share         {:.1}%", report.comm_fraction() * 100.0);
+    println!("  samples trained    {}", report.total_samples());
+    if !report.losses().is_empty() {
+        println!("  epoch losses       {:?}", report.losses());
+    }
+    if let Some(ev) = report.final_eval() {
+        println!(
+            "  final eval         loss {:.4}  accuracy {:.2}%",
+            ev.loss,
+            ev.accuracy * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    args.check_known(&["id", "epochs", "out-dir", "profile", "sps", "all"])?;
+    let manifest = load_manifest()?;
+    let profile = parse_profile(args)?;
+    let epochs = args.usize_or("epochs", 1)?;
+    let sps = match args.get("sps") {
+        Some(s) => Some(s.parse::<f64>()?),
+        None => None,
+    };
+    let ids: Vec<String> = {
+        let requested = args.get_all("id");
+        if requested.is_empty() || requested.contains(&"all") || args.has("all") {
+            figures::FIGURES
+                .iter()
+                .map(|f| f.id.to_string())
+                .chain(figures::ABLATIONS.iter().map(|a| a.id.to_string()))
+                .collect()
+        } else {
+            requested.iter().map(|s| s.to_string()).collect()
+        }
+    };
+    let out_dir = args.get("out-dir").map(std::path::PathBuf::from);
+    if let Some(d) = &out_dir {
+        std::fs::create_dir_all(d)?;
+    }
+
+    for id in ids {
+        let rendered = if let Some(fig) = figures::figure(&id) {
+            runner::run_figure(fig, &manifest, &profile, epochs, sps)?.render()
+        } else if let Some(ab) = figures::ABLATIONS.iter().find(|a| a.id == id) {
+            runner::run_ablation(ab, &manifest, epochs, sps)?
+        } else {
+            anyhow::bail!("unknown figure id {id:?}; known: fig1..fig6, higgs, ablate-*");
+        };
+        println!("{rendered}");
+        if let Some(d) = &out_dir {
+            std::fs::write(d.join(format!("{id}.md")), &rendered)?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    args.check_known(&["archs", "artifacts"])?;
+    let manifest = load_manifest()?;
+    if args.has("artifacts") {
+        println!("batch size: {}", manifest.batch_size);
+        for (key, meta) in &manifest.artifacts {
+            println!(
+                "  {key}: {} inputs, {} outputs, {}",
+                meta.inputs.len(),
+                meta.outputs.len(),
+                meta.path.display()
+            );
+        }
+        return Ok(());
+    }
+    print!("{}", runner::render_table1(&manifest));
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    args.check_known(&["arch"])?;
+    let manifest = load_manifest()?;
+    let arch = args.get("arch").unwrap_or("mnist_dnn");
+    let sps = runner::calibrate(&manifest, arch)?;
+    let spec = manifest.arch(arch)?;
+    println!(
+        "{arch}: {:.3} µs/sample  ({:.1} ms/step at batch {}, ~{:.2} GFLOP/s effective)",
+        sps * 1e6,
+        sps * manifest.batch_size as f64 * 1e3,
+        manifest.batch_size,
+        spec.flops_per_sample as f64 / sps / 1e9,
+    );
+    Ok(())
+}

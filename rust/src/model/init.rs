@@ -1,0 +1,90 @@
+//! Deterministic parameter initialization.
+//!
+//! Xavier/Glorot-uniform for weight tensors, zeros for biases — the 2016
+//! recipe for sigmoid networks (the paper's hidden layers are sigmoid,
+//! where Xavier's variance argument was derived). Determinism doubles as
+//! the paper's "replicate the model on each device": every rank seeds the
+//! same RNG, so replicas start identical without an initial broadcast
+//! (the trainer still offers `broadcast_init` as an ablation).
+
+use super::params::ParamSet;
+use super::spec::ArchSpec;
+use crate::util::rng::Rng;
+
+/// Xavier-uniform: `U(-sqrt(6/(fan_in+fan_out)), +...)`.
+///
+/// Fan computation follows the JAX convention used by the Python reference:
+/// for a tensor of shape `[d0.. dk-1, dk]`, `fan_out = dk` and
+/// `fan_in = prod(d0..dk-1)` — which for HWIO conv kernels gives
+/// `fan_in = H*W*Cin`, the receptive-field size.
+pub fn init_xavier(spec: &ArchSpec, seed: u64) -> ParamSet {
+    let mut params = ParamSet::zeros(spec);
+    let mut rng = Rng::new(seed ^ 0xD1F0_0000);
+    for i in 0..params.n_tensors() {
+        let shape = params.shapes()[i].shape.clone();
+        if shape.len() < 2 {
+            continue; // biases stay zero
+        }
+        let fan_out = *shape.last().unwrap();
+        let fan_in: usize = shape[..shape.len() - 1].iter().product();
+        let limit = (6.0 / (fan_in + fan_out) as f64).sqrt();
+        for w in params.view_mut(i) {
+            *w = rng.range(-limit, limit) as f32;
+        }
+    }
+    params
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::ArchSpec;
+    use crate::util::json;
+
+    fn spec() -> ArchSpec {
+        let v = json::parse(
+            r#"{
+          "name": "t", "kind": "mlp", "n_train": 10, "n_test": 5,
+          "n_classes": 2, "in_dim": 100, "flops_per_sample": 1,
+          "n_params": 5200,
+          "layer_sizes": [100, 50, 2], "hidden_activation": "sigmoid",
+          "param_shapes": [
+            {"name": "w0", "shape": [100, 50]}, {"name": "b0", "shape": [50]},
+            {"name": "w1", "shape": [50, 2]}, {"name": "b1", "shape": [2]},
+            {"name": "b2", "shape": [48]}
+          ]
+        }"#,
+        )
+        .unwrap();
+        ArchSpec::from_json(&v).unwrap()
+    }
+
+    #[test]
+    fn deterministic_across_ranks() {
+        let a = init_xavier(&spec(), 42);
+        let b = init_xavier(&spec(), 42);
+        assert_eq!(a.flat(), b.flat());
+        let c = init_xavier(&spec(), 43);
+        assert_ne!(a.flat(), c.flat());
+    }
+
+    #[test]
+    fn weights_within_xavier_bound_biases_zero() {
+        let p = init_xavier(&spec(), 1);
+        let limit0 = (6.0f64 / 150.0).sqrt() as f32;
+        assert!(p.view(0).iter().all(|&w| w.abs() <= limit0));
+        assert!(p.view(0).iter().any(|&w| w != 0.0));
+        assert!(p.view(1).iter().all(|&b| b == 0.0));
+        assert!(p.view(3).iter().all(|&b| b == 0.0));
+    }
+
+    #[test]
+    fn weight_spread_uses_the_range() {
+        let p = init_xavier(&spec(), 7);
+        let limit = (6.0f64 / 150.0).sqrt() as f32;
+        let mx = p.view(0).iter().cloned().fold(f32::MIN, f32::max);
+        let mn = p.view(0).iter().cloned().fold(f32::MAX, f32::min);
+        assert!(mx > 0.5 * limit, "{mx} vs {limit}");
+        assert!(mn < -0.5 * limit, "{mn}");
+    }
+}

@@ -1,0 +1,10 @@
+//! Model layer: architecture specs (Table 1), the flat parameter store the
+//! all-reduce operates on, and deterministic initialization.
+
+pub mod init;
+pub mod params;
+pub mod spec;
+
+pub use init::init_xavier;
+pub use params::ParamSet;
+pub use spec::{ArchKind, ArchSpec, ParamShape};

@@ -1,0 +1,167 @@
+//! Parameter store: one flat, contiguous `f32` vector per model replica.
+//!
+//! Flat storage is the hot-path choice, not a convenience: the paper's
+//! synchronization step all-reduces *every* weight and bias each step, so
+//! keeping the whole model contiguous lets the coordinator hand a single
+//! `&mut [f32]` to `mpi::allreduce` — one ring pass, no gather/scatter of
+//! per-layer tensors, no allocation in the training loop. Per-parameter
+//! views (for feeding the PJRT executable) are just slices at precomputed
+//! offsets.
+
+use super::spec::{ArchSpec, ParamShape};
+
+#[derive(Debug, Clone)]
+pub struct ParamSet {
+    shapes: Vec<ParamShape>,
+    offsets: Vec<usize>,
+    flat: Vec<f32>,
+}
+
+impl ParamSet {
+    /// Zero-initialized parameter set laid out per the spec's ABI order.
+    pub fn zeros(spec: &ArchSpec) -> Self {
+        let shapes = spec.param_shapes.clone();
+        let mut offsets = Vec::with_capacity(shapes.len());
+        let mut total = 0usize;
+        for s in &shapes {
+            offsets.push(total);
+            total += s.numel();
+        }
+        ParamSet {
+            shapes,
+            offsets,
+            flat: vec![0.0; total],
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.flat.len()
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.shapes.len()
+    }
+
+    pub fn shapes(&self) -> &[ParamShape] {
+        &self.shapes
+    }
+
+    /// The contiguous model — what gets all-reduced.
+    pub fn flat(&self) -> &[f32] {
+        &self.flat
+    }
+
+    pub fn flat_mut(&mut self) -> &mut [f32] {
+        &mut self.flat
+    }
+
+    /// Slice view of tensor `i` (ABI order).
+    pub fn view(&self, i: usize) -> &[f32] {
+        let s = self.offsets[i];
+        &self.flat[s..s + self.shapes[i].numel()]
+    }
+
+    pub fn view_mut(&mut self, i: usize) -> &mut [f32] {
+        let s = self.offsets[i];
+        let n = self.shapes[i].numel();
+        &mut self.flat[s..s + n]
+    }
+
+    /// Overwrite tensor `i` from a runtime output.
+    pub fn store(&mut self, i: usize, data: &[f32]) {
+        let dst = self.view_mut(i);
+        assert_eq!(
+            dst.len(),
+            data.len(),
+            "tensor {i} size mismatch: {} vs {}",
+            dst.len(),
+            data.len()
+        );
+        dst.copy_from_slice(data);
+    }
+
+    /// `self -= delta` (gradient-averaging mode applies the averaged,
+    /// lr-prescaled gradient directly).
+    pub fn sub_assign(&mut self, delta: &[f32]) {
+        assert_eq!(self.flat.len(), delta.len());
+        for (p, d) in self.flat.iter_mut().zip(delta) {
+            *p -= d;
+        }
+    }
+
+    /// `self *= s` — used after a sum-allreduce to divide by rank count.
+    pub fn scale(&mut self, s: f32) {
+        for p in self.flat.iter_mut() {
+            *p *= s;
+        }
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.flat.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Max |a - b| across two replicas — the trainer's divergence check
+    /// (after a synchronous average, replicas must agree bitwise).
+    pub fn max_abs_diff(&self, other: &ParamSet) -> f32 {
+        self.flat
+            .iter()
+            .zip(&other.flat)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+    use crate::model::spec::ArchSpec;
+
+    fn spec() -> ArchSpec {
+        let v = json::parse(
+            r#"{
+          "name": "t", "kind": "mlp", "n_train": 10, "n_test": 5,
+          "n_classes": 2, "in_dim": 3, "flops_per_sample": 1, "n_params": 13,
+          "layer_sizes": [3, 2, 2], "hidden_activation": "sigmoid",
+          "param_shapes": [
+            {"name": "w0", "shape": [3, 2]}, {"name": "b0", "shape": [2]},
+            {"name": "w1", "shape": [2, 2]}, {"name": "b1", "shape": [1]}
+          ]
+        }"#,
+        )
+        .unwrap();
+        ArchSpec::from_json(&v).unwrap()
+    }
+
+    #[test]
+    fn layout_is_contiguous_abi_order() {
+        let mut p = ParamSet::zeros(&spec());
+        assert_eq!(p.n_params(), 13);
+        assert_eq!(p.n_tensors(), 4);
+        p.view_mut(1).copy_from_slice(&[1.0, 2.0]);
+        assert_eq!(&p.flat()[6..8], &[1.0, 2.0]);
+        p.store(3, &[9.0]);
+        assert_eq!(p.flat()[12], 9.0);
+    }
+
+    #[test]
+    fn arithmetic_helpers() {
+        let mut p = ParamSet::zeros(&spec());
+        p.flat_mut().iter_mut().for_each(|x| *x = 2.0);
+        p.scale(0.5);
+        assert!(p.flat().iter().all(|&x| x == 1.0));
+        let delta = vec![0.25f32; 13];
+        p.sub_assign(&delta);
+        assert!(p.flat().iter().all(|&x| x == 0.75));
+        assert!((p.l2_norm() - (13.0f64 * 0.75 * 0.75).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn divergence_detector() {
+        let mut a = ParamSet::zeros(&spec());
+        let b = ParamSet::zeros(&spec());
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+        a.view_mut(0)[0] = 0.5;
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+    }
+}

@@ -1,0 +1,214 @@
+//! Architecture specifications (Table 1), parsed from the AOT manifest.
+//!
+//! The Python side (`python/compile/architectures.py`) is the source of
+//! truth; `manifest.json` carries the specs so the two languages cannot
+//! disagree about parameter layouts. This module re-materializes them as
+//! typed Rust values and re-derives the quantities the perf model needs.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Value;
+use crate::Result;
+use anyhow::{anyhow, bail, Context};
+
+/// One named parameter tensor in ABI order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamShape {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamShape {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArchKind {
+    /// Fully-connected network: `layer_sizes[0]` inputs → `[-1]` classes.
+    Mlp {
+        layer_sizes: Vec<usize>,
+        hidden_activation: String,
+    },
+    /// Conv 5x5 + ReLU + 2x2 maxpool blocks, then FC sigmoid + softmax.
+    Cnn {
+        height: usize,
+        width: usize,
+        channels: usize,
+        conv_channels: Vec<usize>,
+        fc_size: usize,
+    },
+}
+
+/// A Table-1 (dataset, algorithm) pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchSpec {
+    pub name: String,
+    pub kind: ArchKind,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub n_classes: usize,
+    pub in_dim: usize,
+    pub flops_per_sample: u64,
+    pub n_params: usize,
+    pub param_shapes: Vec<ParamShape>,
+}
+
+impl ArchSpec {
+    /// Parse one arch entry from the manifest's `archs` object.
+    pub fn from_json(v: &Value) -> Result<ArchSpec> {
+        let name = v
+            .field("name")?
+            .as_str()
+            .ok_or_else(|| anyhow!("arch name not a string"))?
+            .to_string();
+        let get = |k: &str| -> Result<usize> {
+            v.field(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow!("arch {name}: field {k} not a number"))
+        };
+        let kind_s = v
+            .field("kind")?
+            .as_str()
+            .ok_or_else(|| anyhow!("kind not a string"))?;
+        let kind = match kind_s {
+            "mlp" => ArchKind::Mlp {
+                layer_sizes: usize_array(v.field("layer_sizes")?)?,
+                hidden_activation: v
+                    .field("hidden_activation")?
+                    .as_str()
+                    .unwrap_or("sigmoid")
+                    .to_string(),
+            },
+            "cnn" => ArchKind::Cnn {
+                height: get("height")?,
+                width: get("width")?,
+                channels: get("channels")?,
+                conv_channels: usize_array(v.field("conv_channels")?)?,
+                fc_size: get("fc_size")?,
+            },
+            other => bail!("unknown arch kind {other:?}"),
+        };
+        let param_shapes = v
+            .field("param_shapes")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("param_shapes not an array"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamShape {
+                    name: p
+                        .field("name")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("param name"))?
+                        .to_string(),
+                    shape: usize_array(p.field("shape")?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let spec = ArchSpec {
+            kind,
+            n_train: get("n_train")?,
+            n_test: get("n_test")?,
+            n_classes: get("n_classes")?,
+            in_dim: get("in_dim")?,
+            flops_per_sample: get("flops_per_sample")? as u64,
+            n_params: get("n_params")?,
+            param_shapes,
+            name: name.clone(),
+        };
+        // Cross-check the ABI: manifest-declared count must equal the sum
+        // of the declared shapes (guards against a stale manifest).
+        let computed: usize = spec.param_shapes.iter().map(|p| p.numel()).sum();
+        if computed != spec.n_params {
+            bail!(
+                "arch {name}: param_shapes sum {computed} != n_params {}",
+                spec.n_params
+            );
+        }
+        Ok(spec)
+    }
+
+    /// Shape of one input batch `(batch, features...)`.
+    pub fn input_shape(&self, batch: usize) -> Vec<usize> {
+        match &self.kind {
+            ArchKind::Mlp { .. } => vec![batch, self.in_dim],
+            ArchKind::Cnn {
+                height,
+                width,
+                channels,
+                ..
+            } => vec![batch, *height, *width, *channels],
+        }
+    }
+
+    /// Bytes all-reduced per synchronization (the paper's `n²·l` volume).
+    pub fn sync_bytes(&self) -> usize {
+        self.n_params * 4
+    }
+
+    /// Parse all archs from the manifest root.
+    pub fn all_from_manifest(root: &Value) -> Result<BTreeMap<String, ArchSpec>> {
+        let archs = root
+            .field("archs")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("archs not an object"))?;
+        archs
+            .iter()
+            .map(|(k, v)| {
+                let spec = ArchSpec::from_json(v)
+                    .with_context(|| format!("parsing arch {k}"))?;
+                Ok((k.clone(), spec))
+            })
+            .collect()
+    }
+}
+
+fn usize_array(v: &Value) -> Result<Vec<usize>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array"))?
+        .iter()
+        .map(|e| e.as_usize().ok_or_else(|| anyhow!("expected number")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    const SAMPLE: &str = r#"{
+      "name": "adult_dnn", "kind": "mlp", "n_train": 32561, "n_test": 16281,
+      "n_classes": 2, "in_dim": 123, "flops_per_sample": 267600,
+      "n_params": 45102,
+      "layer_sizes": [123, 200, 100, 2], "hidden_activation": "sigmoid",
+      "param_shapes": [
+        {"name": "w0", "shape": [123, 200]}, {"name": "b0", "shape": [200]},
+        {"name": "w1", "shape": [200, 100]}, {"name": "b1", "shape": [100]},
+        {"name": "w2", "shape": [100, 2]},  {"name": "b2", "shape": [2]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_mlp_spec() {
+        let v = json::parse(SAMPLE).unwrap();
+        let s = ArchSpec::from_json(&v).unwrap();
+        assert_eq!(s.name, "adult_dnn");
+        assert_eq!(s.n_params, 123 * 200 + 200 + 200 * 100 + 100 + 100 * 2 + 2);
+        assert_eq!(s.input_shape(64), vec![64, 123]);
+        assert_eq!(s.sync_bytes(), s.n_params * 4);
+        match &s.kind {
+            ArchKind::Mlp { layer_sizes, .. } => {
+                assert_eq!(layer_sizes, &vec![123, 200, 100, 2])
+            }
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn rejects_inconsistent_param_count() {
+        let bad = SAMPLE.replace("45102", "999");
+        let v = json::parse(&bad).unwrap();
+        assert!(ArchSpec::from_json(&v).is_err());
+    }
+}

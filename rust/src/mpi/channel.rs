@@ -1,0 +1,225 @@
+//! Tagged rank-to-rank mailboxes — the transport under the communicator.
+//!
+//! Each rank owns one [`Mailbox`]; a send pushes an [`Envelope`] into the
+//! destination's mailbox, a receive blocks until an envelope matching
+//! `(source, tag)` is present. Matching is MPI-style: within a matching
+//! `(source, tag)` pair, envelopes are delivered in send order
+//! (non-overtaking); envelopes with different tags may be consumed out of
+//! arrival order.
+//!
+//! Every envelope carries its *virtual arrival time* under the network cost
+//! model, which the receiving rank folds into its own virtual clock — this
+//! is what lets cluster-scale collectives be simulated faithfully on one
+//! machine (DESIGN.md §3).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use super::datatype::Buffer;
+use super::error::{MpiError, MpiResult};
+
+/// Message tag. User tags use the low 24 bits; collective-internal tags set
+/// the high bit (see `collectives::coll_tag`).
+pub type Tag = u32;
+
+/// Wildcard for `recv` source matching (MPI_ANY_SOURCE).
+pub const ANY_SOURCE: Option<usize> = None;
+
+/// One in-flight message.
+#[derive(Debug, Clone)]
+pub struct Envelope {
+    /// Sender's rank *within the communicator this message belongs to*.
+    pub src: usize,
+    pub tag: Tag,
+    /// Virtual time at which the message is fully received under the
+    /// alpha-beta model (sender clock + overhead + alpha + bytes/beta).
+    pub arrival_vtime: f64,
+    pub buf: Buffer,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    queue: VecDeque<Envelope>,
+    closed: bool,
+}
+
+/// A rank's incoming message queue with condvar-based blocking matching.
+#[derive(Debug, Default)]
+pub struct Mailbox {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+/// How often a blocked receive re-checks failure/revocation flags.
+const POLL: Duration = Duration::from_millis(5);
+
+/// Lock-probe iterations before parking on the condvar (~tens of µs —
+/// tuned in EXPERIMENTS.md §Perf; the ring allreduce alternates messages
+/// between neighbours far faster than a park/unpark round trip).
+const SPIN_PROBES: usize = 60;
+
+impl Mailbox {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Deliver an envelope (called by the *sender* thread).
+    pub fn push(&self, env: Envelope) {
+        let mut g = self.inner.lock().unwrap();
+        g.queue.push_back(env);
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Mark the mailbox closed (world teardown); wakes all blocked readers.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Non-blocking probe: is there a matching envelope? (MPI_Iprobe)
+    pub fn probe(&self, src: Option<usize>, tag: Option<Tag>) -> bool {
+        let g = self.inner.lock().unwrap();
+        g.queue
+            .iter()
+            .any(|e| src.map_or(true, |s| e.src == s) && tag.map_or(true, |t| e.tag == t))
+    }
+
+    /// Blocking matched receive.
+    ///
+    /// `should_abort` is polled while waiting; returning `Some(err)` aborts
+    /// the receive (used for ULFM failure/revocation detection: a receive
+    /// posted against a dead peer must not hang forever).
+    ///
+    /// Hot-path note (§Perf): collectives alternate send/recv between
+    /// neighbouring rank threads at sub-100µs cadence, where a condvar
+    /// park+unpark per hop dominates. We therefore spin briefly (dropping
+    /// the lock between probes) before parking — a classic adaptive mutex.
+    pub fn recv_match(
+        &self,
+        src: Option<usize>,
+        tag: Option<Tag>,
+        mut should_abort: impl FnMut() -> Option<MpiError>,
+    ) -> MpiResult<Envelope> {
+        let matches = |e: &Envelope| {
+            src.map_or(true, |s| e.src == s) && tag.map_or(true, |t| e.tag == t)
+        };
+        // Phase 1: bounded spin. Each probe takes the lock only briefly.
+        for _ in 0..SPIN_PROBES {
+            {
+                let mut g = self.inner.lock().unwrap();
+                if let Some(pos) = g.queue.iter().position(&matches) {
+                    return Ok(g.queue.remove(pos).expect("position just found"));
+                }
+                if g.closed {
+                    return Err(MpiError::Shutdown);
+                }
+            }
+            std::hint::spin_loop();
+            std::thread::yield_now();
+        }
+        // Phase 2: park on the condvar (with abort polling).
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(pos) = g.queue.iter().position(&matches) {
+                return Ok(g.queue.remove(pos).expect("position just found"));
+            }
+            if g.closed {
+                return Err(MpiError::Shutdown);
+            }
+            if let Some(err) = should_abort() {
+                return Err(err);
+            }
+            let (g2, _timeout) = self.cv.wait_timeout(g, POLL).unwrap();
+            g = g2;
+        }
+    }
+
+    /// Number of queued envelopes (tests / diagnostics).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(src: usize, tag: Tag, vals: Vec<f32>) -> Envelope {
+        Envelope {
+            src,
+            tag,
+            arrival_vtime: 0.0,
+            buf: Buffer::F32(vals),
+        }
+    }
+
+    #[test]
+    fn fifo_within_matching_pair() {
+        let mb = Mailbox::new();
+        mb.push(env(0, 7, vec![1.0]));
+        mb.push(env(0, 7, vec![2.0]));
+        let a = mb.recv_match(Some(0), Some(7), || None).unwrap();
+        let b = mb.recv_match(Some(0), Some(7), || None).unwrap();
+        assert_eq!(a.buf, Buffer::F32(vec![1.0]));
+        assert_eq!(b.buf, Buffer::F32(vec![2.0]));
+    }
+
+    #[test]
+    fn tag_selective_out_of_order() {
+        let mb = Mailbox::new();
+        mb.push(env(0, 1, vec![1.0]));
+        mb.push(env(0, 2, vec![2.0]));
+        let b = mb.recv_match(Some(0), Some(2), || None).unwrap();
+        assert_eq!(b.buf, Buffer::F32(vec![2.0]));
+        assert_eq!(mb.len(), 1);
+    }
+
+    #[test]
+    fn any_source_matches() {
+        let mb = Mailbox::new();
+        mb.push(env(3, 9, vec![1.0]));
+        let e = mb.recv_match(ANY_SOURCE, Some(9), || None).unwrap();
+        assert_eq!(e.src, 3);
+    }
+
+    #[test]
+    fn abort_callback_unblocks() {
+        let mb = Mailbox::new();
+        let mut calls = 0;
+        let r = mb.recv_match(Some(0), Some(0), || {
+            calls += 1;
+            if calls > 1 {
+                Some(MpiError::ProcFailed { rank: 0 })
+            } else {
+                None
+            }
+        });
+        assert!(matches!(r, Err(MpiError::ProcFailed { rank: 0 })));
+    }
+
+    #[test]
+    fn close_unblocks_with_shutdown() {
+        let mb = std::sync::Arc::new(Mailbox::new());
+        let mb2 = mb.clone();
+        let t = std::thread::spawn(move || mb2.recv_match(Some(0), Some(0), || None));
+        std::thread::sleep(Duration::from_millis(20));
+        mb.close();
+        assert!(matches!(t.join().unwrap(), Err(MpiError::Shutdown)));
+    }
+
+    #[test]
+    fn cross_thread_delivery() {
+        let mb = std::sync::Arc::new(Mailbox::new());
+        let mb2 = mb.clone();
+        let t = std::thread::spawn(move || mb2.recv_match(Some(1), Some(4), || None).unwrap());
+        std::thread::sleep(Duration::from_millis(5));
+        mb.push(env(1, 4, vec![42.0]));
+        assert_eq!(t.join().unwrap().buf, Buffer::F32(vec![42.0]));
+    }
+}

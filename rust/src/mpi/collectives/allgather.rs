@@ -1,0 +1,71 @@
+//! Ring allgather: `p-1` steps, each rank forwarding the chunk it received
+//! last step. Bandwidth-optimal like the ring allreduce's second phase.
+
+use crate::mpi::comm::{CollKind, Communicator};
+use crate::mpi::datatype::Datatype;
+use crate::mpi::error::MpiResult;
+
+/// Every rank contributes `data`; every rank receives all contributions,
+/// indexed by source rank (sizes may differ — MPI's `Allgatherv`).
+pub fn allgather<T: Datatype>(comm: &Communicator, data: &[T]) -> MpiResult<Vec<Vec<T>>> {
+    let p = comm.size();
+    let me = comm.rank();
+    let tag = comm.next_coll_tag(CollKind::Allgather);
+    let mut out: Vec<Vec<T>> = (0..p).map(|_| Vec::new()).collect();
+    out[me] = data.to_vec();
+    if p == 1 {
+        return Ok(out);
+    }
+    let right = (me + 1) % p;
+    let left = (me + p - 1) % p;
+    // Step s: forward the chunk originated by (me - s) mod p; receive the
+    // chunk originated by (me - s - 1) mod p.
+    for s in 0..p - 1 {
+        let fwd = (me + p - s) % p;
+        let incoming = (me + p - s - 1) % p;
+        comm.send(right, tag, &out[fwd])?;
+        let (v, _) = comm.recv::<T>(Some(left), tag)?;
+        out[incoming] = v;
+    }
+    Ok(out)
+}
+
+/// Allgather of whole vectors with concatenation (flat result).
+pub fn allgather_vecs<T: Datatype>(comm: &Communicator, data: &[T]) -> MpiResult<Vec<T>> {
+    Ok(allgather(comm, data)?.concat())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::netmodel::NetProfile;
+    use crate::mpi::world::World;
+
+    #[test]
+    fn allgather_all_ranks_see_everything() {
+        for p in [1usize, 2, 3, 6, 8] {
+            let w = World::new(p, NetProfile::zero());
+            let out = w.run_unwrap(|c| {
+                let data = vec![(c.rank() * 100) as i32, c.rank() as i32];
+                Ok(allgather(&c, &data)?)
+            });
+            for table in out {
+                for (r, v) in table.iter().enumerate() {
+                    assert_eq!(v, &vec![(r * 100) as i32, r as i32]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_contributions() {
+        let w = World::new(4, NetProfile::zero());
+        let out = w.run_unwrap(|c| {
+            let data = vec![1.0f32; c.rank()]; // rank r contributes r items
+            Ok(allgather_vecs(&c, &data)?)
+        });
+        for flat in out {
+            assert_eq!(flat.len(), 0 + 1 + 2 + 3);
+        }
+    }
+}

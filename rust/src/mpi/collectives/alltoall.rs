@@ -1,0 +1,74 @@
+//! Pairwise-exchange all-to-all: `p-1` rounds, round `i` trading with
+//! `(rank + i) mod p` / `(rank - i) mod p`.
+
+use crate::mpi::comm::{CollKind, Communicator};
+use crate::mpi::datatype::Datatype;
+use crate::mpi::error::{MpiError, MpiResult};
+
+/// `chunks[r]` is sent to rank `r`; the result's slot `r` is what rank `r`
+/// sent to us. Variable chunk sizes are allowed (MPI `Alltoallv`).
+pub fn alltoall<T: Datatype>(
+    comm: &Communicator,
+    mut chunks: Vec<Vec<T>>,
+) -> MpiResult<Vec<Vec<T>>> {
+    let p = comm.size();
+    if chunks.len() != p {
+        return Err(MpiError::Inconsistent(format!(
+            "alltoall needs {p} chunks, got {}",
+            chunks.len()
+        )));
+    }
+    let me = comm.rank();
+    let tag = comm.next_coll_tag(CollKind::Alltoall);
+    let mut out: Vec<Vec<T>> = (0..p).map(|_| Vec::new()).collect();
+    out[me] = std::mem::take(&mut chunks[me]);
+    for i in 1..p {
+        let dst = (me + i) % p;
+        let src = (me + p - i) % p;
+        comm.send_vec(dst, tag, std::mem::take(&mut chunks[dst]))?;
+        let (v, _) = comm.recv::<T>(Some(src), tag)?;
+        out[src] = v;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::netmodel::NetProfile;
+    use crate::mpi::world::World;
+
+    #[test]
+    fn alltoall_is_a_transpose() {
+        for p in [1usize, 2, 3, 5, 8] {
+            let w = World::new(p, NetProfile::zero());
+            let out = w.run_unwrap(move |c| {
+                let chunks: Vec<Vec<i32>> = (0..p)
+                    .map(|dst| vec![(c.rank() * 10 + dst) as i32])
+                    .collect();
+                Ok(alltoall(&c, chunks)?)
+            });
+            for (r, table) in out.iter().enumerate() {
+                for (src, v) in table.iter().enumerate() {
+                    assert_eq!(v, &vec![(src * 10 + r) as i32], "p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_alltoall() {
+        let w = World::new(3, NetProfile::zero());
+        let out = w.run_unwrap(|c| {
+            let chunks: Vec<Vec<u8>> = (0..3).map(|d| vec![c.rank() as u8; d]).collect();
+            Ok(alltoall(&c, chunks)?)
+        });
+        // slot src at rank r has length r (src sent r bytes to rank r).
+        for (r, table) in out.iter().enumerate() {
+            for (src, v) in table.iter().enumerate() {
+                assert_eq!(v.len(), r, "src={src}");
+                assert!(v.iter().all(|&b| b == src as u8));
+            }
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! Binomial-tree broadcast (MPICH's small-message algorithm): `⌈log₂ p⌉`
+//! communication rounds from the root.
+
+use crate::mpi::comm::{CollKind, Communicator};
+use crate::mpi::datatype::Datatype;
+use crate::mpi::error::MpiResult;
+
+/// Broadcast `data` from `root` to all ranks. Non-root vectors are
+/// replaced; pre-sizing is not required (the transport carries lengths).
+pub fn bcast<T: Datatype>(
+    comm: &Communicator,
+    root: usize,
+    data: &mut Vec<T>,
+) -> MpiResult<()> {
+    let p = comm.size();
+    let tag = comm.next_coll_tag(CollKind::Bcast);
+    if p == 1 {
+        return Ok(());
+    }
+    let me = comm.rank();
+    let vrank = (me + p - root) % p;
+
+    // Receive phase: find the lowest set bit round where we get the data.
+    let mut mask = 1usize;
+    while mask < p {
+        if vrank & mask != 0 {
+            let src = (me + p - mask) % p;
+            let (v, _) = comm.recv::<T>(Some(src), tag)?;
+            *data = v;
+            break;
+        }
+        mask <<= 1;
+    }
+    // Send phase: forward to sub-tree children below our entry round.
+    mask >>= 1;
+    while mask > 0 {
+        if vrank + mask < p {
+            let dst = (me + mask) % p;
+            comm.send(dst, tag, data)?;
+        }
+        mask >>= 1;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::netmodel::NetProfile;
+    use crate::mpi::world::World;
+
+    #[test]
+    fn bcast_from_every_root() {
+        for p in [1usize, 2, 3, 5, 8] {
+            for root in 0..p {
+                let w = World::new(p, NetProfile::zero());
+                let out = w.run_unwrap(move |c| {
+                    let mut v = if c.rank() == root {
+                        vec![root as f32, 42.0]
+                    } else {
+                        vec![]
+                    };
+                    bcast(&c, root, &mut v)?;
+                    Ok(v)
+                });
+                for v in out {
+                    assert_eq!(v, vec![root as f32, 42.0], "p={p} root={root}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bcast_is_logarithmic_in_vtime() {
+        let w = World::new(32, NetProfile::infiniband_fdr());
+        let nbytes = 4usize * 1000;
+        let clocks = w.run_unwrap(move |c| {
+            let mut v = if c.rank() == 0 { vec![1.0f32; 1000] } else { vec![] };
+            bcast(&c, 0, &mut v)?;
+            Ok(c.clock())
+        });
+        let prof = NetProfile::infiniband_fdr();
+        let hop = prof.send_overhead_s + prof.p2p_time(nbytes);
+        let max = clocks.iter().cloned().fold(0.0, f64::max);
+        // 5 tree levels; allow some pipelining slack, but far below 31 hops.
+        assert!(max <= 7.0 * hop, "max={max} hop={hop}");
+        assert!(max >= 4.0 * hop, "max={max} hop={hop}");
+    }
+
+    #[test]
+    fn bcast_int_payload() {
+        let w = World::new(6, NetProfile::zero());
+        let out = w.run_unwrap(|c| {
+            let mut v = if c.rank() == 2 { vec![7i32; 5] } else { vec![] };
+            bcast(&c, 2, &mut v)?;
+            Ok(v.iter().sum::<i32>())
+        });
+        assert!(out.iter().all(|&s| s == 35));
+    }
+}

@@ -1,0 +1,68 @@
+//! Root-driven gather (linear). Variable sizes come for free because the
+//! transport carries lengths — `gather_vecs` is MPI's `Gatherv` without the
+//! separate counts exchange.
+
+use crate::mpi::comm::{CollKind, Communicator};
+use crate::mpi::datatype::Datatype;
+use crate::mpi::error::MpiResult;
+
+/// Gather per-rank vectors at `root`; `Some(per_rank_vectors)` at the root
+/// (indexed by source rank), `None` elsewhere.
+pub fn gather_vecs<T: Datatype>(
+    comm: &Communicator,
+    root: usize,
+    data: &[T],
+) -> MpiResult<Option<Vec<Vec<T>>>> {
+    let p = comm.size();
+    let tag = comm.next_coll_tag(CollKind::Gather);
+    if comm.rank() == root {
+        let mut out: Vec<Vec<T>> = (0..p).map(|_| Vec::new()).collect();
+        out[root] = data.to_vec();
+        for _ in 0..p - 1 {
+            let env = comm.recv_envelope(None, Some(tag))?;
+            let src = env.src;
+            out[src] = T::from_buffer(env.buf)?;
+        }
+        Ok(Some(out))
+    } else {
+        comm.send(root, tag, data)?;
+        Ok(None)
+    }
+}
+
+/// Gather equal-size contributions into one flat buffer at `root`.
+pub fn gather<T: Datatype>(
+    comm: &Communicator,
+    root: usize,
+    data: &[T],
+) -> MpiResult<Option<Vec<T>>> {
+    Ok(gather_vecs(comm, root, data)?.map(|vv| vv.concat()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::netmodel::NetProfile;
+    use crate::mpi::world::World;
+
+    #[test]
+    fn gather_orders_by_rank_even_with_any_source() {
+        let w = World::new(5, NetProfile::zero());
+        let out = w.run_unwrap(|c| {
+            let data = vec![c.rank() as i32; c.rank() + 1]; // ragged
+            Ok(gather_vecs(&c, 0, &data)?)
+        });
+        let at_root = out[0].clone().unwrap();
+        for (r, v) in at_root.iter().enumerate() {
+            assert_eq!(v, &vec![r as i32; r + 1]);
+        }
+        assert!(out[1..].iter().all(|o| o.is_none()));
+    }
+
+    #[test]
+    fn flat_gather_concatenates_in_rank_order() {
+        let w = World::new(4, NetProfile::zero());
+        let out = w.run_unwrap(|c| Ok(gather(&c, 3, &[c.rank() as f32])?));
+        assert_eq!(out[3].clone().unwrap(), vec![0.0, 1.0, 2.0, 3.0]);
+    }
+}

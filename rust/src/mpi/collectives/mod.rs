@@ -1,0 +1,161 @@
+//! Group communication: the paper's §3.3.3 workhorse.
+//!
+//! The synchronous weight/bias averaging that defines the paper's design is
+//! `MPI_Allreduce`; we implement the three classic algorithms (binomial
+//! tree reduce+bcast, recursive doubling, ring/Rabenseifner-style
+//! reduce-scatter + allgather) as *real message-passing programs* over the
+//! in-process transport, so that their `O(log p)` / bandwidth-optimal
+//! behaviours emerge in the virtual clocks instead of being assumed.
+//!
+//! All collectives must be called by every (alive) rank of the communicator
+//! in the same order — the trainer is bulk-synchronous, so this holds by
+//! construction. Internal tags are drawn from the communicator's collective
+//! sequence space and never collide with user tags.
+
+mod allgather;
+mod allreduce;
+mod alltoall;
+mod barrier;
+mod bcast;
+mod gather;
+mod reduce;
+mod scatter;
+
+pub use allgather::{allgather, allgather_vecs};
+pub use allreduce::{allreduce, allreduce_with, AllreduceAlgorithm};
+pub use alltoall::alltoall;
+pub use barrier::barrier;
+pub use bcast::bcast;
+pub use gather::{gather, gather_vecs};
+pub use reduce::reduce;
+pub use scatter::{scatter_even, scatterv};
+
+use super::comm::Communicator;
+use super::datatype::{Datatype, Reducible, ReduceOp};
+use super::error::MpiResult;
+
+/// Ergonomic method-call surface over the free functions.
+pub trait CollectiveExt {
+    fn barrier(&self) -> MpiResult<()>;
+    fn bcast<T: Datatype>(&self, root: usize, data: &mut Vec<T>) -> MpiResult<()>;
+    fn reduce<T: Reducible>(
+        &self,
+        op: ReduceOp,
+        root: usize,
+        data: &[T],
+    ) -> MpiResult<Option<Vec<T>>>;
+    fn allreduce<T: Reducible>(&self, op: ReduceOp, data: &mut [T]) -> MpiResult<()>;
+    fn allreduce_with<T: Reducible>(
+        &self,
+        alg: AllreduceAlgorithm,
+        op: ReduceOp,
+        data: &mut [T],
+    ) -> MpiResult<()>;
+    fn gather_vecs<T: Datatype>(&self, root: usize, data: &[T])
+        -> MpiResult<Option<Vec<Vec<T>>>>;
+    fn allgather<T: Datatype>(&self, data: &[T]) -> MpiResult<Vec<Vec<T>>>;
+    fn scatterv<T: Datatype>(
+        &self,
+        root: usize,
+        send: Option<&[T]>,
+        counts: &[usize],
+    ) -> MpiResult<Vec<T>>;
+    fn alltoall<T: Datatype>(&self, chunks: Vec<Vec<T>>) -> MpiResult<Vec<Vec<T>>>;
+}
+
+impl CollectiveExt for Communicator {
+    fn barrier(&self) -> MpiResult<()> {
+        barrier(self)
+    }
+    fn bcast<T: Datatype>(&self, root: usize, data: &mut Vec<T>) -> MpiResult<()> {
+        bcast(self, root, data)
+    }
+    fn reduce<T: Reducible>(
+        &self,
+        op: ReduceOp,
+        root: usize,
+        data: &[T],
+    ) -> MpiResult<Option<Vec<T>>> {
+        reduce(self, op, root, data)
+    }
+    fn allreduce<T: Reducible>(&self, op: ReduceOp, data: &mut [T]) -> MpiResult<()> {
+        allreduce(self, op, data)
+    }
+    fn allreduce_with<T: Reducible>(
+        &self,
+        alg: AllreduceAlgorithm,
+        op: ReduceOp,
+        data: &mut [T],
+    ) -> MpiResult<()> {
+        allreduce_with(self, alg, op, data)
+    }
+    fn gather_vecs<T: Datatype>(
+        &self,
+        root: usize,
+        data: &[T],
+    ) -> MpiResult<Option<Vec<Vec<T>>>> {
+        gather_vecs(self, root, data)
+    }
+    fn allgather<T: Datatype>(&self, data: &[T]) -> MpiResult<Vec<Vec<T>>> {
+        allgather(self, data)
+    }
+    fn scatterv<T: Datatype>(
+        &self,
+        root: usize,
+        send: Option<&[T]>,
+        counts: &[usize],
+    ) -> MpiResult<Vec<T>> {
+        scatterv(self, root, send, counts)
+    }
+    fn alltoall<T: Datatype>(&self, chunks: Vec<Vec<T>>) -> MpiResult<Vec<Vec<T>>> {
+        alltoall(self, chunks)
+    }
+}
+
+/// Contiguous chunk `[start, end)` of `n` items split as evenly as possible
+/// over `p` parts (first `n % p` parts get one extra). Shared by the ring
+/// allreduce, scatter, and the data sharder — and property-tested once.
+pub fn chunk_range(n: usize, p: usize, i: usize) -> (usize, usize) {
+    let base = n / p;
+    let extra = n % p;
+    let start = i * base + i.min(extra);
+    let len = base + usize::from(i < extra);
+    (start, start + len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_ranges_partition() {
+        for n in [0usize, 1, 7, 64, 1000] {
+            for p in [1usize, 2, 3, 7, 64] {
+                let mut covered = 0;
+                let mut prev_end = 0;
+                for i in 0..p {
+                    let (s, e) = chunk_range(n, p, i);
+                    assert_eq!(s, prev_end);
+                    assert!(e >= s);
+                    covered += e - s;
+                    prev_end = e;
+                }
+                assert_eq!(covered, n);
+                assert_eq!(prev_end, n);
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_sizes_differ_by_at_most_one() {
+        let sizes: Vec<usize> = (0..5)
+            .map(|i| {
+                let (s, e) = chunk_range(13, 5, i);
+                e - s
+            })
+            .collect();
+        let mx = *sizes.iter().max().unwrap();
+        let mn = *sizes.iter().min().unwrap();
+        assert!(mx - mn <= 1, "{sizes:?}");
+    }
+}

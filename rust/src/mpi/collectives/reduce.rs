@@ -1,0 +1,82 @@
+//! Binomial-tree reduction to a root (commutative ops).
+
+use crate::mpi::comm::{CollKind, Communicator};
+use crate::mpi::datatype::{reduce_in_place, Reducible, ReduceOp};
+use crate::mpi::error::MpiResult;
+
+/// Reduce `data` elementwise with `op`; returns `Some(result)` at `root`,
+/// `None` elsewhere.
+pub fn reduce<T: Reducible>(
+    comm: &Communicator,
+    op: ReduceOp,
+    root: usize,
+    data: &[T],
+) -> MpiResult<Option<Vec<T>>> {
+    let p = comm.size();
+    let tag = comm.next_coll_tag(CollKind::Reduce);
+    let me = comm.rank();
+    let mut acc = data.to_vec();
+    if p == 1 {
+        return Ok(Some(acc));
+    }
+    let vrank = (me + p - root) % p;
+    let mut mask = 1usize;
+    while mask < p {
+        if vrank & mask != 0 {
+            // Our turn to fold our partial into the parent and retire.
+            let dst = (me + p - mask) % p;
+            comm.send_vec(dst, tag, acc)?;
+            return Ok(None);
+        }
+        if vrank + mask < p {
+            let src = (me + mask) % p;
+            let (v, _) = comm.recv::<T>(Some(src), tag)?;
+            reduce_in_place(op, &mut acc, &v)?;
+        }
+        mask <<= 1;
+    }
+    Ok(Some(acc))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::netmodel::NetProfile;
+    use crate::mpi::world::World;
+
+    #[test]
+    fn reduce_sum_every_size_and_root() {
+        for p in [1usize, 2, 3, 4, 7, 9] {
+            for root in [0, p - 1] {
+                let w = World::new(p, NetProfile::zero());
+                let out = w.run_unwrap(move |c| {
+                    let data = vec![c.rank() as f64 + 1.0, 1.0];
+                    Ok(reduce(&c, ReduceOp::Sum, root, &data)?)
+                });
+                let expect_sum: f64 = (1..=p).map(|r| r as f64).sum();
+                for (r, o) in out.into_iter().enumerate() {
+                    if r == root {
+                        let v = o.expect("root gets result");
+                        assert_eq!(v, vec![expect_sum, p as f64]);
+                    } else {
+                        assert!(o.is_none());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_max_min() {
+        let w = World::new(5, NetProfile::zero());
+        let out = w.run_unwrap(|c| {
+            let data = vec![c.rank() as i32, -(c.rank() as i32)];
+            let mx = reduce(&c, ReduceOp::Max, 0, &data)?;
+            let mn = reduce(&c, ReduceOp::Min, 0, &data)?;
+            Ok((mx, mn))
+        });
+        let (mx, mn) = out[0].clone();
+        assert_eq!(mx.unwrap(), vec![4, 0]);
+        assert_eq!(mn.unwrap(), vec![0, -4]);
+    }
+}

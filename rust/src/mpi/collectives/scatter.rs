@@ -1,0 +1,150 @@
+//! Root-driven scatter — how rank 0 distributes training shards (§3.3.1:
+//! "the default process ... reads the samples from the disk and splits
+//! them across processes").
+//!
+//! Linear from the root, exactly like the paper's implementation (they call
+//! parallel reading out as future work); the scatter happens once per
+//! training run so its cost is amortized away, which the figures module
+//! verifies.
+
+use crate::mpi::comm::{CollKind, Communicator};
+use crate::mpi::datatype::Datatype;
+use crate::mpi::error::{MpiError, MpiResult};
+
+use super::chunk_range;
+
+/// Variable-count scatter: `counts[r]` elements to rank `r`. `send` must be
+/// `Some` at the root with length `sum(counts)`.
+pub fn scatterv<T: Datatype>(
+    comm: &Communicator,
+    root: usize,
+    send: Option<&[T]>,
+    counts: &[usize],
+) -> MpiResult<Vec<T>> {
+    let p = comm.size();
+    if counts.len() != p {
+        return Err(MpiError::Inconsistent(format!(
+            "scatterv counts len {} != comm size {p}",
+            counts.len()
+        )));
+    }
+    let tag = comm.next_coll_tag(CollKind::Scatter);
+    if comm.rank() == root {
+        let buf = send.ok_or_else(|| {
+            MpiError::Inconsistent("root must supply send buffer".into())
+        })?;
+        let total: usize = counts.iter().sum();
+        if buf.len() != total {
+            return Err(MpiError::CountMismatch {
+                expected: total,
+                got: buf.len(),
+            });
+        }
+        let mut offset = 0usize;
+        let mut mine = Vec::new();
+        for (r, &cnt) in counts.iter().enumerate() {
+            let part = &buf[offset..offset + cnt];
+            if r == root {
+                mine = part.to_vec();
+            } else {
+                comm.send(r, tag, part)?;
+            }
+            offset += cnt;
+        }
+        Ok(mine)
+    } else {
+        let (v, _) = comm.recv::<T>(Some(root), tag)?;
+        if v.len() != counts[comm.rank()] {
+            return Err(MpiError::CountMismatch {
+                expected: counts[comm.rank()],
+                got: v.len(),
+            });
+        }
+        Ok(v)
+    }
+}
+
+/// Even scatter of `n` items (root supplies the flat buffer): rank `r`
+/// receives the `chunk_range(n, p, r)` slice.
+pub fn scatter_even<T: Datatype>(
+    comm: &Communicator,
+    root: usize,
+    send: Option<&[T]>,
+    total: usize,
+) -> MpiResult<Vec<T>> {
+    let p = comm.size();
+    let counts: Vec<usize> = (0..p)
+        .map(|r| {
+            let (s, e) = chunk_range(total, p, r);
+            e - s
+        })
+        .collect();
+    scatterv(comm, root, send, &counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::netmodel::NetProfile;
+    use crate::mpi::world::World;
+
+    #[test]
+    fn scatterv_distributes_exact_slices() {
+        let w = World::new(4, NetProfile::zero());
+        let out = w.run_unwrap(|c| {
+            let counts = [3usize, 0, 2, 1];
+            let send: Option<Vec<i32>> = if c.rank() == 0 {
+                Some((0..6).collect())
+            } else {
+                None
+            };
+            Ok(scatterv(&c, 0, send.as_deref(), &counts)?)
+        });
+        assert_eq!(out[0], vec![0, 1, 2]);
+        assert_eq!(out[1], Vec::<i32>::new());
+        assert_eq!(out[2], vec![3, 4]);
+        assert_eq!(out[3], vec![5]);
+    }
+
+    #[test]
+    fn scatter_even_partitions() {
+        let w = World::new(3, NetProfile::zero());
+        let out = w.run_unwrap(|c| {
+            let send: Option<Vec<f32>> = if c.rank() == 0 {
+                Some((0..10).map(|i| i as f32).collect())
+            } else {
+                None
+            };
+            Ok(scatter_even(&c, 0, send.as_deref(), 10)?)
+        });
+        let flat: Vec<f32> = out.concat();
+        assert_eq!(flat, (0..10).map(|i| i as f32).collect::<Vec<_>>());
+        assert_eq!(out[0].len(), 4); // 10 = 4 + 3 + 3
+    }
+
+    #[test]
+    fn scatterv_validates_counts() {
+        let w = World::new(2, NetProfile::zero());
+        let res = w.run(|c| {
+            let counts = [1usize]; // wrong length
+            let send: Option<Vec<i32>> = if c.rank() == 0 { Some(vec![1]) } else { None };
+            scatterv(&c, 0, send.as_deref(), &counts)?;
+            Ok(())
+        });
+        assert!(res.iter().all(|r| r.is_err()));
+    }
+
+    #[test]
+    fn nonzero_root() {
+        let w = World::new(3, NetProfile::zero());
+        let out = w.run_unwrap(|c| {
+            let send: Option<Vec<u8>> = if c.rank() == 2 {
+                Some(vec![9, 8, 7])
+            } else {
+                None
+            };
+            Ok(scatterv(&c, 2, send.as_deref(), &[1, 1, 1])?)
+        });
+        assert_eq!(out, vec![vec![9], vec![8], vec![7]]);
+    }
+}

@@ -1,0 +1,558 @@
+//! The communicator: rank identity, point-to-point messaging, virtual
+//! clocks, ULFM state, and communicator construction (split / shrink).
+//!
+//! A `Communicator` value is *per rank* (it is intentionally `!Sync` — it
+//! holds the rank's virtual clock and counters in `Cell`s); the shared part
+//! is the [`CommGroup`] (mailboxes + revocation flag) and the
+//! [`WorldState`] (failure flags + the registry used to materialize new
+//! communicators deterministically across threads).
+
+use std::cell::Cell;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::channel::{Envelope, Mailbox, Tag};
+use super::datatype::{Buffer, Datatype};
+use super::error::{MpiError, MpiResult};
+use super::netmodel::NetProfile;
+
+/// Global (per-`World`) state shared by every communicator.
+#[derive(Debug)]
+pub struct WorldState {
+    pub n: usize,
+    failed: Vec<AtomicBool>,
+    /// Registry of communicator groups keyed by context id, so that the
+    /// member ranks of a `split`/`shrink` all attach to the same group
+    /// object without any out-of-band channel.
+    groups: Mutex<HashMap<u64, Arc<CommGroup>>>,
+}
+
+impl WorldState {
+    pub fn new(n: usize) -> Arc<Self> {
+        Arc::new(WorldState {
+            n,
+            failed: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            groups: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Perfect failure detector: the in-process substrate can read failure
+    /// flags directly; real ULFM approximates this with heartbeats (we keep
+    /// the ULFM *interface* — errors surface only through operations).
+    pub fn is_failed(&self, world_rank: usize) -> bool {
+        self.failed[world_rank].load(Ordering::SeqCst)
+    }
+
+    pub fn mark_failed(&self, world_rank: usize) {
+        self.failed[world_rank].store(true, Ordering::SeqCst);
+    }
+
+    pub fn alive_count(&self) -> usize {
+        (0..self.n).filter(|&r| !self.is_failed(r)).count()
+    }
+
+    fn get_or_create_group(
+        &self,
+        context: u64,
+        world_ranks: &[usize],
+    ) -> Arc<CommGroup> {
+        let mut g = self.groups.lock().unwrap();
+        g.entry(context)
+            .or_insert_with(|| Arc::new(CommGroup::new(context, world_ranks.to_vec())))
+            .clone()
+    }
+}
+
+/// The shared half of a communicator: one mailbox per member plus ULFM
+/// revocation state.
+#[derive(Debug)]
+pub struct CommGroup {
+    pub context: u64,
+    pub world_ranks: Vec<usize>,
+    mailboxes: Vec<Mailbox>,
+    revoked: AtomicBool,
+}
+
+impl CommGroup {
+    pub fn new(context: u64, world_ranks: Vec<usize>) -> Self {
+        let mailboxes = (0..world_ranks.len()).map(|_| Mailbox::new()).collect();
+        CommGroup {
+            context,
+            world_ranks,
+            mailboxes,
+            revoked: AtomicBool::new(false),
+        }
+    }
+
+    pub fn close_all(&self) {
+        for m in &self.mailboxes {
+            m.close();
+        }
+    }
+}
+
+/// Per-rank communication counters (virtual-time accounting).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CommStats {
+    pub msgs_sent: u64,
+    pub bytes_sent: u64,
+    /// Virtual seconds this rank spent in communication (send overhead +
+    /// receive exposure). `clock - comm_vtime` is pure compute/IO time.
+    pub comm_vtime: f64,
+}
+
+/// Kind discriminator baked into collective-internal tags.
+#[derive(Debug, Clone, Copy)]
+#[repr(u8)]
+pub enum CollKind {
+    Barrier = 1,
+    Bcast = 2,
+    Reduce = 3,
+    Allreduce = 4,
+    Scatter = 5,
+    Gather = 6,
+    Allgather = 7,
+    Alltoall = 8,
+    Split = 9,
+    Agree = 10,
+}
+
+const COLL_BIT: Tag = 1 << 31;
+
+pub struct Communicator {
+    rank: usize,
+    group: Arc<CommGroup>,
+    world: Arc<WorldState>,
+    profile: Arc<NetProfile>,
+    clock: Cell<f64>,
+    coll_seq: Cell<u32>,
+    stats: Cell<CommStats>,
+}
+
+impl Communicator {
+    pub fn new(
+        rank: usize,
+        group: Arc<CommGroup>,
+        world: Arc<WorldState>,
+        profile: Arc<NetProfile>,
+    ) -> Self {
+        Communicator {
+            rank,
+            group,
+            world,
+            profile,
+            clock: Cell::new(0.0),
+            coll_seq: Cell::new(0),
+            stats: Cell::new(CommStats::default()),
+        }
+    }
+
+    // ---- identity -------------------------------------------------------
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.group.world_ranks.len()
+    }
+
+    pub fn is_root(&self) -> bool {
+        self.rank == 0
+    }
+
+    pub fn world(&self) -> &Arc<WorldState> {
+        &self.world
+    }
+
+    pub fn profile(&self) -> &NetProfile {
+        &self.profile
+    }
+
+    pub fn world_rank(&self) -> usize {
+        self.group.world_ranks[self.rank]
+    }
+
+    // ---- virtual clock & stats -----------------------------------------
+
+    /// This rank's virtual time (seconds since world start).
+    pub fn clock(&self) -> f64 {
+        self.clock.get()
+    }
+
+    /// Charge local (compute / IO) time to the virtual clock.
+    pub fn advance(&self, seconds: f64) {
+        self.clock.set(self.clock.get() + seconds);
+    }
+
+    pub fn set_clock(&self, t: f64) {
+        self.clock.set(t);
+    }
+
+    pub fn stats(&self) -> CommStats {
+        self.stats.get()
+    }
+
+    fn add_comm_time(&self, dt: f64) {
+        let mut s = self.stats.get();
+        s.comm_vtime += dt;
+        self.stats.set(s);
+    }
+
+    // ---- ULFM state ------------------------------------------------------
+
+    /// Mark this communicator revoked (ULFM `MPI_Comm_revoke`): every
+    /// subsequent/pending operation on it errors with [`MpiError::Revoked`].
+    pub fn revoke(&self) {
+        self.group.revoked.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_revoked(&self) -> bool {
+        self.group.revoked.load(Ordering::SeqCst)
+    }
+
+    /// Simulate this rank dying (fault injection for tests/examples).
+    pub fn fail_self(&self) {
+        self.world.mark_failed(self.world_rank());
+    }
+
+    pub fn peer_failed(&self, comm_rank: usize) -> bool {
+        self.world.is_failed(self.group.world_ranks[comm_rank])
+    }
+
+    /// List of comm-ranks currently alive.
+    pub fn alive_ranks(&self) -> Vec<usize> {
+        (0..self.size()).filter(|&r| !self.peer_failed(r)).collect()
+    }
+
+    fn check_usable(&self) -> MpiResult<()> {
+        if self.is_revoked() {
+            return Err(MpiError::Revoked);
+        }
+        Ok(())
+    }
+
+    // ---- point-to-point --------------------------------------------------
+
+    /// Non-blocking-semantics send (buffered): charges the sender its
+    /// injection overhead, stamps the envelope with its arrival time under
+    /// the alpha-beta model, and delivers it to the peer's mailbox.
+    pub fn send<T: Datatype>(&self, dst: usize, tag: Tag, data: &[T]) -> MpiResult<()> {
+        self.send_buffer(dst, tag, T::into_buffer(data.to_vec()))
+    }
+
+    /// Zero-copy variant when the caller can give up the vector.
+    pub fn send_vec<T: Datatype>(&self, dst: usize, tag: Tag, data: Vec<T>) -> MpiResult<()> {
+        self.send_buffer(dst, tag, T::into_buffer(data))
+    }
+
+    pub fn send_buffer(&self, dst: usize, tag: Tag, buf: Buffer) -> MpiResult<()> {
+        self.check_usable()?;
+        if dst >= self.size() {
+            return Err(MpiError::InvalidRank {
+                rank: dst,
+                size: self.size(),
+            });
+        }
+        if self.peer_failed(dst) {
+            return Err(MpiError::ProcFailed { rank: dst });
+        }
+        let nbytes = buf.nbytes();
+        let o = self.profile.send_overhead_s;
+        self.advance(o);
+        self.add_comm_time(o);
+        // Topology-aware cost: intra-node messages ride shared memory.
+        let arrival = self.clock.get()
+            + self.profile.p2p_time_between(
+                self.group.world_ranks[self.rank],
+                self.group.world_ranks[dst],
+                nbytes,
+            );
+        let mut s = self.stats.get();
+        s.msgs_sent += 1;
+        s.bytes_sent += nbytes as u64;
+        self.stats.set(s);
+        self.group.mailboxes[dst].push(Envelope {
+            src: self.rank,
+            tag,
+            arrival_vtime: arrival,
+            buf,
+        });
+        Ok(())
+    }
+
+    /// Blocking matched receive; returns the payload and the source rank.
+    pub fn recv<T: Datatype>(
+        &self,
+        src: Option<usize>,
+        tag: Tag,
+    ) -> MpiResult<(Vec<T>, usize)> {
+        let env = self.recv_envelope(src, Some(tag))?;
+        let s = env.src;
+        Ok((T::from_buffer(env.buf)?, s))
+    }
+
+    pub fn recv_envelope(&self, src: Option<usize>, tag: Option<Tag>) -> MpiResult<Envelope> {
+        self.check_usable()?;
+        if let Some(s) = src {
+            if s >= self.size() {
+                return Err(MpiError::InvalidRank {
+                    rank: s,
+                    size: self.size(),
+                });
+            }
+        }
+        let group = &self.group;
+        let world = &self.world;
+        let me = self.rank;
+        let env = group.mailboxes[me].recv_match(src, tag, || {
+            if group.revoked.load(Ordering::SeqCst) {
+                return Some(MpiError::Revoked);
+            }
+            match src {
+                Some(s) if world.is_failed(group.world_ranks[s]) => {
+                    Some(MpiError::ProcFailed { rank: s })
+                }
+                None => {
+                    // ANY_SOURCE: abort only if *every* peer is dead.
+                    let any_alive = (0..group.world_ranks.len())
+                        .any(|r| r != me && !world.is_failed(group.world_ranks[r]));
+                    if any_alive {
+                        None
+                    } else {
+                        Some(MpiError::ProcFailed { rank: me })
+                    }
+                }
+                _ => None,
+            }
+        })?;
+        // Fold the message's arrival into our virtual clock: any gap is
+        // communication exposure (we were waiting on the network).
+        let before = self.clock.get();
+        if env.arrival_vtime > before {
+            self.clock.set(env.arrival_vtime);
+            self.add_comm_time(env.arrival_vtime - before);
+        }
+        Ok(env)
+    }
+
+    /// Combined send+recv (exchange), used by ring/pairwise collectives.
+    pub fn sendrecv<T: Datatype>(
+        &self,
+        dst: usize,
+        send_tag: Tag,
+        data: &[T],
+        src: usize,
+        recv_tag: Tag,
+    ) -> MpiResult<Vec<T>> {
+        self.send(dst, send_tag, data)?;
+        Ok(self.recv::<T>(Some(src), recv_tag)?.0)
+    }
+
+    /// Non-blocking probe for a matching message (MPI_Iprobe).
+    pub fn iprobe(&self, src: Option<usize>, tag: Option<Tag>) -> bool {
+        self.group.mailboxes[self.rank].probe(src, tag)
+    }
+
+    // ---- collective support ---------------------------------------------
+
+    /// Fresh collective-internal tag. All ranks issue collectives in the
+    /// same order (bulk-synchronous training), so sequence numbers agree.
+    pub fn next_coll_tag(&self, kind: CollKind) -> Tag {
+        let seq = self.coll_seq.get();
+        self.coll_seq.set(seq.wrapping_add(1));
+        COLL_BIT | ((kind as Tag) << 24) | (seq & 0x00FF_FFFF)
+    }
+
+    /// Deterministic context id for derived communicators.
+    fn derive_context(&self, label: &str, salt: u64) -> u64 {
+        let mut h = DefaultHasher::new();
+        self.group.context.hash(&mut h);
+        label.hash(&mut h);
+        salt.hash(&mut h);
+        h.finish()
+    }
+
+    // ---- communicator construction ---------------------------------------
+
+    /// `MPI_Comm_split`: ranks with the same `color` land in the same new
+    /// communicator, ordered by `(key, old rank)`.
+    pub fn split(&self, color: u32, key: i32) -> MpiResult<Communicator> {
+        self.check_usable()?;
+        let tag = self.next_coll_tag(CollKind::Split);
+        // allgather (color, key) — simple ring share via p2p to avoid a
+        // dependency cycle with the collectives module.
+        let mut table = vec![(0u32, 0i32); self.size()];
+        table[self.rank] = (color, key);
+        let me = self.rank as i32;
+        for r in 0..self.size() {
+            if r != self.rank {
+                self.send(r, tag, &[color as i32, key, me])?;
+            }
+        }
+        for _ in 0..self.size() - 1 {
+            let (v, _) = self.recv::<i32>(None, tag)?;
+            table[v[2] as usize] = (v[0] as u32, v[1]);
+        }
+        // Deterministic membership: sort my color-mates by (key, rank).
+        let mut members: Vec<usize> = (0..self.size())
+            .filter(|&r| table[r].0 == color)
+            .collect();
+        members.sort_by_key(|&r| (table[r].1, r));
+        let new_rank = members
+            .iter()
+            .position(|&r| r == self.rank)
+            .expect("self must be a member");
+        let world_ranks: Vec<usize> = members
+            .iter()
+            .map(|&r| self.group.world_ranks[r])
+            .collect();
+        let mut salt_h = DefaultHasher::new();
+        (color, &world_ranks).hash(&mut salt_h);
+        let context = self.derive_context("split", salt_h.finish() ^ (tag as u64));
+        let group = self.world.get_or_create_group(context, &world_ranks);
+        let comm = Communicator::new(new_rank, group, self.world.clone(), self.profile.clone());
+        comm.set_clock(self.clock());
+        Ok(comm)
+    }
+
+    /// ULFM `MPI_Comm_shrink`: a new communicator over the surviving ranks.
+    /// Must be called by every surviving rank of this communicator.
+    pub fn shrink(&self) -> MpiResult<Communicator> {
+        let alive = self.alive_ranks();
+        let world_ranks: Vec<usize> = alive
+            .iter()
+            .map(|&r| self.group.world_ranks[r])
+            .collect();
+        let new_rank = alive
+            .iter()
+            .position(|&r| r == self.rank)
+            .ok_or(MpiError::ProcFailed { rank: self.rank })?;
+        // Context must be derivable *identically* by every survivor even
+        // when their collective sequence counters have diverged (a failure
+        // aborts ranks at different points) — so it hashes only the parent
+        // context and the surviving membership. A second shrink of the same
+        // parent necessarily has a different alive set, so no collision.
+        let mut salt_h = DefaultHasher::new();
+        world_ranks.hash(&mut salt_h);
+        let context = self.derive_context("shrink", salt_h.finish());
+        let group = self.world.get_or_create_group(context, &world_ranks);
+        let comm = Communicator::new(new_rank, group, self.world.clone(), self.profile.clone());
+        comm.set_clock(self.clock());
+        Ok(comm)
+    }
+
+    /// ULFM `MPI_Comm_agree`: fault-tolerant logical AND over the survivors.
+    pub fn agree(&self, flag: bool) -> MpiResult<bool> {
+        let tag = self.next_coll_tag(CollKind::Agree);
+        let alive = self.alive_ranks();
+        let root = *alive.first().ok_or(MpiError::ProcFailed { rank: self.rank })?;
+        if self.rank == root {
+            let mut acc = flag;
+            for &r in alive.iter().filter(|&&r| r != root) {
+                match self.recv::<i32>(Some(r), tag) {
+                    Ok((v, _)) => acc &= v[0] != 0,
+                    Err(MpiError::ProcFailed { .. }) => continue, // died mid-agree
+                    Err(e) => return Err(e),
+                }
+            }
+            for &r in alive.iter().filter(|&&r| r != root) {
+                let _ = self.send(r, tag, &[acc as i32]); // ignore deaths
+            }
+            Ok(acc)
+        } else {
+            self.send(root, tag, &[flag as i32])?;
+            let (v, _) = self.recv::<i32>(Some(root), tag)?;
+            Ok(v[0] != 0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair() -> (Communicator, Communicator) {
+        let world = WorldState::new(2);
+        let group = Arc::new(CommGroup::new(0, vec![0, 1]));
+        let profile = Arc::new(NetProfile::infiniband_fdr());
+        let c0 = Communicator::new(0, group.clone(), world.clone(), profile.clone());
+        let c1 = Communicator::new(1, group, world, profile);
+        (c0, c1)
+    }
+
+    #[test]
+    fn p2p_roundtrip_and_clock() {
+        let (c0, c1) = pair();
+        c0.send(1, 5, &[1.0f32, 2.0]).unwrap();
+        let (v, src) = c1.recv::<f32>(Some(0), 5).unwrap();
+        assert_eq!((v, src), (vec![1.0, 2.0], 0));
+        // receiver clock advanced to arrival: overhead + alpha + 8B/beta
+        let p = NetProfile::infiniband_fdr();
+        let expect = p.send_overhead_s + p.p2p_time(8);
+        assert!((c1.clock() - expect).abs() < 1e-12, "{}", c1.clock());
+        assert!(c0.clock() > 0.0 && c0.clock() < c1.clock());
+    }
+
+    #[test]
+    fn send_to_failed_rank_errors() {
+        let (c0, c1) = pair();
+        c1.fail_self();
+        assert!(matches!(
+            c0.send(1, 0, &[0i32]),
+            Err(MpiError::ProcFailed { rank: 1 })
+        ));
+    }
+
+    #[test]
+    fn recv_from_failed_rank_errors_not_hangs() {
+        let (c0, c1) = pair();
+        c1.fail_self();
+        assert!(matches!(
+            c0.recv::<f32>(Some(1), 0),
+            Err(MpiError::ProcFailed { rank: 1 })
+        ));
+    }
+
+    #[test]
+    fn queued_message_deliverable_after_failure() {
+        // ULFM: messages already delivered remain receivable.
+        let (c0, c1) = pair();
+        c0.send(1, 3, &[7i32]).unwrap();
+        c0.fail_self();
+        let (v, _) = c1.recv::<i32>(Some(0), 3).unwrap();
+        assert_eq!(v, vec![7]);
+    }
+
+    #[test]
+    fn revoke_aborts_operations() {
+        let (c0, c1) = pair();
+        c1.revoke(); // revocation is communicator-global
+        assert!(matches!(c0.send(1, 0, &[1i32]), Err(MpiError::Revoked)));
+        assert!(matches!(c0.recv::<i32>(Some(1), 0), Err(MpiError::Revoked)));
+    }
+
+    #[test]
+    fn stats_account_bytes_and_msgs() {
+        let (c0, c1) = pair();
+        c0.send(1, 1, &[0u8; 100]).unwrap();
+        c0.send(1, 2, &[0.0f32; 25]).unwrap();
+        let s = c0.stats();
+        assert_eq!(s.msgs_sent, 2);
+        assert_eq!(s.bytes_sent, 200);
+        assert!(s.comm_vtime > 0.0);
+        let _ = c1; // silence
+    }
+
+    #[test]
+    fn invalid_rank_rejected() {
+        let (c0, _c1) = pair();
+        assert!(matches!(
+            c0.send(5, 0, &[1i32]),
+            Err(MpiError::InvalidRank { rank: 5, size: 2 })
+        ));
+    }
+}

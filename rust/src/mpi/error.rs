@@ -1,0 +1,54 @@
+//! Error taxonomy for the in-process MPI runtime.
+//!
+//! Mirrors the MPI-3 + ULFM error classes the paper's implementation relies
+//! on: ordinary usage errors, and the ULFM pair `MPI_ERR_PROC_FAILED` /
+//! `MPI_ERR_REVOKED` that fault-tolerant training must handle.
+
+use std::fmt;
+
+/// All errors the communicator layer can produce.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MpiError {
+    /// Peer rank is out of `0..size`.
+    InvalidRank { rank: usize, size: usize },
+    /// Received a buffer of a different datatype than requested.
+    TypeMismatch { expected: &'static str, got: &'static str },
+    /// Received a buffer whose length differs from the posted receive.
+    CountMismatch { expected: usize, got: usize },
+    /// ULFM: the peer (or a participant of a collective) has failed.
+    ProcFailed { rank: usize },
+    /// ULFM: the communicator was revoked by some rank.
+    Revoked,
+    /// The world was torn down while a rank was still blocking.
+    Shutdown,
+    /// Collective called with inconsistent arguments across ranks
+    /// (detected where cheaply possible, e.g. mismatched counts).
+    Inconsistent(String),
+}
+
+impl fmt::Display for MpiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MpiError::InvalidRank { rank, size } => {
+                write!(f, "invalid rank {rank} for communicator of size {size}")
+            }
+            MpiError::TypeMismatch { expected, got } => {
+                write!(f, "datatype mismatch: expected {expected}, got {got}")
+            }
+            MpiError::CountMismatch { expected, got } => {
+                write!(f, "count mismatch: expected {expected}, got {got}")
+            }
+            MpiError::ProcFailed { rank } => {
+                write!(f, "MPI_ERR_PROC_FAILED: rank {rank} has failed")
+            }
+            MpiError::Revoked => write!(f, "MPI_ERR_REVOKED: communicator revoked"),
+            MpiError::Shutdown => write!(f, "world shut down"),
+            MpiError::Inconsistent(s) => write!(f, "inconsistent collective: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for MpiError {}
+
+/// Result alias local to the mpi module.
+pub type MpiResult<T> = std::result::Result<T, MpiError>;

@@ -1,0 +1,31 @@
+//! In-process MPI-like runtime — the substrate replacing the paper's
+//! OpenMPI 1.8.3 + InfiniBand cluster (DESIGN.md §3).
+//!
+//! Ranks are OS threads; messages are typed buffers moved between per-rank
+//! mailboxes; collectives are the real textbook algorithms; and an
+//! alpha-beta network model advances per-rank *virtual clocks* so that the
+//! paper's cluster-scale strong-scaling experiments can be simulated
+//! faithfully (and reproducibly) on one machine. ULFM-style fault tolerance
+//! (revoke / shrink / agree + fault injection) implements the paper's §2.2
+//! fault-tolerance argument.
+
+pub mod channel;
+pub mod collectives;
+pub mod comm;
+pub mod datatype;
+pub mod error;
+pub mod netmodel;
+pub mod ulfm;
+pub mod world;
+
+pub use channel::{Envelope, Mailbox, Tag, ANY_SOURCE};
+pub use collectives::{
+    allgather, allreduce, allreduce_with, alltoall, barrier, bcast, chunk_range,
+    gather, gather_vecs, scatter_even, scatterv, AllreduceAlgorithm, CollectiveExt,
+};
+pub use comm::{CommStats, Communicator, WorldState};
+pub use datatype::{Buffer, Datatype, Reducible, ReduceOp};
+pub use error::{MpiError, MpiResult};
+pub use netmodel::NetProfile;
+pub use ulfm::{try_collective, FaultPlan, Recovery};
+pub use world::World;

@@ -1,0 +1,150 @@
+//! World launcher: spawn `n` ranks as OS threads, hand each a
+//! [`Communicator`] on the world group, join, and propagate results.
+//!
+//! This is the in-process stand-in for `mpirun -np N`: the paper launched
+//! one TensorFlow process per core via OpenMPI; we launch one rank thread
+//! per simulated core. For `p` beyond the physical core count the ranks
+//! still run correctly (they are threads, time is virtual); wall-clock just
+//! stops matching virtual time, which is exactly the point of the
+//! cost-model clocks.
+
+use std::sync::Arc;
+use std::thread;
+
+use super::comm::{CommGroup, Communicator, WorldState};
+use super::netmodel::NetProfile;
+
+/// Handle used to launch a set of ranks over one network profile.
+pub struct World {
+    pub size: usize,
+    pub profile: NetProfile,
+    /// Stack size per rank thread (training replicas hold model buffers).
+    pub stack_bytes: usize,
+}
+
+impl World {
+    pub fn new(size: usize, profile: NetProfile) -> Self {
+        assert!(size > 0, "world must have at least one rank");
+        World {
+            size,
+            profile,
+            stack_bytes: 8 << 20,
+        }
+    }
+
+    /// Run `f(rank_communicator)` on every rank; returns per-rank results
+    /// in rank order. Panics in a rank thread are converted to `Err` via
+    /// the panic message so one bad rank cannot poison the harness.
+    pub fn run<T, F>(&self, f: F) -> Vec<crate::Result<T>>
+    where
+        T: Send + 'static,
+        F: Fn(Communicator) -> crate::Result<T> + Send + Sync + 'static,
+    {
+        let world = WorldState::new(self.size);
+        let group = Arc::new(CommGroup::new(0, (0..self.size).collect()));
+        let profile = Arc::new(self.profile.clone());
+        let f = Arc::new(f);
+
+        let handles: Vec<_> = (0..self.size)
+            .map(|rank| {
+                let comm = Communicator::new(
+                    rank,
+                    group.clone(),
+                    world.clone(),
+                    profile.clone(),
+                );
+                let f = f.clone();
+                thread::Builder::new()
+                    .name(format!("rank-{rank}"))
+                    .stack_size(self.stack_bytes)
+                    .spawn(move || f(comm))
+                    .expect("spawn rank thread")
+            })
+            .collect();
+
+        let results: Vec<crate::Result<T>> = handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                Err(p) => {
+                    let msg = p
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| p.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "rank panicked".into());
+                    Err(anyhow::anyhow!("rank panicked: {msg}"))
+                }
+            })
+            .collect();
+        // Unblock any leftover receivers (e.g. ranks waiting on a dead peer
+        // in a buggy user closure) — the group is dropped after this anyway.
+        group.close_all();
+        results
+    }
+
+    /// Like [`World::run`] but unwraps: returns values, panicking on the
+    /// first rank error. Convenient for tests and examples.
+    pub fn run_unwrap<T, F>(&self, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(Communicator) -> crate::Result<T> + Send + Sync + 'static,
+    {
+        self.run(f)
+            .into_iter()
+            .enumerate()
+            .map(|(r, res)| res.unwrap_or_else(|e| panic!("rank {r} failed: {e:#}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_runs_all_ranks() {
+        let w = World::new(4, NetProfile::zero());
+        let out = w.run_unwrap(|c| Ok(c.rank() * 10));
+        assert_eq!(out, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn ranks_communicate_through_world() {
+        let w = World::new(3, NetProfile::zero());
+        let out = w.run_unwrap(|c| {
+            // ring: send rank to right neighbour, receive from left
+            let right = (c.rank() + 1) % c.size();
+            let left = (c.rank() + c.size() - 1) % c.size();
+            c.send(right, 0, &[c.rank() as i32])?;
+            let (v, _) = c.recv::<i32>(Some(left), 0)?;
+            Ok(v[0])
+        });
+        assert_eq!(out, vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn rank_error_does_not_poison_others() {
+        let w = World::new(2, NetProfile::zero());
+        let res = w.run(|c| {
+            if c.rank() == 1 {
+                anyhow::bail!("injected");
+            }
+            Ok(())
+        });
+        assert!(res[0].is_ok());
+        assert!(res[1].is_err());
+    }
+
+    #[test]
+    fn rank_panic_converted_to_error() {
+        let w = World::new(2, NetProfile::zero());
+        let res = w.run(|c| {
+            if c.rank() == 0 {
+                panic!("boom");
+            }
+            Ok(())
+        });
+        assert!(format!("{:#}", res[0].as_ref().unwrap_err()).contains("boom"));
+        assert!(res[1].is_ok());
+    }
+}

@@ -1,0 +1,192 @@
+//! The paper's analytic performance model (§3.3.2), in code.
+//!
+//! "Let m be the number of samples, and p be the number of processes...
+//! at each epoch, the total number of FLOPs is (m/p)·n²·l, while the total
+//! communication volume is n²·l" — compute shrinks with p, communication
+//! per synchronization is a constant `n_params` floats, and the collective
+//! runs in `O(log p)` (§3.3.3).
+//!
+//! Two uses: (1) closed-form cross-validation of the message-passing
+//! simulator — a property test asserts the simulated virtual clocks track
+//! these formulas; (2) fast extrapolation in `dtf figures --analytic`.
+
+use crate::model::spec::ArchSpec;
+use crate::mpi::{AllreduceAlgorithm, NetProfile};
+
+/// Closed-form cost of one allreduce of `nbytes` over `p` ranks.
+///
+/// Formulas are the textbook ones (Thakur et al.), matching the message
+/// structure of `mpi::collectives::allreduce`:
+/// * recursive doubling: `log₂p · (α + o + n/β)`
+/// * ring:               `2(p-1) · (α + o + (n/p)/β)`
+/// * tree (reduce+bcast): `2·log₂p · (α + o + n/β)`
+pub fn allreduce_time(
+    profile: &NetProfile,
+    alg: AllreduceAlgorithm,
+    p: usize,
+    nbytes: usize,
+) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    // Topology approximation: while the job fits one node, hops ride the
+    // intra-node transport (the simulator routes per message; the closed
+    // form uses the dominant medium).
+    let (alpha, beta) = if p <= profile.cores_per_node {
+        (profile.intra_alpha_s, profile.intra_beta_bytes_per_s)
+    } else {
+        (profile.alpha_s, profile.beta_bytes_per_s)
+    };
+    let lat = alpha + profile.send_overhead_s;
+    let n = nbytes as f64;
+    let logp = (p as f64).log2().ceil();
+    match alg {
+        AllreduceAlgorithm::RecursiveDoubling => logp * (lat + n / beta),
+        AllreduceAlgorithm::Ring => {
+            2.0 * (p as f64 - 1.0) * (lat + (n / p as f64) / beta)
+        }
+        AllreduceAlgorithm::Tree => 2.0 * logp * (lat + n / beta),
+        AllreduceAlgorithm::Auto => {
+            let ring = allreduce_time(profile, AllreduceAlgorithm::Ring, p, nbytes);
+            let rd = allreduce_time(profile, AllreduceAlgorithm::RecursiveDoubling, p, nbytes);
+            ring.min(rd)
+        }
+    }
+}
+
+/// Inputs for one strong-scaling prediction.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    /// Total training samples (the paper's `m`).
+    pub m: usize,
+    /// Per-rank minibatch (steps per epoch = (m/p)/batch).
+    pub batch: usize,
+    /// Seconds of compute per *sample* on one core (calibrated).
+    pub secs_per_sample: f64,
+    /// Bytes all-reduced per synchronization (`n_params * 4`).
+    pub sync_bytes: usize,
+    /// Synchronizations per epoch: steps (per-step sync) or 1 (per-epoch).
+    pub sync_per_step: bool,
+}
+
+impl Workload {
+    pub fn from_spec(spec: &ArchSpec, batch: usize, secs_per_sample: f64) -> Workload {
+        Workload {
+            m: spec.n_train,
+            batch,
+            secs_per_sample,
+            sync_bytes: spec.sync_bytes(),
+            sync_per_step: true,
+        }
+    }
+
+    /// Steps one rank performs per epoch at world size `p`.
+    pub fn steps(&self, p: usize) -> usize {
+        (self.m / p) / self.batch
+    }
+
+    /// Predicted epoch time at world size `p`.
+    pub fn epoch_time(
+        &self,
+        p: usize,
+        profile: &NetProfile,
+        alg: AllreduceAlgorithm,
+    ) -> f64 {
+        let steps = self.steps(p).max(1);
+        let compute = steps as f64
+            * self.batch as f64
+            * self.secs_per_sample
+            * profile.compute_contention(p);
+        let syncs = if self.sync_per_step { steps as f64 } else { 1.0 };
+        let comm = syncs * allreduce_time(profile, alg, p, self.sync_bytes);
+        compute + comm
+    }
+
+    /// Predicted speedup of `p` ranks over `baseline_p` ranks.
+    pub fn speedup(
+        &self,
+        p: usize,
+        baseline_p: usize,
+        profile: &NetProfile,
+        alg: AllreduceAlgorithm,
+    ) -> f64 {
+        self.epoch_time(baseline_p, profile, alg) / self.epoch_time(p, profile, alg)
+    }
+
+    /// Parallel efficiency at `p` vs 1 rank.
+    pub fn efficiency(&self, p: usize, profile: &NetProfile, alg: AllreduceAlgorithm) -> f64 {
+        self.speedup(p, 1, profile, alg) / p as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wl() -> Workload {
+        Workload {
+            m: 60_000,
+            batch: 64,
+            secs_per_sample: 5e-6,
+            sync_bytes: 178_110 * 4,
+            sync_per_step: true,
+        }
+    }
+
+    #[test]
+    fn allreduce_asymptotics() {
+        let p = NetProfile::infiniband_fdr();
+        // ring is bandwidth-optimal for large messages
+        let big = 64 << 20;
+        assert!(
+            allreduce_time(&p, AllreduceAlgorithm::Ring, 32, big)
+                < allreduce_time(&p, AllreduceAlgorithm::Tree, 32, big)
+        );
+        // recursive doubling is latency-optimal for small messages
+        let small = 64;
+        assert!(
+            allreduce_time(&p, AllreduceAlgorithm::RecursiveDoubling, 32, small)
+                < allreduce_time(&p, AllreduceAlgorithm::Ring, 32, small)
+        );
+        // p=1 is free
+        assert_eq!(allreduce_time(&p, AllreduceAlgorithm::Ring, 1, big), 0.0);
+    }
+
+    #[test]
+    fn strong_scaling_monotone_then_tapers() {
+        let w = wl();
+        let prof = NetProfile::infiniband_fdr();
+        let s8 = w.speedup(8, 1, &prof, AllreduceAlgorithm::Auto);
+        let s32 = w.speedup(32, 1, &prof, AllreduceAlgorithm::Auto);
+        assert!(s8 > 4.0, "decent scaling at p=8: {s8}");
+        assert!(s32 > s8, "more ranks still faster: {s32} vs {s8}");
+        assert!(
+            s32 < 32.0 * 0.9,
+            "communication must cost something: {s32}"
+        );
+        // efficiency decreases with p (the paper's taper)
+        assert!(
+            w.efficiency(32, &prof, AllreduceAlgorithm::Auto)
+                < w.efficiency(8, &prof, AllreduceAlgorithm::Auto)
+        );
+    }
+
+    #[test]
+    fn socket_profile_scales_worse_than_ib() {
+        // The paper's §3.1 argument for MPI over Spark-on-sockets.
+        let w = wl();
+        let ib = w.speedup(32, 1, &NetProfile::infiniband_fdr(), AllreduceAlgorithm::Auto);
+        let tcp = w.speedup(32, 1, &NetProfile::tcp_socket(), AllreduceAlgorithm::Auto);
+        assert!(tcp < ib, "tcp {tcp} should scale worse than ib {ib}");
+    }
+
+    #[test]
+    fn epoch_sync_reduces_comm_share() {
+        let mut w = wl();
+        let prof = NetProfile::infiniband_fdr();
+        let per_step = w.epoch_time(32, &prof, AllreduceAlgorithm::Auto);
+        w.sync_per_step = false;
+        let per_epoch = w.epoch_time(32, &prof, AllreduceAlgorithm::Auto);
+        assert!(per_epoch < per_step);
+    }
+}

@@ -1,0 +1,209 @@
+//! Artifact manifest: the ABI between `python/compile/aot.py` and the Rust
+//! runtime. `manifest.json` declares, for every `<arch>.<fn>` HLO module,
+//! the ordered input/output tensors (name, shape, dtype) plus the full
+//! Table-1 architecture specs.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::model::spec::ArchSpec;
+use crate::util::json::{self, Value};
+use crate::Result;
+use anyhow::{anyhow, bail, Context};
+
+/// Tensor dtypes crossing the runtime boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype {other:?} in manifest"),
+        }
+    }
+
+    pub fn width(self) -> usize {
+        4
+    }
+}
+
+/// One declared input or output tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<IoSpec> {
+        Ok(IoSpec {
+            name: v
+                .field("name")?
+                .as_str()
+                .ok_or_else(|| anyhow!("io name"))?
+                .to_string(),
+            shape: v
+                .field("shape")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("io shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("io dim")))
+                .collect::<Result<_>>()?,
+            dtype: Dtype::parse(
+                v.field("dtype")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("io dtype"))?,
+            )?,
+        })
+    }
+}
+
+/// Metadata for one compiled HLO module.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub key: String,
+    pub arch: String,
+    pub fn_name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// The parsed manifest: everything the coordinator needs to run training
+/// without Python.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch_size: usize,
+    pub archs: BTreeMap<String, ArchSpec>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", mpath.display()))?;
+        let root = json::parse(&text).map_err(|e| anyhow!("{}: {e}", mpath.display()))?;
+
+        let batch_size = root
+            .field("batch_size")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("batch_size"))?;
+        let archs = ArchSpec::all_from_manifest(&root)?;
+
+        let mut artifacts = BTreeMap::new();
+        for (key, v) in root
+            .field("artifacts")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("artifacts not an object"))?
+        {
+            let meta = ArtifactMeta {
+                key: key.clone(),
+                arch: v
+                    .field("arch")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("artifact arch"))?
+                    .to_string(),
+                fn_name: v
+                    .field("fn")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("artifact fn"))?
+                    .to_string(),
+                path: dir.join(
+                    v.field("file")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("artifact file"))?,
+                ),
+                inputs: v
+                    .field("inputs")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("inputs"))?
+                    .iter()
+                    .map(IoSpec::from_json)
+                    .collect::<Result<_>>()?,
+                outputs: v
+                    .field("outputs")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("outputs"))?
+                    .iter()
+                    .map(IoSpec::from_json)
+                    .collect::<Result<_>>()?,
+            };
+            if !meta.path.exists() {
+                bail!("artifact file missing: {}", meta.path.display());
+            }
+            artifacts.insert(key.clone(), meta);
+        }
+
+        let m = Manifest {
+            dir,
+            batch_size,
+            archs,
+            artifacts,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Consistency: every arch must expose the three entry points, and the
+    /// artifact input ABI must begin with exactly the arch's param shapes.
+    fn validate(&self) -> Result<()> {
+        for (name, spec) in &self.archs {
+            for fn_name in ["train_step", "grad_step", "eval_step"] {
+                let key = format!("{name}.{fn_name}");
+                let meta = self
+                    .artifacts
+                    .get(&key)
+                    .ok_or_else(|| anyhow!("manifest missing artifact {key}"))?;
+                let np = spec.param_shapes.len();
+                if meta.inputs.len() < np {
+                    bail!("{key}: fewer inputs than parameters");
+                }
+                for (io, ps) in meta.inputs.iter().zip(&spec.param_shapes) {
+                    if io.shape != ps.shape {
+                        bail!(
+                            "{key}: input {} shape {:?} != spec {} {:?}",
+                            io.name,
+                            io.shape,
+                            ps.name,
+                            ps.shape
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn artifact(&self, arch: &str, fn_name: &str) -> Result<&ArtifactMeta> {
+        let key = format!("{arch}.{fn_name}");
+        self.artifacts
+            .get(&key)
+            .ok_or_else(|| anyhow!("no artifact {key} in manifest"))
+    }
+
+    pub fn arch(&self, name: &str) -> Result<&ArchSpec> {
+        self.archs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown architecture {name:?}; known: {:?}", self.archs.keys().collect::<Vec<_>>()))
+    }
+
+    /// Default repo-relative artifacts directory.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("DTF_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}

@@ -1,0 +1,62 @@
+//! Per-rank execution engine: one PJRT CPU client plus a cache of compiled
+//! executables.
+//!
+//! The `xla` crate's client is reference-counted with `Rc`, so it cannot be
+//! shared across rank threads; each training replica owns an `Engine`
+//! (created inside the rank closure). Compilation happens once per
+//! (rank, artifact) and is excluded from step timing — matching how the
+//! paper's TensorFlow sessions build their graph once before the epochs.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use xla::PjRtClient;
+
+use super::artifact::Manifest;
+use super::executable::Executable;
+use crate::Result;
+use anyhow::Context;
+
+pub struct Engine {
+    client: PjRtClient,
+    manifest: Arc<Manifest>,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Engine {
+    pub fn new(manifest: Arc<Manifest>) -> Result<Engine> {
+        // Silence XLA's per-client INFO lines unless the user opted in.
+        if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+        }
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compiled executable for `<arch>.<fn_name>` (cached).
+    pub fn executable(&self, arch: &str, fn_name: &str) -> Result<Rc<Executable>> {
+        let key = format!("{arch}.{fn_name}");
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let meta = self.manifest.artifact(arch, fn_name)?;
+        let exe = Rc::new(Executable::load(&self.client, meta)?);
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables held (diagnostics).
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

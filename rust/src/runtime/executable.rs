@@ -1,0 +1,207 @@
+//! A loaded PJRT executable: HLO text → compile once → execute many.
+//!
+//! This is the request-path boundary with the AOT world: inputs are plain
+//! Rust slices (the trainer's flat parameter store + batch views), outputs
+//! are plain vectors. Literal construction uses the untyped-bytes entry
+//! point so no per-element conversion happens on the hot path.
+
+use std::time::Instant;
+
+use xla::{ElementType, HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifact::{ArtifactMeta, Dtype, IoSpec};
+use crate::Result;
+use anyhow::{anyhow, bail, Context};
+
+/// Borrowed input tensor (shape comes from the artifact ABI).
+#[derive(Debug, Clone, Copy)]
+pub enum HostSlice<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl<'a> HostSlice<'a> {
+    fn len(&self) -> usize {
+        match self {
+            HostSlice::F32(s) => s.len(),
+            HostSlice::I32(s) => s.len(),
+        }
+    }
+
+    fn dtype(&self) -> Dtype {
+        match self {
+            HostSlice::F32(_) => Dtype::F32,
+            HostSlice::I32(_) => Dtype::I32,
+        }
+    }
+
+    fn bytes(&self) -> &'a [u8] {
+        // Safety: plain-old-data reinterpretation; lifetimes preserved.
+        unsafe {
+            match self {
+                HostSlice::F32(s) => {
+                    std::slice::from_raw_parts(s.as_ptr() as *const u8, s.len() * 4)
+                }
+                HostSlice::I32(s) => {
+                    std::slice::from_raw_parts(s.as_ptr() as *const u8, s.len() * 4)
+                }
+            }
+        }
+    }
+}
+
+/// Owned output tensor.
+#[derive(Debug, Clone)]
+pub enum OutTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl OutTensor {
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            OutTensor::F32(v) => Ok(v),
+            OutTensor::I32(_) => bail!("output is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            OutTensor::I32(v) => Ok(v),
+            OutTensor::F32(_) => bail!("output is f32, expected i32"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        v.first()
+            .copied()
+            .ok_or_else(|| anyhow!("empty scalar output"))
+    }
+
+    pub fn scalar_i32(&self) -> Result<i32> {
+        let v = self.as_i32()?;
+        v.first()
+            .copied()
+            .ok_or_else(|| anyhow!("empty scalar output"))
+    }
+}
+
+/// Cumulative execution statistics for one executable.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ExecStats {
+    pub executions: u64,
+    pub total_secs: f64,
+}
+
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: PjRtLoadedExecutable,
+    stats: std::cell::Cell<ExecStats>,
+}
+
+impl Executable {
+    /// Load the HLO text, reparse (ids reassigned — see aot.py), compile.
+    pub fn load(client: &PjRtClient, meta: &ArtifactMeta) -> Result<Executable> {
+        let proto = HloModuleProto::from_text_file(&meta.path)
+            .with_context(|| format!("parsing HLO text {}", meta.path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", meta.key))?;
+        Ok(Executable {
+            meta: meta.clone(),
+            exe,
+            stats: Default::default(),
+        })
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        self.stats.get()
+    }
+
+    /// Execute with ABI-checked inputs; returns outputs in ABI order.
+    pub fn run(&self, inputs: &[HostSlice]) -> Result<Vec<OutTensor>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: got {} inputs, ABI declares {}",
+                self.meta.key,
+                inputs.len(),
+                self.meta.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (slice, spec) in inputs.iter().zip(&self.meta.inputs) {
+            literals.push(make_literal(slice, spec, &self.meta.key)?);
+        }
+
+        let t0 = Instant::now();
+        let result = self
+            .exe
+            .execute::<Literal>(&literals)
+            .with_context(|| format!("executing {}", self.meta.key))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("device->host transfer")?;
+        let elapsed = t0.elapsed().as_secs_f64();
+        let mut s = self.stats.get();
+        s.executions += 1;
+        s.total_secs += elapsed;
+        self.stats.set(s);
+
+        // aot.py lowers with return_tuple=True: always a tuple literal.
+        let parts = tuple.to_tuple().context("decomposing output tuple")?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "{}: runtime produced {} outputs, ABI declares {}",
+                self.meta.key,
+                parts.len(),
+                self.meta.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&self.meta.outputs)
+            .map(|(lit, spec)| read_literal(lit, spec))
+            .collect()
+    }
+}
+
+fn make_literal(slice: &HostSlice, spec: &IoSpec, key: &str) -> Result<Literal> {
+    if slice.dtype() != spec.dtype {
+        bail!(
+            "{key}: input {} dtype mismatch (got {:?}, ABI {:?})",
+            spec.name,
+            slice.dtype(),
+            spec.dtype
+        );
+    }
+    if slice.len() != spec.numel() {
+        bail!(
+            "{key}: input {} has {} elements, ABI shape {:?} needs {}",
+            spec.name,
+            slice.len(),
+            spec.shape,
+            spec.numel()
+        );
+    }
+    let ty = match spec.dtype {
+        Dtype::F32 => ElementType::F32,
+        Dtype::I32 => ElementType::S32,
+    };
+    Literal::create_from_shape_and_untyped_data(ty, &spec.shape, slice.bytes())
+        .map_err(|e| anyhow!("literal for {}: {e}", spec.name))
+}
+
+fn read_literal(lit: Literal, spec: &IoSpec) -> Result<OutTensor> {
+    match spec.dtype {
+        Dtype::F32 => Ok(OutTensor::F32(
+            lit.to_vec::<f32>()
+                .map_err(|e| anyhow!("reading {}: {e}", spec.name))?,
+        )),
+        Dtype::I32 => Ok(OutTensor::I32(
+            lit.to_vec::<i32>()
+                .map_err(|e| anyhow!("reading {}: {e}", spec.name))?,
+        )),
+    }
+}

@@ -1,0 +1,12 @@
+//! Runtime layer: load + execute the AOT-compiled JAX/Pallas artifacts via
+//! the PJRT C API (`xla` crate). The interchange format is HLO *text* — see
+//! `python/compile/aot.py` for why (xla_extension 0.5.1 rejects jax≥0.5's
+//! 64-bit-id protos; the text parser reassigns ids).
+
+pub mod artifact;
+pub mod engine;
+pub mod executable;
+
+pub use artifact::{ArtifactMeta, Dtype, IoSpec, Manifest};
+pub use engine::Engine;
+pub use executable::{ExecStats, Executable, HostSlice, OutTensor};

@@ -1,0 +1,158 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, and `--key=value`, with typed getters
+//! and an unknown-flag check so typos fail loudly instead of silently
+//! running a default experiment.
+
+use std::collections::BTreeMap;
+
+use crate::Result;
+use anyhow::{anyhow, bail};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let value = match inline {
+                    Some(v) => Some(v),
+                    None => {
+                        // consume the next token as a value unless it looks
+                        // like another flag
+                        if iter.peek().map_or(false, |n| !n.starts_with("--")) {
+                            iter.next()
+                        } else {
+                            None
+                        }
+                    }
+                };
+                out.flags
+                    .entry(key)
+                    .or_default()
+                    .push(value.unwrap_or_default());
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .get(key)
+            .and_then(|v| v.last())
+            .map(|s| s.as_str())
+            .filter(|s| !s.is_empty())
+    }
+
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .get(key)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {s:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a number, got {s:?}")),
+        }
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Error on flags outside the allowed set (catches typos).
+    pub fn check_known(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !allowed.contains(&k.as_str()) {
+                bail!(
+                    "unknown flag --{k}; known flags: {}",
+                    allowed
+                        .iter()
+                        .map(|a| format!("--{a}"))
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = parse("train --arch mnist_dnn --ranks=4 --verbose --lr 0.5");
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("arch"), Some("mnist_dnn"));
+        assert_eq!(a.usize_or("ranks", 1).unwrap(), 4);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("verbose"), None);
+        assert!((a.f64_or("lr", 0.0).unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("x");
+        assert_eq!(a.usize_or("ranks", 7).unwrap(), 7);
+        assert_eq!(a.str_or("arch", "adult_dnn"), "adult_dnn");
+    }
+
+    #[test]
+    fn repeated_flags_accumulate() {
+        let a = parse("--id fig1 --id fig2");
+        assert_eq!(a.get_all("id"), vec!["fig1", "fig2"]);
+        assert_eq!(a.get("id"), Some("fig2"));
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("--ranks four");
+        assert!(a.usize_or("ranks", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = parse("--archh x");
+        assert!(a.check_known(&["arch"]).is_err());
+        assert!(a.check_known(&["archh"]).is_ok());
+    }
+}

@@ -1,0 +1,10 @@
+//! In-tree utilities replacing crates unavailable in the offline image:
+//! a JSON parser (instead of serde_json), a deterministic PRNG (instead of
+//! rand), a property-testing harness (instead of proptest), and a
+//! micro-benchmark statistics kit (instead of criterion).
+
+pub mod cli;
+pub mod json;
+pub mod quickprop;
+pub mod rng;
+pub mod stats;

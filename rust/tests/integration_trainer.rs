@@ -1,0 +1,174 @@
+//! End-to-end coordinator tests: full distributed training runs over the
+//! in-process MPI world with real PJRT execution.
+
+use std::sync::Arc;
+
+use dtf::coordinator::{run_training, ExecMode, SyncEvery, SyncMode, TrainConfig};
+use dtf::mpi::ulfm::FaultPlan;
+use dtf::mpi::NetProfile;
+use dtf::runtime::Manifest;
+
+fn manifest() -> Arc<Manifest> {
+    Arc::new(Manifest::load("artifacts").expect("run `make artifacts` first"))
+}
+
+fn quick_cfg(arch: &str) -> TrainConfig {
+    TrainConfig::new(arch)
+        .with_epochs(3)
+        .with_lr(0.3)
+        .with_scale(0.05)
+        .with_steps_cap(4)
+}
+
+#[test]
+fn single_rank_trains_and_loss_falls() {
+    let mut cfg = quick_cfg("adult_dnn");
+    cfg.epochs = 6;
+    cfg.eval_every = 0;
+    let report = run_training(cfg, manifest(), 1, NetProfile::shared_memory()).unwrap();
+    let losses = report.losses();
+    assert_eq!(losses.len(), 6);
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "{losses:?}"
+    );
+    let ev = report.final_eval().expect("eval runs at end");
+    assert!(ev.accuracy > 0.55, "separable synthetic data: {ev:?}");
+}
+
+#[test]
+fn four_ranks_weight_average_replicas_stay_consistent_and_learn() {
+    let mut cfg = quick_cfg("adult_dnn");
+    cfg.epochs = 5;
+    let report = run_training(cfg, manifest(), 4, NetProfile::infiniband_fdr()).unwrap();
+    assert_eq!(report.ranks, 4);
+    // Synchronous averaging makes the per-epoch loss identical across
+    // ranks (it's aggregated by a collective), and the loss must fall.
+    let losses = report.losses();
+    assert!(losses.last().unwrap() < losses.first().unwrap(), "{losses:?}");
+    // All ranks did equal work.
+    let steps: Vec<u64> = report.per_rank.iter().map(|r| r.steps).collect();
+    assert!(steps.iter().all(|&s| s == steps[0]), "{steps:?}");
+    // Communication was charged.
+    assert!(report.comm_fraction() > 0.0);
+    assert!(report.per_rank.iter().all(|r| r.bytes_sent > 0));
+}
+
+#[test]
+fn gradient_average_matches_weight_average_loss_trajectory() {
+    // With identical seeds/shards, the two sync modes are algebraically
+    // equivalent for SGD — trajectories must match to fp tolerance.
+    let mk = |mode| {
+        let mut cfg = quick_cfg("higgs_dnn");
+        cfg.lr = 0.05;
+        cfg.sync = mode;
+        cfg.epochs = 3;
+        run_training(cfg, manifest(), 2, NetProfile::zero()).unwrap()
+    };
+    let w = mk(SyncMode::WeightAverage);
+    let g = mk(SyncMode::GradientAverage);
+    for (lw, lg) in w.losses().iter().zip(g.losses()) {
+        assert!(
+            (lw - lg).abs() < 5e-3,
+            "trajectories diverged: {:?} vs {:?}",
+            w.losses(),
+            g.losses()
+        );
+    }
+}
+
+#[test]
+fn no_sync_ablation_diverges_replicas() {
+    let mut cfg = quick_cfg("adult_dnn");
+    cfg.sync = SyncMode::None;
+    cfg.epochs = 2;
+    // Different ranks see different shards and never synchronize: the run
+    // completes (no collectives to disagree on) and zero bytes move for
+    // parameter sync (only data scatter + loss aggregation).
+    let report = run_training(cfg, manifest(), 2, NetProfile::zero()).unwrap();
+    assert_eq!(report.losses().len(), 2);
+}
+
+#[test]
+fn epoch_granularity_sync_works() {
+    let mut cfg = quick_cfg("adult_dnn");
+    cfg.sync_every = SyncEvery::Epoch;
+    cfg.epochs = 3;
+    let report = run_training(cfg, manifest(), 3, NetProfile::infiniband_fdr()).unwrap();
+    assert_eq!(report.losses().len(), 3);
+    // Far fewer sync bytes than per-step mode: 3 epochs ≈ 3 allreduces.
+    let per_step = {
+        let mut c2 = quick_cfg("adult_dnn");
+        c2.epochs = 3;
+        run_training(c2, manifest(), 3, NetProfile::infiniband_fdr()).unwrap()
+    };
+    let b_epoch: u64 = report.per_rank.iter().map(|r| r.bytes_sent).sum();
+    let b_step: u64 = per_step.per_rank.iter().map(|r| r.bytes_sent).sum();
+    assert!(
+        b_epoch < b_step / 2,
+        "epoch sync should move far fewer bytes: {b_epoch} vs {b_step}"
+    );
+}
+
+#[test]
+fn sim_mode_runs_at_cluster_scale() {
+    // 32 "cores" on this box: no PJRT, virtual clocks only.
+    let mut cfg = quick_cfg("mnist_dnn");
+    cfg.mode = ExecMode::Sim {
+        secs_per_sample: 1e-4,
+    };
+    cfg.epochs = 2;
+    cfg.data_scale = 0.2; // 12k samples: >5 batches/rank at p=32
+    cfg.max_steps_per_epoch = None;
+    let report = run_training(cfg, manifest(), 32, NetProfile::infiniband_fdr()).unwrap();
+    assert_eq!(report.ranks, 32);
+    assert!(report.makespan_s() > 0.0);
+    // Strong scaling: same job on 4 ranks must have a larger makespan.
+    let mut cfg4 = quick_cfg("mnist_dnn");
+    cfg4.mode = ExecMode::Sim {
+        secs_per_sample: 1e-4,
+    };
+    cfg4.epochs = 2;
+    cfg4.data_scale = 0.2;
+    cfg4.max_steps_per_epoch = None;
+    let report4 = run_training(cfg4, manifest(), 4, NetProfile::infiniband_fdr()).unwrap();
+    // Compare training-only makespan: the serial rank-0 read is a
+    // constant in both runs (the paper amortizes it the same way).
+    assert!(
+        report4.train_makespan_s() > report.train_makespan_s() * 2.0,
+        "4-rank {} vs 32-rank {}",
+        report4.train_makespan_s(),
+        report.train_makespan_s()
+    );
+}
+
+#[test]
+fn rank_failure_recovers_and_training_continues() {
+    let mut cfg = quick_cfg("adult_dnn");
+    cfg.epochs = 5;
+    cfg.fault_plan = FaultPlan::kill_at(2, 1); // world rank 1 dies at epoch 2
+    let report = run_training(cfg, manifest(), 3, NetProfile::zero()).unwrap();
+    let dead: Vec<_> = report.per_rank.iter().filter(|r| r.died).collect();
+    assert_eq!(dead.len(), 1);
+    assert_eq!(dead[0].world_rank, 1);
+    // Survivors finished all 5 epochs on the shrunk communicator.
+    for r in report.per_rank.iter().filter(|r| !r.died) {
+        assert_eq!(r.epoch_losses.len(), 5, "rank {}", r.world_rank);
+        assert_eq!(r.final_world, 2);
+    }
+}
+
+#[test]
+fn broadcast_init_equals_seed_replication() {
+    let mk = |bcast: bool| {
+        let mut cfg = quick_cfg("higgs_dnn");
+        cfg.broadcast_init = bcast;
+        cfg.lr = 0.05;
+        run_training(cfg, manifest(), 2, NetProfile::zero()).unwrap()
+    };
+    let a = mk(false);
+    let b = mk(true);
+    for (la, lb) in a.losses().iter().zip(b.losses()) {
+        assert!((la - lb).abs() < 1e-9, "{la} vs {lb}");
+    }
+}

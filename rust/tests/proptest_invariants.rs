@@ -1,0 +1,284 @@
+//! Property-based invariants over the coordinator substrates, driven by
+//! the in-tree quickprop harness (seeded, reproducible).
+
+use dtf::data::{BatchIter, Dataset};
+use dtf::dataflow::{gradients, Graph, Op, Session, Tensor};
+use dtf::mpi::{
+    allreduce_with, chunk_range, AllreduceAlgorithm, NetProfile, ReduceOp, World,
+};
+use dtf::util::json;
+use dtf::util::quickprop::{gen, run_prop, Config};
+use dtf::util::rng::Rng;
+
+#[test]
+fn prop_allreduce_equals_sequential_reduction() {
+    // For random (p, n, algorithm, op): the distributed result equals the
+    // locally computed elementwise reduction, on every rank.
+    run_prop(
+        "allreduce == sequential",
+        Config { cases: 40, seed: 101 },
+        |rng, _| {
+            let p = gen::usize_in(rng, 1, 9);
+            let n = gen::usize_in(rng, 1, 300);
+            let alg = [
+                AllreduceAlgorithm::Ring,
+                AllreduceAlgorithm::RecursiveDoubling,
+                AllreduceAlgorithm::Tree,
+                AllreduceAlgorithm::Auto,
+            ][rng.below(4)];
+            let op = [ReduceOp::Sum, ReduceOp::Max, ReduceOp::Min][rng.below(3)];
+            let inputs: Vec<Vec<f64>> =
+                (0..p).map(|_| gen::f64_vec(rng, n, 10.0)).collect();
+            let mut expect = inputs[0].clone();
+            for row in &inputs[1..] {
+                for (e, &v) in expect.iter_mut().zip(row) {
+                    *e = match op {
+                        ReduceOp::Sum => *e + v,
+                        ReduceOp::Max => e.max(v),
+                        ReduceOp::Min => e.min(v),
+                        ReduceOp::Prod => *e * v,
+                    };
+                }
+            }
+            let inputs2 = inputs.clone();
+            let w = World::new(p, NetProfile::zero());
+            let out = w.run_unwrap(move |c| {
+                let mut v = inputs2[c.rank()].clone();
+                allreduce_with(&c, alg, op, &mut v)?;
+                Ok(v)
+            });
+            for (r, got) in out.iter().enumerate() {
+                for (a, b) in got.iter().zip(&expect) {
+                    if (a - b).abs() > 1e-9 * (1.0 + b.abs()) {
+                        return Err(format!(
+                            "rank {r} {alg:?} {op:?} p={p} n={n}: {a} != {b}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_chunk_range_partitions() {
+    run_prop("chunk_range partitions", Config { cases: 200, seed: 7 }, |rng, _| {
+        let n = rng.below(10_000);
+        let p = gen::usize_in(rng, 1, 128);
+        let mut prev = 0usize;
+        for i in 0..p {
+            let (s, e) = chunk_range(n, p, i);
+            if s != prev || e < s {
+                return Err(format!("n={n} p={p} i={i}: ({s},{e}) prev {prev}"));
+            }
+            prev = e;
+        }
+        if prev != n {
+            return Err(format!("n={n} p={p}: covered {prev}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_is_a_partition_of_the_epoch() {
+    run_prop("batcher partition", Config { cases: 60, seed: 23 }, |rng, case| {
+        let n = gen::usize_in(rng, 1, 400);
+        let dim = gen::usize_in(rng, 1, 8);
+        let batch = gen::usize_in(rng, 1, 64);
+        let x: Vec<f32> = (0..n * dim).map(|i| i as f32).collect();
+        let y: Vec<i32> = (0..n).map(|i| (i % 3) as i32).collect();
+        let d = Dataset::new("t", x, y, dim, 3).map_err(|e| e.to_string())?;
+        let mut shuffle_rng = Rng::new(case as u64);
+        let mut it = BatchIter::train(&d, batch, &mut shuffle_rng);
+        let mut seen = Vec::new();
+        let (mut xb, mut yb) = (vec![0f32; batch * dim], vec![0i32; batch]);
+        while let Some(real) = it.next_into(&mut xb, &mut yb) {
+            if real != batch {
+                return Err("train batches must be full".into());
+            }
+            for s in 0..real {
+                seen.push((xb[s * dim] / dim as f32) as usize);
+            }
+        }
+        if seen.len() != (n / batch) * batch {
+            return Err(format!("covered {} of {}", seen.len(), n));
+        }
+        seen.sort_unstable();
+        seen.dedup();
+        if seen.len() != (n / batch) * batch {
+            return Err("duplicate sample within an epoch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_parses_what_it_should_and_rejects_garbage() {
+    run_prop("json roundtrip-ish", Config { cases: 100, seed: 5 }, |rng, _| {
+        // generate a random nested value, print it, re-parse it
+        fn emit(rng: &mut Rng, depth: usize) -> String {
+            match if depth > 2 { rng.below(3) } else { rng.below(5) } {
+                0 => format!("{}", (rng.below(2_000_001) as i64) - 1_000_000),
+                1 => "true".into(),
+                2 => format!("\"s{}\"", rng.below(1000)),
+                3 => {
+                    let k = rng.below(4);
+                    let items: Vec<String> =
+                        (0..k).map(|_| emit(rng, depth + 1)).collect();
+                    format!("[{}]", items.join(","))
+                }
+                _ => {
+                    let k = rng.below(4);
+                    let items: Vec<String> = (0..k)
+                        .map(|i| format!("\"k{i}\":{}", emit(rng, depth + 1)))
+                        .collect();
+                    format!("{{{}}}", items.join(","))
+                }
+            }
+        }
+        let text = emit(rng, 0);
+        json::parse(&text).map_err(|e| format!("{text}: {e}"))?;
+        // structured corruption must fail
+        let corrupted = format!("{text}]");
+        if json::parse(&corrupted).is_ok() {
+            return Err(format!("accepted corrupted {corrupted}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_random_dags_schedule_and_execute() {
+    // Random DAGs of elementwise ops: topo order exists, session runs,
+    // and Identity chains preserve values exactly.
+    run_prop("dataflow random DAG", Config { cases: 40, seed: 77 }, |rng, _| {
+        let mut g = Graph::new();
+        let x = g.placeholder("x");
+        let mut pool = vec![x];
+        let n_ops = gen::usize_in(rng, 1, 25);
+        for _ in 0..n_ops {
+            let a = pool[rng.below(pool.len())];
+            let id = match rng.below(3) {
+                0 => g.add(Op::Relu, vec![a]),
+                1 => g.add(Op::Identity, vec![a]),
+                _ => {
+                    let b = pool[rng.below(pool.len())];
+                    g.add(Op::Add, vec![a, b])
+                }
+            };
+            pool.push(id);
+        }
+        let fetch = *pool.last().unwrap();
+        let order = g.topo_order().ok_or("cycle in acyclic construction")?;
+        if order.len() != g.nodes.len() {
+            return Err("incomplete order".into());
+        }
+        let mut sess = Session::new(g);
+        let out = sess
+            .run(
+                &[(x, Tensor::new(vec![2], vec![1.0, -1.0]).unwrap())],
+                &[fetch],
+            )
+            .map_err(|e| e.to_string())?;
+        if out[0].data.len() != 2 || !out[0].data.iter().all(|v| v.is_finite()) {
+            return Err(format!("bad output {:?}", out[0]));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_autodiff_matches_finite_differences_on_random_mlps() {
+    run_prop("autodiff vs finite diff", Config { cases: 15, seed: 31 }, |rng, _| {
+        let din = gen::usize_in(rng, 2, 5);
+        let dh = gen::usize_in(rng, 2, 6);
+        let dout = gen::usize_in(rng, 2, 4);
+        let batch = gen::usize_in(rng, 1, 6);
+
+        let mut g = Graph::new();
+        let x = g.placeholder("x");
+        let t = g.placeholder("t");
+        let w1 = g.variable(
+            "w1",
+            Tensor::new(vec![din, dh], gen::f32_vec(rng, din * dh, 0.4)).unwrap(),
+        );
+        let b1 = g.variable(
+            "b1",
+            Tensor::new(vec![dh], gen::f32_vec(rng, dh, 0.1)).unwrap(),
+        );
+        let w2 = g.variable(
+            "w2",
+            Tensor::new(vec![dh, dout], gen::f32_vec(rng, dh * dout, 0.4)).unwrap(),
+        );
+        let z1 = g.add(Op::MatMul, vec![x, w1]);
+        let a1 = g.add(Op::Add, vec![z1, b1]);
+        let h = g.add(Op::Sigmoid, vec![a1]);
+        let logits = g.add(Op::MatMul, vec![h, w2]);
+        let loss = g.add(Op::SoftmaxXent, vec![logits, t]);
+        let grads = gradients(&mut g, loss, &[w1]).map_err(|e| e.to_string())?;
+
+        let xs = Tensor::new(vec![batch, din], gen::f32_vec(rng, batch * din, 1.0)).unwrap();
+        let mut ts_data = vec![0f32; batch * dout];
+        for i in 0..batch {
+            ts_data[i * dout + rng.below(dout)] = 1.0;
+        }
+        let ts = Tensor::new(vec![batch, dout], ts_data).unwrap();
+
+        let mut sess = Session::new(g.clone());
+        sess.init_variables();
+        let dw = sess
+            .run(&[(x, xs.clone()), (t, ts.clone())], &[grads[0]])
+            .map_err(|e| e.to_string())?[0]
+            .clone();
+
+        // numeric probe at one random coordinate
+        let idx = rng.below(din * dh);
+        let eps = 1e-2f32;
+        let probe = |delta: f32| -> Result<f32, String> {
+            let mut s2 = Session::new(g.clone());
+            s2.init_variables();
+            let mut wv = s2.variable_value(w1).unwrap().clone();
+            wv.data[idx] += delta;
+            s2.set_variable(w1, wv);
+            Ok(s2
+                .run(&[(x, xs.clone()), (t, ts.clone())], &[loss])
+                .map_err(|e| e.to_string())?[0]
+                .data[0])
+        };
+        let numeric = (probe(eps)? - probe(-eps)?) / (2.0 * eps);
+        let got = dw.data[idx];
+        if (numeric - got).abs() > 5e-2 * (1.0 + numeric.abs()) {
+            return Err(format!(
+                "dW[{idx}] numeric {numeric} vs autodiff {got} (din={din} dh={dh} dout={dout})"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_clocks_monotone_under_more_traffic() {
+    // Sending strictly more bytes can never make virtual time go down.
+    run_prop("vtime monotonicity", Config { cases: 20, seed: 13 }, |rng, _| {
+        let n1 = gen::usize_in(rng, 1, 10_000);
+        let n2 = n1 + gen::usize_in(rng, 1, 10_000);
+        let time_for = |n: usize| {
+            let w = World::new(2, NetProfile::infiniband_fdr());
+            let clocks = w.run_unwrap(move |c| {
+                if c.rank() == 0 {
+                    c.send(1, 0, &vec![0f32; n])?;
+                } else {
+                    c.recv::<f32>(Some(0), 0)?;
+                }
+                Ok(c.clock())
+            });
+            clocks.into_iter().fold(0.0, f64::max)
+        };
+        if time_for(n2) < time_for(n1) {
+            return Err(format!("vtime decreased from n={n1} to n={n2}"));
+        }
+        Ok(())
+    });
+}
