@@ -65,7 +65,8 @@ fn main() {
     println!("{}", s.line());
 
     // steady-state allreduce: reuse one world across iterations (isolates
-    // the collective from thread spawn/join cost)
+    // the collective from thread spawn/join cost). Also reports buffer-
+    // pool traffic: after warmup every acquisition should be a hit.
     let w = World::new(8, NetProfile::zero());
     let out = w.run_unwrap(|c| {
         let mut v = vec![1.0f32; 178_110];
@@ -73,16 +74,31 @@ fn main() {
         for _ in 0..3 {
             allreduce_with(&c, AllreduceAlgorithm::Ring, ReduceOp::Sum, &mut v)?;
         }
+        // Barrier before snapshotting the *shared* pool counters: without
+        // it a fast rank reads misses_before while slow ranks are still
+        // warming their shelves.
+        barrier(&c)?;
+        let misses_before = c.pool().stats().misses;
         let iters = 50;
         let t0 = std::time::Instant::now();
         for _ in 0..iters {
             allreduce_with(&c, AllreduceAlgorithm::Ring, ReduceOp::Sum, &mut v)?;
         }
-        Ok(t0.elapsed().as_secs_f64() / iters as f64)
+        let per = t0.elapsed().as_secs_f64() / iters as f64;
+        barrier(&c)?; // all ranks quiescent before the final snapshot
+        Ok((per, c.pool().stats(), misses_before))
     });
-    let per = out.iter().cloned().fold(0.0, f64::max);
+    let per = out.iter().map(|o| o.0).fold(0.0, f64::max);
+    let (_, stats, misses_before) = out[0];
     println!(
         "{:<44} {:>10.3} ms   (steady-state, world reused, p=8 n=178k)",
         "allreduce/steady/Ring/p8/n178k", per * 1e3
+    );
+    println!(
+        "  buffer pool: {} hits / {} misses total ({} misses after warmup), {} recycled",
+        stats.hits,
+        stats.misses,
+        stats.misses - misses_before,
+        stats.recycled
     );
 }

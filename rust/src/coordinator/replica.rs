@@ -61,6 +61,12 @@ pub struct Replica {
     /// Reusable buffers — zero allocation inside the epoch loop.
     pub x_buf: Vec<f32>,
     pub y_buf: Vec<i32>,
+    /// Persistent gradient-averaging scratch. Starts empty and is grown
+    /// to `n_params` by `sync_replica` on the first gradient-average sync
+    /// (weight-average and no-sync runs never pay for it); after that
+    /// one-time growth the sync path is allocation-free — `sync_replica`
+    /// borrows it via `mem::take` and puts it back.
+    pub sync_scratch: Vec<f32>,
     lr_buf: [f32; 1],
     grad_flat: Vec<f32>,
 }
@@ -95,6 +101,7 @@ impl Replica {
         Ok(Replica {
             x_buf: vec![0.0; batch * spec.in_dim],
             y_buf: vec![0; batch],
+            sync_scratch: Vec::new(),
             lr_buf: [lr],
             grad_flat: vec![0.0; n],
             params,
@@ -111,6 +118,12 @@ impl Replica {
 
     pub fn grad_flat(&self) -> &[f32] {
         &self.grad_flat
+    }
+
+    /// Apply this rank's own (lr-prescaled) gradients to the parameters —
+    /// the no-communication half of gradient mode. Allocation-free.
+    pub fn apply_local_grads(&mut self) {
+        self.params.sub_assign(&self.grad_flat);
     }
 
     pub fn set_lr(&mut self, lr: f32) {

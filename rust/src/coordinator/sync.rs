@@ -6,6 +6,13 @@
 //! (lr-prescaled) gradient vector and applies it. Both are a *single*
 //! allreduce of `n_params` floats — the communication volume the paper's
 //! performance model calls `n² · l`.
+//!
+//! Hot-path contract: with `SyncEvery::Step`, this function performs
+//! **zero heap allocations** after warmup. Gradient mode borrows the
+//! replica's persistent `sync_scratch` (sized once at construction) via
+//! `mem::take`, and the allreduce underneath runs on the pooled
+//! `recv_into` transport. `tests/alloc_free_sync.rs` asserts this with a
+//! counting allocator.
 
 use super::config::SyncMode;
 use super::replica::{Replica, StepOutcome};
@@ -26,8 +33,7 @@ pub fn sync_replica(
     if comm.size() == 1 || mode == SyncMode::None {
         // Gradient mode still has to apply its own local gradient.
         if let (SyncMode::GradientAverage, StepOutcome::Grads { .. }) = (mode, outcome) {
-            let g = replica.grad_flat().to_vec();
-            replica.params.sub_assign(&g);
+            replica.apply_local_grads();
         }
         return Ok(0);
     }
@@ -40,15 +46,26 @@ pub fn sync_replica(
         }
         SyncMode::GradientAverage => {
             // Average gradients, then every rank applies the same update —
-            // replicas stay bitwise identical without a second pass.
+            // replicas stay bitwise identical without a second pass. The
+            // scratch is the replica's persistent buffer: taken, used,
+            // and put back (even on error, so ULFM recovery can retry).
             let n = replica.grad_flat().len();
-            let mut g = vec![0.0f32; n];
+            let mut g = std::mem::take(&mut replica.sync_scratch);
+            if g.len() != n {
+                // First gradient sync: grow the lazily-allocated scratch
+                // once; every later step reuses it.
+                g.resize(n, 0.0);
+            }
             g.copy_from_slice(replica.grad_flat());
-            allreduce_with(comm, alg, ReduceOp::Sum, &mut g)?;
+            if let Err(e) = allreduce_with(comm, alg, ReduceOp::Sum, &mut g) {
+                replica.sync_scratch = g;
+                return Err(e);
+            }
             for v in g.iter_mut() {
                 *v /= p;
             }
             replica.params.sub_assign(&g);
+            replica.sync_scratch = g;
             Ok(n * 4)
         }
         SyncMode::None => unreachable!(),

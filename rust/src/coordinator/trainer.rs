@@ -181,10 +181,9 @@ fn run_epoch(
             }
             SyncEvery::Epoch => {
                 // No communication inside the epoch; gradient mode still
-                // applies its *local* update.
+                // applies its *local* update (allocation-free).
                 if let super::replica::StepOutcome::Grads { .. } = outcome {
-                    let g = replica.grad_flat().to_vec();
-                    replica.params.sub_assign(&g);
+                    replica.apply_local_grads();
                 }
             }
         }

@@ -11,13 +11,20 @@
 //! model, which the receiving rank folds into its own virtual clock — this
 //! is what lets cluster-scale collectives be simulated faithfully on one
 //! machine (DESIGN.md §3).
+//!
+//! Envelopes also carry a handle to their group's [`BufferPool`]: when a
+//! receiver consumes a message through `recv_into` (copying the payload
+//! into caller scratch), dropping the envelope returns its storage to the
+//! pool — the transport's allocation loop is closed and the steady-state
+//! hot path stops touching the system allocator.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use super::datatype::Buffer;
 use super::error::{MpiError, MpiResult};
+use super::pool::BufferPool;
 
 /// Message tag. User tags use the low 24 bits; collective-internal tags set
 /// the high bit (see `collectives::coll_tag`).
@@ -26,8 +33,10 @@ pub type Tag = u32;
 /// Wildcard for `recv` source matching (MPI_ANY_SOURCE).
 pub const ANY_SOURCE: Option<usize> = None;
 
-/// One in-flight message.
-#[derive(Debug, Clone)]
+/// One in-flight message. Owns its payload storage; if constructed with a
+/// pool handle, the storage is recycled when the envelope is dropped
+/// without the payload having been taken.
+#[derive(Debug)]
 pub struct Envelope {
     /// Sender's rank *within the communicator this message belongs to*.
     pub src: usize,
@@ -35,7 +44,58 @@ pub struct Envelope {
     /// Virtual time at which the message is fully received under the
     /// alpha-beta model (sender clock + overhead + alpha + bytes/beta).
     pub arrival_vtime: f64,
-    pub buf: Buffer,
+    buf: Option<Buffer>,
+    pool: Option<Arc<BufferPool>>,
+}
+
+impl Envelope {
+    /// Envelope whose storage goes back to the system allocator on drop.
+    pub fn new(src: usize, tag: Tag, arrival_vtime: f64, buf: Buffer) -> Envelope {
+        Envelope {
+            src,
+            tag,
+            arrival_vtime,
+            buf: Some(buf),
+            pool: None,
+        }
+    }
+
+    /// Envelope whose storage returns to `pool` on drop (the transport's
+    /// normal construction — see `Communicator::send_buffer`).
+    pub fn pooled(
+        src: usize,
+        tag: Tag,
+        arrival_vtime: f64,
+        buf: Buffer,
+        pool: Arc<BufferPool>,
+    ) -> Envelope {
+        Envelope {
+            src,
+            tag,
+            arrival_vtime,
+            buf: Some(buf),
+            pool: Some(pool),
+        }
+    }
+
+    /// Borrow the payload (the `recv_into` copy-out path).
+    pub fn buf(&self) -> &Buffer {
+        self.buf.as_ref().expect("envelope payload already taken")
+    }
+
+    /// Take ownership of the payload (the `recv::<T>() -> Vec<T>` path).
+    /// The storage then belongs to the caller and is *not* recycled.
+    pub fn take_buffer(mut self) -> Buffer {
+        self.buf.take().expect("envelope payload already taken")
+    }
+}
+
+impl Drop for Envelope {
+    fn drop(&mut self) {
+        if let (Some(buf), Some(pool)) = (self.buf.take(), self.pool.as_ref()) {
+            pool.release(buf);
+        }
+    }
 }
 
 #[derive(Debug, Default)]
@@ -45,6 +105,11 @@ struct Inner {
 }
 
 /// A rank's incoming message queue with condvar-based blocking matching.
+///
+/// Consumer discipline: a mailbox has exactly **one** consumer — the rank
+/// thread that owns it. Senders only `push` (append); only the owner
+/// removes. `recv_match` exploits this to keep a scan cursor across
+/// probes (see below).
 #[derive(Debug, Default)]
 pub struct Mailbox {
     inner: Mutex<Inner>,
@@ -86,16 +151,41 @@ impl Mailbox {
             .any(|e| src.map_or(true, |s| e.src == s) && tag.map_or(true, |t| e.tag == t))
     }
 
+    /// Scan `queue[*scanned..]` for a match, advancing the cursor past
+    /// non-matching envelopes so they are never examined twice by this
+    /// receive. Sound because of the single-consumer discipline: while a
+    /// receive waits, other threads only *append* to the queue, so indices
+    /// `< *scanned` can neither change nor start matching.
+    fn scan(
+        queue: &VecDeque<Envelope>,
+        scanned: &mut usize,
+        matches: impl Fn(&Envelope) -> bool,
+    ) -> Option<usize> {
+        while *scanned < queue.len() {
+            if matches(&queue[*scanned]) {
+                return Some(*scanned);
+            }
+            *scanned += 1;
+        }
+        None
+    }
+
     /// Blocking matched receive.
     ///
     /// `should_abort` is polled while waiting; returning `Some(err)` aborts
     /// the receive (used for ULFM failure/revocation detection: a receive
     /// posted against a dead peer must not hang forever).
     ///
-    /// Hot-path note (§Perf): collectives alternate send/recv between
-    /// neighbouring rank threads at sub-100µs cadence, where a condvar
-    /// park+unpark per hop dominates. We therefore spin briefly (dropping
-    /// the lock between probes) before parking — a classic adaptive mutex.
+    /// Hot-path notes (§Perf):
+    /// * Collectives alternate send/recv between neighbouring rank threads
+    ///   at sub-100µs cadence, where a condvar park+unpark per hop
+    ///   dominates. We therefore spin briefly (dropping the lock between
+    ///   probes) before parking — a classic adaptive mutex.
+    /// * A heavily loaded mailbox (e.g. a root draining a linear gather
+    ///   while unrelated tags queue up) used to rescan every non-matching
+    ///   envelope on every spin probe — O(queue) per probe. The call keeps
+    ///   a cursor over the already-rejected prefix instead, so each queued
+    ///   envelope is examined at most once per receive.
     pub fn recv_match(
         &self,
         src: Option<usize>,
@@ -105,11 +195,15 @@ impl Mailbox {
         let matches = |e: &Envelope| {
             src.map_or(true, |s| e.src == s) && tag.map_or(true, |t| e.tag == t)
         };
+        // Cursor: index of the first envelope not yet examined by *this*
+        // receive. Local to the call — a later receive may match what this
+        // one rejected.
+        let mut scanned = 0usize;
         // Phase 1: bounded spin. Each probe takes the lock only briefly.
         for _ in 0..SPIN_PROBES {
             {
                 let mut g = self.inner.lock().unwrap();
-                if let Some(pos) = g.queue.iter().position(&matches) {
+                if let Some(pos) = Self::scan(&g.queue, &mut scanned, &matches) {
                     return Ok(g.queue.remove(pos).expect("position just found"));
                 }
                 if g.closed {
@@ -122,7 +216,7 @@ impl Mailbox {
         // Phase 2: park on the condvar (with abort polling).
         let mut g = self.inner.lock().unwrap();
         loop {
-            if let Some(pos) = g.queue.iter().position(&matches) {
+            if let Some(pos) = Self::scan(&g.queue, &mut scanned, &matches) {
                 return Ok(g.queue.remove(pos).expect("position just found"));
             }
             if g.closed {
@@ -151,12 +245,7 @@ mod tests {
     use super::*;
 
     fn env(src: usize, tag: Tag, vals: Vec<f32>) -> Envelope {
-        Envelope {
-            src,
-            tag,
-            arrival_vtime: 0.0,
-            buf: Buffer::F32(vals),
-        }
+        Envelope::new(src, tag, 0.0, Buffer::F32(vals))
     }
 
     #[test]
@@ -166,8 +255,8 @@ mod tests {
         mb.push(env(0, 7, vec![2.0]));
         let a = mb.recv_match(Some(0), Some(7), || None).unwrap();
         let b = mb.recv_match(Some(0), Some(7), || None).unwrap();
-        assert_eq!(a.buf, Buffer::F32(vec![1.0]));
-        assert_eq!(b.buf, Buffer::F32(vec![2.0]));
+        assert_eq!(a.take_buffer(), Buffer::F32(vec![1.0]));
+        assert_eq!(b.take_buffer(), Buffer::F32(vec![2.0]));
     }
 
     #[test]
@@ -176,7 +265,7 @@ mod tests {
         mb.push(env(0, 1, vec![1.0]));
         mb.push(env(0, 2, vec![2.0]));
         let b = mb.recv_match(Some(0), Some(2), || None).unwrap();
-        assert_eq!(b.buf, Buffer::F32(vec![2.0]));
+        assert_eq!(b.take_buffer(), Buffer::F32(vec![2.0]));
         assert_eq!(mb.len(), 1);
     }
 
@@ -220,6 +309,45 @@ mod tests {
         let t = std::thread::spawn(move || mb2.recv_match(Some(1), Some(4), || None).unwrap());
         std::thread::sleep(Duration::from_millis(5));
         mb.push(env(1, 4, vec![42.0]));
-        assert_eq!(t.join().unwrap().buf, Buffer::F32(vec![42.0]));
+        assert_eq!(t.join().unwrap().take_buffer(), Buffer::F32(vec![42.0]));
+    }
+
+    #[test]
+    fn cursor_skips_rejected_prefix_but_later_receives_see_it() {
+        // Fill with non-matching envelopes, then a match at the tail; a
+        // second receive must still find the earlier envelopes.
+        let mb = Mailbox::new();
+        for i in 0..10 {
+            mb.push(env(0, 1, vec![i as f32]));
+        }
+        mb.push(env(0, 2, vec![99.0]));
+        let hit = mb.recv_match(Some(0), Some(2), || None).unwrap();
+        assert_eq!(hit.take_buffer(), Buffer::F32(vec![99.0]));
+        let first = mb.recv_match(Some(0), Some(1), || None).unwrap();
+        assert_eq!(first.take_buffer(), Buffer::F32(vec![0.0]));
+        assert_eq!(mb.len(), 9);
+    }
+
+    #[test]
+    fn pooled_envelope_recycles_on_drop() {
+        let pool = Arc::new(BufferPool::new());
+        let e = Envelope::pooled(0, 1, 0.0, Buffer::F32(vec![1.0; 50]), pool.clone());
+        assert_eq!(e.buf().len(), 50);
+        drop(e);
+        assert_eq!(pool.stats().recycled, 1);
+        // The recycled storage (capacity 50, shelf ⌊log₂50⌋=5) is served
+        // back out to a shelf-5 request (n=32).
+        let v = pool.acquire::<f32>(32);
+        assert!(v.capacity() >= 32);
+        assert_eq!(pool.stats().hits, 1);
+    }
+
+    #[test]
+    fn taken_payload_is_not_recycled() {
+        let pool = Arc::new(BufferPool::new());
+        let e = Envelope::pooled(0, 1, 0.0, Buffer::F32(vec![1.0; 8]), pool.clone());
+        let owned = e.take_buffer();
+        assert_eq!(owned.len(), 8);
+        assert_eq!(pool.stats().recycled, 0);
     }
 }

@@ -3,7 +3,7 @@
 
 use crate::mpi::comm::{CollKind, Communicator};
 use crate::mpi::datatype::Datatype;
-use crate::mpi::error::MpiResult;
+use crate::mpi::error::{MpiError, MpiResult};
 
 /// Every rank contributes `data`; every rank receives all contributions,
 /// indexed by source rank (sizes may differ — MPI's `Allgatherv`).
@@ -35,6 +35,51 @@ pub fn allgather_vecs<T: Datatype>(comm: &Communicator, data: &[T]) -> MpiResult
     Ok(allgather(comm, data)?.concat())
 }
 
+/// Allocation-free ring allgather of *equal-size* contributions into a
+/// pre-sized flat buffer: rank `r`'s `data` lands at
+/// `out[r*n .. (r+1)*n]` where `n = data.len()` and `out.len() == p * n`.
+/// Forwarded chunks are sent straight out of `out` and received straight
+/// into it — the pooled transport is the only intermediary.
+pub fn allgather_into<T: Datatype>(
+    comm: &Communicator,
+    data: &[T],
+    out: &mut [T],
+) -> MpiResult<()> {
+    let p = comm.size();
+    let me = comm.rank();
+    let n = data.len();
+    if out.len() != p * n {
+        return Err(MpiError::CountMismatch {
+            expected: p * n,
+            got: out.len(),
+        });
+    }
+    let tag = comm.next_coll_tag(CollKind::Allgather);
+    out[me * n..(me + 1) * n].copy_from_slice(data);
+    if p == 1 {
+        return Ok(());
+    }
+    let right = (me + 1) % p;
+    let left = (me + p - 1) % p;
+    for s in 0..p - 1 {
+        let fwd = (me + p - s) % p;
+        let incoming = (me + p - s - 1) % p;
+        // Send before receive: the buffered send cannot block, and doing
+        // them sequentially lets both sides borrow disjoint slices of
+        // `out` without aliasing.
+        comm.send(right, tag, &out[fwd * n..(fwd + 1) * n])?;
+        let (cnt, _) =
+            comm.recv_into(Some(left), tag, &mut out[incoming * n..(incoming + 1) * n])?;
+        if cnt != n {
+            return Err(MpiError::CountMismatch {
+                expected: n,
+                got: cnt,
+            });
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -55,6 +100,36 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn allgather_into_flat_equal_chunks() {
+        for p in [1usize, 2, 3, 6, 8] {
+            let w = World::new(p, NetProfile::zero());
+            let out = w.run_unwrap(move |c| {
+                let data = [(c.rank() * 10) as f32, (c.rank() * 10 + 1) as f32];
+                let mut flat = vec![0.0f32; 2 * p];
+                allgather_into(&c, &data, &mut flat)?;
+                Ok(flat)
+            });
+            for flat in out {
+                for r in 0..p {
+                    assert_eq!(flat[2 * r], (r * 10) as f32, "p={p}");
+                    assert_eq!(flat[2 * r + 1], (r * 10 + 1) as f32, "p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_into_validates_output_size() {
+        let w = World::new(2, NetProfile::zero());
+        let res = w.run(|c| {
+            let mut flat = vec![0.0f32; 3]; // wrong: needs 2 * 2
+            allgather_into(&c, &[1.0f32, 2.0], &mut flat)?;
+            Ok(())
+        });
+        assert!(res.iter().all(|r| r.is_err()));
     }
 
     #[test]

@@ -15,11 +15,20 @@
 //! * **Tree** (binomial reduce + binomial bcast) — the baseline MPI
 //!   implementations used before the smarter algorithms; kept as an
 //!   ablation arm for the figures.
+//!
+//! All three run the *allocation-free* protocol: one pooled scratch buffer
+//! per call, `sendrecv_into`/`recv_into` exchanges that copy payloads
+//! straight into that scratch, and pooled sends — after the first step of
+//! a training run, an allreduce performs zero heap allocations
+//! (`tests/alloc_free_sync.rs` asserts this with a counting allocator, and
+//! `tests/collectives_parity.rs` pins the results bitwise to the old
+//! allocating implementation).
 
 use crate::mpi::comm::{CollKind, Communicator};
 use crate::mpi::datatype::{reduce_in_place, Reducible, ReduceOp};
-use crate::mpi::error::MpiResult;
+use crate::mpi::error::{MpiError, MpiResult};
 
+use super::bcast::bcast_into;
 use super::chunk_range;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -103,9 +112,13 @@ fn recursive_doubling<T: Reducible>(
 ) -> MpiResult<()> {
     let p = comm.size();
     let me = comm.rank();
+    let n = data.len();
     let tag = comm.next_coll_tag(CollKind::Allreduce);
     let pof2 = p.next_power_of_two() >> usize::from(!p.is_power_of_two());
     let rem = p - pof2;
+    // One full-vector scratch for the whole call; the RAII guard returns
+    // it to the pool on every exit path (including `?` on peer failure).
+    let mut scratch = comm.pool().scratch::<T>(n);
 
     // Pre-phase: the first 2*rem ranks pair up; evens push their vector to
     // the odd neighbour and sit out of the core exchange.
@@ -114,8 +127,8 @@ fn recursive_doubling<T: Reducible>(
             comm.send(me + 1, tag, data)?;
             -1
         } else {
-            let (v, _) = comm.recv::<T>(Some(me - 1), tag)?;
-            reduce_in_place(op, data, &v)?;
+            let (cnt, _) = comm.recv_into(Some(me - 1), tag, &mut scratch)?;
+            reduce_in_place(op, data, &scratch[..cnt])?;
             (me / 2) as isize
         }
     } else {
@@ -128,9 +141,8 @@ fn recursive_doubling<T: Reducible>(
         while mask < pof2 {
             let peer_nr = nr ^ mask;
             let peer = if peer_nr < rem { peer_nr * 2 + 1 } else { peer_nr + rem };
-            comm.send(peer, tag, data)?;
-            let (v, _) = comm.recv::<T>(Some(peer), tag)?;
-            reduce_in_place(op, data, &v)?;
+            let cnt = comm.sendrecv_into(peer, tag, data, peer, tag, &mut scratch)?;
+            reduce_in_place(op, data, &scratch[..cnt])?;
             mask <<= 1;
         }
     }
@@ -140,8 +152,14 @@ fn recursive_doubling<T: Reducible>(
         if me % 2 == 1 {
             comm.send(me - 1, tag, data)?;
         } else {
-            let (v, _) = comm.recv::<T>(Some(me + 1), tag)?;
-            data.copy_from_slice(&v);
+            let (cnt, _) = comm.recv_into(Some(me + 1), tag, &mut scratch)?;
+            if cnt != n {
+                return Err(MpiError::CountMismatch {
+                    expected: n,
+                    got: cnt,
+                });
+            }
+            data.copy_from_slice(&scratch);
         }
     }
     Ok(())
@@ -156,6 +174,11 @@ fn ring<T: Reducible>(comm: &Communicator, op: ReduceOp, data: &mut [T]) -> MpiR
     let tag = comm.next_coll_tag(CollKind::Allreduce);
     let right = (me + 1) % p;
     let left = (me + p - 1) % p;
+    // Chunk 0 is the largest (chunk_range gives the remainder to the first
+    // chunks), so one chunk-0-sized scratch serves every step; the RAII
+    // guard recycles it on every exit path.
+    let (c0s, c0e) = chunk_range(n, p, 0);
+    let mut scratch = comm.pool().scratch::<T>(c0e - c0s);
 
     // Phase 1 — reduce-scatter: after p-1 steps rank r owns the fully
     // reduced chunk (r+1) mod p.
@@ -163,32 +186,66 @@ fn ring<T: Reducible>(comm: &Communicator, op: ReduceOp, data: &mut [T]) -> MpiR
         let send_chunk = (me + p - s) % p;
         let recv_chunk = (me + p - s - 1) % p;
         let (ss, se) = chunk_range(n, p, send_chunk);
-        comm.send(right, tag, &data[ss..se])?;
-        let (v, _) = comm.recv::<T>(Some(left), tag)?;
         let (rs, re) = chunk_range(n, p, recv_chunk);
-        reduce_in_place(op, &mut data[rs..re], &v)?;
+        let want = re - rs;
+        let cnt =
+            comm.sendrecv_into(right, tag, &data[ss..se], left, tag, &mut scratch[..want])?;
+        reduce_in_place(op, &mut data[rs..re], &scratch[..cnt])?;
     }
     // Phase 2 — ring allgather of the reduced chunks.
     for s in 0..p - 1 {
         let send_chunk = (me + 1 + p - s) % p;
         let recv_chunk = (me + p - s) % p;
         let (ss, se) = chunk_range(n, p, send_chunk);
-        comm.send(right, tag, &data[ss..se])?;
-        let (v, _) = comm.recv::<T>(Some(left), tag)?;
         let (rs, re) = chunk_range(n, p, recv_chunk);
-        data[rs..re].copy_from_slice(&v);
+        let want = re - rs;
+        let cnt =
+            comm.sendrecv_into(right, tag, &data[ss..se], left, tag, &mut scratch[..want])?;
+        if cnt != want {
+            return Err(MpiError::CountMismatch {
+                expected: want,
+                got: cnt,
+            });
+        }
+        data[rs..re].copy_from_slice(&scratch[..cnt]);
     }
     Ok(())
 }
 
 // ---------------------------------------------------------------------------
 
+/// Binomial reduce to rank 0 *in place* + binomial broadcast back — no
+/// intermediate `Vec`s (the old implementation routed through `reduce` +
+/// `bcast`, allocating the accumulator and the broadcast payload on every
+/// rank, and non-root ranks round-tripped through an empty placeholder
+/// vector).
 fn tree<T: Reducible>(comm: &Communicator, op: ReduceOp, data: &mut [T]) -> MpiResult<()> {
-    let reduced = super::reduce(comm, op, 0, data)?;
-    let mut v = reduced.unwrap_or_default();
-    super::bcast(comm, 0, &mut v)?;
-    data.copy_from_slice(&v);
-    Ok(())
+    let p = comm.size();
+    let me = comm.rank();
+    let tag = comm.next_coll_tag(CollKind::Allreduce);
+    {
+        // Lazy: leaf ranks (≈ half of them) send and retire without ever
+        // receiving, so they skip the scratch acquire + zero-fill.
+        let mut scratch: Option<crate::mpi::pool::PooledScratch<'_, T>> = None;
+        let mut mask = 1usize;
+        while mask < p {
+            if me & mask != 0 {
+                // Fold our partial into the parent and retire.
+                comm.send(me - mask, tag, data)?;
+                break;
+            }
+            if me + mask < p {
+                let s =
+                    scratch.get_or_insert_with(|| comm.pool().scratch::<T>(data.len()));
+                let (cnt, _) = comm.recv_into(Some(me + mask), tag, s)?;
+                reduce_in_place(op, data, &s[..cnt])?;
+            }
+            mask <<= 1;
+        }
+    } // scratch back to the pool before the broadcast runs
+    // Every rank (root and retired non-roots alike) re-enters here with a
+    // full-length `data`, so the broadcast is a pure in-place fill.
+    bcast_into(comm, 0, data)
 }
 
 #[cfg(test)]
@@ -241,6 +298,73 @@ mod tests {
                 assert_eq!(pr, 64.0, "{alg:?}");
             }
         }
+    }
+
+    /// Satellite audit (ISSUE 1): every rank — root *and* the non-root
+    /// ranks that retire early from the binomial reduce — must end the
+    /// tree allreduce holding the full reduced vector, for every dtype.
+    #[test]
+    fn tree_all_ranks_get_full_vector_every_dtype() {
+        for p in [2usize, 3, 5, 8] {
+            let n = 17;
+            let w = World::new(p, NetProfile::zero());
+            let out = w.run_unwrap(move |c| {
+                let r = c.rank();
+                let mut vf32: Vec<f32> = (0..n).map(|i| (r * n + i) as f32).collect();
+                allreduce_with(&c, AllreduceAlgorithm::Tree, ReduceOp::Sum, &mut vf32)?;
+                let mut vf64: Vec<f64> = (0..n).map(|i| (r * n + i) as f64).collect();
+                allreduce_with(&c, AllreduceAlgorithm::Tree, ReduceOp::Sum, &mut vf64)?;
+                let mut vi32: Vec<i32> = (0..n).map(|i| (r * n + i) as i32).collect();
+                allreduce_with(&c, AllreduceAlgorithm::Tree, ReduceOp::Sum, &mut vi32)?;
+                let mut vu64: Vec<u64> = (0..n).map(|i| (r * n + i) as u64).collect();
+                allreduce_with(&c, AllreduceAlgorithm::Tree, ReduceOp::Max, &mut vu64)?;
+                Ok((vf32, vf64, vi32, vu64))
+            });
+            for (rank, (vf32, vf64, vi32, vu64)) in out.iter().enumerate() {
+                for i in 0..n {
+                    let sum: usize = (0..p).map(|r| r * n + i).sum();
+                    assert_eq!(vf32[i], sum as f32, "f32 p={p} rank={rank} i={i}");
+                    assert_eq!(vf64[i], sum as f64, "f64 p={p} rank={rank} i={i}");
+                    assert_eq!(vi32[i], sum as i32, "i32 p={p} rank={rank} i={i}");
+                    let mx: usize = (p - 1) * n + i;
+                    assert_eq!(vu64[i], mx as u64, "u64 p={p} rank={rank} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn steady_state_allreduce_is_pool_served() {
+        // With shelves stocked beyond the protocols' peak concurrent
+        // demand, every acquisition must be a pool hit — no interleaving
+        // can produce a miss (see BufferPool::preload).
+        let p = 4usize;
+        let n = 1000usize;
+        let w = World::new(p, NetProfile::zero());
+        let misses = w.run_unwrap(move |c| {
+            if c.rank() == 0 {
+                let pool = c.pool();
+                pool.preload::<f32>(32, n); // rd/tree full vectors + scratch
+                pool.preload::<f32>(32, n / p + 1); // ring chunks + scratch
+                pool.preload::<i32>(32, 1); // barrier payloads
+            }
+            super::super::barrier(&c)?;
+            let mut v = vec![1.0f32; n];
+            let before = c.pool().stats().misses;
+            for _ in 0..10 {
+                allreduce_with(&c, AllreduceAlgorithm::Ring, ReduceOp::Sum, &mut v)?;
+                allreduce_with(
+                    &c,
+                    AllreduceAlgorithm::RecursiveDoubling,
+                    ReduceOp::Sum,
+                    &mut v,
+                )?;
+                allreduce_with(&c, AllreduceAlgorithm::Tree, ReduceOp::Sum, &mut v)?;
+            }
+            super::super::barrier(&c)?;
+            Ok(c.pool().stats().misses - before)
+        });
+        assert!(misses.iter().all(|&m| m == 0), "{misses:?}");
     }
 
     #[test]

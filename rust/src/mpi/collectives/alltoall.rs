@@ -1,5 +1,11 @@
 //! Pairwise-exchange all-to-all: `p-1` rounds, round `i` trading with
 //! `(rank + i) mod p` / `(rank - i) mod p`.
+//!
+//! Already zero-copy end to end: outgoing chunks are *moved* into the
+//! transport (`send_vec`, no clone) and incoming vectors take ownership of
+//! the sender's storage. The Vec-of-Vecs signature is the API's — callers
+//! that need a flat, pooled exchange compose `allgather_into`/`recv_into`
+//! directly.
 
 use crate::mpi::comm::{CollKind, Communicator};
 use crate::mpi::datatype::Datatype;

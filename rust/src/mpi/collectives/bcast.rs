@@ -3,10 +3,14 @@
 
 use crate::mpi::comm::{CollKind, Communicator};
 use crate::mpi::datatype::Datatype;
-use crate::mpi::error::MpiResult;
+use crate::mpi::error::{MpiError, MpiResult};
 
 /// Broadcast `data` from `root` to all ranks. Non-root vectors are
 /// replaced; pre-sizing is not required (the transport carries lengths).
+///
+/// Hot paths with known sizes should use [`bcast_into`], which receives
+/// directly into the caller's buffer and keeps the message storage cycling
+/// through the group pool.
 pub fn bcast<T: Datatype>(
     comm: &Communicator,
     root: usize,
@@ -32,6 +36,49 @@ pub fn bcast<T: Datatype>(
         mask <<= 1;
     }
     // Send phase: forward to sub-tree children below our entry round.
+    mask >>= 1;
+    while mask > 0 {
+        if vrank + mask < p {
+            let dst = (me + mask) % p;
+            comm.send(dst, tag, data)?;
+        }
+        mask >>= 1;
+    }
+    Ok(())
+}
+
+/// Allocation-free binomial broadcast into a pre-sized slice: every rank
+/// supplies a buffer of the same length; payloads are copied straight into
+/// it and the envelope storage returns to the pool. Used by the in-place
+/// tree allreduce on the training hot path.
+pub fn bcast_into<T: Datatype>(
+    comm: &Communicator,
+    root: usize,
+    data: &mut [T],
+) -> MpiResult<()> {
+    let p = comm.size();
+    let tag = comm.next_coll_tag(CollKind::Bcast);
+    if p == 1 {
+        return Ok(());
+    }
+    let me = comm.rank();
+    let vrank = (me + p - root) % p;
+
+    let mut mask = 1usize;
+    while mask < p {
+        if vrank & mask != 0 {
+            let src = (me + p - mask) % p;
+            let (cnt, _) = comm.recv_into(Some(src), tag, data)?;
+            if cnt != data.len() {
+                return Err(MpiError::CountMismatch {
+                    expected: data.len(),
+                    got: cnt,
+                });
+            }
+            break;
+        }
+        mask <<= 1;
+    }
     mask >>= 1;
     while mask > 0 {
         if vrank + mask < p {
@@ -85,6 +132,30 @@ mod tests {
         // 5 tree levels; allow some pipelining slack, but far below 31 hops.
         assert!(max <= 7.0 * hop, "max={max} hop={hop}");
         assert!(max >= 4.0 * hop, "max={max} hop={hop}");
+    }
+
+    #[test]
+    fn bcast_into_matches_bcast_from_every_root() {
+        for p in [2usize, 3, 5, 8] {
+            for root in 0..p {
+                let w = World::new(p, NetProfile::zero());
+                let out = w.run_unwrap(move |c| {
+                    let mut v = vec![-1.0f32; 9];
+                    if c.rank() == root {
+                        for (i, x) in v.iter_mut().enumerate() {
+                            *x = (root * 100 + i) as f32;
+                        }
+                    }
+                    bcast_into(&c, root, &mut v)?;
+                    Ok(v)
+                });
+                let expect: Vec<f32> =
+                    (0..9).map(|i| (root * 100 + i) as f32).collect();
+                for v in out {
+                    assert_eq!(v, expect, "p={p} root={root}");
+                }
+            }
+        }
     }
 
     #[test]

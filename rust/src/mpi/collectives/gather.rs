@@ -21,7 +21,7 @@ pub fn gather_vecs<T: Datatype>(
         for _ in 0..p - 1 {
             let env = comm.recv_envelope(None, Some(tag))?;
             let src = env.src;
-            out[src] = T::from_buffer(env.buf)?;
+            out[src] = T::from_buffer(env.take_buffer())?;
         }
         Ok(Some(out))
     } else {

@@ -11,6 +11,14 @@
 //! in the same order — the trainer is bulk-synchronous, so this holds by
 //! construction. Internal tags are drawn from the communicator's collective
 //! sequence space and never collide with user tags.
+//!
+//! Allocation discipline: every collective draws at most one reusable
+//! scratch buffer from the group's [`BufferPool`](crate::mpi::BufferPool)
+//! and exchanges payloads through `recv_into`/`sendrecv_into`, so the
+//! steady-state training loop (one allreduce per step) never touches the
+//! system allocator. The `_into` variants (`bcast_into`,
+//! `allgather_into`) extend the same discipline to callers with pre-sized
+//! buffers.
 
 mod allgather;
 mod allreduce;
@@ -21,11 +29,11 @@ mod gather;
 mod reduce;
 mod scatter;
 
-pub use allgather::{allgather, allgather_vecs};
+pub use allgather::{allgather, allgather_into, allgather_vecs};
 pub use allreduce::{allreduce, allreduce_with, AllreduceAlgorithm};
 pub use alltoall::alltoall;
 pub use barrier::barrier;
-pub use bcast::bcast;
+pub use bcast::{bcast, bcast_into};
 pub use gather::{gather, gather_vecs};
 pub use reduce::reduce;
 pub use scatter::{scatter_even, scatterv};
@@ -38,6 +46,8 @@ use super::error::MpiResult;
 pub trait CollectiveExt {
     fn barrier(&self) -> MpiResult<()>;
     fn bcast<T: Datatype>(&self, root: usize, data: &mut Vec<T>) -> MpiResult<()>;
+    fn bcast_into<T: Datatype>(&self, root: usize, data: &mut [T]) -> MpiResult<()>;
+    fn allgather_into<T: Datatype>(&self, data: &[T], out: &mut [T]) -> MpiResult<()>;
     fn reduce<T: Reducible>(
         &self,
         op: ReduceOp,
@@ -69,6 +79,12 @@ impl CollectiveExt for Communicator {
     }
     fn bcast<T: Datatype>(&self, root: usize, data: &mut Vec<T>) -> MpiResult<()> {
         bcast(self, root, data)
+    }
+    fn bcast_into<T: Datatype>(&self, root: usize, data: &mut [T]) -> MpiResult<()> {
+        bcast_into(self, root, data)
+    }
+    fn allgather_into<T: Datatype>(&self, data: &[T], out: &mut [T]) -> MpiResult<()> {
+        allgather_into(self, data, out)
     }
     fn reduce<T: Reducible>(
         &self,

@@ -6,6 +6,11 @@ use crate::mpi::error::MpiResult;
 
 /// Reduce `data` elementwise with `op`; returns `Some(result)` at `root`,
 /// `None` elsewhere.
+///
+/// The accumulator is drawn from the group pool; non-root ranks hand it to
+/// their parent via zero-copy `send_vec` (where the receiver's `recv_into`
+/// recycles it), and partials arrive through one reusable scratch buffer —
+/// no per-round allocation.
 pub fn reduce<T: Reducible>(
     comm: &Communicator,
     op: ReduceOp,
@@ -15,11 +20,16 @@ pub fn reduce<T: Reducible>(
     let p = comm.size();
     let tag = comm.next_coll_tag(CollKind::Reduce);
     let me = comm.rank();
-    let mut acc = data.to_vec();
+    let mut acc: Vec<T> = comm.pool().acquire(data.len());
+    acc.extend_from_slice(data);
     if p == 1 {
         return Ok(Some(acc));
     }
     let vrank = (me + p - root) % p;
+    // Lazily-acquired RAII scratch: leaf ranks retire without receiving
+    // and skip the acquire + zero-fill; the guard returns the buffer to
+    // the pool on every exit path (retire, success, `?` on failed peer).
+    let mut scratch: Option<crate::mpi::pool::PooledScratch<'_, T>> = None;
     let mut mask = 1usize;
     while mask < p {
         if vrank & mask != 0 {
@@ -30,8 +40,9 @@ pub fn reduce<T: Reducible>(
         }
         if vrank + mask < p {
             let src = (me + mask) % p;
-            let (v, _) = comm.recv::<T>(Some(src), tag)?;
-            reduce_in_place(op, &mut acc, &v)?;
+            let s = scratch.get_or_insert_with(|| comm.pool().scratch::<T>(data.len()));
+            let (cnt, _) = comm.recv_into(Some(src), tag, s)?;
+            reduce_in_place(op, &mut acc, &s[..cnt])?;
         }
         mask <<= 1;
     }

@@ -5,7 +5,12 @@
 //! Linear from the root, exactly like the paper's implementation (they call
 //! parallel reading out as future work); the scatter happens once per
 //! training run so its cost is amortized away, which the figures module
-//! verifies.
+//! verifies. The root's per-rank sends draw their storage through the
+//! group pool; note the receivers keep ownership of the payload (`recv`
+//! hands the vector to the caller as the shard), so unlike the
+//! collectives' `recv_into` loop this storage does *not* cycle back —
+//! a scatter still costs ~`p` cold allocations, which is fine for a
+//! once-per-run operation.
 
 use crate::mpi::comm::{CollKind, Communicator};
 use crate::mpi::datatype::Datatype;

@@ -18,6 +18,7 @@ use super::channel::{Envelope, Mailbox, Tag};
 use super::datatype::{Buffer, Datatype};
 use super::error::{MpiError, MpiResult};
 use super::netmodel::NetProfile;
+use super::pool::BufferPool;
 
 /// Global (per-`World`) state shared by every communicator.
 #[derive(Debug)]
@@ -66,13 +67,16 @@ impl WorldState {
     }
 }
 
-/// The shared half of a communicator: one mailbox per member plus ULFM
-/// revocation state.
+/// The shared half of a communicator: one mailbox per member, the group's
+/// buffer pool, and ULFM revocation state.
 #[derive(Debug)]
 pub struct CommGroup {
     pub context: u64,
     pub world_ranks: Vec<usize>,
     mailboxes: Vec<Mailbox>,
+    /// Recycled message storage shared by all members: sends draw from it,
+    /// envelope drops return to it (see [`BufferPool`]).
+    pool: Arc<BufferPool>,
     revoked: AtomicBool,
 }
 
@@ -83,8 +87,13 @@ impl CommGroup {
             context,
             world_ranks,
             mailboxes,
+            pool: Arc::new(BufferPool::new()),
             revoked: AtomicBool::new(false),
         }
+    }
+
+    pub fn pool(&self) -> &Arc<BufferPool> {
+        &self.pool
     }
 
     pub fn close_all(&self) {
@@ -237,11 +246,23 @@ impl Communicator {
 
     // ---- point-to-point --------------------------------------------------
 
+    /// The group's shared message-storage pool (collectives draw their
+    /// scratch buffers from it).
+    pub fn pool(&self) -> &Arc<BufferPool> {
+        self.group.pool()
+    }
+
     /// Non-blocking-semantics send (buffered): charges the sender its
     /// injection overhead, stamps the envelope with its arrival time under
     /// the alpha-beta model, and delivers it to the peer's mailbox.
+    ///
+    /// The payload is copied into *pooled* storage — after warmup this
+    /// path performs no heap allocation (the old implementation cloned the
+    /// slice into a fresh `Vec` on every call).
     pub fn send<T: Datatype>(&self, dst: usize, tag: Tag, data: &[T]) -> MpiResult<()> {
-        self.send_buffer(dst, tag, T::into_buffer(data.to_vec()))
+        let mut v: Vec<T> = self.group.pool().acquire(data.len());
+        v.extend_from_slice(data);
+        self.send_buffer(dst, tag, T::into_buffer(v))
     }
 
     /// Zero-copy variant when the caller can give up the vector.
@@ -249,7 +270,7 @@ impl Communicator {
         self.send_buffer(dst, tag, T::into_buffer(data))
     }
 
-    pub fn send_buffer(&self, dst: usize, tag: Tag, buf: Buffer) -> MpiResult<()> {
+    fn precheck_send(&self, dst: usize) -> MpiResult<()> {
         self.check_usable()?;
         if dst >= self.size() {
             return Err(MpiError::InvalidRank {
@@ -259,6 +280,15 @@ impl Communicator {
         }
         if self.peer_failed(dst) {
             return Err(MpiError::ProcFailed { rank: dst });
+        }
+        Ok(())
+    }
+
+    pub fn send_buffer(&self, dst: usize, tag: Tag, buf: Buffer) -> MpiResult<()> {
+        if let Err(e) = self.precheck_send(dst) {
+            // Keep the storage in circulation even on the error path.
+            self.group.pool().release(buf);
+            return Err(e);
         }
         let nbytes = buf.nbytes();
         let o = self.profile.send_overhead_s;
@@ -275,16 +305,20 @@ impl Communicator {
         s.msgs_sent += 1;
         s.bytes_sent += nbytes as u64;
         self.stats.set(s);
-        self.group.mailboxes[dst].push(Envelope {
-            src: self.rank,
+        self.group.mailboxes[dst].push(Envelope::pooled(
+            self.rank,
             tag,
-            arrival_vtime: arrival,
+            arrival,
             buf,
-        });
+            self.group.pool().clone(),
+        ));
         Ok(())
     }
 
     /// Blocking matched receive; returns the payload and the source rank.
+    /// The returned vector takes ownership of the message storage (it will
+    /// not return to the pool) — hot paths should prefer
+    /// [`Communicator::recv_into`].
     pub fn recv<T: Datatype>(
         &self,
         src: Option<usize>,
@@ -292,7 +326,35 @@ impl Communicator {
     ) -> MpiResult<(Vec<T>, usize)> {
         let env = self.recv_envelope(src, Some(tag))?;
         let s = env.src;
-        Ok((T::from_buffer(env.buf)?, s))
+        Ok((T::from_buffer(env.take_buffer())?, s))
+    }
+
+    /// Blocking matched receive into caller-provided scratch: the payload
+    /// is copied into `out[..n]` and the (pooled) message storage is
+    /// recycled immediately. Returns `(n, source_rank)`.
+    ///
+    /// Errors with `CountMismatch` if the payload is longer than `out`
+    /// (shorter is allowed — collectives with ragged chunks slice the
+    /// scratch themselves).
+    pub fn recv_into<T: Datatype>(
+        &self,
+        src: Option<usize>,
+        tag: Tag,
+        out: &mut [T],
+    ) -> MpiResult<(usize, usize)> {
+        let env = self.recv_envelope(src, Some(tag))?;
+        let from = env.src;
+        let payload = T::slice_of(env.buf())?;
+        let n = payload.len();
+        if n > out.len() {
+            return Err(MpiError::CountMismatch {
+                expected: out.len(),
+                got: n,
+            });
+        }
+        out[..n].copy_from_slice(payload);
+        Ok((n, from))
+        // `env` drops here, returning its storage to the group pool.
     }
 
     pub fn recv_envelope(&self, src: Option<usize>, tag: Option<Tag>) -> MpiResult<Envelope> {
@@ -350,6 +412,23 @@ impl Communicator {
     ) -> MpiResult<Vec<T>> {
         self.send(dst, send_tag, data)?;
         Ok(self.recv::<T>(Some(src), recv_tag)?.0)
+    }
+
+    /// Allocation-free exchange: send `data` to `dst`, receive from `src`
+    /// into `out`. The send is buffered (never blocks), so posting it
+    /// first cannot deadlock even when both peers exchange simultaneously.
+    /// Returns the received element count.
+    pub fn sendrecv_into<T: Datatype>(
+        &self,
+        dst: usize,
+        send_tag: Tag,
+        data: &[T],
+        src: usize,
+        recv_tag: Tag,
+        out: &mut [T],
+    ) -> MpiResult<usize> {
+        self.send(dst, send_tag, data)?;
+        Ok(self.recv_into(Some(src), recv_tag, out)?.0)
     }
 
     /// Non-blocking probe for a matching message (MPI_Iprobe).
@@ -554,5 +633,59 @@ mod tests {
             c0.send(5, 0, &[1i32]),
             Err(MpiError::InvalidRank { rank: 5, size: 2 })
         ));
+    }
+
+    #[test]
+    fn recv_into_copies_and_recycles_storage() {
+        let (c0, c1) = pair();
+        c0.send(1, 5, &[1.0f32, 2.0, 3.0]).unwrap();
+        let mut out = [0.0f32; 4];
+        let (n, src) = c1.recv_into(Some(0), 5, &mut out).unwrap();
+        assert_eq!((n, src), (3, 0));
+        assert_eq!(&out[..3], &[1.0, 2.0, 3.0]);
+        assert_eq!(c0.pool().stats().recycled, 1);
+        // The next same-sized send is served from the pool, not malloc.
+        c0.send(1, 6, &[4.0f32, 5.0, 6.0]).unwrap();
+        assert_eq!(c0.pool().stats().hits, 1);
+    }
+
+    #[test]
+    fn recv_into_rejects_oversized_payload() {
+        let (c0, c1) = pair();
+        c0.send(1, 5, &[1.0f32; 8]).unwrap();
+        let mut out = [0.0f32; 4];
+        assert!(matches!(
+            c1.recv_into(Some(0), 5, &mut out),
+            Err(MpiError::CountMismatch {
+                expected: 4,
+                got: 8
+            })
+        ));
+    }
+
+    #[test]
+    fn sendrecv_into_exchanges() {
+        let (c0, c1) = pair();
+        c0.send(1, 9, &[10i32, 20]).unwrap();
+        let mut out = [0i32; 2];
+        let n = c1
+            .sendrecv_into(0, 9, &[7i32, 8], 0, 9, &mut out)
+            .unwrap();
+        assert_eq!((n, out), (2, [10, 20]));
+        let (v, _) = c0.recv::<i32>(Some(1), 9).unwrap();
+        assert_eq!(v, vec![7, 8]);
+    }
+
+    #[test]
+    fn steady_state_p2p_is_pool_served() {
+        let (c0, c1) = pair();
+        let mut out = [0.0f32; 16];
+        for _ in 0..10 {
+            c0.send(1, 1, &[0.5f32; 16]).unwrap();
+            c1.recv_into(Some(0), 1, &mut out).unwrap();
+        }
+        let s = c0.pool().stats();
+        // One cold allocation, nine pool hits.
+        assert_eq!((s.misses, s.hits, s.recycled), (1, 9, 10));
     }
 }

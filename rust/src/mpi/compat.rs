@@ -1,0 +1,192 @@
+//! Frozen pre-pool reference collectives — **do not "improve" these**.
+//!
+//! These are faithful copies of the allocating transport's allreduce
+//! implementations as they existed before the buffer-pool refactor (fresh
+//! `Vec` per hop, `to_vec` accumulators, reduce+bcast tree). They exist
+//! for exactly two consumers:
+//!
+//! * `tests/collectives_parity.rs` — pins the pooled `recv_into`
+//!   collectives **bitwise** to this baseline (same combine order, same
+//!   operands ⇒ identical bits; any drift means the rewrite changed the
+//!   protocol);
+//! * `benches/runtime_step.rs` — measures the pooled hot path against
+//!   this baseline and records the delta in `BENCH_allreduce.json`.
+//!
+//! Because both consumers must observe the *same* protocol, the reference
+//! lives here once instead of being hand-copied into each. It runs over
+//! plain user tags supplied by the caller (one tag lane, plus a second
+//! for the tree's broadcast), so it composes with live collectives in the
+//! same world without tag collisions.
+
+use super::comm::Communicator;
+use super::datatype::{Reducible, ReduceOp};
+use super::error::MpiResult;
+use crate::mpi::collectives::{chunk_range, AllreduceAlgorithm};
+
+fn combine_in_place<T: Reducible>(op: ReduceOp, acc: &mut [T], other: &[T]) {
+    assert_eq!(acc.len(), other.len());
+    for (a, b) in acc.iter_mut().zip(other.iter()) {
+        *a = T::combine(op, *a, *b);
+    }
+}
+
+/// Pre-pool recursive doubling: fresh `Vec` received every round.
+pub fn ref_recursive_doubling<T: Reducible>(
+    comm: &Communicator,
+    op: ReduceOp,
+    data: &mut [T],
+    tag: u32,
+) -> MpiResult<()> {
+    let p = comm.size();
+    let me = comm.rank();
+    let pof2 = p.next_power_of_two() >> usize::from(!p.is_power_of_two());
+    let rem = p - pof2;
+
+    // All sends go through send_vec(to_vec()) — a fresh clone per hop,
+    // exactly like the pre-pool transport (comm.send would be pool-served
+    // now, which would make this "baseline" quietly allocation-free).
+    let newrank: isize = if me < 2 * rem {
+        if me % 2 == 0 {
+            comm.send_vec(me + 1, tag, data.to_vec())?;
+            -1
+        } else {
+            let (v, _) = comm.recv::<T>(Some(me - 1), tag)?;
+            combine_in_place(op, data, &v);
+            (me / 2) as isize
+        }
+    } else {
+        (me - rem) as isize
+    };
+
+    if newrank >= 0 {
+        let nr = newrank as usize;
+        let mut mask = 1usize;
+        while mask < pof2 {
+            let peer_nr = nr ^ mask;
+            let peer = if peer_nr < rem { peer_nr * 2 + 1 } else { peer_nr + rem };
+            comm.send_vec(peer, tag, data.to_vec())?;
+            let (v, _) = comm.recv::<T>(Some(peer), tag)?;
+            combine_in_place(op, data, &v);
+            mask <<= 1;
+        }
+    }
+
+    if me < 2 * rem {
+        if me % 2 == 1 {
+            comm.send_vec(me - 1, tag, data.to_vec())?;
+        } else {
+            let (v, _) = comm.recv::<T>(Some(me + 1), tag)?;
+            data.copy_from_slice(&v);
+        }
+    }
+    Ok(())
+}
+
+/// Pre-pool ring (reduce-scatter + allgather): `2(p-1)` fresh-`Vec`
+/// receive allocations plus `2(p-1)` `to_vec` send clones per rank.
+pub fn ref_ring<T: Reducible>(
+    comm: &Communicator,
+    op: ReduceOp,
+    data: &mut [T],
+    tag: u32,
+) -> MpiResult<()> {
+    let p = comm.size();
+    let me = comm.rank();
+    let n = data.len();
+    let right = (me + 1) % p;
+    let left = (me + p - 1) % p;
+
+    for s in 0..p - 1 {
+        let send_chunk = (me + p - s) % p;
+        let recv_chunk = (me + p - s - 1) % p;
+        let (ss, se) = chunk_range(n, p, send_chunk);
+        // The old transport cloned the slice on send...
+        comm.send_vec(right, tag, data[ss..se].to_vec())?;
+        // ...and materialized a fresh Vec on receive.
+        let (v, _) = comm.recv::<T>(Some(left), tag)?;
+        let (rs, re) = chunk_range(n, p, recv_chunk);
+        combine_in_place(op, &mut data[rs..re], &v);
+    }
+    for s in 0..p - 1 {
+        let send_chunk = (me + 1 + p - s) % p;
+        let recv_chunk = (me + p - s) % p;
+        let (ss, se) = chunk_range(n, p, send_chunk);
+        comm.send_vec(right, tag, data[ss..se].to_vec())?;
+        let (v, _) = comm.recv::<T>(Some(left), tag)?;
+        let (rs, re) = chunk_range(n, p, recv_chunk);
+        data[rs..re].copy_from_slice(&v);
+    }
+    Ok(())
+}
+
+/// Pre-pool tree: binomial reduce to rank 0 with a `to_vec` accumulator,
+/// then binomial broadcast of the root's vector (tag lane `tag + 1`).
+pub fn ref_tree<T: Reducible>(
+    comm: &Communicator,
+    op: ReduceOp,
+    data: &mut [T],
+    tag: u32,
+) -> MpiResult<()> {
+    let p = comm.size();
+    let me = comm.rank();
+    // Fresh clones per hop, like the pre-pool transport (see ref_rd note).
+    let mut acc = data.to_vec();
+    let mut mask = 1usize;
+    while mask < p {
+        if me & mask != 0 {
+            comm.send_vec(me - mask, tag, acc.clone())?;
+            break;
+        }
+        if me + mask < p {
+            let (v, _) = comm.recv::<T>(Some(me + mask), tag)?;
+            combine_in_place(op, &mut acc, &v);
+        }
+        mask <<= 1;
+    }
+    let btag = tag + 1;
+    let mut bmask = 1usize;
+    while bmask < p {
+        if me & bmask != 0 {
+            let (v, _) = comm.recv::<T>(Some(me - bmask), btag)?;
+            acc = v;
+            break;
+        }
+        bmask <<= 1;
+    }
+    bmask >>= 1;
+    while bmask > 0 {
+        if me + bmask < p {
+            comm.send_vec(me + bmask, btag, acc.clone())?;
+        }
+        bmask >>= 1;
+    }
+    data.copy_from_slice(&acc);
+    Ok(())
+}
+
+/// Dispatcher mirroring `allreduce_with`'s fallback rules. Consumes two
+/// user-tag lanes starting at `tag` (the tree's broadcast uses `tag + 1`).
+pub fn ref_allreduce<T: Reducible>(
+    comm: &Communicator,
+    alg: AllreduceAlgorithm,
+    op: ReduceOp,
+    data: &mut [T],
+    tag: u32,
+) -> MpiResult<()> {
+    if comm.size() == 1 {
+        return Ok(());
+    }
+    match alg {
+        AllreduceAlgorithm::RecursiveDoubling => ref_recursive_doubling(comm, op, data, tag),
+        AllreduceAlgorithm::Ring => {
+            if data.len() < comm.size() {
+                // Same fallback the production dispatch applies.
+                ref_recursive_doubling(comm, op, data, tag)
+            } else {
+                ref_ring(comm, op, data, tag)
+            }
+        }
+        AllreduceAlgorithm::Tree => ref_tree(comm, op, data, tag),
+        AllreduceAlgorithm::Auto => unreachable!("reference requires an explicit algorithm"),
+    }
+}

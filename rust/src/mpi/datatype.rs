@@ -53,6 +53,28 @@ impl Buffer {
             Buffer::U64(_) => "u64",
         }
     }
+
+    /// Allocated capacity in *elements* — what the buffer pool shelves by.
+    pub fn capacity(&self) -> usize {
+        match self {
+            Buffer::F32(v) => v.capacity(),
+            Buffer::F64(v) => v.capacity(),
+            Buffer::I32(v) => v.capacity(),
+            Buffer::U8(v) => v.capacity(),
+            Buffer::U64(v) => v.capacity(),
+        }
+    }
+
+    /// Drop contents, keep storage (pool recycling).
+    pub fn clear(&mut self) {
+        match self {
+            Buffer::F32(v) => v.clear(),
+            Buffer::F64(v) => v.clear(),
+            Buffer::I32(v) => v.clear(),
+            Buffer::U8(v) => v.clear(),
+            Buffer::U64(v) => v.clear(),
+        }
+    }
 }
 
 /// Types that can be sent through the communicator.
@@ -60,8 +82,14 @@ pub trait Datatype: Copy + Send + Sync + PartialOrd + 'static {
     fn type_name() -> &'static str;
     fn into_buffer(v: Vec<Self>) -> Buffer;
     fn from_buffer(b: Buffer) -> MpiResult<Vec<Self>>;
+    /// Borrow a buffer's payload as a typed slice — the `recv_into` path:
+    /// the receiver copies out of the (pooled) envelope storage instead of
+    /// taking ownership, so the storage can cycle back to the pool.
+    fn slice_of(b: &Buffer) -> MpiResult<&[Self]>;
     /// Wire bytes per element, for the cost model.
     fn width() -> usize;
+    /// Fill value for pooled scratch buffers.
+    fn zero() -> Self;
 }
 
 macro_rules! impl_datatype {
@@ -82,8 +110,20 @@ macro_rules! impl_datatype {
                     }),
                 }
             }
+            fn slice_of(b: &Buffer) -> MpiResult<&[Self]> {
+                match b {
+                    Buffer::$variant(v) => Ok(v.as_slice()),
+                    other => Err(MpiError::TypeMismatch {
+                        expected: $name,
+                        got: other.type_name(),
+                    }),
+                }
+            }
             fn width() -> usize {
                 $w
+            }
+            fn zero() -> Self {
+                0 as $t
             }
         }
     };

@@ -1,0 +1,303 @@
+//! Size-bucketed buffer pool — the allocation sink of the hot path.
+//!
+//! Every message the transport moves needs owned storage (a typed `Vec`
+//! inside a [`Buffer`]). Before this pool existed, each `send` cloned its
+//! slice into a fresh allocation and each receive materialized another —
+//! `2(p-1)` allocation+copy pairs per rank per ring-allreduce, every
+//! training step. The pool turns that into a closed loop: `send` acquires
+//! recycled storage, the receiver copies the payload into caller scratch
+//! via `recv_into`, and the envelope's drop hands the storage back to the
+//! shelf it came from. After a warmup step the steady-state allreduce
+//! performs **zero** heap allocations (asserted by
+//! `tests/alloc_free_sync.rs`).
+//!
+//! Design notes:
+//!
+//! * One pool per [`CommGroup`](super::comm::CommGroup) — senders and
+//!   receivers of a communicator share shelves, so storage cycles
+//!   naturally between neighbouring ranks.
+//! * Shelves are keyed by `(dtype, ⌈log₂ capacity⌉)`. A released vector
+//!   with capacity `c` lands on shelf `⌊log₂ c⌋`; a request for `n`
+//!   elements pops from shelf `⌈log₂ n⌉`, so every pooled vector already
+//!   has `capacity ≥ n` and `acquire` never reallocates on a hit.
+//! * Shelves are bounded (`MAX_PER_SHELF`) so a burst (e.g. an allgather
+//!   fan-in) cannot grow the pool without limit; overflow storage is
+//!   simply dropped back to the system allocator. Cold allocations round
+//!   capacity up to the bucket size (≤2× the request), so worst-case
+//!   idle retention is `MAX_PER_SHELF × bucket-size` bytes per active
+//!   `(dtype, bucket)` — tens of model-sizes in the worst case, held for
+//!   the communicator group's lifetime. That is a deliberate trade for
+//!   churn-free steady state; trim-at-epoch is the follow-up if it bites.
+//! * Concurrency: one `Mutex` guards the shelf map, taken once per
+//!   acquire/release. That is deliberate — the alternative it replaces
+//!   (malloc) also synchronizes, and the protocols bound concurrent
+//!   demand to a handful of buffers — but if profiling ever shows this
+//!   lock hot at large `p`, shard the shelves per `(dtype, bucket)` with
+//!   striped locks before reaching for anything fancier (tracked in
+//!   ROADMAP "Open items").
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::datatype::{Buffer, Datatype};
+
+/// Snapshot of pool traffic (diagnostics / benches / the allocation test).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Acquisitions served from a shelf (no allocation).
+    pub hits: u64,
+    /// Acquisitions that fell through to the system allocator.
+    pub misses: u64,
+    /// Buffers returned to a shelf.
+    pub recycled: u64,
+    /// Buffers dropped because their shelf was full.
+    pub dropped: u64,
+}
+
+/// Bound on each `(dtype, bucket)` shelf. Sized to exceed the collectives'
+/// peak concurrent demand at p≈8–16 (scratch + in-flight envelopes per
+/// rank): a *shallower* bound would drop still-needed storage at every
+/// quiescence and reintroduce per-step allocation churn — the exact thing
+/// this pool exists to eliminate. The cost is idle retention of up to
+/// `32 × bucket-size` bytes per active `(dtype, bucket)`; if that ever
+/// matters, add an explicit trim/drain call at epoch boundaries rather
+/// than lowering this bound (see ROADMAP "Open items").
+const MAX_PER_SHELF: usize = 32;
+
+/// Shelf a request for `n` elements pops from: `⌈log₂ n⌉`.
+fn request_bucket(n: usize) -> u32 {
+    n.next_power_of_two().trailing_zeros()
+}
+
+/// Shelf a vector of capacity `cap ≥ 1` is released to: `⌊log₂ cap⌋`.
+fn capacity_bucket(cap: usize) -> u32 {
+    usize::BITS - 1 - cap.leading_zeros()
+}
+
+/// Thread-safe free lists of message storage, shared by all ranks of a
+/// communicator group.
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    shelves: Mutex<HashMap<(&'static str, u32), Vec<Buffer>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    recycled: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl BufferPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An **empty** vector with `capacity ≥ n`, recycled when possible.
+    /// Callers fill it with `extend_from_slice` (the send path) or resize
+    /// it (scratch buffers).
+    pub fn acquire<T: Datatype>(&self, n: usize) -> Vec<T> {
+        if n == 0 {
+            return Vec::new();
+        }
+        let key = (T::type_name(), request_bucket(n));
+        let popped = self.shelves.lock().unwrap().get_mut(&key).and_then(Vec::pop);
+        if let Some(buf) = popped {
+            if let Ok(mut v) = T::from_buffer(buf) {
+                debug_assert!(v.capacity() >= n);
+                v.clear();
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return v;
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // Round the cold allocation up to the bucket size so that when it
+        // is released (floor bucket) it lands back on the shelf future
+        // requests of this size pop from (ceil bucket) — without this,
+        // non-power-of-two sizes would never produce pool hits.
+        Vec::with_capacity(n.next_power_of_two())
+    }
+
+    /// A zero-filled vector of length exactly `n` — collective scratch.
+    pub fn acquire_filled<T: Datatype>(&self, n: usize) -> Vec<T> {
+        let mut v = self.acquire::<T>(n);
+        v.resize(n, T::zero());
+        v
+    }
+
+    /// Return storage to the pool. Contents are discarded; zero-capacity
+    /// buffers are not worth shelving.
+    pub fn release(&self, mut buf: Buffer) {
+        let cap = buf.capacity();
+        if cap == 0 {
+            return;
+        }
+        buf.clear();
+        let key = (buf.type_name(), capacity_bucket(cap));
+        let mut shelves = self.shelves.lock().unwrap();
+        let shelf = shelves.entry(key).or_default();
+        if shelf.len() < MAX_PER_SHELF {
+            shelf.push(buf);
+            self.recycled.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Typed convenience over [`BufferPool::release`].
+    pub fn release_vec<T: Datatype>(&self, v: Vec<T>) {
+        self.release(T::into_buffer(v));
+    }
+
+    /// Stock the shelf serving `n`-element requests with `count` buffers
+    /// (capped by the shelf bound). Tests and latency-critical callers use
+    /// this to make the steady state *deterministically* allocation-free:
+    /// with a shelf stocked beyond the protocol's peak concurrent demand,
+    /// no interleaving of rank threads can produce a pool miss.
+    pub fn preload<T: Datatype>(&self, count: usize, n: usize) {
+        if n == 0 {
+            return;
+        }
+        for _ in 0..count {
+            let v: Vec<T> = Vec::with_capacity(n.next_power_of_two());
+            self.release_vec(v);
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            recycled: self.recycled.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+        }
+    }
+
+    /// A zero-filled, length-`n` scratch buffer that returns itself to the
+    /// pool when dropped — on *every* path, including `?` unwinds. The
+    /// collectives use this so a peer failure mid-collective (ULFM) does
+    /// not leak their scratch to the system allocator and force a
+    /// reallocation on the retry.
+    pub fn scratch<T: Datatype>(&self, n: usize) -> PooledScratch<'_, T> {
+        PooledScratch {
+            pool: self,
+            buf: Some(self.acquire_filled(n)),
+        }
+    }
+}
+
+/// RAII guard over a pooled scratch vector; derefs to `[T]`.
+pub struct PooledScratch<'a, T: Datatype> {
+    pool: &'a BufferPool,
+    buf: Option<Vec<T>>,
+}
+
+impl<T: Datatype> Drop for PooledScratch<'_, T> {
+    fn drop(&mut self) {
+        if let Some(v) = self.buf.take() {
+            self.pool.release_vec(v);
+        }
+    }
+}
+
+impl<T: Datatype> std::ops::Deref for PooledScratch<'_, T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        self.buf.as_deref().unwrap_or(&[])
+    }
+}
+
+impl<T: Datatype> std::ops::DerefMut for PooledScratch<'_, T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        self.buf.as_deref_mut().unwrap_or(&mut [])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_release_roundtrip_reuses_storage() {
+        let pool = BufferPool::new();
+        let mut v = pool.acquire::<f32>(100);
+        v.extend_from_slice(&[1.0; 100]);
+        let cap = v.capacity();
+        pool.release_vec(v);
+        let v2 = pool.acquire::<f32>(100);
+        assert!(v2.is_empty());
+        assert!(v2.capacity() >= 100);
+        assert_eq!(v2.capacity(), cap, "same storage must come back");
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses, s.recycled), (1, 1, 1));
+    }
+
+    #[test]
+    fn buckets_guarantee_capacity() {
+        // A released capacity-c vec is only handed to requests n <= c.
+        let pool = BufferPool::new();
+        let mut v: Vec<f32> = Vec::with_capacity(9);
+        v.push(0.0);
+        pool.release_vec(v); // shelf ⌊log₂ 9⌋ = 3
+        let got = pool.acquire::<f32>(9); // shelf ⌈log₂ 9⌉ = 4: miss
+        assert!(got.capacity() >= 9);
+        assert_eq!(pool.stats().misses, 1);
+        let got2 = pool.acquire::<f32>(8); // shelf 3: hit, capacity 9 >= 8
+        assert!(got2.capacity() >= 8);
+        assert_eq!(pool.stats().hits, 1);
+    }
+
+    #[test]
+    fn types_do_not_mix() {
+        let pool = BufferPool::new();
+        pool.release_vec(vec![1.0f32; 64]);
+        let v = pool.acquire::<i32>(64);
+        assert!(v.capacity() >= 64);
+        assert_eq!(pool.stats().hits, 0, "f32 storage must not serve i32");
+    }
+
+    #[test]
+    fn shelves_are_bounded() {
+        let pool = BufferPool::new();
+        for _ in 0..MAX_PER_SHELF + 5 {
+            pool.release_vec(vec![0u8; 16]);
+        }
+        let s = pool.stats();
+        assert_eq!(s.recycled, MAX_PER_SHELF as u64);
+        assert_eq!(s.dropped, 5);
+    }
+
+    #[test]
+    fn zero_len_requests_skip_the_pool() {
+        let pool = BufferPool::new();
+        let v = pool.acquire::<u64>(0);
+        assert_eq!(v.capacity(), 0);
+        pool.release_vec(Vec::<u64>::new());
+        assert_eq!(pool.stats(), PoolStats::default());
+    }
+
+    #[test]
+    fn scratch_guard_recycles_on_every_exit_path() {
+        let pool = BufferPool::new();
+        fn early_exit(pool: &BufferPool) -> Result<(), ()> {
+            let _scratch = pool.scratch::<f32>(64);
+            Err(()) // early-error path: guard must still recycle
+        }
+        assert!(early_exit(&pool).is_err());
+        assert_eq!(pool.stats().recycled, 1);
+        {
+            let mut s = pool.scratch::<f32>(64);
+            assert_eq!(s.len(), 64);
+            s[0] = 5.0;
+        } // success path
+        let st = pool.stats();
+        assert_eq!((st.hits, st.recycled), (1, 2));
+    }
+
+    #[test]
+    fn acquire_filled_zeroes_exactly_n() {
+        let pool = BufferPool::new();
+        pool.release_vec(vec![7.0f32; 32]);
+        let v = pool.acquire_filled::<f32>(20);
+        assert_eq!(v.len(), 20);
+        assert!(v.iter().all(|&x| x == 0.0));
+    }
+}

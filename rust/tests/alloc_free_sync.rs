@@ -1,0 +1,157 @@
+//! Acceptance pin (ISSUE 1): the steady-state training sync path —
+//! `SyncEvery::Step` + `SyncMode::GradientAverage`, one allreduce of the
+//! flat gradient vector per step — performs **exactly zero** heap
+//! allocations after warmup.
+//!
+//! Method: a counting `#[global_allocator]` with a process-wide tracking
+//! flag. The world preloads the buffer pool past the protocols' peak
+//! concurrent demand (so no thread interleaving can cause a pool miss),
+//! pre-grows every mailbox queue, runs warmup sync steps, then flips
+//! tracking on between barriers and drives the exact `sync_replica` hot
+//! path. Any allocation inside the tracked window fails the test.
+//!
+//! This file intentionally contains a single #[test]: the harness runs
+//! tests within one binary concurrently, and a sibling test's allocations
+//! would pollute the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use dtf::coordinator::sync::sync_replica;
+use dtf::coordinator::{ExecMode, Replica, StepOutcome, SyncMode};
+use dtf::model::ArchSpec;
+use dtf::mpi::{barrier, AllreduceAlgorithm, NetProfile, World};
+use dtf::runtime::Manifest;
+
+struct CountingAlloc;
+
+static TRACKING: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if TRACKING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// A Manifest for Sim-mode execution: specs only, no compiled artifacts.
+fn tiny_manifest() -> Arc<Manifest> {
+    let v = dtf::util::json::parse(
+        r#"{
+          "name": "t", "kind": "mlp", "n_train": 64, "n_test": 16,
+          "n_classes": 2, "in_dim": 3, "flops_per_sample": 1, "n_params": 13,
+          "layer_sizes": [3, 2, 2], "hidden_activation": "sigmoid",
+          "param_shapes": [
+            {"name": "w0", "shape": [3, 2]}, {"name": "b0", "shape": [2]},
+            {"name": "w1", "shape": [2, 2]}, {"name": "b1", "shape": [1]}
+          ]
+        }"#,
+    )
+    .expect("spec json");
+    let spec = ArchSpec::from_json(&v).expect("spec");
+    let mut archs = BTreeMap::new();
+    archs.insert("t".to_string(), spec);
+    Arc::new(Manifest {
+        dir: ".".into(),
+        batch_size: 4,
+        archs,
+        artifacts: BTreeMap::new(),
+    })
+}
+
+#[test]
+fn steady_state_gradient_sync_performs_zero_allocations() {
+    const P: usize = 4;
+    const N_PARAMS: usize = 13;
+    let manifest = tiny_manifest();
+    let w = World::new(P, NetProfile::zero());
+    w.run_unwrap(move |c| {
+        let mut replica = Replica::new(
+            &manifest,
+            "t",
+            ExecMode::Sim {
+                secs_per_sample: 0.0,
+            },
+            0.1,
+            7,
+        )?;
+        let outcome = StepOutcome::Grads { loss: 1.0 };
+
+        // Deterministic supply: stock every shelf the hot path touches
+        // beyond peak concurrent demand (p ranks × a few in-flight
+        // buffers each — far below the 32-deep shelves).
+        if c.rank() == 0 {
+            let pool = c.pool();
+            pool.preload::<f32>(32, N_PARAMS); // rd/tree vectors + scratch
+            pool.preload::<f32>(32, N_PARAMS / P + 1); // ring chunks
+            pool.preload::<i32>(32, 1); // barrier payloads
+        }
+        // Pre-grow the mailbox queues past any depth the measured loop
+        // can reach, so VecDeque growth cannot fire inside the window.
+        let right = (c.rank() + 1) % P;
+        let left = (c.rank() + P - 1) % P;
+        for i in 0..32u32 {
+            c.send(right, 7, &[i as f32])?;
+        }
+        let mut one = [0.0f32; 1];
+        for _ in 0..32 {
+            c.recv_into(Some(left), 7, &mut one)?;
+        }
+
+        // Warmup: every algorithm once so shelf keys and queue capacity
+        // exist before tracking starts.
+        for _ in 0..8 {
+            for alg in [
+                AllreduceAlgorithm::Ring,
+                AllreduceAlgorithm::RecursiveDoubling,
+                AllreduceAlgorithm::Tree,
+            ] {
+                sync_replica(&c, &mut replica, &outcome, SyncMode::GradientAverage, alg)?;
+            }
+        }
+
+        barrier(&c)?;
+        if c.rank() == 0 {
+            TRACKING.store(true, Ordering::SeqCst);
+        }
+        barrier(&c)?;
+
+        // ---- the tracked window: the exact per-step sync hot path ----
+        for _ in 0..25 {
+            for alg in [
+                AllreduceAlgorithm::Ring,
+                AllreduceAlgorithm::RecursiveDoubling,
+                AllreduceAlgorithm::Tree,
+            ] {
+                sync_replica(&c, &mut replica, &outcome, SyncMode::GradientAverage, alg)?;
+            }
+        }
+
+        barrier(&c)?;
+        if c.rank() == 0 {
+            TRACKING.store(false, Ordering::SeqCst);
+        }
+        // Final barrier: no rank may exit its thread (TLS teardown etc.)
+        // until tracking is off everywhere.
+        barrier(&c)?;
+        Ok(())
+    });
+
+    let n = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        n, 0,
+        "steady-state SyncEvery::Step gradient sync allocated {n} times; \
+         the hot path must be allocation-free after warmup"
+    );
+}

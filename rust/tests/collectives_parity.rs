@@ -1,0 +1,113 @@
+//! Parity pin: the pooled `recv_into` collectives must be **bitwise
+//! identical** to the old allocating implementations.
+//!
+//! The reference lives in `dtf::mpi::compat` — a frozen copy of the
+//! pre-pool code (fresh `Vec`s per hop, `reduce`+`bcast` tree), shared
+//! with the `runtime_step` bench baseline so both observe the same
+//! protocol. Because each algorithm performs its combines in the same
+//! order with the same operands, results must match bit for bit —
+//! floating-point non-associativity is not an excuse for drift here, and
+//! any divergence means the rewrite changed the protocol.
+
+use dtf::mpi::compat::ref_allreduce;
+use dtf::mpi::{allreduce_with, AllreduceAlgorithm, NetProfile, ReduceOp, World};
+
+/// Per-rank input values; kept near 1.0 for Prod so 13-rank products stay
+/// finite and bit-comparable.
+fn seed_val(op: ReduceOp, rank: usize, i: usize) -> f32 {
+    match op {
+        ReduceOp::Prod => 1.0 + ((rank * 7 + i * 3) % 5) as f32 * 0.01,
+        _ => ((rank * 31 + i * 17) % 101) as f32 * 0.25 - 12.0,
+    }
+}
+
+#[test]
+fn pooled_collectives_bitwise_match_reference() {
+    const OPS: [ReduceOp; 4] = [
+        ReduceOp::Sum,
+        ReduceOp::Prod,
+        ReduceOp::Max,
+        ReduceOp::Min,
+    ];
+    const SIZES: [usize; 3] = [1, 5, 97]; // below-p, near-p, uneven chunks
+    const ALGS: [AllreduceAlgorithm; 3] = [
+        AllreduceAlgorithm::RecursiveDoubling,
+        AllreduceAlgorithm::Ring,
+        AllreduceAlgorithm::Tree,
+    ];
+    for p in 1..=13usize {
+        for &alg in &ALGS {
+            let w = World::new(p, NetProfile::zero());
+            w.run_unwrap(move |c| {
+                let mut user_tag = 1u32;
+                for &op in &OPS {
+                    for &n in &SIZES {
+                        let mk = |r: usize| -> Vec<f32> {
+                            (0..n).map(|i| seed_val(op, r, i)).collect()
+                        };
+                        let mut v_new = mk(c.rank());
+                        let mut v_ref = mk(c.rank());
+                        allreduce_with(&c, alg, op, &mut v_new)?;
+                        ref_allreduce(&c, alg, op, &mut v_ref, user_tag)?;
+                        user_tag += 2; // reference consumes two tag lanes
+                        for (i, (a, b)) in v_new.iter().zip(&v_ref).enumerate() {
+                            assert_eq!(
+                                a.to_bits(),
+                                b.to_bits(),
+                                "bit drift: alg={alg:?} p={p} op={op:?} n={n} \
+                                 rank={} i={i}: pooled {a} vs reference {b}",
+                                c.rank()
+                            );
+                        }
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+}
+
+/// Same pin for the non-f32 dtypes at one representative shape each
+/// (exact integer / double arithmetic, so equality is equality).
+#[test]
+fn pooled_collectives_match_reference_other_dtypes() {
+    const ALGS: [AllreduceAlgorithm; 3] = [
+        AllreduceAlgorithm::RecursiveDoubling,
+        AllreduceAlgorithm::Ring,
+        AllreduceAlgorithm::Tree,
+    ];
+    for p in [2usize, 5, 8, 13] {
+        for &alg in &ALGS {
+            let w = World::new(p, NetProfile::zero());
+            w.run_unwrap(move |c| {
+                let n = 23usize;
+                let r = c.rank();
+                let mut tag = 100u32;
+
+                let mut d_new: Vec<f64> =
+                    (0..n).map(|i| (r * n + i) as f64 * 0.5).collect();
+                let mut d_ref = d_new.clone();
+                allreduce_with(&c, alg, ReduceOp::Sum, &mut d_new)?;
+                ref_allreduce(&c, alg, ReduceOp::Sum, &mut d_ref, tag)?;
+                assert_eq!(d_new, d_ref, "f64 alg={alg:?} p={p}");
+                tag += 2;
+
+                let mut i_new: Vec<i32> =
+                    (0..n).map(|i| (r * 3 + i) as i32 - 7).collect();
+                let mut i_ref = i_new.clone();
+                allreduce_with(&c, alg, ReduceOp::Min, &mut i_new)?;
+                ref_allreduce(&c, alg, ReduceOp::Min, &mut i_ref, tag)?;
+                assert_eq!(i_new, i_ref, "i32 alg={alg:?} p={p}");
+                tag += 2;
+
+                let mut u_new: Vec<u64> =
+                    (0..n).map(|i| (r * n + i) as u64).collect();
+                let mut u_ref = u_new.clone();
+                allreduce_with(&c, alg, ReduceOp::Max, &mut u_new)?;
+                ref_allreduce(&c, alg, ReduceOp::Max, &mut u_ref, tag)?;
+                assert_eq!(u_new, u_ref, "u64 alg={alg:?} p={p}");
+                Ok(())
+            });
+        }
+    }
+}
