@@ -37,6 +37,52 @@ pub enum SyncEvery {
     Epoch,
 }
 
+/// *How* the per-step synchronization moves the bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncStrategy {
+    /// The paper's §3.3.3 shape: one blocking allreduce of the full flat
+    /// vector after the local step. Communication fully serializes behind
+    /// compute.
+    Flat,
+    /// Overlapped pipeline: the flat vector is partitioned into
+    /// size-capped per-layer buckets; each bucket's nonblocking allreduce
+    /// launches as backprop produces that layer's gradient (back to
+    /// front) and is waited on only when the optimizer applies the
+    /// bucket. Hides communication behind compute — see
+    /// `coordinator::pipeline`.
+    ///
+    /// Bit-for-bit parity with `Flat` holds when the flat path uses a
+    /// position-independent reduction schedule
+    /// (`AllreduceAlgorithm::RecursiveDoubling`, which is also what the
+    /// pipeline runs per bucket); `Ring` reorders combines by chunk index
+    /// and so only agrees to floating-point tolerance.
+    Bucketed {
+        /// Bucket size cap in bytes; tensors above the cap are split.
+        max_bytes: usize,
+    },
+}
+
+impl SyncStrategy {
+    /// Default bucket cap: 128 KiB ≈ the Horovod-style fusion granularity
+    /// scaled to Table-1 models (mnist_dnn's 712 KB vector → ~6 buckets).
+    pub const DEFAULT_BUCKET_BYTES: usize = 128 * 1024;
+
+    /// Parse `flat`, `bucketed`, or `bucketed:<bytes>`.
+    pub fn by_name(s: &str) -> Option<Self> {
+        match s {
+            "flat" => Some(Self::Flat),
+            "bucketed" => Some(Self::Bucketed {
+                max_bytes: Self::DEFAULT_BUCKET_BYTES,
+            }),
+            _ => {
+                let rest = s.strip_prefix("bucketed:")?;
+                let max_bytes: usize = rest.parse().ok().filter(|&b| b > 0)?;
+                Some(Self::Bucketed { max_bytes })
+            }
+        }
+    }
+}
+
 /// How replica compute executes.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ExecMode {
@@ -56,6 +102,8 @@ pub struct TrainConfig {
     pub lr: f32,
     pub sync: SyncMode,
     pub sync_every: SyncEvery,
+    /// Flat blocking allreduce vs bucketed overlapped pipeline.
+    pub sync_strategy: SyncStrategy,
     pub allreduce: AllreduceAlgorithm,
     pub mode: ExecMode,
     /// Scale factor on the paper's dataset sizes (1.0 = full size).
@@ -70,6 +118,11 @@ pub struct TrainConfig {
     pub broadcast_init: bool,
     pub seed: u64,
     pub fault_plan: FaultPlan,
+    /// Trim the communicator group's buffer pool down to this many buffers
+    /// per shelf at every epoch boundary (`None` = never trim, the
+    /// churn-free default). Bounds idle pool retention on long runs at the
+    /// cost of a few warm-up allocations at the next epoch's first steps.
+    pub pool_trim: Option<usize>,
     /// Print per-epoch progress lines from rank 0.
     pub verbose: bool,
 }
@@ -82,6 +135,7 @@ impl TrainConfig {
             lr: 0.1,
             sync: SyncMode::WeightAverage,
             sync_every: SyncEvery::Step,
+            sync_strategy: SyncStrategy::Flat,
             allreduce: AllreduceAlgorithm::Auto,
             mode: ExecMode::Real,
             data_scale: 0.05,
@@ -90,6 +144,7 @@ impl TrainConfig {
             broadcast_init: false,
             seed: 0xD7F,
             fault_plan: FaultPlan::none(),
+            pool_trim: None,
             verbose: false,
         }
     }
@@ -128,6 +183,11 @@ impl TrainConfig {
         self.seed = s;
         self
     }
+
+    pub fn with_strategy(mut self, s: SyncStrategy) -> Self {
+        self.sync_strategy = s;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -140,6 +200,24 @@ mod tests {
         assert_eq!(SyncMode::by_name("grad"), Some(SyncMode::GradientAverage));
         assert_eq!(SyncMode::by_name("none"), Some(SyncMode::None));
         assert_eq!(SyncMode::by_name("x"), None);
+    }
+
+    #[test]
+    fn sync_strategy_names() {
+        assert_eq!(SyncStrategy::by_name("flat"), Some(SyncStrategy::Flat));
+        assert_eq!(
+            SyncStrategy::by_name("bucketed"),
+            Some(SyncStrategy::Bucketed {
+                max_bytes: SyncStrategy::DEFAULT_BUCKET_BYTES
+            })
+        );
+        assert_eq!(
+            SyncStrategy::by_name("bucketed:65536"),
+            Some(SyncStrategy::Bucketed { max_bytes: 65536 })
+        );
+        assert_eq!(SyncStrategy::by_name("bucketed:0"), None);
+        assert_eq!(SyncStrategy::by_name("bucketed:x"), None);
+        assert_eq!(SyncStrategy::by_name("ring"), None);
     }
 
     #[test]

@@ -25,6 +25,14 @@ pub struct RankMetrics {
     pub compute_s: f64,
     /// Virtual seconds charged as communication (from `CommStats`).
     pub comm_s: f64,
+    /// Virtual seconds the *synchronization step* actually stalled the
+    /// rank (clock advance across sync minus the compute charged inside
+    /// it). Flat sync exposes the whole allreduce here; the bucketed
+    /// pipeline exposes only what compute could not hide — the
+    /// overlapped-vs-flat comparison in one number.
+    pub sync_exposed_s: f64,
+    /// Gradient buckets all-reduced (0 under `SyncStrategy::Flat`).
+    pub buckets_synced: u64,
     /// Virtual seconds charged as data loading/scatter.
     pub io_s: f64,
     /// Final virtual clock (makespan contribution).
@@ -41,6 +49,10 @@ pub struct RankMetrics {
     pub died: bool,
     /// Communicator size at the end (after any shrinks).
     pub final_world: usize,
+    /// FNV-1a digest of the final parameter bits — synchronized replicas
+    /// must agree on it exactly, and `Bucketed` must match `Flat` under a
+    /// position-independent allreduce schedule.
+    pub params_digest: u64,
 }
 
 impl RankMetrics {
@@ -51,6 +63,8 @@ impl RankMetrics {
             steps: 0,
             compute_s: 0.0,
             comm_s: 0.0,
+            sync_exposed_s: 0.0,
+            buckets_synced: 0,
             io_s: 0.0,
             clock_s: 0.0,
             wall_s: 0.0,
@@ -60,6 +74,7 @@ impl RankMetrics {
             evals: Vec::new(),
             died: false,
             final_world: 0,
+            params_digest: 0,
         }
     }
 
@@ -105,6 +120,29 @@ impl TrainReport {
     /// Samples/virtual-second across the job.
     pub fn throughput(&self) -> f64 {
         self.total_samples() as f64 / self.makespan_s().max(1e-12)
+    }
+
+    /// Mean virtual seconds a survivor stalled in the sync step — compare
+    /// across `SyncStrategy::{Flat, Bucketed}` to read the overlap win.
+    pub fn sync_exposed_mean_s(&self) -> f64 {
+        let alive: Vec<_> = self.per_rank.iter().filter(|r| !r.died).collect();
+        if alive.is_empty() {
+            return 0.0;
+        }
+        alive.iter().map(|r| r.sync_exposed_s).sum::<f64>() / alive.len() as f64
+    }
+
+    /// Do all surviving replicas hold bitwise-identical parameters?
+    pub fn replicas_bitwise_identical(&self) -> bool {
+        let mut digests = self
+            .per_rank
+            .iter()
+            .filter(|r| !r.died)
+            .map(|r| r.params_digest);
+        match digests.next() {
+            Some(first) => digests.all(|d| d == first),
+            None => true,
+        }
     }
 
     /// Mean fraction of virtual time spent communicating (survivors only).
@@ -180,5 +218,21 @@ mod tests {
         let e = report().final_eval().unwrap();
         assert_eq!(e.epoch, 1);
         assert!((e.accuracy - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replica_consistency_and_sync_exposure_helpers() {
+        let mut r = report();
+        r.per_rank[0].params_digest = 7;
+        r.per_rank[1].params_digest = 7;
+        r.per_rank[0].sync_exposed_s = 1.0;
+        r.per_rank[1].sync_exposed_s = 3.0;
+        assert!(r.replicas_bitwise_identical());
+        assert!((r.sync_exposed_mean_s() - 2.0).abs() < 1e-12);
+        // A diverged (or dead) rank breaks/bypasses the digest check.
+        r.per_rank[1].params_digest = 8;
+        assert!(!r.replicas_bitwise_identical());
+        r.per_rank[1].died = true;
+        assert!(r.replicas_bitwise_identical());
     }
 }

@@ -4,16 +4,24 @@
 //! scatter, per-rank replicas executing AOT-compiled JAX/Pallas artifacts,
 //! weight/gradient averaging via all-reduce, ULFM fault recovery, and
 //! virtual-clock metrics.
+//!
+//! Synchronization is strategy-selectable (`TrainConfig::sync_strategy`):
+//! [`sync`] is the paper's flat blocking allreduce; [`pipeline`] is the
+//! bucketed nonblocking engine that overlaps each layer's gradient
+//! allreduce with the rest of backprop while keeping replicas bitwise
+//! identical.
 
 pub mod config;
 pub mod launcher;
 pub mod metrics;
+pub mod pipeline;
 pub mod replica;
 pub mod sync;
 pub mod trainer;
 
-pub use config::{ExecMode, SyncEvery, SyncMode, TrainConfig};
+pub use config::{ExecMode, SyncEvery, SyncMode, SyncStrategy, TrainConfig};
 pub use launcher::run_training;
 pub use metrics::{EvalPoint, RankMetrics, TrainReport};
+pub use pipeline::{BucketPlan, GradBucket, PipelineEngine};
 pub use replica::{Replica, StepOutcome};
 pub use trainer::train_rank;

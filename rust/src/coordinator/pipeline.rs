@@ -1,0 +1,496 @@
+//! Bucketed, pipelined gradient synchronization — overlap backprop with
+//! allreduce.
+//!
+//! The paper's §3.3.3 sync is one blocking allreduce of the full flat
+//! vector per step, so communication fully serializes behind compute.
+//! Chunked, overlapped designs (Awan et al., arXiv:1810.11112; Horovod's
+//! tensor fusion) hide most of that cost: as backprop produces each
+//! layer's gradient — back to front — that layer's piece of the vector can
+//! already be in flight while earlier layers are still computing.
+//!
+//! Three pieces:
+//!
+//! * [`BucketPlan`] partitions the flat parameter vector into size-capped
+//!   contiguous buckets along tensor boundaries (reusing `chunk_range` to
+//!   split tensors bigger than the cap), ordered **back to front** — the
+//!   order gradients become available.
+//! * [`PipelineEngine`] owns the per-bucket [`IAllreduce`] states and one
+//!   persistent scratch buffer (sized to the largest bucket — progression
+//!   is serial, so one scratch serves every in-flight operation). Both
+//!   are allocated once at trainer start; the per-step path is
+//!   **allocation-free** (pinned by `tests/alloc_free_pipeline.rs`).
+//! * [`PipelineEngine::sync_step`] is the pipelined counterpart of
+//!   `sync::sync_replica`: it charges each bucket's share of the step's
+//!   backprop time to the virtual clock, launches that bucket's
+//!   nonblocking allreduce, and in a second phase waits each bucket just
+//!   before the optimizer applies it. Messages that arrived while later
+//!   layers were computing charge zero exposure
+//!   (`netmodel::fold_arrival`) — the overlap win emerges from the cost
+//!   model rather than being asserted.
+//!
+//! **Replica consistency:** every rank builds the identical plan (same
+//! specs), launches buckets in the same order, and recursive doubling's
+//! combine schedule is position-independent, so the bucketed result is
+//! bit-identical to the flat `RecursiveDoubling` path — replicas stay
+//! bitwise equal, `Bucketed` vs `Flat` stays bitwise equal
+//! (`tests/pipeline_parity.rs`).
+//!
+//! **ULFM:** any failure while launching or draining cancels every
+//! outstanding operation (`cancel_all`) before the error propagates, so
+//! the trainer's revoke → shrink → realign recovery finds no dangling
+//! state; stale envelopes die with the revoked communicator group.
+
+use std::ops::Range;
+
+use super::config::SyncMode;
+use super::replica::{Replica, StepOutcome};
+use crate::mpi::collectives::chunk_range;
+use crate::mpi::comm::Communicator;
+use crate::mpi::datatype::ReduceOp;
+use crate::mpi::error::{MpiError, MpiResult};
+use crate::mpi::IAllreduce;
+use crate::model::ParamSet;
+
+/// One contiguous, size-capped slice of the flat vector; buckets appear in
+/// launch order (back to front over the layer tensors).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GradBucket {
+    pub range: Range<usize>,
+}
+
+/// The step-invariant partition of the flat vector. Built once per
+/// training run; identical on every rank by construction.
+#[derive(Debug, Clone)]
+pub struct BucketPlan {
+    buckets: Vec<GradBucket>,
+    n_elems: usize,
+    max_bucket_len: usize,
+}
+
+impl BucketPlan {
+    /// Partition `tensor_ranges` (the flat-vector tiling in ABI = front-to-
+    /// back layer order) into buckets of at most `max_bytes`, walking the
+    /// tensors **back to front**. Adjacent tensors are packed into one
+    /// bucket while they fit; a tensor above the cap is split into
+    /// near-equal `chunk_range` pieces that each fit.
+    pub fn build(tensor_ranges: &[Range<usize>], max_bytes: usize) -> BucketPlan {
+        let cap = (max_bytes / std::mem::size_of::<f32>()).max(1);
+        let mut buckets: Vec<GradBucket> = Vec::new();
+        // The bucket being grown, accumulating *backwards* (its start
+        // moves down as earlier tensors join).
+        let mut cur: Option<Range<usize>> = None;
+        for r in tensor_ranges.iter().rev() {
+            if r.is_empty() {
+                continue;
+            }
+            if r.len() > cap {
+                if let Some(c) = cur.take() {
+                    buckets.push(GradBucket { range: c });
+                }
+                let parts = r.len().div_ceil(cap);
+                for i in (0..parts).rev() {
+                    let (s, e) = chunk_range(r.len(), parts, i);
+                    buckets.push(GradBucket {
+                        range: r.start + s..r.start + e,
+                    });
+                }
+                continue;
+            }
+            cur = match cur.take() {
+                None => Some(r.clone()),
+                Some(c) if r.end == c.start && c.len() + r.len() <= cap => {
+                    Some(r.start..c.end)
+                }
+                Some(c) => {
+                    buckets.push(GradBucket { range: c });
+                    Some(r.clone())
+                }
+            };
+        }
+        if let Some(c) = cur {
+            buckets.push(GradBucket { range: c });
+        }
+        let n_elems = buckets.iter().map(|b| b.range.len()).sum();
+        let max_bucket_len = buckets.iter().map(|b| b.range.len()).max().unwrap_or(0);
+        BucketPlan {
+            buckets,
+            n_elems,
+            max_bucket_len,
+        }
+    }
+
+    pub fn buckets(&self) -> &[GradBucket] {
+        &self.buckets
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Total elements covered (must equal the synced vector's length).
+    pub fn n_elems(&self) -> usize {
+        self.n_elems
+    }
+
+    pub fn max_bucket_len(&self) -> usize {
+        self.max_bucket_len
+    }
+}
+
+/// Per-rank pipelined sync engine: plan + reusable in-flight state.
+pub struct PipelineEngine {
+    plan: BucketPlan,
+    states: Vec<Option<IAllreduce>>,
+    scratch: Vec<f32>,
+}
+
+impl PipelineEngine {
+    pub fn new(plan: BucketPlan) -> PipelineEngine {
+        let states = (0..plan.n_buckets()).map(|_| None).collect();
+        let scratch = vec![0.0; plan.max_bucket_len()];
+        PipelineEngine {
+            plan,
+            states,
+            scratch,
+        }
+    }
+
+    /// Engine over a replica's parameter layout.
+    pub fn for_params(params: &ParamSet, max_bytes: usize) -> PipelineEngine {
+        let ranges: Vec<Range<usize>> = (0..params.n_tensors())
+            .map(|i| params.tensor_range(i))
+            .collect();
+        Self::new(BucketPlan::build(&ranges, max_bytes))
+    }
+
+    pub fn plan(&self) -> &BucketPlan {
+        &self.plan
+    }
+
+    /// Abandon every outstanding operation (ULFM recovery path).
+    pub fn cancel_all(&mut self) {
+        for st in self.states.iter_mut() {
+            if let Some(op) = st.as_mut() {
+                op.cancel();
+            }
+            *st = None;
+        }
+    }
+
+    /// Launch phase: walk buckets back to front, charging each bucket's
+    /// share of the step's backprop time *before* posting its allreduce —
+    /// bucket k's messages then travel while buckets k+1.. (earlier
+    /// layers) compute. After each post, every already-launched bucket is
+    /// driven forward by one round, so early buckets finish their whole
+    /// schedule under the compute still happening for later ones.
+    ///
+    /// The round-driving is deterministic *and* deadlock-free: every rank
+    /// runs the identical (step, bucket) drive schedule, and the message a
+    /// drive blocks on was posted by its peer at a strictly earlier point
+    /// of that shared schedule (a lagging pre-phase rank posts within the
+    /// same step, before anything that could wait on it) — the wait-for
+    /// graph is acyclic and consumption order is fixed by program order,
+    /// keeping virtual clocks bit-reproducible across runs.
+    fn launch(
+        &mut self,
+        comm: &Communicator,
+        data: &mut [f32],
+        compute_secs: f64,
+    ) -> MpiResult<()> {
+        if data.len() != self.plan.n_elems {
+            return Err(MpiError::Inconsistent(format!(
+                "pipeline plan covers {} elems, sync vector has {}",
+                self.plan.n_elems,
+                data.len()
+            )));
+        }
+        let total = self.plan.n_elems.max(1) as f64;
+        for i in 0..self.plan.buckets.len() {
+            let range = self.plan.buckets[i].range.clone();
+            comm.advance(compute_secs * range.len() as f64 / total);
+            match IAllreduce::start(comm, ReduceOp::Sum, &mut data[range]) {
+                Ok(op) => self.states[i] = Some(op),
+                Err(e) => {
+                    self.cancel_all();
+                    return Err(e);
+                }
+            }
+            for j in 0..i {
+                let r = self.plan.buckets[j].range.clone();
+                let drove = match self.states[j].as_mut() {
+                    Some(op) => op.drive_one_round(comm, &mut data[r], &mut self.scratch),
+                    None => Ok(false),
+                };
+                if let Err(e) = drove {
+                    self.cancel_all();
+                    return Err(e);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Drain phase: wait each bucket in launch order and hand its reduced
+    /// slice to `apply` (average + optimizer update) — the wait happens
+    /// only when the optimizer actually needs that bucket.
+    fn drain(
+        &mut self,
+        comm: &Communicator,
+        data: &mut [f32],
+        mut apply: impl FnMut(&mut [f32], &Range<usize>),
+    ) -> MpiResult<()> {
+        for i in 0..self.plan.buckets.len() {
+            let Some(mut op) = self.states[i].take() else {
+                continue;
+            };
+            let range = self.plan.buckets[i].range.clone();
+            let slice = &mut data[range.clone()];
+            if let Err(e) = op.wait(comm, slice, &mut self.scratch) {
+                self.cancel_all();
+                return Err(e);
+            }
+            apply(slice, &range);
+        }
+        Ok(())
+    }
+
+    /// Overlapped in-place allreduce-sum of `data`, modelling
+    /// `compute_secs` of producer compute spread over the buckets (the
+    /// bench's raw entry point). Bit-identical to a flat
+    /// `RecursiveDoubling` allreduce of `data`.
+    pub fn allreduce_overlapped(
+        &mut self,
+        comm: &Communicator,
+        data: &mut [f32],
+        compute_secs: f64,
+    ) -> MpiResult<()> {
+        self.launch(comm, data, compute_secs)?;
+        self.drain(comm, data, |_, _| {})
+    }
+
+    /// Pipelined counterpart of `sync::sync_replica` for the per-step
+    /// path. Charges the step's `compute_secs` to the virtual clock
+    /// incrementally (the caller must NOT advance it separately) and
+    /// returns the bytes all-reduced.
+    pub fn sync_step(
+        &mut self,
+        comm: &Communicator,
+        replica: &mut Replica,
+        outcome: &StepOutcome,
+        mode: SyncMode,
+        compute_secs: f64,
+    ) -> MpiResult<usize> {
+        if comm.size() == 1 || mode == SyncMode::None {
+            comm.advance(compute_secs);
+            if let (SyncMode::GradientAverage, StepOutcome::Grads { .. }) = (mode, outcome) {
+                replica.apply_local_grads();
+            }
+            return Ok(0);
+        }
+        // Scaling must match the flat path *operation for operation* to
+        // preserve bitwise parity: weight mode multiplies by the
+        // reciprocal (like `ParamSet::scale`), gradient mode divides by
+        // the count (like `sync_replica`) — `x / p` and `x * (1/p)` round
+        // differently for non-power-of-two p.
+        let inv_p = 1.0 / comm.size() as f32;
+        let p_f = comm.size() as f32;
+        match mode {
+            SyncMode::WeightAverage => {
+                // In place on the parameter vector: all-reduce each bucket
+                // as its layer's update lands, average on arrival.
+                let n = replica.params.n_params();
+                self.launch(comm, replica.params.flat_mut(), compute_secs)?;
+                self.drain(comm, replica.params.flat_mut(), |slice, _| {
+                    for v in slice.iter_mut() {
+                        *v *= inv_p;
+                    }
+                })?;
+                Ok(n * 4)
+            }
+            SyncMode::GradientAverage => {
+                // Same persistent-scratch discipline as the flat path:
+                // borrow the replica's sync scratch, restore it on every
+                // exit so ULFM recovery can retry without reallocating.
+                let n = replica.grad_flat().len();
+                let mut g = std::mem::take(&mut replica.sync_scratch);
+                if g.len() != n {
+                    g.resize(n, 0.0);
+                }
+                g.copy_from_slice(replica.grad_flat());
+                let res = match self.launch(comm, &mut g, compute_secs) {
+                    Ok(()) => {
+                        let params = &mut replica.params;
+                        self.drain(comm, &mut g, |slice, range| {
+                            for v in slice.iter_mut() {
+                                *v /= p_f;
+                            }
+                            params.sub_assign_range(range.start, slice);
+                        })
+                    }
+                    Err(e) => Err(e),
+                };
+                replica.sync_scratch = g;
+                res.map(|()| n * 4)
+            }
+            SyncMode::None => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::collectives::AllreduceAlgorithm;
+    use crate::mpi::netmodel::NetProfile;
+    use crate::mpi::world::World;
+    use crate::mpi::{allreduce_with, barrier};
+
+    fn ranges(sizes: &[usize]) -> Vec<Range<usize>> {
+        let mut out = Vec::new();
+        let mut off = 0;
+        for &s in sizes {
+            out.push(off..off + s);
+            off += s;
+        }
+        out
+    }
+
+    #[test]
+    fn plan_partitions_back_to_front_with_cap() {
+        // cap = 100 elems (400 bytes); tensors front-to-back: 30,80,20,50.
+        let plan = BucketPlan::build(&ranges(&[30, 80, 20, 50]), 400);
+        // Back to front: 50 then +20 (70 ≤ 100), 80 alone... +30 would be
+        // 110 > 100 → buckets [110..180), [30..110), [0..30).
+        let got: Vec<Range<usize>> =
+            plan.buckets().iter().map(|b| b.range.clone()).collect();
+        assert_eq!(got, vec![110..180, 30..110, 0..30]);
+        assert_eq!(plan.n_elems(), 180);
+        assert_eq!(plan.max_bucket_len(), 80);
+    }
+
+    #[test]
+    fn plan_splits_oversized_tensors_via_chunk_range() {
+        // One 1000-elem tensor, cap 300 elems → 4 near-equal pieces,
+        // back-to-front, each ≤ 300.
+        let plan = BucketPlan::build(&ranges(&[1000]), 1200);
+        assert_eq!(plan.n_buckets(), 4);
+        assert_eq!(plan.n_elems(), 1000);
+        let mut covered: Vec<Range<usize>> =
+            plan.buckets().iter().map(|b| b.range.clone()).collect();
+        assert!(plan.buckets().iter().all(|b| b.range.len() <= 300));
+        // Launch order is descending; sorted they tile [0, 1000).
+        covered.sort_by_key(|r| r.start);
+        let mut prev = 0;
+        for r in covered {
+            assert_eq!(r.start, prev);
+            prev = r.end;
+        }
+        assert_eq!(prev, 1000);
+    }
+
+    #[test]
+    fn plan_always_covers_with_tiny_cap() {
+        let plan = BucketPlan::build(&ranges(&[3, 1, 7, 2]), 1); // cap < 1 elem → 1
+        assert_eq!(plan.n_elems(), 13);
+        assert!(plan.buckets().iter().all(|b| b.range.len() == 1));
+        assert_eq!(plan.n_buckets(), 13);
+    }
+
+    #[test]
+    fn overlapped_allreduce_matches_flat_rd_bitwise() {
+        for p in [1usize, 2, 3, 5, 8] {
+            let sizes = [17usize, 64, 9, 33, 128];
+            let n: usize = sizes.iter().sum();
+            let w = World::new(p, NetProfile::zero());
+            let out = w.run_unwrap(move |c| {
+                let mk = |r: usize| -> Vec<f32> {
+                    (0..n).map(|i| ((r * 31 + i * 17) % 101) as f32 * 0.25 - 12.0).collect()
+                };
+                let mut eng = PipelineEngine::new(BucketPlan::build(&ranges(&sizes), 256));
+                let mut piped = mk(c.rank());
+                eng.allreduce_overlapped(&c, &mut piped, 0.0)?;
+                let mut flat = mk(c.rank());
+                allreduce_with(
+                    &c,
+                    AllreduceAlgorithm::RecursiveDoubling,
+                    ReduceOp::Sum,
+                    &mut flat,
+                )?;
+                Ok((piped, flat))
+            });
+            for (rank, (piped, flat)) in out.iter().enumerate() {
+                for i in 0..n {
+                    assert_eq!(
+                        piped[i].to_bits(),
+                        flat[i].to_bits(),
+                        "p={p} rank={rank} i={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_hides_communication_in_virtual_time() {
+        // p=8 on InfiniBand, a vector big enough that comm matters, and
+        // one step's worth of backprop to hide it behind: the pipelined
+        // sync must finish in less virtual time than compute-then-flat.
+        let p = 8usize;
+        let n = 200_000usize;
+        let compute = 3e-4f64; // 300 µs of backprop per step
+        let sizes = [50_000usize, 50_000, 50_000, 50_000];
+        let flat_time = {
+            let w = World::new(p, NetProfile::infiniband_fdr());
+            let clocks = w.run_unwrap(move |c| {
+                barrier(&c)?;
+                let t0 = c.clock();
+                let mut v = vec![1.0f32; n];
+                c.advance(compute);
+                allreduce_with(
+                    &c,
+                    AllreduceAlgorithm::RecursiveDoubling,
+                    ReduceOp::Sum,
+                    &mut v,
+                )?;
+                Ok(c.clock() - t0)
+            });
+            clocks.into_iter().fold(0.0, f64::max)
+        };
+        let piped_time = {
+            let w = World::new(p, NetProfile::infiniband_fdr());
+            let clocks = w.run_unwrap(move |c| {
+                let mut eng =
+                    PipelineEngine::new(BucketPlan::build(&ranges(&sizes), 200_000));
+                barrier(&c)?;
+                let t0 = c.clock();
+                let mut v = vec![1.0f32; n];
+                eng.allreduce_overlapped(&c, &mut v, compute)?;
+                Ok(c.clock() - t0)
+            });
+            clocks.into_iter().fold(0.0, f64::max)
+        };
+        assert!(
+            piped_time < flat_time * 0.9,
+            "overlap should hide ≥10% of the step: piped {piped_time} vs flat {flat_time}"
+        );
+    }
+
+    #[test]
+    fn mismatched_vector_length_is_rejected() {
+        let w = World::new(2, NetProfile::zero());
+        w.run_unwrap(|c| {
+            let mut eng = PipelineEngine::new(BucketPlan::build(&ranges(&[8, 8]), 64));
+            let mut v = vec![0.0f32; 10];
+            assert!(matches!(
+                eng.allreduce_overlapped(&c, &mut v, 0.0),
+                Err(MpiError::Inconsistent(_))
+            ));
+            // Peers must stay matched: run the real thing so neither rank
+            // exits with the other mid-collective.
+            let mut ok = vec![1.0f32; 16];
+            eng.allreduce_overlapped(&c, &mut ok, 0.0)?;
+            assert!(ok.iter().all(|&x| x == 2.0));
+            Ok(())
+        });
+    }
+}

@@ -126,6 +126,30 @@ impl Replica {
         self.params.sub_assign(&self.grad_flat);
     }
 
+    /// Sim-mode pseudo-gradients: a cheap, allocation-free, deterministic
+    /// function of the current parameters and this rank's batch contents
+    /// (summarized into one scalar). Shards differ per rank, so unsynced
+    /// replicas drift — exactly the property the sync-path tests need —
+    /// while identical inputs give bit-identical gradients on every run.
+    fn fill_synthetic_grads(&mut self) {
+        let mut batch_sig = 0.0f32;
+        let stride = (self.x_buf.len() / 16).max(1);
+        for &x in self.x_buf.iter().step_by(stride) {
+            batch_sig += x;
+        }
+        batch_sig *= 1e-4;
+        let lr = self.lr_buf[0];
+        for (i, (g, &p)) in self
+            .grad_flat
+            .iter_mut()
+            .zip(self.params.flat())
+            .enumerate()
+        {
+            // Weight-decay-like pull plus a batch-dependent ripple.
+            *g = lr * (1e-2 * p + batch_sig * (((i % 29) as f32) - 14.0) * 1e-3);
+        }
+    }
+
     pub fn set_lr(&mut self, lr: f32) {
         self.lr_buf[0] = lr;
     }
@@ -147,7 +171,16 @@ impl Replica {
             Backend::Sim { secs_per_sample } => {
                 let secs = secs_per_sample * self.batch as f64;
                 let out = match sync {
-                    SyncMode::GradientAverage => StepOutcome::Grads { loss: f32::NAN },
+                    SyncMode::GradientAverage => {
+                        // Losses are meaningless in Sim mode, but the sync
+                        // *data path* should still be exercised end to end:
+                        // produce deterministic pseudo-gradients that depend
+                        // on this rank's batch, so replicas genuinely
+                        // diverge without synchronization and the parity
+                        // tests compare real (non-zero) traffic.
+                        self.fill_synthetic_grads();
+                        StepOutcome::Grads { loss: f32::NAN }
+                    }
                     _ => StepOutcome::Updated { loss: f32::NAN },
                 };
                 Ok((out, secs))

@@ -1,18 +1,38 @@
 //! The paper's synchronization step (§3.3.3): synchronous averaging of the
-//! replicated model over MPI all-reduce.
+//! replicated model over MPI all-reduce — the **flat** strategy.
 //!
 //! Weight-averaging mode all-reduces the full flat parameter vector and
 //! divides by the rank count; gradient-averaging all-reduces the
 //! (lr-prescaled) gradient vector and applies it. Both are a *single*
-//! allreduce of `n_params` floats — the communication volume the paper's
-//! performance model calls `n² · l`.
+//! blocking allreduce of `n_params` floats — the communication volume the
+//! paper's performance model calls `n² · l` — issued strictly *after* the
+//! local step, so compute and communication serialize.
 //!
-//! Hot-path contract: with `SyncEvery::Step`, this function performs
-//! **zero heap allocations** after warmup. Gradient mode borrows the
-//! replica's persistent `sync_scratch` (sized once at construction) via
-//! `mem::take`, and the allreduce underneath runs on the pooled
-//! `recv_into` transport. `tests/alloc_free_sync.rs` asserts this with a
-//! counting allocator.
+//! # Where this sits in the sync architecture
+//!
+//! [`sync_replica`] is one of two interchangeable per-step engines behind
+//! `TrainConfig::sync_strategy`:
+//!
+//! * `SyncStrategy::Flat` → this module: simplest, matches the paper's
+//!   text, communication fully exposed on the virtual clock.
+//! * `SyncStrategy::Bucketed` → [`super::pipeline`]: the flat vector is
+//!   split into size-capped per-layer buckets, each launched as a
+//!   nonblocking [`IAllreduce`](crate::mpi::IAllreduce) the moment
+//!   backprop produces that layer's gradient, and waited on only when the
+//!   optimizer applies the bucket — communication overlaps compute.
+//!
+//! Both engines produce bitwise-identical replicas; with a
+//! position-independent reduction schedule
+//! (`AllreduceAlgorithm::RecursiveDoubling`) they are also bitwise
+//! identical *to each other*, which `tests/pipeline_parity.rs` pins.
+//!
+//! Hot-path contract (shared with the pipeline): with `SyncEvery::Step`,
+//! synchronization performs **zero heap allocations** after warmup.
+//! Gradient mode borrows the replica's persistent `sync_scratch` (sized
+//! once, restored even on ULFM error paths) via `mem::take`, and the
+//! collectives underneath run on the pooled `recv_into` transport.
+//! `tests/alloc_free_sync.rs` and `tests/alloc_free_pipeline.rs` assert
+//! this with a counting allocator.
 
 use super::config::SyncMode;
 use super::replica::{Replica, StepOutcome};

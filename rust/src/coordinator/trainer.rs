@@ -3,15 +3,19 @@
 //! Per rank: receive a shard from rank 0 (§3.3.1), replicate the model
 //! (§3.3.2), then for every epoch run local backprop steps through the AOT
 //! artifact and synchronously average weights/biases over all-reduce
-//! (§3.3.3). ULFM recovery (§2.2) wraps the epoch: on a peer failure the
-//! survivors revoke, shrink, re-align their replicas with one averaging
-//! all-reduce, and keep training.
+//! (§3.3.3) — either the flat blocking allreduce (`SyncStrategy::Flat`) or
+//! the bucketed pipeline that overlaps each layer's allreduce with the
+//! remaining backprop (`SyncStrategy::Bucketed`, see `pipeline`). ULFM
+//! recovery (§2.2) wraps the epoch: on a peer failure the survivors cancel
+//! any in-flight buckets, revoke, shrink, re-align their replicas with one
+//! averaging all-reduce, and keep training.
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use super::config::{SyncEvery, SyncMode, TrainConfig};
+use super::config::{SyncEvery, SyncMode, SyncStrategy, TrainConfig};
 use super::metrics::{EvalPoint, RankMetrics};
+use super::pipeline::PipelineEngine;
 use super::replica::Replica;
 use super::sync::{sync_metrics, sync_replica};
 use crate::data::{load_train_test, scatter_dataset, BatchIter, Dataset};
@@ -64,6 +68,16 @@ pub fn train_rank(
     // Per-rank shuffle stream: epoch order differs per rank and per epoch.
     let mut rng = Rng::new(cfg.seed ^ (0xA5A5 + comm.world_rank() as u64));
 
+    // Bucketed strategy: build the (step-invariant) bucket plan and the
+    // pipelined engine once — identical on every rank since it derives
+    // from the shared architecture spec. All per-step state is reused.
+    let mut pipeline = match cfg.sync_strategy {
+        SyncStrategy::Bucketed { max_bytes } => {
+            Some(PipelineEngine::for_params(&replica.params, max_bytes))
+        }
+        SyncStrategy::Flat => None,
+    };
+
     // ---- epochs ----------------------------------------------------------
     let mut epoch = 0usize;
     while epoch < cfg.epochs {
@@ -71,7 +85,15 @@ pub fn train_rank(
             metrics.died = true;
             break;
         }
-        match run_epoch(&comm, cfg, &mut replica, &train_shard, &mut rng, &mut metrics) {
+        match run_epoch(
+            &comm,
+            cfg,
+            &mut replica,
+            &train_shard,
+            &mut rng,
+            &mut metrics,
+            pipeline.as_mut(),
+        ) {
             Ok(mean_loss) => {
                 metrics.epoch_losses.push(mean_loss);
                 if cfg.verbose && comm.rank() == 0 && replica.is_real() {
@@ -90,11 +112,27 @@ pub fn train_rank(
                         metrics.evals.push(ev);
                     }
                 }
+                // Epoch boundary: optionally trim the shared group pool
+                // back to a small per-shelf depth (ROADMAP "Pool
+                // follow-ups" (b)). Each rank calls this as *it* crosses
+                // the boundary — the pool is shared, so later calls are
+                // mostly no-ops, and a straggler mid-collective is safe
+                // (trim only shrinks free shelves; see `trim_to`). The
+                // next epoch's first steps re-warm the shelves; steady
+                // state within an epoch stays allocation-free either way.
+                if let Some(keep) = cfg.pool_trim {
+                    comm.pool().trim_to(keep);
+                }
                 epoch += 1;
             }
             Err(MpiError::ProcFailed { .. }) | Err(MpiError::Revoked) => {
-                // ULFM recovery: revoke so every survivor aborts, shrink,
-                // re-align replicas, retry this epoch on the survivors.
+                // ULFM recovery: cancel any in-flight bucket allreduces
+                // (their envelopes die with the revoked group), revoke so
+                // every survivor aborts, shrink, re-align replicas, retry
+                // this epoch on the survivors.
+                if let Some(engine) = pipeline.as_mut() {
+                    engine.cancel_all();
+                }
                 comm.revoke();
                 comm = comm.shrink()?;
                 realign(&comm, &mut replica)?;
@@ -122,6 +160,7 @@ pub fn train_rank(
     let mut final_stats = comm.stats();
     final_stats.comm_vtime -= comm_at_train_start;
     metrics.absorb_comm(final_stats);
+    metrics.params_digest = replica.params.bits_digest();
     metrics.clock_s = comm.clock();
     metrics.wall_s = wall0.elapsed().as_secs_f64();
     metrics.final_world = comm.size();
@@ -136,6 +175,7 @@ fn run_epoch(
     shard: &Dataset,
     rng: &mut Rng,
     metrics: &mut RankMetrics,
+    mut pipeline: Option<&mut PipelineEngine>,
 ) -> std::result::Result<f64, MpiError> {
     // Lockstep step count: shards differ by ≤1 sample, but a synchronous
     // collective per step requires every rank to agree exactly.
@@ -167,7 +207,6 @@ fn run_epoch(
         let (outcome, secs) = replica.step(cfg.sync).map_err(|e| {
             MpiError::Inconsistent(format!("replica step failed: {e:#}"))
         })?;
-        comm.advance(secs);
         metrics.compute_s += secs;
         metrics.steps += 1;
         metrics.samples_trained += replica.batch as u64;
@@ -175,11 +214,25 @@ fn run_epoch(
             loss_sum += outcome.loss() as f64;
             loss_n += 1;
         }
+        // Compute time + synchronization. The pipelined engine charges the
+        // step's compute to the virtual clock *incrementally* (launching a
+        // bucket's allreduce after its layers' share of backprop); every
+        // other path charges it up front. Whatever the clock moved beyond
+        // `secs` is synchronization stall — the overlap metric.
+        let sync_t0 = comm.clock();
         match cfg.sync_every {
-            SyncEvery::Step => {
-                sync_replica(comm, replica, &outcome, cfg.sync, cfg.allreduce)?;
-            }
+            SyncEvery::Step => match pipeline.as_deref_mut() {
+                Some(engine) if cfg.sync != SyncMode::None && comm.size() > 1 => {
+                    engine.sync_step(comm, replica, &outcome, cfg.sync, secs)?;
+                    metrics.buckets_synced += engine.plan().n_buckets() as u64;
+                }
+                _ => {
+                    comm.advance(secs);
+                    sync_replica(comm, replica, &outcome, cfg.sync, cfg.allreduce)?;
+                }
+            },
             SyncEvery::Epoch => {
+                comm.advance(secs);
                 // No communication inside the epoch; gradient mode still
                 // applies its *local* update (allocation-free).
                 if let super::replica::StepOutcome::Grads { .. } = outcome {
@@ -187,6 +240,7 @@ fn run_epoch(
                 }
             }
         }
+        metrics.sync_exposed_s += (comm.clock() - sync_t0 - secs).max(0.0);
     }
     if cfg.sync_every == SyncEvery::Epoch && cfg.sync != SyncMode::None {
         // End-of-epoch weight average realigns the drifted replicas

@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 
-use dtf::coordinator::{run_training, ExecMode, SyncEvery, SyncMode, TrainConfig};
+use dtf::coordinator::{run_training, ExecMode, SyncEvery, SyncMode, SyncStrategy, TrainConfig};
 use dtf::figures::{self, runner};
 use dtf::mpi::{AllreduceAlgorithm, NetProfile};
 use dtf::runtime::Manifest;
@@ -44,7 +44,8 @@ dtf — Distributed TensorFlow with MPI (PNNL 2016), Rust+JAX+Pallas reproductio
 
 USAGE:
   dtf train --arch <id> [--ranks N] [--epochs N] [--lr F] [--sync weight|grad|none]
-            [--sync-every step|epoch] [--alg auto|ring|rd|tree]
+            [--sync-every step|epoch] [--sync-strategy flat|bucketed[:BYTES]]
+            [--alg auto|ring|rd|tree] [--pool-trim N]
             [--profile ib|socket|bgq|shm] [--sim <secs/sample>|auto]
             [--scale F] [--steps-cap N] [--eval-every N] [--seed N] [--quiet]
   dtf figures [--id fig1..fig6|higgs|ablate-*|all] [--epochs N] [--out-dir D]
@@ -69,8 +70,9 @@ fn parse_profile(args: &Args) -> Result<NetProfile> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     args.check_known(&[
-        "arch", "ranks", "epochs", "lr", "sync", "sync-every", "alg", "profile",
-        "sim", "scale", "steps-cap", "eval-every", "seed", "quiet", "broadcast-init",
+        "arch", "ranks", "epochs", "lr", "sync", "sync-every", "sync-strategy", "alg",
+        "pool-trim", "profile", "sim", "scale", "steps-cap", "eval-every", "seed",
+        "quiet", "broadcast-init",
     ])?;
     let manifest = load_manifest()?;
     let arch = args
@@ -96,8 +98,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         "epoch" => SyncEvery::Epoch,
         other => anyhow::bail!("--sync-every must be step|epoch, got {other}"),
     };
+    cfg.sync_strategy = SyncStrategy::by_name(args.str_or("sync-strategy", "flat"))
+        .ok_or_else(|| {
+            anyhow::anyhow!("--sync-strategy must be flat|bucketed|bucketed:<bytes>")
+        })?;
     cfg.allreduce = AllreduceAlgorithm::by_name(args.str_or("alg", "auto"))
         .ok_or_else(|| anyhow::anyhow!("--alg must be auto|ring|rd|tree"))?;
+    if let Some(keep) = args.get("pool-trim") {
+        cfg.pool_trim = Some(keep.parse()?);
+    }
     if let Some(sim) = args.get("sim") {
         let sps = if sim == "auto" {
             let v = runner::calibrate(&manifest, arch)?;
@@ -122,6 +131,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     println!("  throughput         {:.0} samples/s (virtual)", report.throughput());
     println!("  comm share         {:.1}%", report.comm_fraction() * 100.0);
+    println!(
+        "  sync stall         {:.4} s/rank (mean; what overlap hides)",
+        report.sync_exposed_mean_s()
+    );
     println!("  samples trained    {}", report.total_samples());
     if !report.losses().is_empty() {
         println!("  epoch losses       {:?}", report.losses());

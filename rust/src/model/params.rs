@@ -55,6 +55,16 @@ impl ParamSet {
         &mut self.flat
     }
 
+    /// Flat-vector range `[start, end)` of tensor `i` (ABI order) — the
+    /// unit the gradient-bucket planner packs. Tensor `i`'s gradient
+    /// becomes available when backprop reaches its layer, so a plan built
+    /// from these ranges knows both *where* each bucket lives and *when*
+    /// it can be launched.
+    pub fn tensor_range(&self, i: usize) -> std::ops::Range<usize> {
+        let s = self.offsets[i];
+        s..s + self.shapes[i].numel()
+    }
+
     /// Slice view of tensor `i` (ABI order).
     pub fn view(&self, i: usize) -> &[f32] {
         let s = self.offsets[i];
@@ -89,11 +99,46 @@ impl ParamSet {
         }
     }
 
+    /// `self[start..start+delta.len()] -= delta` — the bucketed pipeline
+    /// applies each gradient bucket the moment its allreduce lands instead
+    /// of waiting for the whole vector.
+    pub fn sub_assign_range(&mut self, start: usize, delta: &[f32]) {
+        let dst = &mut self.flat[start..start + delta.len()];
+        for (p, d) in dst.iter_mut().zip(delta) {
+            *p -= d;
+        }
+    }
+
     /// `self *= s` — used after a sum-allreduce to divide by rank count.
     pub fn scale(&mut self, s: f32) {
         for p in self.flat.iter_mut() {
             *p *= s;
         }
+    }
+
+    /// `self[range] *= s` — per-bucket averaging for the pipelined
+    /// weight-average path.
+    pub fn scale_range(&mut self, range: std::ops::Range<usize>, s: f32) {
+        for p in self.flat[range].iter_mut() {
+            *p *= s;
+        }
+    }
+
+    /// FNV-1a digest over the exact bit patterns of the flat vector.
+    /// Two replicas (or two sync strategies) agree on this iff they agree
+    /// **bitwise** — the currency of the `Bucketed == Flat` parity tests
+    /// and the cross-rank consistency checks in the training report.
+    pub fn bits_digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &x in &self.flat {
+            let mut b = x.to_bits();
+            for _ in 0..4 {
+                h ^= u64::from(b & 0xFF);
+                h = h.wrapping_mul(0x0000_0100_0000_01B3);
+                b >>= 8;
+            }
+        }
+        h
     }
 
     pub fn l2_norm(&self) -> f64 {
@@ -157,11 +202,45 @@ mod tests {
     }
 
     #[test]
+    fn tensor_ranges_tile_the_flat_vector() {
+        let p = ParamSet::zeros(&spec());
+        let mut prev_end = 0;
+        for i in 0..p.n_tensors() {
+            let r = p.tensor_range(i);
+            assert_eq!(r.start, prev_end);
+            assert_eq!(r.len(), p.view(i).len());
+            prev_end = r.end;
+        }
+        assert_eq!(prev_end, p.n_params());
+    }
+
+    #[test]
+    fn ranged_ops_touch_only_their_range() {
+        let mut p = ParamSet::zeros(&spec());
+        p.flat_mut().iter_mut().for_each(|x| *x = 1.0);
+        p.sub_assign_range(6, &[0.5, 0.5]); // tensor 1 ([6..8])
+        p.scale_range(0..2, 4.0);
+        assert_eq!(&p.flat()[..3], &[4.0, 4.0, 1.0]);
+        assert_eq!(&p.flat()[6..9], &[0.5, 0.5, 1.0]);
+    }
+
+    #[test]
     fn divergence_detector() {
         let mut a = ParamSet::zeros(&spec());
         let b = ParamSet::zeros(&spec());
         assert_eq!(a.max_abs_diff(&b), 0.0);
         a.view_mut(0)[0] = 0.5;
         assert_eq!(a.max_abs_diff(&b), 0.5);
+    }
+
+    #[test]
+    fn bits_digest_detects_single_bit_flips() {
+        let mut a = ParamSet::zeros(&spec());
+        let b = ParamSet::zeros(&spec());
+        assert_eq!(a.bits_digest(), b.bits_digest());
+        // -0.0 == 0.0 numerically but differs bitwise: the digest must see it.
+        a.view_mut(0)[0] = -0.0;
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+        assert_ne!(a.bits_digest(), b.bits_digest());
     }
 }

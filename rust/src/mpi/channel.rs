@@ -151,6 +151,28 @@ impl Mailbox {
             .any(|e| src.map_or(true, |s| e.src == s) && tag.map_or(true, |t| e.tag == t))
     }
 
+    /// Non-blocking matched receive: remove and return the first matching
+    /// envelope if one is already queued (the `MPI_Test` path of a posted
+    /// receive). `Ok(None)` means "not yet" — the caller's request stays
+    /// pending. Errors only on world teardown.
+    pub fn try_recv_match(
+        &self,
+        src: Option<usize>,
+        tag: Option<Tag>,
+    ) -> MpiResult<Option<Envelope>> {
+        let mut g = self.inner.lock().unwrap();
+        let pos = g.queue.iter().position(|e| {
+            src.map_or(true, |s| e.src == s) && tag.map_or(true, |t| e.tag == t)
+        });
+        if let Some(pos) = pos {
+            return Ok(Some(g.queue.remove(pos).expect("position just found")));
+        }
+        if g.closed {
+            return Err(MpiError::Shutdown);
+        }
+        Ok(None)
+    }
+
     /// Scan `queue[*scanned..]` for a match, advancing the cursor past
     /// non-matching envelopes so they are never examined twice by this
     /// receive. Sound because of the single-consumer discipline: while a
@@ -326,6 +348,26 @@ mod tests {
         let first = mb.recv_match(Some(0), Some(1), || None).unwrap();
         assert_eq!(first.take_buffer(), Buffer::F32(vec![0.0]));
         assert_eq!(mb.len(), 9);
+    }
+
+    #[test]
+    fn try_recv_match_nonblocking_semantics() {
+        let mb = Mailbox::new();
+        // Empty queue: pending, not an error.
+        assert!(mb.try_recv_match(Some(0), Some(1)).unwrap().is_none());
+        mb.push(env(0, 1, vec![1.0]));
+        mb.push(env(0, 2, vec![2.0]));
+        // Non-matching tag stays queued; matching one is removed.
+        let hit = mb.try_recv_match(Some(0), Some(2)).unwrap().unwrap();
+        assert_eq!(hit.take_buffer(), Buffer::F32(vec![2.0]));
+        assert_eq!(mb.len(), 1);
+        // Closed + drained: Shutdown (matches the blocking path).
+        let _ = mb.try_recv_match(Some(0), Some(1)).unwrap().unwrap();
+        mb.close();
+        assert!(matches!(
+            mb.try_recv_match(Some(0), Some(1)),
+            Err(MpiError::Shutdown)
+        ));
     }
 
     #[test]

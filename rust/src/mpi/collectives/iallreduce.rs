@@ -1,0 +1,486 @@
+//! Nonblocking allreduce (`MPI_Iallreduce`): a recursive-doubling state
+//! machine driven through the request layer's test/wait discipline.
+//!
+//! `IAllreduce::start` posts the operation's first-round send immediately
+//! and returns a handle; each subsequent round runs when the handle is
+//! driven (`test` consumes whatever has already arrived, `wait` blocks the
+//! current round to completion). Between `start` and the final `wait` the
+//! caller is free to compute — messages that arrive during that compute
+//! charge **zero** virtual-clock exposure (see `netmodel::fold_arrival`),
+//! which is the entire point: the bucketed gradient pipeline launches one
+//! of these per bucket as backprop produces it and only waits right before
+//! the optimizer applies that bucket.
+//!
+//! Why recursive doubling (and not ring) underneath:
+//!
+//! * **Bitwise stability under bucketing.** Recursive doubling combines
+//!   every element along the *same* rank schedule regardless of its
+//!   position in the vector, so allreducing a vector in size-capped pieces
+//!   yields bit-identical results to allreducing it whole. The ring's
+//!   reduce-scatter assigns each element a combine order by *chunk index*
+//!   — repartitioning the vector changes the floating-point rounding. The
+//!   trainer's `Bucketed == Flat` parity guarantee rests on this property
+//!   (pinned by `tests/pipeline_parity.rs`).
+//! * **Latency-optimality at bucket sizes.** Buckets are capped well below
+//!   the ring/rd crossover (~16 KiB–256 KiB), where `log₂ p` full-vector
+//!   exchanges beat `2(p-1)` chunk exchanges.
+//!
+//! The handle does not own its buffers: the caller passes the *same*
+//! `data` (and a scratch of at least `data.len()`) to every `test`/`wait`
+//! call — this keeps the pipelined engine allocation-free (one persistent
+//! scratch serves every in-flight bucket, since progression is serial) and
+//! keeps the struct free of self-referential borrows.
+//!
+//! State layout mirrors the blocking `recursive_doubling` in
+//! `allreduce.rs` exactly — same pre/core/post phases, same peer formula,
+//! same `reduce_in_place(op, data, incoming)` combine per round — so the
+//! two produce bit-identical results (`tests/pipeline_parity.rs` also pins
+//! this against the frozen `compat` reference).
+
+use crate::mpi::comm::{CollKind, Communicator};
+use crate::mpi::datatype::{reduce_in_place, Reducible, ReduceOp};
+use crate::mpi::error::{MpiError, MpiResult};
+use crate::mpi::Tag;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Odd pre-phase rank: waiting for the even partner's vector.
+    PreRecv,
+    /// Core exchange: waiting for the round-`mask` peer's vector.
+    Core { mask: usize },
+    /// Even pre-phase rank: retired from the core, waiting for the final
+    /// vector from the odd partner.
+    PostRecv,
+    Done,
+}
+
+/// A posted nonblocking allreduce. See the module docs for the driving
+/// contract (same `data`/`scratch` on every call).
+#[derive(Debug)]
+#[must_use = "an iallreduce makes no progress until test()/wait() drives it"]
+pub struct IAllreduce {
+    op: ReduceOp,
+    tag: Tag,
+    /// Element count the operation was posted with — every later call must
+    /// pass a `data` of exactly this length.
+    n: usize,
+    me: usize,
+    pof2: usize,
+    rem: usize,
+    /// Rank id within the power-of-two core (-1 = retired even pre-rank).
+    newrank: isize,
+    phase: Phase,
+}
+
+impl IAllreduce {
+    /// Post the operation: computes the schedule and sends this rank's
+    /// first-round message (charging the sender's injection overhead now).
+    /// `data` holds this rank's contribution and will hold the result.
+    pub fn start<T: Reducible>(
+        comm: &Communicator,
+        op: ReduceOp,
+        data: &mut [T],
+    ) -> MpiResult<IAllreduce> {
+        let p = comm.size();
+        let me = comm.rank();
+        let tag = comm.next_coll_tag(CollKind::Iallreduce);
+        let n = data.len();
+        if p == 1 {
+            return Ok(IAllreduce {
+                op,
+                tag,
+                n,
+                me,
+                pof2: 1,
+                rem: 0,
+                newrank: 0,
+                phase: Phase::Done,
+            });
+        }
+        let pof2 = p.next_power_of_two() >> usize::from(!p.is_power_of_two());
+        let rem = p - pof2;
+        let mut op_state = IAllreduce {
+            op,
+            tag,
+            n,
+            me,
+            pof2,
+            rem,
+            newrank: 0,
+            phase: Phase::Done,
+        };
+        if me < 2 * rem {
+            if me % 2 == 0 {
+                // Push our vector to the odd neighbour and retire until the
+                // post-phase hands the final vector back.
+                comm.send(me + 1, tag, data)?;
+                op_state.newrank = -1;
+                op_state.phase = Phase::PostRecv;
+            } else {
+                op_state.newrank = (me / 2) as isize;
+                op_state.phase = Phase::PreRecv;
+            }
+        } else {
+            op_state.newrank = (me - rem) as isize;
+            op_state.enter_core(comm, data)?;
+        }
+        Ok(op_state)
+    }
+
+    /// Translate a core-rank id back to a communicator rank.
+    fn core_peer(&self, mask: usize) -> usize {
+        let peer_nr = (self.newrank as usize) ^ mask;
+        if peer_nr < self.rem {
+            peer_nr * 2 + 1
+        } else {
+            peer_nr + self.rem
+        }
+    }
+
+    /// Begin (or conclude, for p=1 cores) the core exchange: post the
+    /// round-1 send. Called with the pre-phase combine already folded in.
+    fn enter_core<T: Reducible>(
+        &mut self,
+        comm: &Communicator,
+        data: &mut [T],
+    ) -> MpiResult<()> {
+        debug_assert!(self.pof2 >= 2, "p=1 is handled at start");
+        comm.send(self.core_peer(1), self.tag, data)?;
+        self.phase = Phase::Core { mask: 1 };
+        Ok(())
+    }
+
+    /// The rank whose message the current phase is waiting on.
+    fn pending_src(&self) -> Option<usize> {
+        match self.phase {
+            Phase::PreRecv => Some(self.me - 1),
+            Phase::Core { mask } => Some(self.core_peer(mask)),
+            Phase::PostRecv => Some(self.me + 1),
+            Phase::Done => None,
+        }
+    }
+
+    /// Fold one received message into the state machine, posting the next
+    /// round's send where the schedule calls for it.
+    fn on_message<T: Reducible>(
+        &mut self,
+        comm: &Communicator,
+        data: &mut [T],
+        incoming: &[T],
+    ) -> MpiResult<()> {
+        match self.phase {
+            Phase::PreRecv => {
+                reduce_in_place(self.op, data, incoming)?;
+                self.enter_core(comm, data)
+            }
+            Phase::Core { mask } => {
+                reduce_in_place(self.op, data, incoming)?;
+                let next = mask << 1;
+                if next < self.pof2 {
+                    comm.send(self.core_peer(next), self.tag, data)?;
+                    self.phase = Phase::Core { mask: next };
+                } else {
+                    // Core finished. Odd pre-phase ranks hand the final
+                    // vector back to their retired even partner.
+                    if self.me < 2 * self.rem {
+                        comm.send(self.me - 1, self.tag, data)?;
+                    }
+                    self.phase = Phase::Done;
+                }
+                Ok(())
+            }
+            Phase::PostRecv => {
+                if incoming.len() != self.n {
+                    return Err(MpiError::CountMismatch {
+                        expected: self.n,
+                        got: incoming.len(),
+                    });
+                }
+                data.copy_from_slice(incoming);
+                self.phase = Phase::Done;
+                Ok(())
+            }
+            Phase::Done => Ok(()),
+        }
+    }
+
+    fn check_buffers<T: Reducible>(&self, data: &[T], scratch: &[T]) -> MpiResult<()> {
+        if data.len() != self.n || scratch.len() < self.n {
+            return Err(MpiError::Inconsistent(format!(
+                "iallreduce driven with data len {} / scratch len {}, posted with n={}",
+                data.len(),
+                scratch.len(),
+                self.n
+            )));
+        }
+        Ok(())
+    }
+
+    /// Advance **at most one round**, blocking for that round's message —
+    /// the deterministic progress hook: driven at fixed program points
+    /// (the pipeline calls it between bucket launches), consumption order
+    /// depends only on program order, so virtual clocks are reproducible
+    /// (unlike `test`-polling, whose completion depends on wall-clock
+    /// thread interleaving).
+    ///
+    /// Returns whether a round was consumed. Skips (Ok(false)) when the
+    /// operation is complete or parked in the post-phase: the retired
+    /// partner's *final* vector only lands once the partner's whole
+    /// schedule is done, so driving it early would stall the launch
+    /// pipeline for no benefit — `wait` picks it up at drain time.
+    pub fn drive_one_round<T: Reducible>(
+        &mut self,
+        comm: &Communicator,
+        data: &mut [T],
+        scratch: &mut [T],
+    ) -> MpiResult<bool> {
+        self.check_buffers(data, scratch)?;
+        let src = match self.phase {
+            Phase::Done | Phase::PostRecv => return Ok(false),
+            Phase::PreRecv => self.me - 1,
+            Phase::Core { mask } => self.core_peer(mask),
+        };
+        let (cnt, _) = match comm.recv_into(Some(src), self.tag, &mut scratch[..self.n]) {
+            Ok(v) => v,
+            Err(e) => {
+                self.cancel();
+                return Err(e);
+            }
+        };
+        let (incoming, _) = scratch.split_at(cnt);
+        if let Err(e) = self.on_message(comm, data, incoming) {
+            self.cancel();
+            return Err(e);
+        }
+        Ok(true)
+    }
+
+    /// Nonblocking progress: consume every already-queued round message,
+    /// advancing as many rounds as possible. Returns completion.
+    pub fn test<T: Reducible>(
+        &mut self,
+        comm: &Communicator,
+        data: &mut [T],
+        scratch: &mut [T],
+    ) -> MpiResult<bool> {
+        self.check_buffers(data, scratch)?;
+        loop {
+            let Some(src) = self.pending_src() else {
+                return Ok(true);
+            };
+            match comm.try_recv_into(Some(src), self.tag, &mut scratch[..self.n])? {
+                Some((cnt, _)) => {
+                    let (incoming, _) = scratch.split_at(cnt);
+                    self.on_message(comm, data, incoming)?;
+                }
+                None => return Ok(false),
+            }
+        }
+    }
+
+    /// Block until the operation completes (remaining rounds run here).
+    /// Errors (peer failure / revocation) leave the handle cancelled.
+    pub fn wait<T: Reducible>(
+        &mut self,
+        comm: &Communicator,
+        data: &mut [T],
+        scratch: &mut [T],
+    ) -> MpiResult<()> {
+        self.check_buffers(data, scratch)?;
+        while let Some(src) = self.pending_src() {
+            let res = comm.recv_into(Some(src), self.tag, &mut scratch[..self.n]);
+            let (cnt, _) = match res {
+                Ok(v) => v,
+                Err(e) => {
+                    self.cancel();
+                    return Err(e);
+                }
+            };
+            let (incoming, _) = scratch.split_at(cnt);
+            if let Err(e) = self.on_message(comm, data, incoming) {
+                self.cancel();
+                return Err(e);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.phase == Phase::Done
+    }
+
+    /// Abandon the operation (ULFM recovery path). Outstanding envelopes
+    /// stay in their mailboxes; that is sound because tags are
+    /// per-operation unique (they can never match a later collective) and
+    /// the recovery protocol replaces the communicator group — the stale
+    /// storage is reclaimed when the revoked group drops.
+    pub fn cancel(&mut self) {
+        self.phase = Phase::Done;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::collectives::allreduce_with;
+    use crate::mpi::collectives::AllreduceAlgorithm;
+    use crate::mpi::netmodel::NetProfile;
+    use crate::mpi::world::World;
+
+    #[test]
+    fn wait_driven_matches_blocking_rd_bitwise() {
+        for p in 1..=13usize {
+            let n = 97;
+            let w = World::new(p, NetProfile::zero());
+            let out = w.run_unwrap(move |c| {
+                let r = c.rank();
+                let mk = || -> Vec<f32> {
+                    (0..n).map(|i| ((r * 31 + i * 17) % 101) as f32 * 0.25 - 12.0).collect()
+                };
+                let mut nb = mk();
+                let mut scratch = vec![0.0f32; n];
+                let mut op = IAllreduce::start(&c, ReduceOp::Sum, &mut nb)?;
+                op.wait(&c, &mut nb, &mut scratch)?;
+                assert!(op.is_complete());
+                let mut blocking = mk();
+                allreduce_with(
+                    &c,
+                    AllreduceAlgorithm::RecursiveDoubling,
+                    ReduceOp::Sum,
+                    &mut blocking,
+                )?;
+                Ok((nb, blocking))
+            });
+            for (rank, (nb, blocking)) in out.iter().enumerate() {
+                for i in 0..n {
+                    assert_eq!(
+                        nb[i].to_bits(),
+                        blocking[i].to_bits(),
+                        "p={p} rank={rank} i={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn test_driven_polling_completes() {
+        let w = World::new(4, NetProfile::zero());
+        let out = w.run_unwrap(|c| {
+            let mut v = vec![c.rank() as f64 + 1.0; 16];
+            let mut scratch = vec![0.0f64; 16];
+            let mut op = IAllreduce::start(&c, ReduceOp::Sum, &mut v)?;
+            while !op.test(&c, &mut v, &mut scratch)? {
+                std::thread::yield_now();
+            }
+            Ok(v[0])
+        });
+        for v in out {
+            assert_eq!(v, 10.0); // 1+2+3+4
+        }
+    }
+
+    #[test]
+    fn concurrent_ops_complete_out_of_launch_order() {
+        // Three in-flight iallreduces per rank; waited in reverse launch
+        // order. Tag uniqueness must keep the rounds from cross-matching.
+        let w = World::new(5, NetProfile::zero());
+        let out = w.run_unwrap(|c| {
+            let n = 33;
+            let mut bufs: Vec<Vec<f32>> = (0..3)
+                .map(|k| vec![(c.rank() + k + 1) as f32; n])
+                .collect();
+            let mut scratch = vec![0.0f32; n];
+            let mut ops = Vec::new();
+            for b in bufs.iter_mut() {
+                ops.push(IAllreduce::start(&c, ReduceOp::Sum, b)?);
+            }
+            for (op, b) in ops.iter_mut().zip(bufs.iter_mut()).rev() {
+                op.wait(&c, b, &mut scratch)?;
+            }
+            Ok(bufs.into_iter().map(|b| b[0]).collect::<Vec<f32>>())
+        });
+        // sum over ranks of (rank + k + 1) = 15 + 5k for p=5 (ranks 0..4).
+        for v in out {
+            assert_eq!(v, vec![15.0, 20.0, 25.0]);
+        }
+    }
+
+    #[test]
+    fn integer_max_across_uneven_world() {
+        for p in [2usize, 3, 6, 7] {
+            let w = World::new(p, NetProfile::zero());
+            let out = w.run_unwrap(move |c| {
+                let mut v: Vec<u64> = (0..11).map(|i| (c.rank() * 11 + i) as u64).collect();
+                let mut scratch = vec![0u64; 11];
+                let mut op = IAllreduce::start(&c, ReduceOp::Max, &mut v)?;
+                op.wait(&c, &mut v, &mut scratch)?;
+                Ok(v)
+            });
+            for v in out {
+                for (i, &x) in v.iter().enumerate() {
+                    assert_eq!(x, ((p - 1) * 11 + i) as u64, "p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn peer_failure_mid_operation_errors_and_cancels() {
+        let w = World::new(4, NetProfile::zero());
+        let out = w.run_unwrap(|c| {
+            if c.rank() == 3 {
+                c.fail_self();
+                return Ok(true);
+            }
+            while c.alive_ranks().len() != 3 {
+                std::thread::yield_now();
+            }
+            let mut v = vec![1.0f32; 8];
+            let mut scratch = vec![0.0f32; 8];
+            // Rank 3 is dead. A rank that touches it gets ProcFailed and —
+            // as the trainer's recovery does — revokes, which aborts every
+            // other survivor's pending rounds with Revoked instead of
+            // leaving them blocked on a peer that will never progress.
+            match IAllreduce::start(&c, ReduceOp::Sum, &mut v) {
+                Err(MpiError::ProcFailed { .. }) => {
+                    c.revoke();
+                    Ok(true)
+                }
+                Err(MpiError::Revoked) => Ok(true),
+                Err(e) => Err(e.into()),
+                Ok(mut op) => match op.wait(&c, &mut v, &mut scratch) {
+                    Err(MpiError::ProcFailed { .. }) => {
+                        c.revoke();
+                        assert!(op.is_complete(), "wait error must cancel the handle");
+                        Ok(true)
+                    }
+                    Err(MpiError::Revoked) => {
+                        assert!(op.is_complete(), "wait error must cancel the handle");
+                        Ok(true)
+                    }
+                    Err(e) => Err(e.into()),
+                    Ok(()) => Ok(true),
+                },
+            }
+        });
+        assert!(out.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn mismatched_buffer_length_is_rejected() {
+        let w = World::new(2, NetProfile::zero());
+        w.run_unwrap(|c| {
+            let mut v = vec![1.0f32; 8];
+            let mut scratch = vec![0.0f32; 8];
+            let mut op = IAllreduce::start(&c, ReduceOp::Sum, &mut v)?;
+            let mut wrong = vec![0.0f32; 4];
+            assert!(matches!(
+                op.test(&c, &mut wrong, &mut scratch),
+                Err(MpiError::Inconsistent(_))
+            ));
+            op.wait(&c, &mut v, &mut scratch)?;
+            Ok(())
+        });
+    }
+}

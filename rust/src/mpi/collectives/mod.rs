@@ -1,4 +1,7 @@
-//! Group communication: the paper's §3.3.3 workhorse.
+//! Group communication: the paper's §3.3.3 workhorse, in blocking and
+//! nonblocking forms.
+//!
+//! # Blocking collectives
 //!
 //! The synchronous weight/bias averaging that defines the paper's design is
 //! `MPI_Allreduce`; we implement the three classic algorithms (binomial
@@ -7,18 +10,39 @@
 //! in-process transport, so that their `O(log p)` / bandwidth-optimal
 //! behaviours emerge in the virtual clocks instead of being assumed.
 //!
+//! # Nonblocking allreduce
+//!
+//! [`IAllreduce`] is the request-engine counterpart (`MPI_Iallreduce`): a
+//! recursive-doubling state machine that posts its first round at launch
+//! and advances a round each time the handle is driven (`test` consumes
+//! what has already arrived; `wait` blocks the remaining rounds). It is
+//! the primitive under the coordinator's bucketed gradient pipeline —
+//! launch an `IAllreduce` per gradient bucket as backprop produces it,
+//! keep computing, wait right before the optimizer needs that bucket.
+//! Communication hidden behind compute charges no virtual-clock exposure
+//! (see [`crate::mpi::netmodel::fold_arrival`]). Recursive doubling is
+//! used underneath because its per-element combine schedule is
+//! position-independent, so bucketed results are bit-identical to a flat
+//! allreduce of the same vector — the ring's chunk-indexed combine order
+//! is not (see `iallreduce.rs` for the full argument).
+//!
+//! # Shared discipline
+//!
 //! All collectives must be called by every (alive) rank of the communicator
 //! in the same order — the trainer is bulk-synchronous, so this holds by
 //! construction. Internal tags are drawn from the communicator's collective
-//! sequence space and never collide with user tags.
+//! sequence space and never collide with user tags; concurrent in-flight
+//! `IAllreduce`s each hold a unique tag, so their rounds cannot
+//! cross-match.
 //!
-//! Allocation discipline: every collective draws at most one reusable
-//! scratch buffer from the group's [`BufferPool`](crate::mpi::BufferPool)
-//! and exchanges payloads through `recv_into`/`sendrecv_into`, so the
-//! steady-state training loop (one allreduce per step) never touches the
-//! system allocator. The `_into` variants (`bcast_into`,
-//! `allgather_into`) extend the same discipline to callers with pre-sized
-//! buffers.
+//! Allocation discipline: every blocking collective draws at most one
+//! reusable scratch buffer from the group's
+//! [`BufferPool`](crate::mpi::BufferPool) and exchanges payloads through
+//! `recv_into`/`sendrecv_into`; `IAllreduce` goes one further and owns
+//! *no* buffers at all — the caller supplies `data` and scratch on every
+//! drive, so one persistent scratch serves any number of in-flight
+//! operations. The steady-state training loop (flat or pipelined) never
+//! touches the system allocator.
 
 mod allgather;
 mod allreduce;
@@ -26,6 +50,7 @@ mod alltoall;
 mod barrier;
 mod bcast;
 mod gather;
+mod iallreduce;
 mod reduce;
 mod scatter;
 
@@ -35,6 +60,7 @@ pub use alltoall::alltoall;
 pub use barrier::barrier;
 pub use bcast::{bcast, bcast_into};
 pub use gather::{gather, gather_vecs};
+pub use iallreduce::IAllreduce;
 pub use reduce::reduce;
 pub use scatter::{scatter_even, scatterv};
 

@@ -17,7 +17,7 @@ use std::sync::{Arc, Mutex};
 use super::channel::{Envelope, Mailbox, Tag};
 use super::datatype::{Buffer, Datatype};
 use super::error::{MpiError, MpiResult};
-use super::netmodel::NetProfile;
+use super::netmodel::{fold_arrival, NetProfile};
 use super::pool::BufferPool;
 
 /// Global (per-`World`) state shared by every communicator.
@@ -127,6 +127,9 @@ pub enum CollKind {
     Alltoall = 8,
     Split = 9,
     Agree = 10,
+    /// Nonblocking allreduce — its own kind so an in-flight pipelined sync
+    /// can never collide with a blocking collective issued the same step.
+    Iallreduce = 11,
 }
 
 const COLL_BIT: Tag = 1 << 31;
@@ -391,14 +394,77 @@ impl Communicator {
                 _ => None,
             }
         })?;
-        // Fold the message's arrival into our virtual clock: any gap is
-        // communication exposure (we were waiting on the network).
-        let before = self.clock.get();
-        if env.arrival_vtime > before {
-            self.clock.set(env.arrival_vtime);
-            self.add_comm_time(env.arrival_vtime - before);
-        }
+        self.fold_envelope_arrival(&env);
         Ok(env)
+    }
+
+    /// Fold a consumed message's arrival into our virtual clock: any gap is
+    /// communication exposure (we were waiting on the network); an arrival
+    /// already in our past was fully overlapped and costs nothing.
+    fn fold_envelope_arrival(&self, env: &Envelope) {
+        let (clock, exposure) = fold_arrival(self.clock.get(), env.arrival_vtime);
+        self.clock.set(clock);
+        if exposure > 0.0 {
+            self.add_comm_time(exposure);
+        }
+    }
+
+    /// Non-blocking matched receive (the completion path of a posted
+    /// `irecv`): if a matching message is already queued it is consumed —
+    /// payload copied into `out`, storage recycled, arrival folded into the
+    /// virtual clock — otherwise `Ok(None)`.
+    ///
+    /// ULFM semantics mirror the blocking path: a queued message from a
+    /// now-dead peer is still delivered; with no queued message, a receive
+    /// posted against a dead peer (or with every peer dead, for
+    /// `ANY_SOURCE`) errors instead of staying forever pending.
+    pub fn try_recv_into<T: Datatype>(
+        &self,
+        src: Option<usize>,
+        tag: Tag,
+        out: &mut [T],
+    ) -> MpiResult<Option<(usize, usize)>> {
+        self.check_usable()?;
+        if let Some(s) = src {
+            if s >= self.size() {
+                return Err(MpiError::InvalidRank {
+                    rank: s,
+                    size: self.size(),
+                });
+            }
+        }
+        let env = self.group.mailboxes[self.rank].try_recv_match(src, Some(tag))?;
+        let Some(env) = env else {
+            // Nothing queued: surface peer death so a pending request
+            // cannot wait forever on a rank that will never send.
+            match src {
+                Some(s) if self.peer_failed(s) => {
+                    return Err(MpiError::ProcFailed { rank: s })
+                }
+                None => {
+                    let any_alive = (0..self.size())
+                        .any(|r| r != self.rank && !self.peer_failed(r));
+                    if !any_alive {
+                        return Err(MpiError::ProcFailed { rank: self.rank });
+                    }
+                }
+                _ => {}
+            }
+            return Ok(None);
+        };
+        let from = env.src;
+        let payload = T::slice_of(env.buf())?;
+        let n = payload.len();
+        if n > out.len() {
+            return Err(MpiError::CountMismatch {
+                expected: out.len(),
+                got: n,
+            });
+        }
+        out[..n].copy_from_slice(payload);
+        self.fold_envelope_arrival(&env);
+        Ok(Some((n, from)))
+        // `env` drops here, returning its storage to the group pool.
     }
 
     /// Combined send+recv (exchange), used by ring/pairwise collectives.
@@ -674,6 +740,51 @@ mod tests {
         assert_eq!((n, out), (2, [10, 20]));
         let (v, _) = c0.recv::<i32>(Some(1), 9).unwrap();
         assert_eq!(v, vec![7, 8]);
+    }
+
+    #[test]
+    fn try_recv_into_pending_then_complete() {
+        let (c0, c1) = pair();
+        let mut out = [0.0f32; 4];
+        // Nothing queued yet: pending, clock untouched.
+        assert_eq!(c1.try_recv_into(Some(0), 5, &mut out).unwrap(), None);
+        assert_eq!(c1.clock(), 0.0);
+        c0.send(1, 5, &[1.0f32, 2.0]).unwrap();
+        let got = c1.try_recv_into(Some(0), 5, &mut out).unwrap();
+        assert_eq!(got, Some((2, 0)));
+        assert_eq!(&out[..2], &[1.0, 2.0]);
+        // Arrival folded into the clock exactly like the blocking path.
+        let p = NetProfile::infiniband_fdr();
+        let expect = p.send_overhead_s + p.p2p_time(8);
+        assert!((c1.clock() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn try_recv_overlapped_message_charges_no_exposure() {
+        let (c0, c1) = pair();
+        c0.send(1, 5, &[1.0f32; 8]).unwrap();
+        // Receiver computes far past the arrival time before consuming.
+        c1.advance(1.0);
+        let before = c1.stats().comm_vtime;
+        let mut out = [0.0f32; 8];
+        c1.try_recv_into(Some(0), 5, &mut out).unwrap().unwrap();
+        assert_eq!(c1.clock(), 1.0, "overlapped arrival must not move the clock");
+        assert_eq!(c1.stats().comm_vtime, before, "no exposure charged");
+    }
+
+    #[test]
+    fn try_recv_from_failed_rank_errors_when_queue_empty() {
+        let (c0, c1) = pair();
+        c0.send(1, 3, &[7i32]).unwrap();
+        c0.fail_self();
+        // Already-queued message still deliverable (ULFM)...
+        let mut out = [0i32; 1];
+        assert!(c1.try_recv_into(Some(0), 3, &mut out).unwrap().is_some());
+        // ...but a fresh pending receive on the dead peer errors.
+        assert!(matches!(
+            c1.try_recv_into(Some(0), 3, &mut out),
+            Err(MpiError::ProcFailed { rank: 0 })
+        ));
     }
 
     #[test]

@@ -13,6 +13,36 @@
 //! the paper discusses (§2.2): InfiniBand FDR, 10GbE sockets (what Spark
 //! would use — the paper's stated reason for choosing MPI), and Blue Gene/Q
 //! with hardware collectives.
+//!
+//! # Nonblocking operations and overlap accounting
+//!
+//! The model extends naturally to `isend`/`irecv`/`iallreduce`: a send is
+//! charged its injection overhead when *posted* and stamps the envelope
+//! with its arrival time; a receive folds that arrival into the receiver's
+//! clock when the message is *consumed* (see [`fold_arrival`]). If the
+//! receiver computed past the arrival time before consuming — i.e. the
+//! communication was overlapped with compute — the fold is a no-op and
+//! **no exposure is charged**, which is exactly how overlap pays off on
+//! real hardware. Communication time only appears on the clock when a rank
+//! consumes a message that has not virtually arrived yet (it "waited on
+//! the network"). This makes the virtual-time win of the pipelined
+//! gradient sync an emergent property of the same alpha-beta accounting
+//! the blocking collectives use, not a separately asserted number.
+
+/// Fold a message's virtual arrival time into a receiver clock.
+///
+/// Returns `(new_clock, exposure)`: the clock after consuming the message
+/// and the communication exposure charged (0 when the message had already
+/// arrived — fully overlapped communication is free on the clock). Single
+/// source of truth for blocking receives, nonblocking test/wait completion,
+/// and the pipelined sync engine.
+pub fn fold_arrival(clock: f64, arrival_vtime: f64) -> (f64, f64) {
+    if arrival_vtime > clock {
+        (arrival_vtime, arrival_vtime - clock)
+    } else {
+        (clock, 0.0)
+    }
+}
 
 /// A network + node-topology profile.
 ///
@@ -179,6 +209,16 @@ impl NetProfile {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fold_arrival_charges_only_unoverlapped_time() {
+        // Message arrived in the receiver's past: free (overlapped).
+        assert_eq!(fold_arrival(10.0, 4.0), (10.0, 0.0));
+        // Message arrives in the future: clock jumps, gap is exposure.
+        assert_eq!(fold_arrival(10.0, 13.5), (13.5, 3.5));
+        // Boundary: exact arrival costs nothing.
+        assert_eq!(fold_arrival(7.0, 7.0), (7.0, 0.0));
+    }
 
     #[test]
     fn p2p_time_is_affine_in_bytes() {

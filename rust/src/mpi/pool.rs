@@ -53,6 +53,9 @@ pub struct PoolStats {
     pub recycled: u64,
     /// Buffers dropped because their shelf was full.
     pub dropped: u64,
+    /// Buffers released to the system allocator by `trim_to` (epoch-
+    /// boundary memory-pressure hook).
+    pub trimmed: u64,
 }
 
 /// Bound on each `(dtype, bucket)` shelf. Sized to exceed the collectives'
@@ -84,6 +87,7 @@ pub struct BufferPool {
     misses: AtomicU64,
     recycled: AtomicU64,
     dropped: AtomicU64,
+    trimmed: AtomicU64,
 }
 
 impl BufferPool {
@@ -168,7 +172,34 @@ impl BufferPool {
             misses: self.misses.load(Ordering::Relaxed),
             recycled: self.recycled.load(Ordering::Relaxed),
             dropped: self.dropped.load(Ordering::Relaxed),
+            trimmed: self.trimmed.load(Ordering::Relaxed),
         }
+    }
+
+    /// Trim every shelf down to at most `keep` buffers, releasing the rest
+    /// to the system allocator; returns how many were released. The
+    /// epoch-boundary memory-pressure hook (ROADMAP "Pool follow-ups" b):
+    /// idle retention is otherwise lifetime-long — bounded, but up to
+    /// `MAX_PER_SHELF × bucket-size` bytes per active `(dtype, bucket)`.
+    ///
+    /// Safe to call at any time (the shelf mutex covers it) — concurrent
+    /// acquires/releases just see a smaller free list. A caller that is
+    /// not fully quiesced (e.g. a rank trimming while a straggling peer
+    /// still drains its last collective) only costs that peer a few
+    /// re-warming allocations afterwards; results are unaffected.
+    pub fn trim_to(&self, keep: usize) -> usize {
+        let mut freed = 0usize;
+        let mut shelves = self.shelves.lock().unwrap();
+        for shelf in shelves.values_mut() {
+            if shelf.len() > keep {
+                freed += shelf.len() - keep;
+                shelf.truncate(keep);
+            }
+        }
+        shelves.retain(|_, shelf| !shelf.is_empty());
+        drop(shelves);
+        self.trimmed.fetch_add(freed as u64, Ordering::Relaxed);
+        freed
     }
 
     /// A zero-filled, length-`n` scratch buffer that returns itself to the
@@ -263,6 +294,30 @@ mod tests {
         let s = pool.stats();
         assert_eq!(s.recycled, MAX_PER_SHELF as u64);
         assert_eq!(s.dropped, 5);
+    }
+
+    #[test]
+    fn trim_to_bounds_every_shelf_and_counts() {
+        let pool = BufferPool::new();
+        for _ in 0..10 {
+            pool.release_vec(vec![0.0f32; 64]);
+        }
+        for _ in 0..6 {
+            pool.release_vec(vec![0i32; 16]);
+        }
+        let freed = pool.trim_to(4);
+        assert_eq!(freed, 6 + 2);
+        assert_eq!(pool.stats().trimmed, 8);
+        // Shelves still serve up to the kept depth with pool hits.
+        let held: Vec<Vec<f32>> = (0..4).map(|_| pool.acquire::<f32>(64)).collect();
+        assert!(held.iter().all(|v| v.capacity() >= 64));
+        assert_eq!(pool.stats().hits, 4);
+        // Fifth acquisition is a miss: the shelf was trimmed to 4.
+        let _ = pool.acquire::<f32>(64);
+        assert_eq!(pool.stats().misses, 1);
+        // trim_to(0) drains what is left (the i32 shelf).
+        assert_eq!(pool.trim_to(0), 4);
+        drop(held);
     }
 
     #[test]

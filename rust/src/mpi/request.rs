@@ -1,0 +1,299 @@
+//! Nonblocking point-to-point requests — `MPI_Isend` / `MPI_Irecv` /
+//! `MPI_Test` / `MPI_Wait` over the in-process transport.
+//!
+//! This is the layer the pipelined gradient sync is built on: a rank posts
+//! receives (and launches collective rounds) without blocking, keeps
+//! computing, and only pays virtual-clock exposure for the part of the
+//! communication that was *not* hidden behind that compute (see
+//! [`netmodel::fold_arrival`](super::netmodel::fold_arrival)).
+//!
+//! Semantics relative to real MPI:
+//!
+//! * **`isend` completes at post time.** The transport is buffered — the
+//!   payload is copied into pooled storage and delivered to the peer's
+//!   mailbox immediately — so a send request is born complete, exactly
+//!   like a small-message eager-protocol `MPI_Isend`. The handle exists so
+//!   request-shaped code ports over unchanged.
+//! * **`irecv_into` holds the caller's buffer** (`&mut [T]`) until the
+//!   request completes; `test` consumes a matching message if one is
+//!   already queued, `wait` blocks for it. Completion folds the message's
+//!   virtual arrival into the rank clock — a message that arrived while
+//!   the rank was computing charges **zero** exposure.
+//! * **ULFM:** `test`/`wait` on a request whose peer has died error with
+//!   `ProcFailed` instead of pending forever (already-queued messages are
+//!   still delivered first, matching the blocking path).
+//!
+//! Determinism note: whether `test` completes on a given call depends on
+//! wall-clock thread interleaving (did the sender run yet?), so *virtual
+//! clocks* along a `test`-polling path can vary run to run. Code that must
+//! be bit-and-clock reproducible — the trainer's pipelined sync — drives
+//! requests only through `wait`/`wait_all` at fixed program points, where
+//! the fold order is determined by program order alone.
+
+use super::comm::Communicator;
+use super::datatype::Datatype;
+use super::error::{MpiError, MpiResult};
+use crate::mpi::Tag;
+
+/// Handle for a posted (buffered) send. Complete from birth; exists so
+/// request-based protocols have a uniform surface.
+#[derive(Debug)]
+#[must_use = "requests must be completed with wait() (or dropped knowingly)"]
+pub struct SendRequest {
+    done: bool,
+}
+
+impl SendRequest {
+    /// `MPI_Test`: always true for the buffered transport.
+    pub fn test(&mut self) -> MpiResult<bool> {
+        self.done = true;
+        Ok(true)
+    }
+
+    /// `MPI_Wait`: immediate.
+    pub fn wait(mut self) -> MpiResult<()> {
+        self.done = true;
+        Ok(())
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.done
+    }
+}
+
+/// A posted receive into a caller-owned buffer.
+///
+/// The request borrows the communicator and the destination slice for its
+/// whole lifetime; disjoint slices (e.g. per-bucket views produced by
+/// `split_at_mut`) can be held by concurrently pending requests.
+#[derive(Debug)]
+#[must_use = "a pending receive does nothing until test()/wait() drives it"]
+pub struct RecvRequest<'c, 'buf, T: Datatype> {
+    comm: &'c Communicator,
+    src: Option<usize>,
+    tag: Tag,
+    buf: &'buf mut [T],
+    /// `(count, source)` once complete.
+    done: Option<(usize, usize)>,
+}
+
+impl<'c, 'buf, T: Datatype> RecvRequest<'c, 'buf, T> {
+    /// `MPI_Test`: consume the matching message if one is queued.
+    pub fn test(&mut self) -> MpiResult<bool> {
+        if self.done.is_some() {
+            return Ok(true);
+        }
+        match self.comm.try_recv_into(self.src, self.tag, self.buf)? {
+            Some(res) => {
+                self.done = Some(res);
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
+    /// `MPI_Wait`: block until the message is consumed; returns
+    /// `(count, source)`. Aborts (instead of hanging) on peer failure,
+    /// revocation, or world shutdown.
+    pub fn wait(&mut self) -> MpiResult<(usize, usize)> {
+        if let Some(res) = self.done {
+            return Ok(res);
+        }
+        let res = self.comm.recv_into(self.src, self.tag, self.buf)?;
+        self.done = Some(res);
+        Ok(res)
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.done.is_some()
+    }
+
+    /// `(count, source)` if complete.
+    pub fn result(&self) -> Option<(usize, usize)> {
+        self.done
+    }
+}
+
+/// `MPI_Waitall` over receive requests: completes every request (blocking
+/// where needed), in order. Order does not affect values — matching is per
+/// `(source, tag)` — but keeping it fixed keeps virtual clocks
+/// reproducible.
+pub fn wait_all<T: Datatype>(reqs: &mut [RecvRequest<'_, '_, T>]) -> MpiResult<()> {
+    for r in reqs.iter_mut() {
+        r.wait()?;
+    }
+    Ok(())
+}
+
+impl Communicator {
+    /// Nonblocking send (`MPI_Isend`). The buffered transport completes it
+    /// at post time: the sender is charged its injection overhead now and
+    /// the envelope is stamped with its arrival time, exactly like
+    /// [`Communicator::send`].
+    pub fn isend<T: Datatype>(
+        &self,
+        dst: usize,
+        tag: Tag,
+        data: &[T],
+    ) -> MpiResult<SendRequest> {
+        self.send(dst, tag, data)?;
+        Ok(SendRequest { done: true })
+    }
+
+    /// Post a nonblocking receive (`MPI_Irecv`) into caller scratch. The
+    /// returned request must be driven by `test`/`wait`; nothing is
+    /// consumed (and no virtual time moves) until then.
+    pub fn irecv_into<'c, 'buf, T: Datatype>(
+        &'c self,
+        src: Option<usize>,
+        tag: Tag,
+        buf: &'buf mut [T],
+    ) -> MpiResult<RecvRequest<'c, 'buf, T>> {
+        self.check_postable(src)?;
+        Ok(RecvRequest {
+            comm: self,
+            src,
+            tag,
+            buf,
+            done: None,
+        })
+    }
+
+    /// Argument validation shared by the posting paths: posting against a
+    /// revoked communicator or an out-of-range rank is an immediate error
+    /// (peer *death* is not — queued messages must stay deliverable).
+    fn check_postable(&self, src: Option<usize>) -> MpiResult<()> {
+        if self.is_revoked() {
+            return Err(MpiError::Revoked);
+        }
+        if let Some(s) = src {
+            if s >= self.size() {
+                return Err(MpiError::InvalidRank {
+                    rank: s,
+                    size: self.size(),
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::netmodel::NetProfile;
+    use crate::mpi::world::World;
+
+    #[test]
+    fn isend_completes_immediately_and_delivers() {
+        let w = World::new(2, NetProfile::zero());
+        let out = w.run_unwrap(|c| {
+            if c.rank() == 0 {
+                let req = c.isend(1, 7, &[1.0f32, 2.0])?;
+                assert!(req.is_complete());
+                req.wait()?;
+                Ok(0.0)
+            } else {
+                let mut buf = [0.0f32; 2];
+                let mut req = c.irecv_into(Some(0), 7, &mut buf)?;
+                let (n, src) = req.wait()?;
+                assert_eq!((n, src), (2, 0));
+                Ok(buf[0] + buf[1])
+            }
+        });
+        assert_eq!(out[1], 3.0);
+    }
+
+    #[test]
+    fn test_polls_until_message_arrives() {
+        let w = World::new(2, NetProfile::zero());
+        let out = w.run_unwrap(|c| {
+            if c.rank() == 0 {
+                // Give the receiver time to observe "pending" first.
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                c.send(1, 9, &[42i32])?;
+                Ok(0)
+            } else {
+                let mut buf = [0i32; 1];
+                let mut req = c.irecv_into(Some(0), 9, &mut buf)?;
+                let mut polls = 0u32;
+                while !req.test()? {
+                    polls += 1;
+                    std::thread::yield_now();
+                }
+                assert!(req.is_complete());
+                assert_eq!(req.result(), Some((1, 0)));
+                // The point of nonblocking: we got control back at least once.
+                assert!(polls > 0, "expected at least one pending poll");
+                Ok(buf[0])
+            }
+        });
+        assert_eq!(out[1], 42);
+    }
+
+    #[test]
+    fn overlapped_receive_charges_no_exposure() {
+        // The netmodel contract that the pipelined sync relies on: a
+        // message consumed after the receiver computed past its arrival
+        // time moves neither the clock nor the comm counter.
+        let w = World::new(2, NetProfile::infiniband_fdr());
+        let out = w.run_unwrap(|c| {
+            if c.rank() == 0 {
+                c.send(1, 1, &[0.5f32; 64])?;
+                Ok((0.0, 0.0))
+            } else {
+                let mut buf = [0.0f32; 64];
+                let mut req = c.irecv_into(Some(0), 1, &mut buf)?;
+                c.advance(1.0); // "backprop" long past the arrival
+                let before = (c.clock(), c.stats().comm_vtime);
+                req.wait()?;
+                assert_eq!(c.clock(), before.0);
+                Ok((c.clock(), c.stats().comm_vtime - before.1))
+            }
+        });
+        assert_eq!(out[1], (1.0, 0.0));
+    }
+
+    #[test]
+    fn wait_all_completes_out_of_order_tags() {
+        let w = World::new(2, NetProfile::zero());
+        let out = w.run_unwrap(|c| {
+            if c.rank() == 0 {
+                // Sent in reverse tag order; matching is tag-selective.
+                c.send(1, 12, &[2.0f32])?;
+                c.send(1, 11, &[1.0f32])?;
+                Ok(0.0)
+            } else {
+                let mut a = [0.0f32; 1];
+                let mut b = [0.0f32; 1];
+                let mut reqs = vec![
+                    c.irecv_into(Some(0), 11, &mut a)?,
+                    c.irecv_into(Some(0), 12, &mut b)?,
+                ];
+                wait_all(&mut reqs)?;
+                assert!(reqs.iter().all(|r| r.is_complete()));
+                drop(reqs);
+                Ok(a[0] * 10.0 + b[0])
+            }
+        });
+        assert_eq!(out[1], 12.0);
+    }
+
+    #[test]
+    fn pending_request_on_dead_peer_errors_not_hangs() {
+        let w = World::new(2, NetProfile::zero());
+        let out = w.run_unwrap(|c| {
+            if c.rank() == 0 {
+                c.fail_self();
+                return Ok(true);
+            }
+            while c.alive_ranks().len() != 1 {
+                std::thread::yield_now();
+            }
+            let mut buf = [0.0f32; 1];
+            let mut req = c.irecv_into(Some(0), 3, &mut buf)?;
+            Ok(matches!(req.wait(), Err(MpiError::ProcFailed { rank: 0 })))
+        });
+        assert!(out[1]);
+    }
+}

@@ -1,0 +1,98 @@
+//! Host-side tensor types crossing the runtime boundary.
+//!
+//! These are plain-Rust (no `xla` dependency) so the rest of the crate —
+//! coordinator, benches, Sim-mode tests — can be built without the PJRT
+//! feature: inputs are borrowed slices over the trainer's flat parameter
+//! store and batch buffers, outputs are owned vectors.
+
+use crate::Result;
+use anyhow::{anyhow, bail};
+
+use super::artifact::Dtype;
+
+/// Borrowed input tensor (shape comes from the artifact ABI).
+#[derive(Debug, Clone, Copy)]
+pub enum HostSlice<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl<'a> HostSlice<'a> {
+    pub fn len(&self) -> usize {
+        match self {
+            HostSlice::F32(s) => s.len(),
+            HostSlice::I32(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostSlice::F32(_) => Dtype::F32,
+            HostSlice::I32(_) => Dtype::I32,
+        }
+    }
+
+    /// Raw little-endian bytes of the slice (what PJRT literal construction
+    /// consumes).
+    pub fn bytes(&self) -> &'a [u8] {
+        // Safety: plain-old-data reinterpretation; lifetimes preserved.
+        unsafe {
+            match self {
+                HostSlice::F32(s) => {
+                    std::slice::from_raw_parts(s.as_ptr() as *const u8, s.len() * 4)
+                }
+                HostSlice::I32(s) => {
+                    std::slice::from_raw_parts(s.as_ptr() as *const u8, s.len() * 4)
+                }
+            }
+        }
+    }
+}
+
+/// Owned output tensor.
+#[derive(Debug, Clone)]
+pub enum OutTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl OutTensor {
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            OutTensor::F32(v) => Ok(v),
+            OutTensor::I32(_) => bail!("output is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            OutTensor::I32(v) => Ok(v),
+            OutTensor::F32(_) => bail!("output is f32, expected i32"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        v.first()
+            .copied()
+            .ok_or_else(|| anyhow!("empty scalar output"))
+    }
+
+    pub fn scalar_i32(&self) -> Result<i32> {
+        let v = self.as_i32()?;
+        v.first()
+            .copied()
+            .ok_or_else(|| anyhow!("empty scalar output"))
+    }
+}
+
+/// Cumulative execution statistics for one executable.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ExecStats {
+    pub executions: u64,
+    pub total_secs: f64,
+}

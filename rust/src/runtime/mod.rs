@@ -2,11 +2,28 @@
 //! the PJRT C API (`xla` crate). The interchange format is HLO *text* — see
 //! `python/compile/aot.py` for why (xla_extension 0.5.1 rejects jax≥0.5's
 //! 64-bit-id protos; the text parser reassigns ids).
+//!
+//! The `xla` dependency is feature-gated (`pjrt`): without it, the artifact
+//! manifest and host-side tensor types still build (everything Sim-mode
+//! training and the MPI benches need), and `Engine::new` fails with an
+//! explanatory error instead of a missing native library.
 
 pub mod artifact;
+pub mod host;
+
+#[cfg(feature = "pjrt")]
 pub mod engine;
+#[cfg(feature = "pjrt")]
 pub mod executable;
+#[cfg(not(feature = "pjrt"))]
+mod stub;
 
 pub use artifact::{ArtifactMeta, Dtype, IoSpec, Manifest};
+pub use host::{ExecStats, HostSlice, OutTensor};
+
+#[cfg(feature = "pjrt")]
 pub use engine::Engine;
-pub use executable::{ExecStats, Executable, HostSlice, OutTensor};
+#[cfg(feature = "pjrt")]
+pub use executable::Executable;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Engine, Executable};

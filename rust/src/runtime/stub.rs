@@ -1,0 +1,54 @@
+//! No-PJRT build of the runtime surface.
+//!
+//! Compiled when the `pjrt` feature is **off**: same `Engine`/`Executable`
+//! API as the real modules, but construction fails with a clear error, so
+//! the MPI substrate, coordinator, Sim-mode tests, and benches all build
+//! and run offline while `ExecMode::Real` reports exactly what is missing.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use super::artifact::{ArtifactMeta, Manifest};
+use super::host::{ExecStats, HostSlice, OutTensor};
+use crate::Result;
+use anyhow::bail;
+
+const NO_PJRT: &str = "dtf was built without the `pjrt` feature: real PJRT execution is \
+     unavailable. Rebuild with `cargo build --features pjrt` (needs the XLA \
+     toolchain) or use ExecMode::Sim";
+
+pub struct Engine {
+    manifest: Arc<Manifest>,
+}
+
+impl Engine {
+    pub fn new(_manifest: Arc<Manifest>) -> Result<Engine> {
+        bail!(NO_PJRT);
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn executable(&self, _arch: &str, _fn_name: &str) -> Result<Rc<Executable>> {
+        bail!(NO_PJRT);
+    }
+}
+
+/// Uninstantiable stand-in: an `Engine` can never be constructed without
+/// PJRT, so no `Executable` can exist either — `run` is unreachable but
+/// keeps callers type-checking identically across both builds.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    stats: std::cell::Cell<ExecStats>,
+}
+
+impl Executable {
+    pub fn stats(&self) -> ExecStats {
+        self.stats.get()
+    }
+
+    pub fn run(&self, _inputs: &[HostSlice]) -> Result<Vec<OutTensor>> {
+        bail!(NO_PJRT);
+    }
+}

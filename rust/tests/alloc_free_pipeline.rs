@@ -1,0 +1,152 @@
+//! Acceptance pin (ISSUE 2): the **pipelined** steady-state sync path —
+//! `SyncStrategy::Bucketed` + `SyncMode::GradientAverage`, one nonblocking
+//! allreduce per gradient bucket per step — performs **exactly zero** heap
+//! allocations after warmup, just like the flat path it replaces
+//! (`alloc_free_sync.rs`).
+//!
+//! Method: identical to the flat-path pin — counting `#[global_allocator]`
+//! with a process-wide tracking flag, pool shelves preloaded past peak
+//! concurrent demand, mailbox queues pre-grown, warmup steps, then the
+//! exact `PipelineEngine::sync_step` hot path inside the tracked window.
+//!
+//! This file intentionally contains a single #[test]: the harness runs
+//! tests within one binary concurrently, and a sibling test's allocations
+//! would pollute the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use dtf::coordinator::{ExecMode, PipelineEngine, Replica, StepOutcome, SyncMode};
+use dtf::model::ArchSpec;
+use dtf::mpi::{barrier, NetProfile, World};
+use dtf::runtime::Manifest;
+
+struct CountingAlloc;
+
+static TRACKING: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if TRACKING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// A Manifest for Sim-mode execution: specs only, no compiled artifacts.
+fn tiny_manifest() -> Arc<Manifest> {
+    let v = dtf::util::json::parse(
+        r#"{
+          "name": "t", "kind": "mlp", "n_train": 64, "n_test": 16,
+          "n_classes": 2, "in_dim": 3, "flops_per_sample": 1, "n_params": 13,
+          "layer_sizes": [3, 2, 2], "hidden_activation": "sigmoid",
+          "param_shapes": [
+            {"name": "w0", "shape": [3, 2]}, {"name": "b0", "shape": [2]},
+            {"name": "w1", "shape": [2, 2]}, {"name": "b1", "shape": [1]}
+          ]
+        }"#,
+    )
+    .expect("spec json");
+    let spec = ArchSpec::from_json(&v).expect("spec");
+    let mut archs = BTreeMap::new();
+    archs.insert("t".to_string(), spec);
+    Arc::new(Manifest {
+        dir: ".".into(),
+        batch_size: 4,
+        archs,
+        artifacts: BTreeMap::new(),
+    })
+}
+
+#[test]
+fn steady_state_pipelined_sync_performs_zero_allocations() {
+    const P: usize = 4;
+    // 24-byte cap → 6-element buckets → 3 buckets over the 13-param model
+    // (tensor split 6/2/4/1): small enough to exercise multi-bucket
+    // launch/drive/drain, not just a degenerate single bucket.
+    const BUCKET_BYTES: usize = 24;
+    let manifest = tiny_manifest();
+    let w = World::new(P, NetProfile::zero());
+    w.run_unwrap(move |c| {
+        let mut replica = Replica::new(
+            &manifest,
+            "t",
+            ExecMode::Sim {
+                secs_per_sample: 0.0,
+            },
+            0.1,
+            7,
+        )?;
+        // Engine + plan + scratch are built once, before tracking.
+        let mut engine = PipelineEngine::for_params(&replica.params, BUCKET_BYTES);
+        assert_eq!(engine.plan().n_buckets(), 3, "fixture drifted");
+        let outcome = StepOutcome::Grads { loss: 1.0 };
+
+        // Deterministic supply: stock every f32 shelf a bucket-sized
+        // message can land on (requests of 1..=6 elements → shelves 0..3),
+        // plus the barrier's i32 payloads.
+        if c.rank() == 0 {
+            let pool = c.pool();
+            pool.preload::<f32>(32, 1);
+            pool.preload::<f32>(32, 2);
+            pool.preload::<f32>(32, 4);
+            pool.preload::<f32>(32, 8);
+            pool.preload::<f32>(32, 16);
+            pool.preload::<i32>(32, 1);
+        }
+        // Pre-grow the mailbox queues past any depth the measured loop
+        // can reach, so VecDeque growth cannot fire inside the window.
+        let right = (c.rank() + 1) % P;
+        let left = (c.rank() + P - 1) % P;
+        for i in 0..64u32 {
+            c.send(right, 7, &[i as f32])?;
+        }
+        let mut one = [0.0f32; 1];
+        for _ in 0..64 {
+            c.recv_into(Some(left), 7, &mut one)?;
+        }
+
+        // Warmup: grows replica.sync_scratch once, touches every shelf
+        // key and queue capacity the steady state will use.
+        for _ in 0..8 {
+            engine.sync_step(&c, &mut replica, &outcome, SyncMode::GradientAverage, 0.0)?;
+        }
+
+        barrier(&c)?;
+        if c.rank() == 0 {
+            TRACKING.store(true, Ordering::SeqCst);
+        }
+        barrier(&c)?;
+
+        // ---- the tracked window: the exact per-step pipelined path ----
+        for _ in 0..25 {
+            engine.sync_step(&c, &mut replica, &outcome, SyncMode::GradientAverage, 0.0)?;
+        }
+
+        barrier(&c)?;
+        if c.rank() == 0 {
+            TRACKING.store(false, Ordering::SeqCst);
+        }
+        // Final barrier: no rank may exit its thread (TLS teardown etc.)
+        // until tracking is off everywhere.
+        barrier(&c)?;
+        Ok(())
+    });
+
+    let n = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        n, 0,
+        "steady-state SyncStrategy::Bucketed gradient sync allocated {n} times; \
+         the pipelined path must be allocation-free after warmup"
+    );
+}

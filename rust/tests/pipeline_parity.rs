@@ -1,0 +1,244 @@
+//! Parity pins for the nonblocking/bucketed sync stack (ISSUE 2).
+//!
+//! Three layers of guarantee, property-tested with the in-tree quickprop
+//! harness (seeded, reproducible):
+//!
+//! 1. `IAllreduce` (nonblocking recursive doubling) is **bitwise**
+//!    identical to the blocking `RecursiveDoubling` path *and* to the
+//!    frozen pre-pool reference in `mpi::compat`, across ranks, dtypes,
+//!    and sizes.
+//! 2. The bucketed pipeline (`PipelineEngine::allreduce_overlapped`) is
+//!    bitwise identical to a flat `RecursiveDoubling` allreduce of the
+//!    same vector, across random tensor layouts, bucket caps, and world
+//!    sizes — the property `SyncStrategy::Bucketed` leans on. (The ring
+//!    cannot give this: its combine order is chunk-indexed, so bucketing
+//!    would change the rounding. Recursive doubling's schedule is
+//!    position-independent.)
+//! 3. `BucketPlan` always partitions the vector: buckets tile `[0, n)`,
+//!    respect the byte cap (splitting oversized tensors via
+//!    `chunk_range`), and appear in back-to-front launch order.
+
+use dtf::coordinator::{BucketPlan, PipelineEngine};
+use dtf::mpi::compat::ref_allreduce;
+use dtf::mpi::{
+    allreduce_with, AllreduceAlgorithm, IAllreduce, NetProfile, ReduceOp, World,
+};
+use dtf::util::quickprop::{gen, run_prop, Config};
+
+#[test]
+fn prop_iallreduce_bitwise_matches_blocking_and_reference() {
+    run_prop(
+        "iallreduce == blocking rd == compat rd",
+        Config { cases: 25, seed: 2025 },
+        |rng, _| {
+            let p = gen::usize_in(rng, 1, 10);
+            let n = gen::usize_in(rng, 1, 400);
+            let op = [ReduceOp::Sum, ReduceOp::Max, ReduceOp::Min][rng.below(3)];
+            let inputs: Vec<Vec<f32>> =
+                (0..p).map(|_| gen::f32_vec(rng, n, 8.0)).collect();
+            let inputs2 = inputs.clone();
+            let w = World::new(p, NetProfile::zero());
+            let out = w.run_unwrap(move |c| {
+                let mut nb = inputs2[c.rank()].clone();
+                let mut scratch = vec![0.0f32; n];
+                let mut oph = IAllreduce::start(&c, op, &mut nb)?;
+                oph.wait(&c, &mut nb, &mut scratch)?;
+                let mut blocking = inputs2[c.rank()].clone();
+                allreduce_with(
+                    &c,
+                    AllreduceAlgorithm::RecursiveDoubling,
+                    op,
+                    &mut blocking,
+                )?;
+                let mut reference = inputs2[c.rank()].clone();
+                ref_allreduce(
+                    &c,
+                    AllreduceAlgorithm::RecursiveDoubling,
+                    op,
+                    &mut reference,
+                    1,
+                )?;
+                Ok((nb, blocking, reference))
+            });
+            for (r, (nb, blocking, reference)) in out.iter().enumerate() {
+                for i in 0..n {
+                    if nb[i].to_bits() != blocking[i].to_bits()
+                        || nb[i].to_bits() != reference[i].to_bits()
+                    {
+                        return Err(format!(
+                            "p={p} op={op:?} n={n} rank={r} i={i}: \
+                             iallreduce {} vs blocking {} vs ref {}",
+                            nb[i], blocking[i], reference[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_iallreduce_exact_for_integer_dtypes() {
+    run_prop(
+        "iallreduce integer dtypes exact",
+        Config { cases: 15, seed: 77 },
+        |rng, _| {
+            let p = gen::usize_in(rng, 2, 9);
+            let n = gen::usize_in(rng, 1, 200);
+            let base: Vec<i64> = (0..p * n)
+                .map(|_| rng.below(1000) as i64 - 500)
+                .collect();
+            let base2 = base.clone();
+            let w = World::new(p, NetProfile::zero());
+            let out = w.run_unwrap(move |c| {
+                let r = c.rank();
+                let mut vi: Vec<i32> =
+                    base2[r * n..(r + 1) * n].iter().map(|&x| x as i32).collect();
+                let mut si = vec![0i32; n];
+                let mut op = IAllreduce::start(&c, ReduceOp::Sum, &mut vi)?;
+                op.wait(&c, &mut vi, &mut si)?;
+
+                let mut vu: Vec<u64> = base2[r * n..(r + 1) * n]
+                    .iter()
+                    .map(|&x| (x + 500) as u64)
+                    .collect();
+                let mut su = vec![0u64; n];
+                let mut op = IAllreduce::start(&c, ReduceOp::Max, &mut vu)?;
+                op.wait(&c, &mut vu, &mut su)?;
+
+                let mut vd: Vec<f64> =
+                    base2[r * n..(r + 1) * n].iter().map(|&x| x as f64).collect();
+                let mut sd = vec![0.0f64; n];
+                let mut op = IAllreduce::start(&c, ReduceOp::Min, &mut vd)?;
+                op.wait(&c, &mut vd, &mut sd)?;
+                Ok((vi, vu, vd))
+            });
+            for (r, (vi, vu, vd)) in out.iter().enumerate() {
+                for i in 0..n {
+                    let col = (0..p).map(|q| base[q * n + i]);
+                    let sum: i64 = col.clone().sum();
+                    let mx = col.clone().map(|x| (x + 500) as u64).max().unwrap();
+                    let mn = col.clone().map(|x| x as f64).fold(f64::INFINITY, f64::min);
+                    if i64::from(vi[i]) != sum || vu[i] != mx || vd[i] != mn {
+                        return Err(format!(
+                            "p={p} n={n} rank={r} i={i}: ({}, {}, {}) vs ({sum}, {mx}, {mn})",
+                            vi[i], vu[i], vd[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bucketed_pipeline_bitwise_matches_flat_rd() {
+    run_prop(
+        "bucketed pipeline == flat rd",
+        Config { cases: 25, seed: 424242 },
+        |rng, _| {
+            let p = gen::usize_in(rng, 1, 9);
+            let n_tensors = gen::usize_in(rng, 1, 8);
+            let sizes: Vec<usize> =
+                (0..n_tensors).map(|_| gen::usize_in(rng, 1, 300)).collect();
+            let n: usize = sizes.iter().sum();
+            // Cap from 1 byte (every element its own bucket) to larger
+            // than the whole vector (single bucket).
+            let max_bytes = gen::usize_in(rng, 1, n * 8);
+            let inputs: Vec<Vec<f32>> =
+                (0..p).map(|_| gen::f32_vec(rng, n, 5.0)).collect();
+            let inputs2 = inputs.clone();
+            let sizes2 = sizes.clone();
+            let w = World::new(p, NetProfile::zero());
+            let out = w.run_unwrap(move |c| {
+                let mut ranges = Vec::new();
+                let mut off = 0usize;
+                for &s in &sizes2 {
+                    ranges.push(off..off + s);
+                    off += s;
+                }
+                let mut eng = PipelineEngine::new(BucketPlan::build(&ranges, max_bytes));
+                let mut piped = inputs2[c.rank()].clone();
+                eng.allreduce_overlapped(&c, &mut piped, 1e-3)?;
+                let mut flat = inputs2[c.rank()].clone();
+                allreduce_with(
+                    &c,
+                    AllreduceAlgorithm::RecursiveDoubling,
+                    ReduceOp::Sum,
+                    &mut flat,
+                )?;
+                Ok((piped, flat))
+            });
+            for (r, (piped, flat)) in out.iter().enumerate() {
+                for i in 0..n {
+                    if piped[i].to_bits() != flat[i].to_bits() {
+                        return Err(format!(
+                            "p={p} sizes={sizes:?} cap={max_bytes}B rank={r} i={i}: \
+                             piped {} vs flat {}",
+                            piped[i], flat[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bucket_plan_partitions_within_cap() {
+    run_prop(
+        "bucket plan partitions",
+        Config { cases: 100, seed: 9 },
+        |rng, _| {
+            let n_tensors = gen::usize_in(rng, 1, 12);
+            let sizes: Vec<usize> =
+                (0..n_tensors).map(|_| gen::usize_in(rng, 1, 5000)).collect();
+            let n: usize = sizes.iter().sum();
+            let max_bytes = gen::usize_in(rng, 1, 16 * 1024);
+            let cap_elems = (max_bytes / 4).max(1);
+            let mut ranges = Vec::new();
+            let mut off = 0usize;
+            for &s in &sizes {
+                ranges.push(off..off + s);
+                off += s;
+            }
+            let plan = BucketPlan::build(&ranges, max_bytes);
+            if plan.n_elems() != n {
+                return Err(format!("covers {} of {n}", plan.n_elems()));
+            }
+            // Launch order is back-to-front: strictly descending starts,
+            // and sorted buckets tile [0, n).
+            let b = plan.buckets();
+            for w in b.windows(2) {
+                if w[1].range.start >= w[0].range.start {
+                    return Err(format!("not back-to-front: {:?}", plan));
+                }
+            }
+            let mut tiles: Vec<_> = b.iter().map(|g| g.range.clone()).collect();
+            tiles.sort_by_key(|r| r.start);
+            let mut prev = 0usize;
+            for t in &tiles {
+                if t.start != prev || t.is_empty() {
+                    return Err(format!("gap/empty at {t:?} (sizes {sizes:?})"));
+                }
+                prev = t.end;
+            }
+            if prev != n {
+                return Err(format!("ends at {prev}, want {n}"));
+            }
+            if let Some(big) = b.iter().find(|g| g.range.len() > cap_elems) {
+                return Err(format!(
+                    "bucket {:?} exceeds cap {cap_elems} elems (max_bytes {max_bytes})",
+                    big.range
+                ));
+            }
+            if plan.max_bucket_len() != b.iter().map(|g| g.range.len()).max().unwrap_or(0) {
+                return Err("max_bucket_len out of sync".into());
+            }
+            Ok(())
+        },
+    );
+}
