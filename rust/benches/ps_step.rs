@@ -1,0 +1,190 @@
+//! `cargo bench --bench ps_step` — parameter-server consistency-mode
+//! instrument (writes `BENCH_ps.json` next to `BENCH_allreduce.json`).
+//!
+//! Sim-mode, artifact-free: p=8 (6 workers + 2 shard servers) training a
+//! ~70k-parameter MLP under the InfiniBand cost model, with **worker
+//! rank 0 slowed 2x** — the straggler scenario the relaxed consistency
+//! modes exist for. For each of `bsp`, `asp`, `ssp:4` it records virtual
+//! steps/s, the mean per-step pull wait (the consistency gate's price),
+//! the observed staleness high-water mark, and push traffic; a flat
+//! `--alg rd` allreduce run over the same 6 workers is the reference the
+//! BSP digest is bitwise-pinned to (`tests/ps_parity.rs`). The async win
+//! is the `asp`/`ssp` steps/s beating `bsp` under the straggler.
+//!
+//! `DTF_BENCH_SMOKE=1` shrinks the run for CI; `DTF_BENCH_PS_JSON`
+//! overrides the output path.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use dtf::coordinator::{
+    run_training, ExecMode, SyncMode, TrainConfig, TrainMode, TrainReport,
+};
+use dtf::mpi::{AllreduceAlgorithm, NetProfile};
+use dtf::ps::{Consistency, ShardMap};
+use dtf::runtime::Manifest;
+
+const WORKERS: usize = 6;
+const SERVERS: usize = 2;
+const STRAGGLER_MULT: f64 = 2.0;
+const SECS_PER_SAMPLE: f64 = 2e-5;
+
+/// Spec-only manifest (no artifacts): 128-512-8 MLP, 70,152 parameters.
+fn manifest() -> Arc<Manifest> {
+    Manifest::sim_mlp("psb", 128, 512, 8, 4096, 16)
+}
+
+fn base_cfg(epochs: usize, steps: usize) -> TrainConfig {
+    TrainConfig::new("psb")
+        .with_epochs(epochs)
+        .with_sync(SyncMode::GradientAverage)
+        .with_mode(ExecMode::Sim {
+            secs_per_sample: SECS_PER_SAMPLE,
+        })
+        .with_scale(1.0)
+        .with_steps_cap(steps)
+        .with_straggler(0, STRAGGLER_MULT)
+}
+
+struct ModeResult {
+    name: String,
+    wall_s: f64,
+    /// Σ over workers of steps / training-window — the straggler-
+    /// tolerance number (see `TrainReport::sustained_steps_per_s`).
+    sustained_steps_per_s: f64,
+    /// Total steps / end-to-end makespan (straggler-bound in all modes).
+    makespan_steps_per_s: f64,
+    pull_wait_per_step_s: f64,
+    staleness_max: u64,
+    push_bytes_per_worker: u64,
+}
+
+fn run_mode(consistency: Consistency, epochs: usize, steps: usize) -> ModeResult {
+    let cfg = base_cfg(epochs, steps).with_train_mode(TrainMode::ParameterServer {
+        servers: SERVERS,
+        consistency,
+    });
+    let t0 = Instant::now();
+    let report = run_training(
+        cfg,
+        manifest(),
+        WORKERS + SERVERS,
+        NetProfile::infiniband_fdr(),
+    )
+    .expect("ps bench run");
+    let wall_s = t0.elapsed().as_secs_f64();
+    summarize(consistency.name(), wall_s, &report)
+}
+
+fn run_allreduce_ref(epochs: usize, steps: usize) -> ModeResult {
+    let mut cfg = base_cfg(epochs, steps);
+    cfg.allreduce = AllreduceAlgorithm::RecursiveDoubling;
+    let t0 = Instant::now();
+    let report =
+        run_training(cfg, manifest(), WORKERS, NetProfile::infiniband_fdr()).expect("ref run");
+    summarize("allreduce-flat-rd".into(), t0.elapsed().as_secs_f64(), &report)
+}
+
+fn summarize(name: String, wall_s: f64, report: &TrainReport) -> ModeResult {
+    let workers: Vec<_> = report.per_rank.iter().filter(|r| !r.is_server).collect();
+    let total_steps: u64 = workers.iter().map(|r| r.steps).sum();
+    let worker_steps = workers.iter().map(|r| r.steps).max().unwrap_or(0);
+    let pull_wait_per_step_s = if worker_steps > 0 {
+        report.pull_wait_mean_s() / worker_steps as f64
+    } else {
+        0.0
+    };
+    ModeResult {
+        name,
+        wall_s,
+        sustained_steps_per_s: report.sustained_steps_per_s(),
+        makespan_steps_per_s: total_steps as f64 / report.train_makespan_s().max(1e-12),
+        pull_wait_per_step_s,
+        staleness_max: report.staleness_max(),
+        push_bytes_per_worker: workers.iter().map(|r| r.push_bytes).max().unwrap_or(0),
+    }
+}
+
+fn main() {
+    let smoke = std::env::var_os("DTF_BENCH_SMOKE").is_some();
+    let (epochs, steps) = if smoke { (1, 10) } else { (3, 24) };
+
+    let n_params = 70_152usize;
+    let map = ShardMap::build(n_params, SERVERS);
+    let profile = NetProfile::infiniband_fdr();
+    let model_pull_rtt_s = profile.ps_rpc_time(2 * 4, map.max_shard_len() * 4 + 4);
+
+    println!(
+        "parameter-server step bench: p={} ({WORKERS} workers + {SERVERS} servers), \
+         worker 0 slowed {STRAGGLER_MULT}x, {epochs} epochs x {steps} steps",
+        WORKERS + SERVERS
+    );
+    println!("  analytic single-shard pull RTT: {model_pull_rtt_s:.6} s (alpha-beta model)");
+
+    // SSP with a persistent straggler converges to the straggler's pace
+    // offset by the bound, so a visible gap needs `s` that is a fair
+    // fraction of the per-epoch step count.
+    let modes = [
+        Consistency::Bsp,
+        Consistency::Asp,
+        Consistency::Ssp { bound: 4 },
+    ];
+    let mut results: Vec<ModeResult> = modes
+        .iter()
+        .map(|&c| run_mode(c, epochs, steps))
+        .collect();
+    results.push(run_allreduce_ref(epochs, steps));
+
+    for r in &results {
+        println!(
+            "  {:<18} {:>9.0} steps/s sustained ({:>7.0} makespan)   \
+             pull wait {:>10.6} s/step   staleness ≤ {}   push {} B/worker   [{:.2}s wall]",
+            r.name,
+            r.sustained_steps_per_s,
+            r.makespan_steps_per_s,
+            r.pull_wait_per_step_s,
+            r.staleness_max,
+            r.push_bytes_per_worker,
+            r.wall_s
+        );
+    }
+
+    let json_path = std::env::var("DTF_BENCH_PS_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_ps.json").to_string()
+    });
+    let mut modes_json = String::new();
+    for (i, r) in results.iter().enumerate() {
+        if i > 0 {
+            modes_json.push_str(",\n");
+        }
+        modes_json.push_str(&format!(
+            "    \"{}\": {{\n      \"sustained_steps_per_s\": {:.3},\n      \
+             \"makespan_steps_per_s\": {:.3},\n      \
+             \"pull_wait_per_step_s\": {:.9},\n      \"staleness_max\": {},\n      \
+             \"push_bytes_per_worker\": {},\n      \"wall_s\": {:.3}\n    }}",
+            r.name, r.sustained_steps_per_s, r.makespan_steps_per_s, r.pull_wait_per_step_s,
+            r.staleness_max, r.push_bytes_per_worker, r.wall_s
+        ));
+    }
+    let bsp = results[0].sustained_steps_per_s;
+    let body = format!(
+        "{{\n  \"bench\": \"ps_step\",\n  \"arch\": \"psb\",\n  \"n_params\": {n_params},\n  \
+         \"p\": {},\n  \"workers\": {WORKERS},\n  \"servers\": {SERVERS},\n  \
+         \"straggler\": {{ \"world_rank\": 0, \"mult\": {STRAGGLER_MULT:.1} }},\n  \
+         \"epochs\": {epochs},\n  \"steps_per_epoch\": {steps},\n  \
+         \"model_pull_rtt_s\": {model_pull_rtt_s:.9},\n  \"modes\": {{\n{modes_json}\n  }},\n  \
+         \"asp_speedup_vs_bsp\": {:.4},\n  \"ssp_speedup_vs_bsp\": {:.4},\n  \
+         \"note\": \"Sim-mode PS consistency sweep under one 2x-slow worker; virtual time \
+         from the alpha-beta cost model (ps::ShardServer stamps responses at \
+         max(request arrival, consistency gate)). bsp is digest-pinned bitwise to the \
+         allreduce-flat-rd reference by tests/ps_parity.rs. Regenerate with \
+         `cargo bench --bench ps_step`.\"\n}}\n",
+        WORKERS + SERVERS,
+        results[1].sustained_steps_per_s / bsp.max(1e-12),
+        results[2].sustained_steps_per_s / bsp.max(1e-12),
+    );
+    match std::fs::write(&json_path, body) {
+        Ok(()) => println!("wrote {json_path}"),
+        Err(e) => eprintln!("could not write {json_path}: {e}"),
+    }
+}

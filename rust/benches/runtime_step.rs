@@ -40,9 +40,42 @@ const MNIST_N_PARAMS: usize = 178_110;
 /// bucket planner packs.
 const MNIST_TENSORS: [usize; 6] = [156_800, 200, 20_000, 100, 1_000, 10];
 const SYNC_P: usize = 8;
-/// Modelled per-step backprop seconds (mnist_dnn, batch 32, one 2016
-/// Haswell core — same order as `dtf calibrate` reports).
-const STEP_COMPUTE_S: f64 = 1.1e-3;
+/// Fallback modelled per-step backprop seconds (mnist_dnn, batch 32, one
+/// 2016 Haswell core — same order as `dtf calibrate` reports), used when
+/// no calibration record is available.
+const STEP_COMPUTE_S_FALLBACK: f64 = 1.1e-3;
+
+/// Modelled backprop seconds per step, preferring the calibrate path
+/// (ROADMAP overlap follow-up d) over the hardcoded constant:
+///
+/// 1. `DTF_STEP_COMPUTE_S` env override (seconds per step);
+/// 2. `CALIBRATION.json` written by `dtf calibrate --arch mnist_dnn
+///    --write` (path override: `DTF_CALIBRATION_JSON`);
+/// 3. the [`STEP_COMPUTE_S_FALLBACK`] constant.
+fn step_compute_s() -> f64 {
+    if let Ok(v) = std::env::var("DTF_STEP_COMPUTE_S") {
+        if let Ok(x) = v.parse::<f64>() {
+            if x > 0.0 {
+                println!("modelled backprop from DTF_STEP_COMPUTE_S: {x:.6} s/step");
+                return x;
+            }
+        }
+    }
+    let path = std::env::var("DTF_CALIBRATION_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../CALIBRATION.json").to_string()
+    });
+    if let Ok(text) = std::fs::read_to_string(&path) {
+        let calibrated = dtf::util::json::parse(&text)
+            .ok()
+            .and_then(|v| v.get("mnist_dnn")?.get("step_compute_s")?.as_f64())
+            .filter(|&x| x > 0.0);
+        if let Some(x) = calibrated {
+            println!("modelled backprop from {path}: {x:.6} s/step (calibrated)");
+            return x;
+        }
+    }
+    STEP_COMPUTE_S_FALLBACK
+}
 
 /// Wall-clock seconds per sync step (allreduce + average), max over ranks,
 /// steady state (one world reused across iterations).
@@ -104,6 +137,7 @@ fn mnist_ranges() -> Vec<std::ops::Range<usize>> {
 fn bench_sync_strategy(
     strategy: SyncStrategy,
     flat_alg: AllreduceAlgorithm,
+    compute_s: f64,
     iters: usize,
 ) -> (f64, f64) {
     let p = SYNC_P;
@@ -120,9 +154,9 @@ fn bench_sync_strategy(
         let scale = 1.0 / p as f32;
         let mut step = |c: &Communicator, v: &mut Vec<f32>| -> MpiResult<()> {
             match engine.as_mut() {
-                Some(eng) => eng.allreduce_overlapped(c, v, STEP_COMPUTE_S)?,
+                Some(eng) => eng.allreduce_overlapped(c, v, compute_s)?,
                 None => {
-                    c.advance(STEP_COMPUTE_S);
+                    c.advance(compute_s);
                     allreduce_with(c, flat_alg, ReduceOp::Sum, v)?;
                 }
             }
@@ -156,6 +190,7 @@ fn emit_json(
     iters: usize,
     base: f64,
     pooled: f64,
+    compute_s: f64,
     flat_ring: (f64, f64),
     flat_rd: (f64, f64),
     bucketed: (f64, f64),
@@ -167,7 +202,7 @@ fn emit_json(
          \"n_params\": {MNIST_N_PARAMS},\n  \"p\": {SYNC_P},\n  \"algorithm\": \"ring\",\n  \
          \"iters\": {iters},\n  \"baseline_step_s\": {base:.9},\n  \
          \"pooled_step_s\": {pooled:.9},\n  \"improvement_frac\": {improvement:.4},\n  \
-         \"overlap\": {{\n    \"compute_s_per_step\": {STEP_COMPUTE_S:.6},\n    \
+         \"overlap\": {{\n    \"compute_s_per_step\": {compute_s:.6},\n    \
          \"bucket_bytes\": {bucket_bytes},\n    \"n_buckets\": {n_buckets},\n    \
          \"flat_ring_step_wall_s\": {frw:.9},\n    \"flat_ring_step_virtual_s\": {frv:.9},\n    \
          \"flat_rd_step_wall_s\": {fdw:.9},\n    \"flat_rd_step_virtual_s\": {fdv:.9},\n    \
@@ -218,21 +253,24 @@ fn main() {
     let strategy = SyncStrategy::Bucketed {
         max_bytes: SyncStrategy::DEFAULT_BUCKET_BYTES,
     };
+    let compute_s = step_compute_s();
     let n_buckets =
         BucketPlan::build(&mnist_ranges(), SyncStrategy::DEFAULT_BUCKET_BYTES).n_buckets();
     println!(
-        "\noverlapped vs flat sync (p={SYNC_P}, mnist_dnn, {:.1} ms modelled backprop, \
+        "\noverlapped vs flat sync (p={SYNC_P}, mnist_dnn, {:.2} ms modelled backprop, \
          {n_buckets} buckets):",
-        STEP_COMPUTE_S * 1e3
+        compute_s * 1e3
     );
     let flat_ring =
-        bench_sync_strategy(SyncStrategy::Flat, AllreduceAlgorithm::Ring, iters);
+        bench_sync_strategy(SyncStrategy::Flat, AllreduceAlgorithm::Ring, compute_s, iters);
     let flat_rd = bench_sync_strategy(
         SyncStrategy::Flat,
         AllreduceAlgorithm::RecursiveDoubling,
+        compute_s,
         iters,
     );
-    let bucketed = bench_sync_strategy(strategy, AllreduceAlgorithm::RecursiveDoubling, iters);
+    let bucketed =
+        bench_sync_strategy(strategy, AllreduceAlgorithm::RecursiveDoubling, compute_s, iters);
     println!(
         "  flat/ring (trainer default) {:>12} wall   {:>12} virtual /step",
         fmt_secs(flat_ring.0),
@@ -258,7 +296,7 @@ fn main() {
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_allreduce.json").to_string()
     });
     emit_json(
-        &json_path, iters, base, pooled, flat_ring, flat_rd, bucketed, n_buckets,
+        &json_path, iters, base, pooled, compute_s, flat_ring, flat_rd, bucketed, n_buckets,
     );
 
     // ---- PJRT execution latency (needs AOT artifacts) --------------------

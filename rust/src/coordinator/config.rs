@@ -3,6 +3,7 @@
 
 use crate::mpi::ulfm::FaultPlan;
 use crate::mpi::AllreduceAlgorithm;
+use crate::ps::Consistency;
 
 /// How replicas synchronize (§3.3.2–3.3.3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -83,6 +84,42 @@ impl SyncStrategy {
     }
 }
 
+/// *Who* holds the authoritative model — the two sides of the 2016
+/// design space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainMode {
+    /// The paper's design: every rank holds a full replica and
+    /// synchronizes with collectives (`SyncStrategy` picks flat vs
+    /// bucketed-pipelined allreduce).
+    Allreduce,
+    /// The architecture the paper replaced — and what TensorFlow/MaTEx
+    /// show relaxed consistency needs: the last `servers` ranks shard the
+    /// parameter vector and serve pull/push RPCs from the remaining
+    /// worker ranks (see [`crate::ps`]). Always moves gradients
+    /// (`SyncMode::GradientAverage` semantics); `consistency` picks
+    /// BSP / ASP / SSP.
+    ParameterServer {
+        /// Server rank count (the last `servers` world ranks).
+        servers: usize,
+        consistency: Consistency,
+    },
+}
+
+impl TrainMode {
+    /// Parse the `--train-mode` / `--ps-servers` / `--consistency` CLI
+    /// triple: mode `allreduce` (servers/consistency ignored) or `ps`.
+    pub fn by_name(mode: &str, servers: usize, consistency: &str) -> Option<Self> {
+        match mode {
+            "allreduce" => Some(Self::Allreduce),
+            "ps" | "parameter-server" => Some(Self::ParameterServer {
+                servers,
+                consistency: Consistency::by_name(consistency)?,
+            }),
+            _ => None,
+        }
+    }
+}
+
 /// How replica compute executes.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ExecMode {
@@ -105,7 +142,15 @@ pub struct TrainConfig {
     /// Flat blocking allreduce vs bucketed overlapped pipeline.
     pub sync_strategy: SyncStrategy,
     pub allreduce: AllreduceAlgorithm,
+    /// Collective allreduce (the paper) vs sharded parameter server with
+    /// BSP/ASP/SSP consistency (`sync_strategy`/`allreduce` are the
+    /// allreduce path's knobs; PS mode ignores them).
+    pub train_mode: TrainMode,
     pub mode: ExecMode,
+    /// Heterogeneity knob for Sim runs: `(world_rank, multiplier)` scales
+    /// that rank's per-sample compute time — the straggler the relaxed
+    /// consistency modes exist to tolerate. Ignored in `ExecMode::Real`.
+    pub straggler: Option<(usize, f64)>,
     /// Scale factor on the paper's dataset sizes (1.0 = full size).
     pub data_scale: f64,
     /// Cap on steps per epoch (None = full shard) — keeps real-mode tests
@@ -137,7 +182,9 @@ impl TrainConfig {
             sync_every: SyncEvery::Step,
             sync_strategy: SyncStrategy::Flat,
             allreduce: AllreduceAlgorithm::Auto,
+            train_mode: TrainMode::Allreduce,
             mode: ExecMode::Real,
+            straggler: None,
             data_scale: 0.05,
             max_steps_per_epoch: None,
             eval_every: 0,
@@ -188,6 +235,29 @@ impl TrainConfig {
         self.sync_strategy = s;
         self
     }
+
+    pub fn with_train_mode(mut self, m: TrainMode) -> Self {
+        self.train_mode = m;
+        self
+    }
+
+    pub fn with_straggler(mut self, world_rank: usize, mult: f64) -> Self {
+        self.straggler = Some((world_rank, mult));
+        self
+    }
+
+    /// Execution mode for a specific rank: Sim compute picks up the
+    /// straggler multiplier, Real execution is whatever the host does.
+    pub fn effective_mode(&self, world_rank: usize) -> ExecMode {
+        match (self.mode, self.straggler) {
+            (ExecMode::Sim { secs_per_sample }, Some((r, mult))) if r == world_rank => {
+                ExecMode::Sim {
+                    secs_per_sample: secs_per_sample * mult,
+                }
+            }
+            (mode, _) => mode,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -218,6 +288,44 @@ mod tests {
         assert_eq!(SyncStrategy::by_name("bucketed:0"), None);
         assert_eq!(SyncStrategy::by_name("bucketed:x"), None);
         assert_eq!(SyncStrategy::by_name("ring"), None);
+    }
+
+    #[test]
+    fn train_mode_names() {
+        use crate::ps::Consistency;
+        assert_eq!(
+            TrainMode::by_name("allreduce", 0, "bsp"),
+            Some(TrainMode::Allreduce)
+        );
+        assert_eq!(
+            TrainMode::by_name("ps", 2, "ssp:3"),
+            Some(TrainMode::ParameterServer {
+                servers: 2,
+                consistency: Consistency::Ssp { bound: 3 }
+            })
+        );
+        assert_eq!(TrainMode::by_name("ps", 2, "nope"), None);
+        assert_eq!(TrainMode::by_name("shard", 2, "bsp"), None);
+    }
+
+    #[test]
+    fn straggler_scales_only_its_rank_in_sim() {
+        let cfg = TrainConfig::new("t")
+            .with_mode(ExecMode::Sim {
+                secs_per_sample: 1e-4,
+            })
+            .with_straggler(3, 2.0);
+        match cfg.effective_mode(3) {
+            ExecMode::Sim { secs_per_sample } => assert!((secs_per_sample - 2e-4).abs() < 1e-12),
+            m => panic!("unexpected mode {m:?}"),
+        }
+        match cfg.effective_mode(0) {
+            ExecMode::Sim { secs_per_sample } => assert!((secs_per_sample - 1e-4).abs() < 1e-12),
+            m => panic!("unexpected mode {m:?}"),
+        }
+        // Real mode ignores the knob entirely.
+        let real = TrainConfig::new("t").with_straggler(0, 4.0);
+        assert_eq!(real.effective_mode(0), ExecMode::Real);
     }
 
     #[test]

@@ -3,21 +3,46 @@
 
 use std::sync::Arc;
 
-use super::config::TrainConfig;
+use super::config::{SyncEvery, SyncMode, TrainConfig, TrainMode};
 use super::metrics::TrainReport;
 use super::trainer::train_rank;
 use crate::mpi::{NetProfile, World};
+use crate::ps::train_rank_ps;
 use crate::runtime::Manifest;
 use crate::Result;
-use anyhow::anyhow;
+use anyhow::{anyhow, ensure};
 
-/// Run a full training job over `ranks` simulated MPI ranks.
+/// Run a full training job over `ranks` simulated MPI ranks —
+/// collective-allreduce or parameter-server, per `cfg.train_mode`.
 pub fn run_training(
     cfg: TrainConfig,
     manifest: Arc<Manifest>,
     ranks: usize,
     profile: NetProfile,
 ) -> Result<TrainReport> {
+    if let TrainMode::ParameterServer { servers, .. } = cfg.train_mode {
+        ensure!(servers >= 1, "--ps-servers must be at least 1");
+        ensure!(
+            servers < ranks,
+            "parameter-server mode needs at least one worker rank \
+             (got {ranks} ranks for {servers} servers)"
+        );
+        ensure!(
+            cfg.sync == SyncMode::GradientAverage,
+            "parameter-server mode pushes gradients; set --sync grad"
+        );
+        ensure!(
+            cfg.sync_every == SyncEvery::Step,
+            "parameter-server mode synchronizes every step (--sync-every step)"
+        );
+    }
+    if let Some((rank, mult)) = cfg.straggler {
+        ensure!(
+            rank < ranks,
+            "--straggler rank {rank} is outside the {ranks}-rank world"
+        );
+        ensure!(mult > 0.0, "--straggler multiplier must be positive");
+    }
     let arch = cfg.arch.clone();
     let mut cfg = cfg;
     // Simulated compute pays the node-occupancy (DRAM contention) tax of
@@ -29,7 +54,10 @@ pub fn run_training(
     }
     let world = World::new(ranks, profile);
     let cfg = Arc::new(cfg);
-    let results = world.run(move |comm| train_rank(comm, &cfg, manifest.clone()));
+    let results = world.run(move |comm| match cfg.train_mode {
+        TrainMode::Allreduce => train_rank(comm, &cfg, manifest.clone()),
+        TrainMode::ParameterServer { .. } => train_rank_ps(comm, &cfg, manifest.clone()),
+    });
 
     let mut per_rank = Vec::with_capacity(ranks);
     for (r, res) in results.into_iter().enumerate() {

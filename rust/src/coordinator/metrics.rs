@@ -33,8 +33,26 @@ pub struct RankMetrics {
     pub sync_exposed_s: f64,
     /// Gradient buckets all-reduced (0 under `SyncStrategy::Flat`).
     pub buckets_synced: u64,
+    /// Parameter-server mode: max observed staleness (own clock −
+    /// slowest worker's clock) across this worker's pulls. Always 0
+    /// under BSP; bounded by `s` under SSP; unbounded under ASP.
+    pub staleness_max: u64,
+    /// Parameter-server mode: virtual seconds this worker stalled in
+    /// pulls (the PS counterpart of `sync_exposed_s`).
+    pub pull_wait_s: f64,
+    /// Parameter-server mode: gradient bytes pushed (worker) or received
+    /// and applied (server).
+    pub push_bytes: u64,
+    /// True for parameter-server ranks: they hold only their shard, so
+    /// replica-consistency checks skip them.
+    pub is_server: bool,
     /// Virtual seconds charged as data loading/scatter.
     pub io_s: f64,
+    /// Virtual clock when this rank finished its **last training step**
+    /// (last push in PS mode) — before any end-of-training flush or
+    /// final evaluation. `train_done_clock_s - io_s` is the rank's
+    /// training window; see [`TrainReport::sustained_steps_per_s`].
+    pub train_done_clock_s: f64,
     /// Final virtual clock (makespan contribution).
     pub clock_s: f64,
     /// Wall-clock seconds actually spent (real mode).
@@ -65,7 +83,12 @@ impl RankMetrics {
             comm_s: 0.0,
             sync_exposed_s: 0.0,
             buckets_synced: 0,
+            staleness_max: 0,
+            pull_wait_s: 0.0,
+            push_bytes: 0,
+            is_server: false,
             io_s: 0.0,
+            train_done_clock_s: 0.0,
             clock_s: 0.0,
             wall_s: 0.0,
             bytes_sent: 0,
@@ -133,16 +156,60 @@ impl TrainReport {
     }
 
     /// Do all surviving replicas hold bitwise-identical parameters?
+    /// Parameter-server ranks are skipped — they hold one shard, not a
+    /// replica.
     pub fn replicas_bitwise_identical(&self) -> bool {
         let mut digests = self
             .per_rank
             .iter()
-            .filter(|r| !r.died)
+            .filter(|r| !r.died && !r.is_server)
             .map(|r| r.params_digest);
         match digests.next() {
             Some(first) => digests.all(|d| d == first),
             None => true,
         }
+    }
+
+    /// Max observed staleness across surviving workers (PS mode; 0 under
+    /// BSP or allreduce).
+    pub fn staleness_max(&self) -> u64 {
+        self.per_rank
+            .iter()
+            .filter(|r| !r.died && !r.is_server)
+            .map(|r| r.staleness_max)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Sustained system throughput while training: Σ over surviving
+    /// workers of `steps / (train_done_clock_s − io_s)` — each worker's
+    /// stall-inclusive step rate, summed. With a fixed lockstep step
+    /// count the end-to-end makespan is straggler-bound under *every*
+    /// consistency mode (the final flush waits for the slowest worker's
+    /// last push), so this is the number that exposes the async win: BSP
+    /// gates depress every worker's rate to the straggler's pace, while
+    /// ASP/SSP let the fast workers run at their own.
+    pub fn sustained_steps_per_s(&self) -> f64 {
+        self.per_rank
+            .iter()
+            .filter(|r| {
+                !r.died && !r.is_server && r.steps > 0 && r.train_done_clock_s > r.io_s
+            })
+            .map(|r| r.steps as f64 / (r.train_done_clock_s - r.io_s))
+            .sum()
+    }
+
+    /// Mean virtual seconds a surviving worker stalled in PS pulls.
+    pub fn pull_wait_mean_s(&self) -> f64 {
+        let workers: Vec<_> = self
+            .per_rank
+            .iter()
+            .filter(|r| !r.died && !r.is_server)
+            .collect();
+        if workers.is_empty() {
+            return 0.0;
+        }
+        workers.iter().map(|r| r.pull_wait_s).sum::<f64>() / workers.len() as f64
     }
 
     /// Mean fraction of virtual time spent communicating (survivors only).
@@ -218,6 +285,22 @@ mod tests {
         let e = report().final_eval().unwrap();
         assert_eq!(e.epoch, 1);
         assert!((e.accuracy - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn server_ranks_skip_replica_checks_but_report_ps_metrics() {
+        let mut r = report();
+        r.per_rank[0].params_digest = 7;
+        r.per_rank[0].staleness_max = 2;
+        r.per_rank[0].pull_wait_s = 1.5;
+        // Rank 1 is a shard server with an unrelated digest: the replica
+        // consistency check must ignore it.
+        r.per_rank[1].is_server = true;
+        r.per_rank[1].params_digest = 999;
+        r.per_rank[1].staleness_max = 50; // servers don't pull; ignored
+        assert!(r.replicas_bitwise_identical());
+        assert_eq!(r.staleness_max(), 2);
+        assert!((r.pull_wait_mean_s() - 1.5).abs() < 1e-12);
     }
 
     #[test]

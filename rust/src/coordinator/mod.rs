@@ -9,7 +9,10 @@
 //! [`sync`] is the paper's flat blocking allreduce; [`pipeline`] is the
 //! bucketed nonblocking engine that overlaps each layer's gradient
 //! allreduce with the rest of backprop while keeping replicas bitwise
-//! identical.
+//! identical. `TrainConfig::train_mode` additionally selects the *other*
+//! side of the 2016 design space: a sharded parameter server with
+//! BSP/ASP/SSP consistency (the [`crate::ps`] subsystem), dispatched by
+//! the launcher onto the same rank threads.
 
 pub mod config;
 pub mod launcher;
@@ -19,7 +22,7 @@ pub mod replica;
 pub mod sync;
 pub mod trainer;
 
-pub use config::{ExecMode, SyncEvery, SyncMode, SyncStrategy, TrainConfig};
+pub use config::{ExecMode, SyncEvery, SyncMode, SyncStrategy, TrainConfig, TrainMode};
 pub use launcher::run_training;
 pub use metrics::{EvalPoint, RankMetrics, TrainReport};
 pub use pipeline::{BucketPlan, GradBucket, PipelineEngine};

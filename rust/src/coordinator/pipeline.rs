@@ -157,10 +157,7 @@ impl PipelineEngine {
 
     /// Engine over a replica's parameter layout.
     pub fn for_params(params: &ParamSet, max_bytes: usize) -> PipelineEngine {
-        let ranges: Vec<Range<usize>> = (0..params.n_tensors())
-            .map(|i| params.tensor_range(i))
-            .collect();
-        Self::new(BucketPlan::build(&ranges, max_bytes))
+        Self::new(BucketPlan::build(&params.tensor_ranges(), max_bytes))
     }
 
     pub fn plan(&self) -> &BucketPlan {

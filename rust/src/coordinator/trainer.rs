@@ -53,7 +53,15 @@ pub fn train_rank(
     let comm_at_train_start = comm.stats().comm_vtime;
 
     // ---- replicate the model (§3.3.2) ----------------------------------
-    let mut replica = Replica::new(&manifest, &cfg.arch, cfg.mode, cfg.lr, cfg.seed)?;
+    // `effective_mode` applies the Sim straggler multiplier to this rank,
+    // so heterogeneous-rank scenarios run through the same code path.
+    let mut replica = Replica::new(
+        &manifest,
+        &cfg.arch,
+        cfg.effective_mode(comm.world_rank()),
+        cfg.lr,
+        cfg.seed,
+    )?;
     if cfg.broadcast_init {
         // Ablation: explicit rank-0 broadcast instead of same-seed init.
         let mut flat = if comm.rank() == 0 {
@@ -147,6 +155,8 @@ pub fn train_rank(
             Err(e) => return Err(e.into()),
         }
     }
+
+    metrics.train_done_clock_s = comm.clock();
 
     // ---- final evaluation -------------------------------------------------
     if !metrics.died && replica.is_real() {
@@ -272,8 +282,9 @@ fn realign(comm: &Communicator, replica: &mut Replica) -> Result<()> {
 }
 
 /// Distributed evaluation: every rank scores its test shard; one small
-/// all-reduce produces the global loss/accuracy.
-fn evaluate(
+/// all-reduce produces the global loss/accuracy. Shared with the
+/// parameter-server trainer (which passes its worker subcommunicator).
+pub(crate) fn evaluate(
     comm: &Communicator,
     replica: &mut Replica,
     test_shard: &Dataset,

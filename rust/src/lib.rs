@@ -24,6 +24,9 @@
 //!   synthetic generators for all five paper datasets, sharding, batching.
 //! * [`coordinator`] — the paper's system: synchronous data-parallel trainer
 //!   with weight-averaging or gradient-averaging over MPI allreduce.
+//! * [`ps`] — the other side of the design space: a sharded parameter
+//!   server over the same substrate, with BSP/ASP/SSP consistency modes
+//!   (BSP is bitwise-identical to the flat allreduce path).
 //! * [`perfmodel`] — the paper's analytic model ((m/p)·n²·l compute,
 //!   n²·l communication) used to cross-check the simulator.
 //! * [`figures`] — harness regenerating every figure/table in the paper.
@@ -36,6 +39,7 @@ pub mod figures;
 pub mod model;
 pub mod mpi;
 pub mod perfmodel;
+pub mod ps;
 pub mod runtime;
 pub mod util;
 

@@ -8,7 +8,9 @@
 
 use std::sync::Arc;
 
-use dtf::coordinator::{run_training, ExecMode, SyncEvery, SyncMode, SyncStrategy, TrainConfig};
+use dtf::coordinator::{
+    run_training, ExecMode, SyncEvery, SyncMode, SyncStrategy, TrainConfig, TrainMode,
+};
 use dtf::figures::{self, runner};
 use dtf::mpi::{AllreduceAlgorithm, NetProfile};
 use dtf::runtime::Manifest;
@@ -46,12 +48,21 @@ USAGE:
   dtf train --arch <id> [--ranks N] [--epochs N] [--lr F] [--sync weight|grad|none]
             [--sync-every step|epoch] [--sync-strategy flat|bucketed[:BYTES]]
             [--alg auto|ring|rd|tree] [--pool-trim N]
+            [--train-mode allreduce|ps] [--ps-servers N]
+            [--consistency bsp|asp|ssp:<s>] [--straggler RANK:MULT]
             [--profile ib|socket|bgq|shm] [--sim <secs/sample>|auto]
             [--scale F] [--steps-cap N] [--eval-every N] [--seed N] [--quiet]
   dtf figures [--id fig1..fig6|higgs|ablate-*|all] [--epochs N] [--out-dir D]
               [--profile ib|...] [--sps F]
   dtf inspect [--archs] [--artifacts]
-  dtf calibrate --arch <id>
+  dtf calibrate --arch <id> [--write]
+
+Parameter-server mode (`--train-mode ps`): the last --ps-servers ranks shard
+the model and serve pull/push; --consistency picks bulk-synchronous (bsp,
+bitwise-identical to allreduce), fully asynchronous (asp), or stale-
+synchronous with bound s (ssp:<s>). --straggler slows one Sim rank to see
+the relaxed modes tolerate it. `calibrate --write` records CALIBRATION.json
+for the runtime_step bench.
 
 Architectures (Table 1): adult_dnn acoustic_dnn mnist_dnn cifar10_dnn
                          higgs_dnn mnist_cnn cifar10_cnn
@@ -71,8 +82,8 @@ fn parse_profile(args: &Args) -> Result<NetProfile> {
 fn cmd_train(args: &Args) -> Result<()> {
     args.check_known(&[
         "arch", "ranks", "epochs", "lr", "sync", "sync-every", "sync-strategy", "alg",
-        "pool-trim", "profile", "sim", "scale", "steps-cap", "eval-every", "seed",
-        "quiet", "broadcast-init",
+        "pool-trim", "train-mode", "ps-servers", "consistency", "straggler", "profile",
+        "sim", "scale", "steps-cap", "eval-every", "seed", "quiet", "broadcast-init",
     ])?;
     let manifest = load_manifest()?;
     let arch = args
@@ -91,8 +102,30 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(cap) = args.get("steps-cap") {
         cfg.max_steps_per_epoch = Some(cap.parse()?);
     }
-    cfg.sync = SyncMode::by_name(args.str_or("sync", "weight"))
+    let mode_name = args.str_or("train-mode", "allreduce");
+    cfg.train_mode = TrainMode::by_name(
+        mode_name,
+        args.usize_or("ps-servers", 1)?,
+        args.str_or("consistency", "bsp"),
+    )
+    .ok_or_else(|| {
+        anyhow::anyhow!("--train-mode must be allreduce|ps with --consistency bsp|asp|ssp:<s>")
+    })?;
+    // PS mode pushes gradients, so its natural default sync is grad.
+    let sync_default = if matches!(cfg.train_mode, TrainMode::ParameterServer { .. }) {
+        "grad"
+    } else {
+        "weight"
+    };
+    cfg.sync = SyncMode::by_name(args.str_or("sync", sync_default))
         .ok_or_else(|| anyhow::anyhow!("--sync must be weight|grad|none"))?;
+    if let Some(spec) = args.get("straggler") {
+        let (rank, mult) = spec
+            .split_once(':')
+            .and_then(|(r, m)| Some((r.parse::<usize>().ok()?, m.parse::<f64>().ok()?)))
+            .ok_or_else(|| anyhow::anyhow!("--straggler expects RANK:MULT, got {spec:?}"))?;
+        cfg.straggler = Some((rank, mult));
+    }
     cfg.sync_every = match args.str_or("sync-every", "step") {
         "step" => SyncEvery::Step,
         "epoch" => SyncEvery::Epoch,
@@ -136,6 +169,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.sync_exposed_mean_s()
     );
     println!("  samples trained    {}", report.total_samples());
+    if report.per_rank.iter().any(|m| m.is_server) {
+        println!(
+            "  ps pull wait       {:.4} s/worker (mean; the consistency gate's price)",
+            report.pull_wait_mean_s()
+        );
+        println!("  ps staleness max   {} steps", report.staleness_max());
+    }
     if !report.losses().is_empty() {
         println!("  epoch losses       {:?}", report.losses());
     }
@@ -211,7 +251,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 }
 
 fn cmd_calibrate(args: &Args) -> Result<()> {
-    args.check_known(&["arch"])?;
+    args.check_known(&["arch", "write"])?;
     let manifest = load_manifest()?;
     let arch = args.get("arch").unwrap_or("mnist_dnn");
     let sps = runner::calibrate(&manifest, arch)?;
@@ -223,5 +263,49 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
         manifest.batch_size,
         spec.flops_per_sample as f64 / sps / 1e9,
     );
+    if args.has("write") {
+        // Record for the runtime_step bench: its modelled backprop time
+        // comes from this file instead of the hardcoded constant
+        // (ROADMAP overlap follow-up d). Written to the repo root — the
+        // same path the bench reads (`cargo run` executes from rust/) —
+        // and merged with any existing record: the file is keyed by
+        // arch, so calibrating one must not destroy another's entry.
+        let step = sps * manifest.batch_size as f64;
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../CALIBRATION.json");
+        let mut entries: std::collections::BTreeMap<String, (f64, f64, f64)> =
+            std::collections::BTreeMap::new();
+        if let Ok(text) = std::fs::read_to_string(path) {
+            if let Some(obj) = dtf::util::json::parse(&text)
+                .ok()
+                .as_ref()
+                .and_then(|v| v.as_obj())
+            {
+                for (k, e) in obj {
+                    let field = |f: &str| e.get(f).and_then(|x| x.as_f64());
+                    if let (Some(a), Some(b), Some(c)) = (
+                        field("secs_per_sample"),
+                        field("batch"),
+                        field("step_compute_s"),
+                    ) {
+                        entries.insert(k.clone(), (a, b, c));
+                    }
+                }
+            }
+        }
+        entries.insert(arch.to_string(), (sps, manifest.batch_size as f64, step));
+        let mut body = String::from("{\n");
+        for (i, (k, (a, b, c))) in entries.iter().enumerate() {
+            if i > 0 {
+                body.push_str(",\n");
+            }
+            body.push_str(&format!(
+                "  \"{k}\": {{\n    \"secs_per_sample\": {a:.12},\n    \
+                 \"batch\": {b:.0},\n    \"step_compute_s\": {c:.12}\n  }}"
+            ));
+        }
+        body.push_str("\n}\n");
+        std::fs::write(path, &body)?;
+        println!("wrote {path} ({arch}: {:.3} ms/step)", step * 1e3);
+    }
     Ok(())
 }

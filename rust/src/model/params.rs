@@ -65,6 +65,13 @@ impl ParamSet {
         s..s + self.shapes[i].numel()
     }
 
+    /// Every tensor's flat range in ABI order — the tiling consumed by
+    /// the gradient bucket planner (`coordinator::pipeline`) and the
+    /// parameter-server shard partition (`ps::ShardMap`).
+    pub fn tensor_ranges(&self) -> Vec<std::ops::Range<usize>> {
+        (0..self.n_tensors()).map(|i| self.tensor_range(i)).collect()
+    }
+
     /// Slice view of tensor `i` (ABI order).
     pub fn view(&self, i: usize) -> &[f32] {
         let s = self.offsets[i];
@@ -212,6 +219,11 @@ mod tests {
             prev_end = r.end;
         }
         assert_eq!(prev_end, p.n_params());
+        let all = p.tensor_ranges();
+        assert_eq!(all.len(), p.n_tensors());
+        for (i, r) in all.iter().enumerate() {
+            assert_eq!(*r, p.tensor_range(i));
+        }
     }
 
     #[test]

@@ -188,6 +188,14 @@ impl Communicator {
         self.group.world_ranks[self.rank]
     }
 
+    /// World rank of every member, indexed by comm rank. Role assignment
+    /// in the parameter-server subsystem keys off the *initial* world
+    /// ranks (stable across shrinks), so survivors of a failure can agree
+    /// on who serves and who trains without any extra communication.
+    pub fn world_ranks(&self) -> &[usize] {
+        &self.group.world_ranks
+    }
+
     // ---- virtual clock & stats -----------------------------------------
 
     /// This rank's virtual time (seconds since world start).
@@ -465,6 +473,35 @@ impl Communicator {
         self.fold_envelope_arrival(&env);
         Ok(Some((n, from)))
         // `env` drops here, returning its storage to the group pool.
+    }
+
+    /// Non-blocking matched receive of a raw [`Envelope`] — the
+    /// parameter-server event loop's probe. A matching queued message is
+    /// consumed (arrival folded into the clock, like every receive);
+    /// `Ok(None)` means nothing is queued yet. Unlike
+    /// [`Communicator::try_recv_into`], an empty queue is *never* turned
+    /// into a peer-failure error: a PS server polls with `ANY_SOURCE`
+    /// while some clients are legitimately done, and runs its own
+    /// liveness checks between polls.
+    pub fn try_recv_envelope(
+        &self,
+        src: Option<usize>,
+        tag: Tag,
+    ) -> MpiResult<Option<Envelope>> {
+        self.check_usable()?;
+        if let Some(s) = src {
+            if s >= self.size() {
+                return Err(MpiError::InvalidRank {
+                    rank: s,
+                    size: self.size(),
+                });
+            }
+        }
+        let env = self.group.mailboxes[self.rank].try_recv_match(src, Some(tag))?;
+        Ok(env.map(|env| {
+            self.fold_envelope_arrival(&env);
+            env
+        }))
     }
 
     /// Combined send+recv (exchange), used by ring/pairwise collectives.
@@ -785,6 +822,34 @@ mod tests {
             c1.try_recv_into(Some(0), 3, &mut out),
             Err(MpiError::ProcFailed { rank: 0 })
         ));
+    }
+
+    #[test]
+    fn try_recv_envelope_polls_and_folds_arrival() {
+        let (c0, c1) = pair();
+        // Nothing queued: pending, not an error, even from a dead peer's
+        // direction (the PS server's liveness checks own that case).
+        assert!(c1.try_recv_envelope(None, 9).unwrap().is_none());
+        assert_eq!(c1.clock(), 0.0);
+        c0.send(1, 9, &[1.0f32, 2.0]).unwrap();
+        // Wrong tag stays queued.
+        assert!(c1.try_recv_envelope(None, 8).unwrap().is_none());
+        let env = c1.try_recv_envelope(None, 9).unwrap().unwrap();
+        assert_eq!(env.src, 0);
+        assert!(c1.clock() > 0.0, "arrival must fold into the clock");
+        drop(env);
+        assert_eq!(c0.pool().stats().recycled, 1);
+        c1.revoke();
+        assert!(matches!(
+            c1.try_recv_envelope(None, 9),
+            Err(MpiError::Revoked)
+        ));
+    }
+
+    #[test]
+    fn world_ranks_exposed_in_comm_rank_order() {
+        let (c0, _c1) = pair();
+        assert_eq!(c0.world_ranks(), &[0, 1]);
     }
 
     #[test]

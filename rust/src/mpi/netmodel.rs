@@ -95,6 +95,18 @@ impl NetProfile {
         }
     }
 
+    /// Analytic round-trip time of a parameter-server RPC between two
+    /// inter-node ranks: the client's request injection + transfer, then
+    /// the server's response injection + transfer. Pull and push traffic
+    /// through `ps::` is priced by exactly this model (each leg is an
+    /// ordinary [`Communicator::send`](crate::mpi::Communicator::send)),
+    /// so Sim-mode runs expose the BSP-vs-ASP gap as virtual time; this
+    /// closed form is the cross-check the PS bench records next to the
+    /// measured latency.
+    pub fn ps_rpc_time(&self, req_bytes: usize, resp_bytes: usize) -> f64 {
+        2.0 * self.send_overhead_s + self.p2p_time(req_bytes) + self.p2p_time(resp_bytes)
+    }
+
     pub fn same_node(&self, a: usize, b: usize) -> bool {
         if self.cores_per_node == usize::MAX {
             return true; // flat profile: uniform cost either way
@@ -227,6 +239,17 @@ mod tests {
         let t1 = p.p2p_time(1_000_000);
         assert!((t0 - p.alpha_s).abs() < 1e-12);
         assert!((t1 - t0 - 1_000_000.0 / p.beta_bytes_per_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ps_rpc_time_is_both_legs_plus_overheads() {
+        let p = NetProfile::infiniband_fdr();
+        let req = 16usize; // pull request header
+        let resp = 4 * 10_000 + 4; // shard payload + clock word
+        let want = 2.0 * p.send_overhead_s + p.p2p_time(req) + p.p2p_time(resp);
+        assert!((p.ps_rpc_time(req, resp) - want).abs() < 1e-15);
+        // A pull of a bigger shard costs strictly more.
+        assert!(p.ps_rpc_time(req, 2 * resp) > p.ps_rpc_time(req, resp));
     }
 
     #[test]

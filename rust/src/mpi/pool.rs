@@ -28,13 +28,15 @@
 //!   `(dtype, bucket)` — tens of model-sizes in the worst case, held for
 //!   the communicator group's lifetime. That is a deliberate trade for
 //!   churn-free steady state; trim-at-epoch is the follow-up if it bites.
-//! * Concurrency: one `Mutex` guards the shelf map, taken once per
-//!   acquire/release. That is deliberate — the alternative it replaces
-//!   (malloc) also synchronizes, and the protocols bound concurrent
-//!   demand to a handful of buffers — but if profiling ever shows this
-//!   lock hot at large `p`, shard the shelves per `(dtype, bucket)` with
-//!   striped locks before reaching for anything fancier (tracked in
-//!   ROADMAP "Open items").
+//! * Concurrency: the shelf map is **striped** — `N_STRIPES` independent
+//!   `Mutex<HashMap>`s, with each `(dtype, bucket)` key hashed to one
+//!   stripe. An acquire/release takes exactly one stripe lock, so
+//!   unrelated traffic (different dtypes, different size classes — e.g.
+//!   the trainer's f32 gradient buffers vs the barrier's i32 tokens, or
+//!   PS pull responses vs push payloads) never contends on a shared
+//!   mutex. This retires the ROADMAP "Pool follow-ups (a)" item: the old
+//!   single pool-wide mutex was taken once per acquire/release by every
+//!   rank of the group.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -78,16 +80,47 @@ fn capacity_bucket(cap: usize) -> u32 {
     usize::BITS - 1 - cap.leading_zeros()
 }
 
+/// Number of independent shelf-map stripes (power of two). Sized so the
+/// handful of hot `(dtype, bucket)` keys of a training step land on
+/// distinct locks with high probability; contention on one stripe only
+/// ever involves traffic that shares a size class anyway.
+const N_STRIPES: usize = 8;
+
+/// Deterministic stripe for a shelf key. Mixes the dtype name bytes with
+/// the size bucket so `("f32", k)` and `("f64", k)` — and the same dtype
+/// at neighbouring buckets — spread across stripes.
+fn stripe_of(dtype: &'static str, bucket: u32) -> usize {
+    let b = dtype.as_bytes();
+    let h = b[0] as usize * 131
+        + b.get(1).copied().unwrap_or(0) as usize * 31
+        + b.len() * 7
+        + bucket as usize;
+    h & (N_STRIPES - 1)
+}
+
 /// Thread-safe free lists of message storage, shared by all ranks of a
 /// communicator group.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct BufferPool {
-    shelves: Mutex<HashMap<(&'static str, u32), Vec<Buffer>>>,
+    stripes: [Mutex<HashMap<(&'static str, u32), Vec<Buffer>>>; N_STRIPES],
     hits: AtomicU64,
     misses: AtomicU64,
     recycled: AtomicU64,
     dropped: AtomicU64,
     trimmed: AtomicU64,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        BufferPool {
+            stripes: std::array::from_fn(|_| Mutex::new(HashMap::new())),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            recycled: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            trimmed: AtomicU64::new(0),
+        }
+    }
 }
 
 impl BufferPool {
@@ -103,7 +136,11 @@ impl BufferPool {
             return Vec::new();
         }
         let key = (T::type_name(), request_bucket(n));
-        let popped = self.shelves.lock().unwrap().get_mut(&key).and_then(Vec::pop);
+        let popped = self.stripes[stripe_of(key.0, key.1)]
+            .lock()
+            .unwrap()
+            .get_mut(&key)
+            .and_then(Vec::pop);
         if let Some(buf) = popped {
             if let Ok(mut v) = T::from_buffer(buf) {
                 debug_assert!(v.capacity() >= n);
@@ -136,7 +173,7 @@ impl BufferPool {
         }
         buf.clear();
         let key = (buf.type_name(), capacity_bucket(cap));
-        let mut shelves = self.shelves.lock().unwrap();
+        let mut shelves = self.stripes[stripe_of(key.0, key.1)].lock().unwrap();
         let shelf = shelves.entry(key).or_default();
         if shelf.len() < MAX_PER_SHELF {
             shelf.push(buf);
@@ -189,15 +226,19 @@ impl BufferPool {
     /// re-warming allocations afterwards; results are unaffected.
     pub fn trim_to(&self, keep: usize) -> usize {
         let mut freed = 0usize;
-        let mut shelves = self.shelves.lock().unwrap();
-        for shelf in shelves.values_mut() {
-            if shelf.len() > keep {
-                freed += shelf.len() - keep;
-                shelf.truncate(keep);
+        // One stripe at a time: trimming never holds more than one lock,
+        // so concurrent acquire/release traffic on other stripes is
+        // untouched.
+        for stripe in &self.stripes {
+            let mut shelves = stripe.lock().unwrap();
+            for shelf in shelves.values_mut() {
+                if shelf.len() > keep {
+                    freed += shelf.len() - keep;
+                    shelf.truncate(keep);
+                }
             }
+            shelves.retain(|_, shelf| !shelf.is_empty());
         }
-        shelves.retain(|_, shelf| !shelf.is_empty());
-        drop(shelves);
         self.trimmed.fetch_add(freed as u64, Ordering::Relaxed);
         freed
     }
@@ -318,6 +359,40 @@ mod tests {
         // trim_to(0) drains what is left (the i32 shelf).
         assert_eq!(pool.trim_to(0), 4);
         drop(held);
+    }
+
+    #[test]
+    fn stripes_spread_hot_keys_and_stay_consistent() {
+        // The hot keys of a training step must not all share one stripe,
+        // and striping must be deterministic (same key → same stripe).
+        let keys = [
+            ("f32", 10u32),
+            ("f32", 14),
+            ("f32", 17),
+            ("f64", 10),
+            ("i32", 0),
+            ("u8", 4),
+            ("u64", 3),
+        ];
+        let stripes: Vec<usize> = keys.iter().map(|&(d, b)| stripe_of(d, b)).collect();
+        assert!(stripes.iter().all(|&s| s < N_STRIPES));
+        let distinct: std::collections::HashSet<usize> = stripes.iter().copied().collect();
+        assert!(
+            distinct.len() >= 3,
+            "hot keys should spread over ≥3 stripes, got {stripes:?}"
+        );
+        for &(d, b) in &keys {
+            assert_eq!(stripe_of(d, b), stripe_of(d, b));
+        }
+        // Round-trips still work for every key regardless of stripe.
+        let pool = BufferPool::new();
+        pool.release_vec(vec![0.0f32; 1 << 10]);
+        pool.release_vec(vec![0.0f64; 1 << 10]);
+        pool.release_vec(vec![0u8; 16]);
+        assert!(pool.acquire::<f32>(1 << 10).capacity() >= 1 << 10);
+        assert!(pool.acquire::<f64>(1 << 10).capacity() >= 1 << 10);
+        assert!(pool.acquire::<u8>(16).capacity() >= 16);
+        assert_eq!(pool.stats().hits, 3);
     }
 
     #[test]

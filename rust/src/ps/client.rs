@@ -1,0 +1,242 @@
+//! Worker-side pull/push client over the sharded parameter store.
+//!
+//! A [`PsClient`] owns the [`ShardMap`], the shard-owner rank table, this
+//! worker's **clock** (pushes completed), and two reusable request/
+//! response buffers — the per-step path allocates nothing after
+//! construction. Pulls fan out one request per shard and then consume the
+//! responses in shard order (a fixed program point, so virtual-clock fold
+//! order is deterministic); pushes are buffered sends and never block.
+//!
+//! The client also owns the worker-side observability the trainer
+//! reports: cumulative pull wait (`pull_wait_s`, the PS counterpart of
+//! `sync_exposed_s`), the staleness high-water mark (`staleness_max`,
+//! from the `min_clock` each response carries), and `push_bytes`.
+
+use super::{ShardMap, KIND_DONE, KIND_PULL, KIND_PUSH, KIND_SYNC_PULL, REQ_HEADER};
+use super::{TAG_PS_REQ, TAG_PS_RESP};
+use crate::mpi::comm::Communicator;
+use crate::mpi::{MpiError, MpiResult};
+
+/// Per-worker client handle (one per era; rebuilt after a re-shard).
+pub struct PsClient {
+    map: ShardMap,
+    /// Comm rank serving shard `i`.
+    server_ranks: Vec<usize>,
+    /// Steps this worker has pushed.
+    clock: u64,
+    req_buf: Vec<f32>,
+    resp_buf: Vec<f32>,
+    /// Max observed `own clock − min_clock` across pulls.
+    pub staleness_max: u64,
+    /// Virtual seconds spent waiting on pulls (requests + gated responses).
+    pub pull_wait_s: f64,
+    /// Gradient payload bytes pushed.
+    pub push_bytes: u64,
+    /// Pulls completed (all shards counted as one logical pull).
+    pub pulls: u64,
+}
+
+impl PsClient {
+    pub fn new(map: ShardMap, server_ranks: Vec<usize>) -> PsClient {
+        assert_eq!(map.n_shards(), server_ranks.len());
+        let max_len = map.max_shard_len();
+        PsClient {
+            req_buf: Vec::with_capacity(REQ_HEADER + max_len),
+            resp_buf: vec![0.0; max_len + 1],
+            map,
+            server_ranks,
+            clock: 0,
+            staleness_max: 0,
+            pull_wait_s: 0.0,
+            push_bytes: 0,
+            pulls: 0,
+        }
+    }
+
+    /// Steps pushed so far.
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+
+    pub fn map(&self) -> &ShardMap {
+        &self.map
+    }
+
+    fn request(
+        &mut self,
+        comm: &Communicator,
+        shard: usize,
+        kind: u32,
+        payload: Option<&[f32]>,
+    ) -> MpiResult<()> {
+        self.req_buf.clear();
+        self.req_buf.push(kind as f32);
+        self.req_buf.push(self.clock as f32);
+        if let Some(p) = payload {
+            self.req_buf.extend_from_slice(p);
+        }
+        comm.send(self.server_ranks[shard], TAG_PS_REQ, &self.req_buf)
+    }
+
+    /// Consistency-gated pull of the whole model into `params`
+    /// (length must match the map's span). Blocks until every shard
+    /// responds; the wait is the consistency mode's price.
+    pub fn pull(&mut self, comm: &Communicator, params: &mut [f32]) -> MpiResult<()> {
+        self.pull_kind(comm, params, KIND_PULL)
+    }
+
+    /// End-of-training flush: gated on `min_clock ≥ own clock` regardless
+    /// of mode, so every worker (ASP included) finishes on the fully-
+    /// applied model.
+    pub fn sync_pull(&mut self, comm: &Communicator, params: &mut [f32]) -> MpiResult<()> {
+        self.pull_kind(comm, params, KIND_SYNC_PULL)
+    }
+
+    fn pull_kind(
+        &mut self,
+        comm: &Communicator,
+        params: &mut [f32],
+        kind: u32,
+    ) -> MpiResult<()> {
+        if params.len() != self.map.n_elems() {
+            return Err(MpiError::Inconsistent(format!(
+                "shard map covers {} elems, pull target has {}",
+                self.map.n_elems(),
+                params.len()
+            )));
+        }
+        let t0 = comm.clock();
+        for shard in 0..self.map.n_shards() {
+            self.request(comm, shard, kind, None)?;
+        }
+        for shard in 0..self.map.n_shards() {
+            let range = self.map.shard_range(shard);
+            let want = range.len() + 1;
+            let (cnt, _) = comm.recv_into(
+                Some(self.server_ranks[shard]),
+                TAG_PS_RESP,
+                &mut self.resp_buf[..want],
+            )?;
+            if cnt != want {
+                return Err(MpiError::CountMismatch {
+                    expected: want,
+                    got: cnt,
+                });
+            }
+            let min_clock = self.resp_buf[0] as u64;
+            self.staleness_max = self.staleness_max.max(self.clock.saturating_sub(min_clock));
+            params[range].copy_from_slice(&self.resp_buf[1..want]);
+        }
+        self.pull_wait_s += comm.clock() - t0;
+        self.pulls += 1;
+        Ok(())
+    }
+
+    /// Push this step's lr-prescaled gradients, one slice per shard
+    /// (buffered sends — never blocks), and advance the clock.
+    pub fn push(&mut self, comm: &Communicator, grads: &[f32]) -> MpiResult<()> {
+        if grads.len() != self.map.n_elems() {
+            return Err(MpiError::Inconsistent(format!(
+                "shard map covers {} elems, push source has {}",
+                self.map.n_elems(),
+                grads.len()
+            )));
+        }
+        for shard in 0..self.map.n_shards() {
+            let range = self.map.shard_range(shard);
+            self.push_bytes += (range.len() * 4) as u64;
+            self.request(comm, shard, KIND_PUSH, Some(&grads[range]))?;
+        }
+        self.clock += 1;
+        Ok(())
+    }
+
+    /// Tell every shard this worker is finished.
+    pub fn finish(&mut self, comm: &Communicator) -> MpiResult<()> {
+        for shard in 0..self.map.n_shards() {
+            self.request(comm, shard, KIND_DONE, None)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::server::{ServeOutcome, ShardServer};
+    use super::super::{Consistency, TAG_PS_SEED};
+    use super::*;
+    use crate::mpi::ulfm::FaultPlan;
+    use crate::mpi::{NetProfile, World};
+
+    /// Two workers + two shard servers, BSP, three steps of a toy model:
+    /// the full client/server protocol end to end, values checked against
+    /// the closed-form synchronous update.
+    #[test]
+    fn bsp_pull_push_roundtrip_updates_all_shards() {
+        let n = 10usize;
+        let steps = 3u64;
+        let w = World::new(4, NetProfile::zero());
+        let out = w.run_unwrap(move |c| {
+            let map = ShardMap::build(n, 2);
+            let servers = vec![2usize, 3];
+            if c.rank() >= 2 {
+                let shard = c.rank() - 2;
+                let mut srv =
+                    ShardServer::new(map.shard_range(shard), Consistency::Bsp, vec![0, 1]);
+                srv.seed(&c, 0)?;
+                assert_eq!(srv.serve(&c, &FaultPlan::none())?, ServeOutcome::Finished);
+                Ok(vec![srv.params()[0]])
+            } else {
+                let mut client = PsClient::new(map, servers);
+                let mut params = vec![0.0f32; n];
+                if c.rank() == 0 {
+                    params.iter_mut().for_each(|p| *p = 8.0);
+                    c.send(2, TAG_PS_SEED, &params[client.map().shard_range(0)])?;
+                    c.send(3, TAG_PS_SEED, &params[client.map().shard_range(1)])?;
+                }
+                for _ in 0..steps {
+                    client.pull(&c, &mut params)?;
+                    // Both workers "compute" the same gradient 0.5.
+                    let grads = vec![0.5f32; n];
+                    client.push(&c, &grads)?;
+                }
+                client.sync_pull(&c, &mut params)?;
+                client.finish(&c)?;
+                assert_eq!(client.clock(), steps);
+                assert_eq!(client.staleness_max, 0, "BSP must observe zero staleness");
+                assert_eq!(client.push_bytes, steps * n as u64 * 4);
+                Ok(params)
+            }
+        });
+        // 8.0 - 3 * avg(0.5) = 6.5 on every element, both workers.
+        for rank in 0..2 {
+            assert!(
+                out[rank].iter().all(|&p| p == 6.5),
+                "rank {rank}: {:?}",
+                out[rank]
+            );
+        }
+        assert_eq!(out[2][0], 6.5, "server shard 0 applied every round");
+        assert_eq!(out[3][0], 6.5, "server shard 1 applied every round");
+    }
+
+    #[test]
+    fn mismatched_vector_lengths_rejected() {
+        let w = World::new(2, NetProfile::zero());
+        w.run_unwrap(|c| {
+            if c.rank() == 0 {
+                let mut client = PsClient::new(ShardMap::build(8, 1), vec![1]);
+                let mut short = vec![0.0f32; 4];
+                assert!(matches!(
+                    client.pull(&c, &mut short),
+                    Err(MpiError::Inconsistent(_))
+                ));
+                assert!(matches!(
+                    client.push(&c, &short),
+                    Err(MpiError::Inconsistent(_))
+                ));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,297 @@
+//! Sharded parameter-server subsystem — the *other* side of the design
+//! space the source paper argues against.
+//!
+//! The paper (Vishnu et al., 2016) replaces TensorFlow's parameter-server
+//! architecture with MPI collectives for strictly bulk-synchronous data
+//! parallelism; TensorFlow itself (Abadi et al., 2016) and MaTEx's
+//! user-transparent distributed TensorFlow (Vishnu et al., 2017) show what
+//! a sharded parameter store with *relaxed consistency* buys: asynchronous
+//! and staleness-bounded training that tolerates stragglers and
+//! heterogeneous ranks. This module reproduces that side on the same MPI
+//! substrate, so both designs can be compared under one cost model.
+//!
+//! # Architecture
+//!
+//! A training world of `p` ranks is partitioned by
+//! [`TrainMode::ParameterServer`](crate::coordinator::TrainMode): the
+//! **last** `servers` ranks each own one shard of the flat parameter
+//! vector ([`ShardMap`] range-partitions it, built from
+//! [`ParamSet::tensor_range`](crate::model::ParamSet::tensor_range));
+//! every other rank is a **worker** running the usual local backprop
+//! replica. Workers never talk to each other on the hot path — each step
+//! they
+//!
+//! 1. **pull** every shard (gated by the consistency mode),
+//! 2. run one local step producing lr-prescaled gradients,
+//! 3. **push** each shard's gradient slice to its owner.
+//!
+//! Traffic rides the existing tag-framed point-to-point transport: one
+//! `f32` message per request (`[kind, clock, payload…]`, see the `KIND_*`
+//! constants), matched per `(worker, TAG_PS_REQ)` so per-worker FIFO
+//! ordering guarantees a server sees `push(c)` before `pull(c+1)`.
+//!
+//! # Consistency modes ([`Consistency`])
+//!
+//! Each shard keeps a per-worker **clock table** (a worker's clock = how
+//! many steps it has pushed) and gates pulls on `min_clock`, the slowest
+//! worker's clock:
+//!
+//! * **BSP** — a pull at clock `c` waits until *every* worker has pushed
+//!   step `c-1`; gradients are applied once per global round, combined in
+//!   exactly the recursive-doubling order (`server::rd_order_sum`), so a
+//!   BSP parameter-server run is **bitwise identical** to
+//!   `SyncStrategy::Flat` with `--alg rd` over the same worker count
+//!   (pinned by `tests/ps_parity.rs` via `params_digest`).
+//! * **ASP** — pulls are never gated; each push is applied the moment it
+//!   arrives (scaled by `1/w`). Staleness (`own clock − min_clock`) is
+//!   tracked and reported (`RankMetrics::staleness_max`), not bounded.
+//! * **SSP(s)** — a pull at clock `c` waits until `min_clock ≥ c − s`:
+//!   the fastest worker can run at most `s` steps ahead of the slowest,
+//!   so observed staleness never exceeds `s` (property-tested).
+//!
+//! # Virtual-time model of a shard server
+//!
+//! A shard is modelled as a *concurrent* RPC endpoint, not a serial
+//! thread: each request is serviced at
+//! `t = max(request arrival, consistency gate) + injection overhead`,
+//! where the gate is the virtual arrival of the push that satisfied the
+//! pull's clock predicate. The server thread's own folded clock is
+//! deliberately **not** used to stamp responses — that would serialize a
+//! fast worker's ASP pull behind a straggler's late push and erase the
+//! asynchrony the mode exists to provide. Pull/push legs are priced by
+//! the same alpha-beta model as every other message
+//! ([`NetProfile::ps_rpc_time`](crate::mpi::NetProfile::ps_rpc_time) is
+//! the closed form), so the ASP/SSP throughput win over BSP under a
+//! straggler is an emergent cost-model property.
+//!
+//! # Fault tolerance (ULFM)
+//!
+//! Any rank failure — worker or server — funnels into the trainer's
+//! revoke → shrink → rebuild recovery: survivors re-assign roles
+//! (surviving members of the *initial* server set keep serving, keyed by
+//! world rank), re-shard the vector over the surviving servers, realign
+//! worker replicas with one averaging allreduce, re-seed the new shard
+//! layout from the first worker's replica, and resume from the last
+//! clock every worker had applied. `FaultPlan` entries naming a server
+//! world-rank are interpreted on the *clock* axis (die once `min_clock`
+//! reaches the given step — mid-epoch by construction when an epoch has
+//! more steps); worker entries keep their epoch interpretation.
+
+pub mod client;
+pub mod server;
+pub mod shard;
+pub mod trainer;
+
+pub use client::PsClient;
+pub use server::{rd_order_sum, ServeOutcome, ServerStats, ShardServer};
+pub use shard::ShardMap;
+pub use trainer::train_rank_ps;
+
+use crate::mpi::Tag;
+
+/// Consistency contract a shard server enforces on pulls.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Consistency {
+    /// Bulk-synchronous: every pull sees every worker's previous push;
+    /// bitwise-identical to `SyncStrategy::Flat` under `--alg rd`.
+    Bsp,
+    /// Fully asynchronous: pulls never wait; staleness is tracked and
+    /// reported, not bounded.
+    Asp,
+    /// Stale-synchronous with bound `s`: the fastest worker may run at
+    /// most `s` steps ahead of the slowest (`s = 0` gates like BSP but
+    /// still applies pushes eagerly, so it is *not* bitwise BSP).
+    Ssp { bound: u64 },
+}
+
+impl Consistency {
+    /// Parse `bsp`, `asp`, or `ssp:<s>`.
+    pub fn by_name(s: &str) -> Option<Self> {
+        match s {
+            "bsp" => Some(Self::Bsp),
+            "asp" => Some(Self::Asp),
+            _ => {
+                let rest = s.strip_prefix("ssp:")?;
+                let bound: u64 = rest.parse().ok()?;
+                Some(Self::Ssp { bound })
+            }
+        }
+    }
+
+    /// Canonical CLI/JSON spelling (inverse of [`Consistency::by_name`]).
+    pub fn name(&self) -> String {
+        match self {
+            Consistency::Bsp => "bsp".into(),
+            Consistency::Asp => "asp".into(),
+            Consistency::Ssp { bound } => format!("ssp:{bound}"),
+        }
+    }
+
+    /// Lowest `min_clock` that lets a worker whose clock is `clock`
+    /// complete a pull under this mode.
+    pub fn required_min_clock(&self, clock: u64) -> u64 {
+        match self {
+            Consistency::Bsp => clock,
+            Consistency::Asp => 0,
+            Consistency::Ssp { bound } => clock.saturating_sub(*bound),
+        }
+    }
+}
+
+// ---- wire protocol --------------------------------------------------------
+//
+// One f32 message per request keeps the whole protocol on the pooled f32
+// shelves (no mixed-type framing): `[kind, clock, payload…]`. Kind and
+// clock ride as f32 — exact for any realistic step count (< 2^24).
+
+/// Worker → server requests (`[kind, clock, payload…]`).
+pub const TAG_PS_REQ: Tag = 0x5A_5001;
+/// Server → worker pull responses (`[min_clock, shard params…]`).
+pub const TAG_PS_RESP: Tag = 0x5A_5002;
+/// Worker 0 → server shard seeding at (re)setup (`[shard params…]`).
+pub const TAG_PS_SEED: Tag = 0x5A_5003;
+
+/// Request kinds (first f32 of a `TAG_PS_REQ` payload).
+pub const KIND_PULL: u32 = 1;
+pub const KIND_PUSH: u32 = 2;
+pub const KIND_DONE: u32 = 3;
+/// Pull gated on `min_clock ≥ clock` regardless of mode — the end-of-
+/// training flush that makes every worker (ASP included) finish on the
+/// fully-applied model.
+pub const KIND_SYNC_PULL: u32 = 4;
+
+/// `[kind, clock]` words preceding a request payload.
+pub const REQ_HEADER: usize = 2;
+
+/// Role assignment over a (possibly shrunk) communicator.
+///
+/// Servers are identified by **initial world rank** (the last `servers`
+/// ranks of the launch world), so every survivor of a failure derives the
+/// same assignment with no communication; shard `i` belongs to
+/// `server_ranks[i]` and worker indices follow `worker_ranks` order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Roles {
+    /// Comm ranks that serve, in shard-id order.
+    pub server_ranks: Vec<usize>,
+    /// Comm ranks that train, in worker-index order.
+    pub worker_ranks: Vec<usize>,
+}
+
+impl Roles {
+    /// The initial server set: the last `servers` world ranks of a
+    /// `world_size`-rank launch.
+    pub fn initial_server_worlds(world_size: usize, servers: usize) -> Vec<usize> {
+        (world_size.saturating_sub(servers)..world_size).collect()
+    }
+
+    /// Assign roles on `comm`: members whose world rank is in the initial
+    /// server set serve; everyone else trains. Stable across shrinks.
+    pub fn assign(comm: &crate::mpi::Communicator, server_worlds: &[usize]) -> Roles {
+        let mut server_ranks = Vec::new();
+        let mut worker_ranks = Vec::new();
+        for (r, wr) in comm.world_ranks().iter().enumerate() {
+            if server_worlds.contains(wr) {
+                server_ranks.push(r);
+            } else {
+                worker_ranks.push(r);
+            }
+        }
+        Roles {
+            server_ranks,
+            worker_ranks,
+        }
+    }
+
+    pub fn is_server(&self, comm_rank: usize) -> bool {
+        self.server_ranks.contains(&comm_rank)
+    }
+
+    /// Shard id served by `comm_rank`, if it is a server.
+    pub fn shard_id(&self, comm_rank: usize) -> Option<usize> {
+        self.server_ranks.iter().position(|&r| r == comm_rank)
+    }
+
+    /// Worker index of `comm_rank`, if it is a worker.
+    pub fn worker_index(&self, comm_rank: usize) -> Option<usize> {
+        self.worker_ranks.iter().position(|&r| r == comm_rank)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::{NetProfile, World};
+
+    #[test]
+    fn consistency_names_roundtrip() {
+        assert_eq!(Consistency::by_name("bsp"), Some(Consistency::Bsp));
+        assert_eq!(Consistency::by_name("asp"), Some(Consistency::Asp));
+        assert_eq!(
+            Consistency::by_name("ssp:3"),
+            Some(Consistency::Ssp { bound: 3 })
+        );
+        assert_eq!(Consistency::by_name("ssp:"), None);
+        assert_eq!(Consistency::by_name("ssp"), None);
+        assert_eq!(Consistency::by_name("sync"), None);
+        for c in [
+            Consistency::Bsp,
+            Consistency::Asp,
+            Consistency::Ssp { bound: 7 },
+        ] {
+            assert_eq!(Consistency::by_name(&c.name()), Some(c));
+        }
+    }
+
+    #[test]
+    fn consistency_pull_gates() {
+        assert_eq!(Consistency::Bsp.required_min_clock(5), 5);
+        assert_eq!(Consistency::Asp.required_min_clock(5), 0);
+        assert_eq!(Consistency::Ssp { bound: 2 }.required_min_clock(5), 3);
+        assert_eq!(Consistency::Ssp { bound: 9 }.required_min_clock(5), 0);
+    }
+
+    #[test]
+    fn roles_assign_last_ranks_as_servers() {
+        let worlds = Roles::initial_server_worlds(8, 2);
+        assert_eq!(worlds, vec![6, 7]);
+        let w = World::new(4, NetProfile::zero());
+        let out = w.run_unwrap(move |c| Ok(Roles::assign(&c, &[2, 3])));
+        for roles in &out {
+            assert_eq!(roles.server_ranks, vec![2, 3]);
+            assert_eq!(roles.worker_ranks, vec![0, 1]);
+            assert!(roles.is_server(3) && !roles.is_server(0));
+            assert_eq!(roles.shard_id(2), Some(0));
+            assert_eq!(roles.shard_id(3), Some(1));
+            assert_eq!(roles.shard_id(0), None);
+            assert_eq!(roles.worker_index(1), Some(1));
+            assert_eq!(roles.worker_index(2), None);
+        }
+    }
+
+    #[test]
+    fn roles_survive_a_shrink_by_world_rank() {
+        // p=4, servers = world {2, 3}; world rank 3 dies → the survivor
+        // set renumbers but world rank 2 must still serve shard 0.
+        let w = World::new(4, NetProfile::zero());
+        let out = w.run_unwrap(move |c| {
+            if c.rank() == 3 {
+                c.fail_self();
+                return Ok(None);
+            }
+            while c.alive_ranks().len() != 3 {
+                std::thread::yield_now();
+            }
+            let small = c.shrink()?;
+            Ok(Some(Roles::assign(&small, &[2, 3])))
+        });
+        for (r, roles) in out.iter().enumerate() {
+            if r == 3 {
+                assert!(roles.is_none());
+                continue;
+            }
+            let roles = roles.as_ref().unwrap();
+            assert_eq!(roles.server_ranks, vec![2], "rank {r}");
+            assert_eq!(roles.worker_ranks, vec![0, 1], "rank {r}");
+        }
+    }
+}

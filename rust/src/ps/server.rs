@@ -1,0 +1,566 @@
+//! The shard server: one rank's event loop over its parameter range.
+//!
+//! A server owns one [`ShardMap`](super::ShardMap) range of the flat
+//! vector and a **clock table** (per-worker push counts). It polls its
+//! mailbox for `TAG_PS_REQ` messages (`[kind, clock, payload…]`, one
+//! `f32` message per request) and enforces the consistency mode on pulls:
+//!
+//! * a pull whose gate (`Consistency::required_min_clock`) is not yet met
+//!   is parked in a pending list and answered the moment the enabling
+//!   push lands;
+//! * pushes update the clock table and the shard parameters — eagerly
+//!   (ASP/SSP, scaled `1/w`) or once per global round in the exact
+//!   recursive-doubling combine order ([`rd_order_sum`], BSP) so the BSP
+//!   result is bitwise identical to a flat `--alg rd` allreduce run.
+//!
+//! # Virtual-time stamping
+//!
+//! Responses are stamped at `max(request arrival, gate arrival)` via
+//! `set_clock` before the send — the server is modelled as a concurrent
+//! RPC endpoint, so an ASP pull is never serialized behind a straggler's
+//! push that it does not depend on (see the module docs in [`super`]).
+//!
+//! # Liveness
+//!
+//! The loop never blocks: between polls it checks worker liveness and
+//! revocation, so a worker failure triggers `revoke` + the trainer's
+//! shrink/re-shard recovery instead of a hang. `FaultPlan` entries naming
+//! this server's world rank fire on the *clock* axis — the server kills
+//! itself when `min_clock` reaches the planned step, which is mid-epoch
+//! whenever an epoch spans more steps.
+
+use std::ops::Range;
+use std::time::Duration;
+
+use super::{Consistency, KIND_DONE, KIND_PULL, KIND_PUSH, KIND_SYNC_PULL, REQ_HEADER};
+use super::{TAG_PS_REQ, TAG_PS_RESP, TAG_PS_SEED};
+use crate::mpi::comm::Communicator;
+use crate::mpi::ulfm::FaultPlan;
+use crate::mpi::{Datatype, MpiError, MpiResult};
+
+/// How a serve loop ended (errors propagate separately for ULFM recovery).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeOutcome {
+    /// Every worker sent `KIND_DONE`.
+    Finished,
+    /// The fault plan killed this server (`fail_self` already called).
+    Died,
+}
+
+/// Traffic counters a server reports into its `RankMetrics`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServerStats {
+    pub pulls_served: u64,
+    pub pulls_deferred: u64,
+    pub pushes_applied: u64,
+    /// Gradient payload bytes received and applied.
+    pub push_bytes: u64,
+    /// BSP rounds combined and applied.
+    pub rounds_applied: u64,
+}
+
+/// A pull waiting for its consistency gate.
+#[derive(Debug, Clone, Copy)]
+struct PendingPull {
+    /// Requester's comm rank.
+    worker: usize,
+    /// `min_clock` value that releases it.
+    need: u64,
+    /// Virtual arrival of the request.
+    arrival: f64,
+}
+
+/// Sum `parts` (one contribution per worker, worker order) in **exactly**
+/// the combine-tree shape of the recursive-doubling allreduce over the
+/// same number of ranks, leaving the result in `out`.
+///
+/// Recursive doubling folds non-power-of-two counts with the MPICH
+/// pre-phase (evens fold into odds) and then combines pairwise along the
+/// butterfly; since IEEE-754 addition is commutative (only the tree
+/// *shape* affects rounding), reproducing that shape makes a BSP round
+/// bitwise identical to `allreduce_with(RecursiveDoubling)` over the same
+/// vectors — the parity `tests/ps_parity.rs` pins.
+///
+/// `parts` is used as scratch (contributions are accumulated in place);
+/// callers overwrite the buffers with the next round's payloads anyway.
+pub fn rd_order_sum(parts: &mut [Vec<f32>], out: &mut [f32]) {
+    let w = parts.len();
+    assert!(w > 0, "rd_order_sum needs at least one contribution");
+    debug_assert!(parts.iter().all(|p| p.len() == out.len()));
+    let pof2 = w.next_power_of_two() >> usize::from(!w.is_power_of_two());
+    let rem = w - pof2;
+    // parts index holding (virtual) rank `nr`'s accumulator.
+    let slot = |nr: usize| if nr < rem { 2 * nr + 1 } else { nr + rem };
+    fn fold(parts: &mut [Vec<f32>], dst: usize, src: usize) {
+        let s = std::mem::take(&mut parts[src]);
+        for (a, b) in parts[dst].iter_mut().zip(&s) {
+            *a += *b;
+        }
+        parts[src] = s;
+    }
+    // Pre-phase: evens fold into their odd neighbour.
+    for i in 0..rem {
+        fold(parts, 2 * i + 1, 2 * i);
+    }
+    // Butterfly: the surviving left node of each pair absorbs the right.
+    let mut mask = 1usize;
+    while mask < pof2 {
+        let mut nr = 0usize;
+        while nr < pof2 {
+            fold(parts, slot(nr), slot(nr + mask));
+            nr += 2 * mask;
+        }
+        mask <<= 1;
+    }
+    out.copy_from_slice(&parts[slot(0)]);
+}
+
+/// One shard's server state + event loop.
+pub struct ShardServer {
+    range: Range<usize>,
+    consistency: Consistency,
+    /// Authoritative parameters of this shard (seeded by the first
+    /// worker at era setup).
+    params: Vec<f32>,
+    /// Comm ranks of the workers, worker-index order.
+    worker_ranks: Vec<usize>,
+    /// Clock table: pushes applied per worker.
+    clocks: Vec<u64>,
+    /// Virtual arrival of each worker's push, indexed by clock — gate
+    /// timestamps derive from these, so they are exact regardless of the
+    /// (wall-clock) order the event loop happened to consume messages in.
+    push_arrivals: Vec<Vec<f64>>,
+    done: Vec<bool>,
+    /// BSP round accumulation: one pending contribution per worker.
+    round: Vec<Vec<f32>>,
+    round_filled: Vec<bool>,
+    round_sum: Vec<f32>,
+    /// `min_vtime[k]` = virtual time at which `min_clock` reached `k` —
+    /// the gate timestamps responses are stamped with.
+    min_vtime: Vec<f64>,
+    pending: Vec<PendingPull>,
+    resp_buf: Vec<f32>,
+    max_svc_vtime: f64,
+    pub stats: ServerStats,
+}
+
+impl ShardServer {
+    pub fn new(
+        range: Range<usize>,
+        consistency: Consistency,
+        worker_ranks: Vec<usize>,
+    ) -> ShardServer {
+        let w = worker_ranks.len();
+        let len = range.len();
+        let bsp = matches!(consistency, Consistency::Bsp);
+        ShardServer {
+            range,
+            consistency,
+            params: vec![0.0; len],
+            clocks: vec![0; w],
+            push_arrivals: vec![Vec::new(); w],
+            done: vec![false; w],
+            round: if bsp { vec![vec![0.0; len]; w] } else { Vec::new() },
+            round_filled: vec![false; w],
+            round_sum: if bsp { vec![0.0; len] } else { Vec::new() },
+            min_vtime: vec![0.0],
+            pending: Vec::new(),
+            resp_buf: Vec::with_capacity(len + 1),
+            max_svc_vtime: 0.0,
+            worker_ranks,
+            stats: ServerStats::default(),
+        }
+    }
+
+    /// Slowest worker's clock.
+    pub fn min_clock(&self) -> u64 {
+        self.clocks.iter().copied().min().unwrap_or(0)
+    }
+
+    /// Current shard parameters (tests / seeding back on recovery).
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    /// Receive the authoritative shard contents from `from_rank` (the
+    /// first worker) — called once per era before serving.
+    pub fn seed(&mut self, comm: &Communicator, from_rank: usize) -> MpiResult<()> {
+        let n = self.range.len();
+        let (cnt, _) = comm.recv_into(Some(from_rank), TAG_PS_SEED, &mut self.params)?;
+        if cnt != n {
+            return Err(MpiError::CountMismatch {
+                expected: n,
+                got: cnt,
+            });
+        }
+        Ok(())
+    }
+
+    /// Event loop: poll requests until every worker is done (or a fault
+    /// fires / a peer dies). Never blocks — liveness and revocation are
+    /// checked between polls so recovery cannot hang.
+    pub fn serve(&mut self, comm: &Communicator, fault: &FaultPlan) -> MpiResult<ServeOutcome> {
+        let mut idle = 0u32;
+        loop {
+            if self.done.iter().all(|&d| d) {
+                // Export the virtual time this shard was last busy.
+                comm.set_clock(comm.clock().max(self.max_svc_vtime));
+                return Ok(ServeOutcome::Finished);
+            }
+            match comm.try_recv_envelope(None, TAG_PS_REQ)? {
+                Some(env) => {
+                    idle = 0;
+                    let payload = f32::slice_of(env.buf())?;
+                    let arrival = env.arrival_vtime;
+                    let src = env.src;
+                    if let Some(out) = self.handle(comm, fault, src, payload, arrival)? {
+                        return Ok(out);
+                    }
+                }
+                None => {
+                    // A dead, not-done worker can never push again: start
+                    // the ULFM recovery instead of gating forever.
+                    for (i, &wr) in self.worker_ranks.iter().enumerate() {
+                        if !self.done[i] && comm.peer_failed(wr) {
+                            comm.revoke();
+                            return Err(MpiError::ProcFailed { rank: wr });
+                        }
+                    }
+                    idle += 1;
+                    if idle > 256 {
+                        std::thread::sleep(Duration::from_micros(50));
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+            }
+        }
+    }
+
+    fn handle(
+        &mut self,
+        comm: &Communicator,
+        fault: &FaultPlan,
+        src: usize,
+        payload: &[f32],
+        arrival: f64,
+    ) -> MpiResult<Option<ServeOutcome>> {
+        if payload.len() < REQ_HEADER {
+            return Err(MpiError::Inconsistent(format!(
+                "ps request from rank {src} too short: {} words",
+                payload.len()
+            )));
+        }
+        let w = self
+            .worker_ranks
+            .iter()
+            .position(|&r| r == src)
+            .ok_or_else(|| {
+                MpiError::Inconsistent(format!("ps request from non-worker rank {src}"))
+            })?;
+        let kind = payload[0] as u32;
+        let clock = payload[1] as u64;
+        match kind {
+            KIND_PUSH => self.on_push(comm, fault, w, clock, &payload[REQ_HEADER..], arrival),
+            KIND_PULL | KIND_SYNC_PULL => {
+                let need = if kind == KIND_SYNC_PULL {
+                    clock
+                } else {
+                    self.consistency.required_min_clock(clock)
+                };
+                self.on_pull(comm, src, need, arrival)?;
+                Ok(None)
+            }
+            KIND_DONE => {
+                self.done[w] = true;
+                Ok(None)
+            }
+            other => Err(MpiError::Inconsistent(format!(
+                "unknown ps request kind {other} from rank {src}"
+            ))),
+        }
+    }
+
+    fn on_push(
+        &mut self,
+        comm: &Communicator,
+        fault: &FaultPlan,
+        w: usize,
+        clock: u64,
+        grads: &[f32],
+        arrival: f64,
+    ) -> MpiResult<Option<ServeOutcome>> {
+        if grads.len() != self.range.len() {
+            return Err(MpiError::Inconsistent(format!(
+                "push payload {} elems, shard holds {}",
+                grads.len(),
+                self.range.len()
+            )));
+        }
+        if self.clocks[w] != clock {
+            return Err(MpiError::Inconsistent(format!(
+                "worker {w} pushed clock {clock}, table says {}",
+                self.clocks[w]
+            )));
+        }
+        self.stats.pushes_applied += 1;
+        self.stats.push_bytes += (grads.len() * 4) as u64;
+        let w_f = self.worker_ranks.len() as f32;
+        match self.consistency {
+            // BSP: collect the round; combine in rd order when complete.
+            Consistency::Bsp => {
+                self.round[w].copy_from_slice(grads);
+                self.round_filled[w] = true;
+            }
+            // ASP/SSP: apply eagerly, scaled to the worker count so the
+            // update magnitude matches the synchronous average.
+            Consistency::Asp | Consistency::Ssp { .. } => {
+                for (p, g) in self.params.iter_mut().zip(grads) {
+                    *p -= *g / w_f;
+                }
+            }
+        }
+        self.clocks[w] = clock + 1;
+        self.push_arrivals[w].push(arrival);
+        self.advance_min(comm, fault)
+    }
+
+    /// Fold a clock-table change: record when `min_clock` reached each new
+    /// value (the gate timestamps), apply complete BSP rounds, fire the
+    /// clock-axis fault plan, then release any now-satisfiable pulls.
+    fn advance_min(
+        &mut self,
+        comm: &Communicator,
+        fault: &FaultPlan,
+    ) -> MpiResult<Option<ServeOutcome>> {
+        let new_min = self.min_clock();
+        while (self.min_vtime.len() as u64) <= new_min {
+            let k = self.min_vtime.len() as u64;
+            // `min_clock` reached `k` when the virtually-latest of the
+            // workers' `k`-th pushes arrived — exact by construction, so
+            // gate stamps don't depend on message consumption order.
+            let enabling = self
+                .push_arrivals
+                .iter()
+                .map(|a| a[(k - 1) as usize])
+                .fold(f64::NEG_INFINITY, f64::max);
+            let t = enabling.max(*self.min_vtime.last().expect("seeded with t=0"));
+            self.min_vtime.push(t);
+            if let Consistency::Bsp = self.consistency {
+                // Every worker has pushed step k-1: the round is complete
+                // (the gate keeps any worker from pushing step k before
+                // this point, so the buffers hold exactly round k-1).
+                debug_assert!(self.round_filled.iter().all(|&f| f));
+                rd_order_sum(&mut self.round, &mut self.round_sum);
+                let w_f = self.worker_ranks.len() as f32;
+                for v in self.round_sum.iter_mut() {
+                    *v /= w_f;
+                }
+                for (p, g) in self.params.iter_mut().zip(&self.round_sum) {
+                    *p -= *g;
+                }
+                for f in self.round_filled.iter_mut() {
+                    *f = false;
+                }
+                self.stats.rounds_applied += 1;
+            }
+            // Clock-axis fault injection: die *after* applying step k —
+            // mid-epoch whenever the epoch spans more steps.
+            if fault.dies(k as usize, comm.world_rank()) {
+                comm.fail_self();
+                return Ok(Some(ServeOutcome::Died));
+            }
+        }
+        self.serve_pending(comm)?;
+        Ok(None)
+    }
+
+    fn on_pull(
+        &mut self,
+        comm: &Communicator,
+        worker_rank: usize,
+        need: u64,
+        arrival: f64,
+    ) -> MpiResult<()> {
+        if self.min_clock() >= need {
+            self.respond(comm, worker_rank, need, arrival)
+        } else {
+            self.stats.pulls_deferred += 1;
+            self.pending.push(PendingPull {
+                worker: worker_rank,
+                need,
+                arrival,
+            });
+            Ok(())
+        }
+    }
+
+    fn serve_pending(&mut self, comm: &Communicator) -> MpiResult<()> {
+        let min = self.min_clock();
+        let mut i = 0;
+        while i < self.pending.len() {
+            if min >= self.pending[i].need {
+                let p = self.pending.remove(i);
+                self.respond(comm, p.worker, p.need, p.arrival)?;
+            } else {
+                i += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Stamp and send a pull response: `[min_clock, shard params…]`,
+    /// serviced at `max(request arrival, gate arrival)` — the concurrent-
+    /// endpoint model (see module docs).
+    fn respond(
+        &mut self,
+        comm: &Communicator,
+        worker_rank: usize,
+        need: u64,
+        arrival: f64,
+    ) -> MpiResult<()> {
+        let t_gate = self.min_vtime[need as usize];
+        let t_svc = arrival.max(t_gate);
+        self.max_svc_vtime = self.max_svc_vtime.max(t_svc);
+        comm.set_clock(t_svc);
+        self.resp_buf.clear();
+        self.resp_buf.push(self.min_clock() as f32);
+        self.resp_buf.extend_from_slice(&self.params);
+        comm.send(worker_rank, TAG_PS_RESP, &self.resp_buf)?;
+        self.stats.pulls_served += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::{allreduce_with, AllreduceAlgorithm, NetProfile, ReduceOp, World};
+
+    fn contribution(rank: usize, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| ((rank * 37 + i * 13) % 97) as f32 * 0.375 - 11.0)
+            .collect()
+    }
+
+    #[test]
+    fn rd_order_sum_matches_allreduce_rd_bitwise() {
+        // The BSP parity cornerstone: the server-side reduction must be
+        // bit-for-bit the recursive-doubling allreduce result, for every
+        // worker count (power-of-two and not).
+        for w in 1usize..=9 {
+            let n = 61;
+            let world = World::new(w, NetProfile::zero());
+            let reduced = world.run_unwrap(move |c| {
+                let mut v = contribution(c.rank(), n);
+                allreduce_with(&c, AllreduceAlgorithm::RecursiveDoubling, ReduceOp::Sum, &mut v)?;
+                Ok(v)
+            });
+            let mut parts: Vec<Vec<f32>> = (0..w).map(|r| contribution(r, n)).collect();
+            let mut out = vec![0.0f32; n];
+            rd_order_sum(&mut parts, &mut out);
+            for (rank, v) in reduced.iter().enumerate() {
+                for i in 0..n {
+                    assert_eq!(
+                        out[i].to_bits(),
+                        v[i].to_bits(),
+                        "w={w} rank={rank} i={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bsp_server_gates_pull_until_all_pushed() {
+        // 3 ranks: rank 2 serves one shard to workers {0, 1}. Worker 0
+        // pushes immediately and pulls for step 1; worker 1 delays its
+        // push. The pull must be answered only after worker 1's push, and
+        // the response must carry the round-applied parameters.
+        let n = 8usize;
+        let w = World::new(3, NetProfile::zero());
+        let out = w.run_unwrap(move |c| match c.rank() {
+            2 => {
+                let mut srv = ShardServer::new(0..n, Consistency::Bsp, vec![0, 1]);
+                srv.seed(&c, 0)?;
+                let outcome = srv.serve(&c, &FaultPlan::none())?;
+                assert_eq!(outcome, ServeOutcome::Finished);
+                assert_eq!(srv.stats.rounds_applied, 1);
+                assert_eq!(srv.stats.pulls_deferred, 1);
+                Ok(srv.params()[0])
+            }
+            rank => {
+                let mut req = vec![KIND_PUSH as f32, 0.0];
+                req.extend_from_slice(&vec![1.0f32; n]); // lr-prescaled grads
+                if rank == 0 {
+                    c.send(2, TAG_PS_SEED, &vec![10.0f32; n])?;
+                    c.send(2, TAG_PS_REQ, &req)?;
+                    // Pull for step 1: gated on worker 1's push.
+                    c.send(2, TAG_PS_REQ, &[KIND_PULL as f32, 1.0])?;
+                    let mut resp = vec![0.0f32; n + 1];
+                    let (cnt, _) = c.recv_into(Some(2), TAG_PS_RESP, &mut resp)?;
+                    assert_eq!(cnt, n + 1);
+                    assert_eq!(resp[0], 1.0, "min_clock after both pushed step 0");
+                    c.send(2, TAG_PS_REQ, &[KIND_DONE as f32, 1.0])?;
+                    // Round applied: 10 - (1+1)/2 = 9.
+                    Ok(resp[1])
+                } else {
+                    std::thread::sleep(Duration::from_millis(20));
+                    c.send(2, TAG_PS_REQ, &req)?;
+                    c.send(2, TAG_PS_REQ, &[KIND_DONE as f32, 1.0])?;
+                    Ok(0.0)
+                }
+            }
+        });
+        assert_eq!(out[0], 9.0);
+        assert_eq!(out[2], 9.0, "server params must hold the applied round");
+    }
+
+    #[test]
+    fn asp_server_answers_immediately_and_applies_eagerly() {
+        let n = 4usize;
+        let w = World::new(2, NetProfile::zero());
+        let out = w.run_unwrap(move |c| {
+            if c.rank() == 1 {
+                let mut srv = ShardServer::new(0..n, Consistency::Asp, vec![0]);
+                srv.seed(&c, 0)?;
+                srv.serve(&c, &FaultPlan::none())?;
+                assert_eq!(srv.stats.pulls_deferred, 0);
+                Ok(srv.params()[0])
+            } else {
+                c.send(1, TAG_PS_SEED, &vec![5.0f32; n])?;
+                // ASP pull at clock 0 with nothing pushed: immediate.
+                c.send(1, TAG_PS_REQ, &[KIND_PULL as f32, 0.0])?;
+                let mut resp = vec![0.0f32; n + 1];
+                c.recv_into(Some(1), TAG_PS_RESP, &mut resp)?;
+                assert_eq!(&resp[1..], &[5.0; 4]);
+                let mut req = vec![KIND_PUSH as f32, 0.0];
+                req.extend_from_slice(&[2.0f32; 4]);
+                c.send(1, TAG_PS_REQ, &req)?;
+                c.send(1, TAG_PS_REQ, &[KIND_DONE as f32, 1.0])?;
+                Ok(resp[1])
+            }
+        });
+        assert_eq!(out[0], 5.0);
+        assert_eq!(out[1], 3.0, "eager apply: 5 - 2/1");
+    }
+
+    #[test]
+    fn dead_worker_triggers_revoke_not_hang() {
+        let n = 4usize;
+        let w = World::new(2, NetProfile::zero());
+        let out = w.run_unwrap(move |c| {
+            if c.rank() == 1 {
+                let mut srv = ShardServer::new(0..n, Consistency::Bsp, vec![0]);
+                srv.seed(&c, 0)?;
+                let res = srv.serve(&c, &FaultPlan::none());
+                Ok(matches!(res, Err(MpiError::ProcFailed { rank: 0 })) && c.is_revoked())
+            } else {
+                c.send(1, TAG_PS_SEED, &vec![0.0f32; n])?;
+                c.fail_self();
+                Ok(true)
+            }
+        });
+        assert!(out[1], "server must revoke and error on a dead worker");
+    }
+}

@@ -1,0 +1,111 @@
+//! Range partition of the flat parameter vector across server shards.
+//!
+//! The flat `ParamSet` layout (one contiguous `f32` vector tiled by
+//! [`ParamSet::tensor_range`](crate::model::ParamSet::tensor_range)) is
+//! what makes sharding trivial: a shard is just a contiguous range, a
+//! push/pull payload is just a slice at a precomputed offset. Shards use
+//! the same `chunk_range` arithmetic as the ring collectives, so the
+//! partition is **disjoint, covering, and balanced** (shard lengths
+//! differ by at most one element) for any `(n_elems, n_shards)` —
+//! properties pinned by `tests/ps_parity.rs`.
+
+use std::ops::Range;
+
+use crate::model::ParamSet;
+use crate::mpi::chunk_range;
+
+/// The step-invariant partition of the flat vector over `n_shards`
+/// servers. Identical on every rank by construction (it is a pure
+/// function of the architecture spec and the shard count).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardMap {
+    ranges: Vec<Range<usize>>,
+    n_elems: usize,
+}
+
+impl ShardMap {
+    /// Partition `[0, n_elems)` into `n_shards` contiguous, near-equal
+    /// ranges (`chunk_range` gives the remainder to the first shards).
+    pub fn build(n_elems: usize, n_shards: usize) -> ShardMap {
+        assert!(n_shards > 0, "shard map needs at least one shard");
+        let ranges = (0..n_shards)
+            .map(|i| {
+                let (s, e) = chunk_range(n_elems, n_shards, i);
+                s..e
+            })
+            .collect();
+        ShardMap { ranges, n_elems }
+    }
+
+    /// Map over a replica's parameter layout. The span is derived from
+    /// the `tensor_ranges` tiling (and must equal `n_params` — the flat
+    /// vector is contiguous by construction).
+    pub fn for_params(params: &ParamSet, n_shards: usize) -> ShardMap {
+        let n: usize = params.tensor_ranges().iter().map(|r| r.len()).sum();
+        debug_assert_eq!(n, params.n_params(), "tensor ranges must tile the vector");
+        Self::build(n, n_shards)
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn n_elems(&self) -> usize {
+        self.n_elems
+    }
+
+    /// Flat-vector range owned by shard `i`.
+    pub fn shard_range(&self, i: usize) -> Range<usize> {
+        self.ranges[i].clone()
+    }
+
+    /// Largest shard length — sizes the client's reusable pull scratch.
+    pub fn max_shard_len(&self) -> usize {
+        self.ranges.iter().map(|r| r.len()).max().unwrap_or(0)
+    }
+
+    /// Shard owning flat index `idx` — derived from the stored ranges,
+    /// so it can never disagree with [`ShardMap::shard_range`].
+    pub fn owner_of(&self, idx: usize) -> usize {
+        assert!(idx < self.n_elems, "index {idx} out of {}", self.n_elems);
+        self.ranges.partition_point(|r| r.end <= idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The disjoint / covering / balanced partition properties are pinned
+    // by the integration suite (`tests/ps_parity.rs`); the unit tests
+    // here cover the accessors.
+
+    #[test]
+    fn owner_of_inverts_shard_range() {
+        for n in [1usize, 13, 100, 1000] {
+            for s in [1usize, 2, 3, 7] {
+                let map = ShardMap::build(n, s);
+                for i in 0..map.n_shards() {
+                    for idx in map.shard_range(i) {
+                        assert_eq!(map.owner_of(idx), i, "n={n} s={s} idx={idx}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn max_shard_len_matches_ranges() {
+        let map = ShardMap::build(10, 3);
+        assert_eq!(map.max_shard_len(), 4);
+        assert_eq!(map.shard_range(0), 0..4);
+        assert_eq!(map.shard_range(1), 4..7);
+        assert_eq!(map.shard_range(2), 7..10);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one shard")]
+    fn zero_shards_rejected() {
+        let _ = ShardMap::build(10, 0);
+    }
+}

@@ -1,0 +1,479 @@
+//! Per-rank driver for parameter-server training — the PS counterpart of
+//! `coordinator::trainer::train_rank`.
+//!
+//! The launch world is split by role (the last `servers` world ranks
+//! serve, everyone else trains; see [`Roles`]). Workers keep the familiar
+//! epoch loop — shard the data from the first worker, run local backprop
+//! steps — but synchronize by **pulling** the sharded model and
+//! **pushing** gradient slices through a [`PsClient`] instead of calling
+//! collectives; servers run the [`ShardServer`] event loop. A worker
+//! sub-communicator (one `split` per membership era) carries the few
+//! remaining worker-only collectives: data scatter, the lockstep
+//! step-count agreement, epoch-loss aggregation, and evaluation.
+//!
+//! # Eras and ULFM recovery
+//!
+//! Training runs in *eras* — membership epochs of the communicator. Any
+//! rank failure surfaces as `ProcFailed`/`Revoked` out of the era; the
+//! driver then revokes, shrinks, and starts the next era: roles are
+//! re-derived from initial world ranks (surviving servers keep serving),
+//! the vector is **re-sharded** over the survivors, workers realign their
+//! replicas with one averaging allreduce, the first worker re-seeds the
+//! new shard layout, clock tables restart, and the interrupted epoch is
+//! retried. Replicated worker state is what makes this cheap — the same
+//! argument the source paper makes for data parallelism, extended to the
+//! server side by re-seeding shards from any surviving replica (for BSP
+//! the realign is a bitwise no-op, so recovery resumes exactly from the
+//! last applied clock).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::{Consistency, PsClient, Roles, ServeOutcome, ShardMap, ShardServer, TAG_PS_SEED};
+use crate::coordinator::config::{SyncEvery, SyncMode, TrainConfig, TrainMode};
+use crate::coordinator::metrics::RankMetrics;
+use crate::coordinator::replica::{Replica, StepOutcome};
+use crate::coordinator::sync::sync_metrics;
+use crate::coordinator::trainer::evaluate;
+use crate::data::{load_train_test, scatter_dataset, BatchIter, Dataset};
+use crate::mpi::comm::Communicator;
+use crate::mpi::{
+    allreduce_with, bcast, AllreduceAlgorithm, CommStats, MpiError, MpiResult, ReduceOp,
+};
+use crate::runtime::Manifest;
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// How one era ended (recoverable failures surface as `Err` instead).
+enum EraEnd {
+    Finished,
+    Died,
+}
+
+fn inc(e: anyhow::Error) -> MpiError {
+    MpiError::Inconsistent(format!("{e:#}"))
+}
+
+/// Entry point executed by every rank thread in
+/// [`TrainMode::ParameterServer`] — dispatched by the launcher.
+pub fn train_rank_ps(
+    mut comm: Communicator,
+    cfg: &TrainConfig,
+    manifest: Arc<Manifest>,
+) -> Result<RankMetrics> {
+    let TrainMode::ParameterServer {
+        servers,
+        consistency,
+    } = cfg.train_mode
+    else {
+        anyhow::bail!("train_rank_ps requires TrainMode::ParameterServer");
+    };
+    anyhow::ensure!(
+        cfg.sync_every == SyncEvery::Step,
+        "parameter-server mode synchronizes every step"
+    );
+    let wall0 = Instant::now();
+    let mut state = PsRank {
+        cfg,
+        manifest: &manifest,
+        consistency,
+        server_worlds: Roles::initial_server_worlds(comm.size(), servers),
+        metrics: RankMetrics::new(comm.world_rank()),
+        replica: None,
+        train_shard: None,
+        test_shard: None,
+        rng: Rng::new(cfg.seed ^ (0xA5A5 + comm.world_rank() as u64)),
+        epoch: 0,
+        epoch_loss_acc: Vec::new(),
+        recovered: false,
+    };
+    state.metrics.is_server = state.server_worlds.contains(&comm.world_rank());
+
+    // Comm counters accumulate across eras: every shrink mints a fresh
+    // communicator with zeroed stats. (The worker subcomm's few-element
+    // per-epoch collectives are negligible next to the pull/push volume
+    // and are not folded in.)
+    let mut acc = CommStats::default();
+    loop {
+        match state.run_era(&comm) {
+            Ok(EraEnd::Finished) => break,
+            Ok(EraEnd::Died) => break,
+            Err(MpiError::ProcFailed { .. }) | Err(MpiError::Revoked) => {
+                let s = comm.stats();
+                acc.comm_vtime += s.comm_vtime;
+                acc.bytes_sent += s.bytes_sent;
+                acc.msgs_sent += s.msgs_sent;
+                comm.revoke();
+                comm = comm.shrink()?;
+                state.recovered = true;
+                if cfg.verbose && comm.rank() == 0 {
+                    eprintln!(
+                        "[{}] ps: recovered from rank failure; continuing with p={}",
+                        cfg.arch,
+                        comm.size()
+                    );
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+
+    let s = comm.stats();
+    acc.comm_vtime += s.comm_vtime;
+    acc.bytes_sent += s.bytes_sent;
+    acc.msgs_sent += s.msgs_sent;
+    let mut metrics = state.metrics;
+    metrics.absorb_comm(acc);
+    if let Some(replica) = &state.replica {
+        metrics.params_digest = replica.params.bits_digest();
+    }
+    metrics.clock_s = comm.clock();
+    metrics.wall_s = wall0.elapsed().as_secs_f64();
+    metrics.final_world = comm.size();
+    Ok(metrics)
+}
+
+/// One rank's cross-era state.
+struct PsRank<'a> {
+    cfg: &'a TrainConfig,
+    manifest: &'a Arc<Manifest>,
+    consistency: Consistency,
+    /// Initial server world ranks — the stable role key.
+    server_worlds: Vec<usize>,
+    metrics: RankMetrics,
+    /// Worker-only persistent state (None on server ranks).
+    replica: Option<Replica>,
+    train_shard: Option<Dataset>,
+    test_shard: Option<Dataset>,
+    rng: Rng,
+    /// Next epoch to run (a failed epoch is retried in the next era).
+    epoch: usize,
+    /// Per-epoch local `[loss_sum, loss_count]`, aggregated across the
+    /// workers **once at the end of training** — a per-epoch collective
+    /// would be a hidden bulk-synchronous barrier that re-gates ASP/SSP
+    /// workers to the straggler at every epoch boundary.
+    epoch_loss_acc: Vec<[f64; 2]>,
+    recovered: bool,
+}
+
+impl PsRank<'_> {
+    /// One membership era: assign roles, split the worker subcomm, then
+    /// serve (server ranks) or train the remaining epochs (workers).
+    fn run_era(&mut self, comm: &Communicator) -> MpiResult<EraEnd> {
+        let roles = Roles::assign(comm, &self.server_worlds);
+        if roles.server_ranks.is_empty() {
+            return Err(MpiError::Inconsistent(
+                "all parameter-server ranks have failed".into(),
+            ));
+        }
+        if roles.worker_ranks.is_empty() {
+            return Err(MpiError::Inconsistent("all worker ranks have failed".into()));
+        }
+        let i_serve = roles.is_server(comm.rank());
+        // Membership split (collective over the era's communicator): the
+        // worker color carries scatter/step-count/loss collectives;
+        // servers take their own color and never use the result.
+        let sub = comm.split(u32::from(i_serve), 0)?;
+        let res = if i_serve {
+            self.serve_era(comm, &roles)
+        } else {
+            self.work_era(comm, &sub, &roles)
+        };
+        if matches!(
+            &res,
+            Err(MpiError::ProcFailed { .. }) | Err(MpiError::Revoked)
+        ) {
+            // A peer may be blocked on either communicator (a pull on
+            // `comm`, a worker-only collective on the era's subcomm).
+            // Revoke both so every survivor reaches the shrink together;
+            // all workers of an era share one subcomm group, so one
+            // revocation unblocks them all.
+            sub.revoke();
+            comm.revoke();
+        }
+        res
+    }
+
+    fn serve_era(&mut self, comm: &Communicator, roles: &Roles) -> MpiResult<EraEnd> {
+        let spec = self.manifest.arch(&self.cfg.arch).map_err(inc)?;
+        let n_params: usize = spec.param_shapes.iter().map(|s| s.numel()).sum();
+        let map = ShardMap::build(n_params, roles.server_ranks.len());
+        let shard = roles.shard_id(comm.rank()).expect("assigned server role");
+        let mut server = ShardServer::new(
+            map.shard_range(shard),
+            self.consistency,
+            roles.worker_ranks.clone(),
+        );
+        server.seed(comm, roles.worker_ranks[0])?;
+        let outcome = server.serve(comm, &self.cfg.fault_plan);
+        // Absorb traffic counters even when the era ends in recovery.
+        self.metrics.push_bytes += server.stats.push_bytes;
+        match outcome? {
+            ServeOutcome::Finished => Ok(EraEnd::Finished),
+            ServeOutcome::Died => {
+                self.metrics.died = true;
+                Ok(EraEnd::Died)
+            }
+        }
+    }
+
+    fn work_era(
+        &mut self,
+        comm: &Communicator,
+        wsub: &Communicator,
+        roles: &Roles,
+    ) -> MpiResult<EraEnd> {
+        let cfg = self.cfg;
+        // ---- one-time data load + scatter over the workers ----
+        if self.train_shard.is_none() {
+            let spec = self.manifest.arch(&cfg.arch).map_err(inc)?.clone();
+            wsub.set_clock(comm.clock());
+            let t_io = Instant::now();
+            let (full_train, full_test) = if wsub.rank() == 0 {
+                let (tr, te, _src) =
+                    load_train_test(&spec, cfg.data_scale, cfg.seed).map_err(inc)?;
+                (Some(tr), Some(te))
+            } else {
+                (None, None)
+            };
+            wsub.advance(t_io.elapsed().as_secs_f64());
+            self.train_shard = Some(scatter_dataset(wsub, 0, full_train.as_ref())?);
+            self.test_shard = Some(scatter_dataset(wsub, 0, full_test.as_ref())?);
+            comm.set_clock(wsub.clock().max(comm.clock()));
+            self.metrics.io_s = comm.clock();
+        }
+        // ---- replica (persists across eras) ----
+        if self.replica.is_none() {
+            let mut replica = Replica::new(
+                self.manifest,
+                &cfg.arch,
+                cfg.effective_mode(comm.world_rank()),
+                cfg.lr,
+                cfg.seed,
+            )
+            .map_err(inc)?;
+            if cfg.broadcast_init {
+                wsub.set_clock(comm.clock());
+                let mut flat = if wsub.rank() == 0 {
+                    replica.params.flat().to_vec()
+                } else {
+                    Vec::new()
+                };
+                bcast(wsub, 0, &mut flat)?;
+                replica.params.flat_mut().copy_from_slice(&flat);
+                comm.set_clock(wsub.clock().max(comm.clock()));
+            }
+            self.replica = Some(replica);
+        }
+        // ---- recovery realign: one weight average over the survivors
+        // brings every worker replica to the same state (bitwise no-op
+        // under BSP, where replicas are already identical), and everyone
+        // rolls back to the slowest survivor's epoch — the async modes
+        // let fast workers run whole epochs ahead, but the clock gates
+        // (and the final flush) require every worker of an era to push
+        // the same step count, so the era must run a common epoch set.
+        if self.recovered {
+            let replica = self.replica.as_mut().expect("worker replica");
+            wsub.set_clock(comm.clock());
+            if wsub.size() > 1 {
+                allreduce_with(
+                    wsub,
+                    AllreduceAlgorithm::Ring,
+                    ReduceOp::Sum,
+                    replica.params.flat_mut(),
+                )?;
+                replica.params.scale(1.0 / wsub.size() as f32);
+            }
+            let mut resume = [self.epoch as f64];
+            allreduce_with(
+                wsub,
+                AllreduceAlgorithm::RecursiveDoubling,
+                ReduceOp::Min,
+                &mut resume,
+            )?;
+            self.epoch = resume[0] as usize;
+            comm.set_clock(wsub.clock().max(comm.clock()));
+            self.recovered = false;
+        }
+        // ---- (re-)shard and seed the servers from the first worker ----
+        let mut client = {
+            let replica = self.replica.as_ref().expect("worker replica");
+            let map = ShardMap::for_params(&replica.params, roles.server_ranks.len());
+            if comm.rank() == roles.worker_ranks[0] {
+                for (sid, &srv) in roles.server_ranks.iter().enumerate() {
+                    comm.send(
+                        srv,
+                        TAG_PS_SEED,
+                        &replica.params.flat()[map.shard_range(sid)],
+                    )?;
+                }
+            }
+            PsClient::new(map, roles.server_ranks.clone())
+        };
+        // ---- epochs ----
+        let res = self.run_epochs(comm, wsub, &mut client);
+        // Fold the client's observability into the rank metrics on every
+        // exit path (recovery included).
+        self.metrics.staleness_max = self.metrics.staleness_max.max(client.staleness_max);
+        self.metrics.pull_wait_s += client.pull_wait_s;
+        self.metrics.sync_exposed_s += client.pull_wait_s;
+        self.metrics.push_bytes += client.push_bytes;
+        res
+    }
+
+    fn run_epochs(
+        &mut self,
+        comm: &Communicator,
+        wsub: &Communicator,
+        client: &mut PsClient,
+    ) -> MpiResult<EraEnd> {
+        let cfg = self.cfg;
+        // Lockstep step count, agreed **once per era** (shards don't
+        // change within one): a per-epoch agreement would be a worker
+        // barrier that re-gates the async modes to the straggler at
+        // every epoch boundary.
+        let steps = {
+            let replica = self.replica.as_ref().expect("worker replica");
+            let shard = self.train_shard.as_ref().expect("worker shard");
+            wsub.set_clock(comm.clock());
+            let mut local = [(shard.len() as f64 / replica.batch as f64).floor()];
+            allreduce_with(
+                wsub,
+                AllreduceAlgorithm::RecursiveDoubling,
+                ReduceOp::Min,
+                &mut local,
+            )?;
+            comm.set_clock(wsub.clock().max(comm.clock()));
+            let mut steps = local[0] as usize;
+            if let Some(cap) = cfg.max_steps_per_epoch {
+                steps = steps.min(cap);
+            }
+            steps
+        };
+        while self.epoch < cfg.epochs {
+            if cfg.fault_plan.apply(self.epoch, comm) {
+                self.metrics.died = true;
+                return Ok(EraEnd::Died);
+            }
+            let local = self.worker_epoch(comm, client, steps)?;
+            // Record locally; a retried epoch overwrites its slot.
+            if self.epoch_loss_acc.len() <= self.epoch {
+                self.epoch_loss_acc.resize(self.epoch + 1, [0.0; 2]);
+            }
+            self.epoch_loss_acc[self.epoch] = local;
+            let replica = self.replica.as_mut().expect("worker replica");
+            if cfg.verbose && wsub.rank() == 0 && replica.is_real() {
+                eprintln!(
+                    "[{}] epoch {:>3}  local loss {:.4}  (ps {}, workers {}, vclock {:.3}s)",
+                    cfg.arch,
+                    self.epoch,
+                    if local[1] > 0.0 { local[0] / local[1] } else { f64::NAN },
+                    self.consistency.name(),
+                    wsub.size(),
+                    comm.clock()
+                );
+            }
+            if cfg.eval_every > 0 && (self.epoch + 1) % cfg.eval_every == 0 && replica.is_real()
+            {
+                wsub.set_clock(comm.clock());
+                let shard = self.test_shard.as_ref().expect("worker test shard");
+                if let Ok(ev) = evaluate(wsub, replica, shard, self.epoch) {
+                    self.metrics.evals.push(ev);
+                }
+                comm.set_clock(wsub.clock().max(comm.clock()));
+            }
+            if let Some(keep) = cfg.pool_trim {
+                comm.pool().trim_to(keep);
+            }
+            self.epoch += 1;
+        }
+        // Training window closes at the last push — the flush and the
+        // loss aggregation below wait for the slowest worker and would
+        // mask the per-worker rate.
+        self.metrics.train_done_clock_s = comm.clock();
+        // ---- final flush: every worker (ASP included) finishes on the
+        // fully-applied model, then deregisters ----
+        {
+            let replica = self.replica.as_mut().expect("worker replica");
+            client.sync_pull(comm, replica.params.flat_mut())?;
+            client.finish(comm)?;
+        }
+        // ---- one end-of-training loss aggregation over the workers ----
+        {
+            wsub.set_clock(comm.clock());
+            let mut flat: Vec<f64> = self
+                .epoch_loss_acc
+                .iter()
+                .flat_map(|a| a.iter().copied())
+                .collect();
+            sync_metrics(wsub, &mut flat)?;
+            self.metrics.epoch_losses = flat
+                .chunks_exact(2)
+                .map(|c| if c[1] > 0.0 { c[0] / c[1] } else { f64::NAN })
+                .collect();
+            comm.set_clock(wsub.clock().max(comm.clock()));
+        }
+        let replica = self.replica.as_mut().expect("worker replica");
+        if replica.is_real() {
+            wsub.set_clock(comm.clock());
+            let shard = self.test_shard.as_ref().expect("worker test shard");
+            match evaluate(wsub, replica, shard, cfg.epochs) {
+                Ok(ev) => self.metrics.evals.push(ev),
+                Err(MpiError::ProcFailed { .. }) | Err(MpiError::Revoked) => {}
+                Err(e) => return Err(e),
+            }
+            comm.set_clock(wsub.clock().max(comm.clock()));
+        }
+        Ok(EraEnd::Finished)
+    }
+
+    /// One epoch of pull → local step → push. No worker-to-worker
+    /// synchronization inside (the consistency gate is the only
+    /// coupling); returns the local `[loss_sum, loss_count]`.
+    fn worker_epoch(
+        &mut self,
+        comm: &Communicator,
+        client: &mut PsClient,
+        steps: usize,
+    ) -> MpiResult<[f64; 2]> {
+        let replica = self.replica.as_mut().expect("worker replica");
+        let shard = self.train_shard.as_ref().expect("worker shard");
+        let mut it = BatchIter::train(shard, replica.batch, &mut self.rng);
+        let mut loss_sum = 0f64;
+        let mut loss_n = 0usize;
+        for _ in 0..steps {
+            let mut x = std::mem::take(&mut replica.x_buf);
+            let mut y = std::mem::take(&mut replica.y_buf);
+            let got = it.next_into(&mut x, &mut y);
+            replica.x_buf = x;
+            replica.y_buf = y;
+            if got.is_none() {
+                break; // cannot happen given the era's Min agreement; defensive
+            }
+            // Consistency-gated pull of the parameters this step trains
+            // on; the wait (if any) is the mode's price and lands in
+            // `pull_wait_s`.
+            client.pull(comm, replica.params.flat_mut())?;
+            let (outcome, secs) = replica
+                .step(SyncMode::GradientAverage)
+                .map_err(|e| MpiError::Inconsistent(format!("replica step failed: {e:#}")))?;
+            comm.advance(secs);
+            self.metrics.compute_s += secs;
+            self.metrics.steps += 1;
+            self.metrics.samples_trained += replica.batch as u64;
+            if outcome.loss().is_finite() {
+                loss_sum += outcome.loss() as f64;
+                loss_n += 1;
+            }
+            match outcome {
+                StepOutcome::Grads { .. } => client.push(comm, replica.grad_flat())?,
+                StepOutcome::Updated { .. } => {
+                    return Err(MpiError::Inconsistent(
+                        "parameter-server mode requires gradient-producing steps".into(),
+                    ))
+                }
+            }
+        }
+        Ok([loss_sum, loss_n as f64])
+    }
+}

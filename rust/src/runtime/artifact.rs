@@ -206,4 +206,70 @@ impl Manifest {
             .map(PathBuf::from)
             .unwrap_or_else(|| PathBuf::from("artifacts"))
     }
+
+    /// Spec-only manifest for Sim-mode runs: one `in → hidden → classes`
+    /// sigmoid MLP with **no compiled artifacts** — the single
+    /// constructor behind the artifact-free tests, benches, and examples
+    /// (each previously embedded an identical spec-JSON literal).
+    /// Parameter count and FLOP estimate are derived from the layer
+    /// sizes, so the spec's internal cross-checks always hold.
+    pub fn sim_mlp(
+        name: &str,
+        in_dim: usize,
+        hidden: usize,
+        n_classes: usize,
+        n_train: usize,
+        batch_size: usize,
+    ) -> std::sync::Arc<Manifest> {
+        let n_params = in_dim * hidden + hidden + hidden * n_classes + n_classes;
+        // fwd + bwd ≈ 3 GEMM passes of 2·MACs each.
+        let flops = 6 * (in_dim * hidden + hidden * n_classes);
+        let spec_json = format!(
+            r#"{{
+              "name": "{name}", "kind": "mlp", "n_train": {n_train},
+              "n_test": 128, "n_classes": {n_classes}, "in_dim": {in_dim},
+              "flops_per_sample": {flops}, "n_params": {n_params},
+              "layer_sizes": [{in_dim}, {hidden}, {n_classes}],
+              "hidden_activation": "sigmoid",
+              "param_shapes": [
+                {{"name": "w0", "shape": [{in_dim}, {hidden}]}},
+                {{"name": "b0", "shape": [{hidden}]}},
+                {{"name": "w1", "shape": [{hidden}, {n_classes}]}},
+                {{"name": "b1", "shape": [{n_classes}]}}
+              ]
+            }}"#
+        );
+        let v = json::parse(&spec_json).expect("sim_mlp spec json");
+        let spec = ArchSpec::from_json(&v).expect("sim_mlp spec");
+        let mut archs = BTreeMap::new();
+        archs.insert(name.to_string(), spec);
+        std::sync::Arc::new(Manifest {
+            dir: ".".into(),
+            batch_size,
+            archs,
+            artifacts: BTreeMap::new(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_mlp_builds_a_consistent_spec_only_manifest() {
+        let m = Manifest::sim_mlp("toy", 4, 3, 2, 100, 8);
+        let spec = m.arch("toy").unwrap();
+        assert_eq!(spec.n_params, 4 * 3 + 3 + 3 * 2 + 2);
+        assert_eq!(spec.in_dim, 4);
+        assert_eq!(spec.n_classes, 2);
+        assert_eq!(spec.n_train, 100);
+        assert_eq!(spec.param_shapes.len(), 4);
+        assert_eq!(
+            spec.param_shapes.iter().map(|s| s.numel()).sum::<usize>(),
+            spec.n_params
+        );
+        assert_eq!(m.batch_size, 8);
+        assert!(m.artifacts.is_empty(), "sim manifests carry no artifacts");
+    }
 }

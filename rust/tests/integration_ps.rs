@@ -1,0 +1,164 @@
+//! End-to-end parameter-server trainer tests (ISSUE 3) — Sim-mode, no
+//! artifacts needed: the straggler-tolerance scenario the relaxed
+//! consistency modes exist for, and ULFM recovery from both server-rank
+//! and worker-rank failures (re-shard onto survivors, resume from the
+//! last applied clock).
+
+use std::sync::Arc;
+
+use dtf::coordinator::{
+    run_training, ExecMode, SyncMode, TrainConfig, TrainMode, TrainReport,
+};
+use dtf::mpi::ulfm::FaultPlan;
+use dtf::mpi::NetProfile;
+use dtf::ps::Consistency;
+use dtf::runtime::Manifest;
+
+fn manifest() -> Arc<Manifest> {
+    Manifest::sim_mlp("pse", 96, 256, 8, 4096, 16)
+}
+
+fn ps_cfg(consistency: Consistency, servers: usize) -> TrainConfig {
+    TrainConfig::new("pse")
+        .with_epochs(2)
+        .with_sync(SyncMode::GradientAverage)
+        .with_mode(ExecMode::Sim {
+            secs_per_sample: 2e-5,
+        })
+        .with_scale(1.0)
+        .with_steps_cap(12)
+        .with_train_mode(TrainMode::ParameterServer {
+            servers,
+            consistency,
+        })
+}
+
+fn run(cfg: TrainConfig, ranks: usize) -> TrainReport {
+    run_training(cfg, manifest(), ranks, NetProfile::infiniband_fdr()).unwrap()
+}
+
+/// The acceptance scenario: p=8 (6 workers + 2 servers), worker 0 slowed
+/// 2x. BSP gates every worker down to the straggler's pace; ASP and SSP
+/// keep the fast workers running — visible as sustained steps/s.
+#[test]
+fn asp_and_ssp_beat_bsp_under_a_straggler() {
+    let p = 8usize;
+    let bsp = run(ps_cfg(Consistency::Bsp, 2).with_straggler(0, 2.0), p);
+    let asp = run(ps_cfg(Consistency::Asp, 2).with_straggler(0, 2.0), p);
+    let ssp = run(
+        ps_cfg(Consistency::Ssp { bound: 4 }, 2).with_straggler(0, 2.0),
+        p,
+    );
+    let (r_bsp, r_asp, r_ssp) = (
+        bsp.sustained_steps_per_s(),
+        asp.sustained_steps_per_s(),
+        ssp.sustained_steps_per_s(),
+    );
+    assert!(
+        r_asp > r_bsp * 1.3,
+        "ASP should clearly beat BSP under a 2x straggler: {r_asp} vs {r_bsp}"
+    );
+    assert!(
+        r_ssp > r_bsp * 1.05,
+        "SSP(4) should beat BSP under a 2x straggler: {r_ssp} vs {r_bsp}"
+    );
+    // The gate's price shows up as pull wait: BSP stalls, ASP doesn't.
+    assert!(
+        bsp.pull_wait_mean_s() > asp.pull_wait_mean_s(),
+        "BSP pull wait {} must exceed ASP {}",
+        bsp.pull_wait_mean_s(),
+        asp.pull_wait_mean_s()
+    );
+    // Asynchrony must not break final consistency (sync-pull flush).
+    assert!(asp.replicas_bitwise_identical());
+    assert!(ssp.replicas_bitwise_identical());
+}
+
+/// Kill one shard server mid-epoch (clock-axis fault): survivors must
+/// revoke, shrink, re-shard onto the remaining server, and finish every
+/// epoch with no parameter loss (replicas stay bitwise identical and the
+/// model keeps the training progress).
+#[test]
+fn server_rank_failure_reshards_and_recovers() {
+    let (workers, servers) = (4usize, 2usize);
+    let mut cfg = ps_cfg(Consistency::Bsp, servers);
+    cfg.epochs = 3;
+    cfg.max_steps_per_epoch = Some(6);
+    // World rank 5 is the second server; min_clock 8 is mid-epoch 1
+    // (epochs span steps 0-5, 6-11, 12-17).
+    cfg.fault_plan = FaultPlan::kill_at(8, 5);
+    let report = run(cfg, workers + servers);
+
+    let dead: Vec<_> = report.per_rank.iter().filter(|r| r.died).collect();
+    assert_eq!(dead.len(), 1);
+    assert_eq!(dead[0].world_rank, 5);
+    assert!(dead[0].is_server);
+    for r in report.per_rank.iter().filter(|r| !r.died) {
+        assert_eq!(r.final_world, 5, "rank {}", r.world_rank);
+        if !r.is_server {
+            assert_eq!(
+                r.epoch_losses.len(),
+                3,
+                "worker {} must finish all epochs",
+                r.world_rank
+            );
+        }
+    }
+    // No parameter loss: survivors agree bitwise and the model moved.
+    assert!(report.replicas_bitwise_identical());
+    let virgin = {
+        let mut cfg = ps_cfg(Consistency::Bsp, servers);
+        cfg.epochs = 0;
+        run(cfg, workers + servers)
+    };
+    let digest = |r: &TrainReport| {
+        r.per_rank
+            .iter()
+            .find(|m| !m.is_server && !m.died)
+            .unwrap()
+            .params_digest
+    };
+    assert_ne!(digest(&virgin), digest(&report));
+}
+
+/// Kill a worker at an epoch boundary: the servers detect it (their
+/// event loop's liveness check), everyone recovers, and the smaller
+/// worker set finishes training.
+#[test]
+fn worker_rank_failure_recovers_on_smaller_worker_set() {
+    let (workers, servers) = (4usize, 1usize);
+    let mut cfg = ps_cfg(Consistency::Bsp, servers);
+    cfg.epochs = 4;
+    cfg.max_steps_per_epoch = Some(4);
+    cfg.fault_plan = FaultPlan::kill_at(2, 1); // worker world rank 1, epoch 2
+    let report = run(cfg, workers + servers);
+
+    let dead: Vec<_> = report.per_rank.iter().filter(|r| r.died).collect();
+    assert_eq!(dead.len(), 1);
+    assert_eq!(dead[0].world_rank, 1);
+    assert!(!dead[0].is_server);
+    for r in report.per_rank.iter().filter(|r| !r.died) {
+        assert_eq!(r.final_world, 4, "rank {}", r.world_rank);
+        if !r.is_server {
+            assert_eq!(r.epoch_losses.len(), 4, "worker {}", r.world_rank);
+        }
+    }
+    assert!(report.replicas_bitwise_identical());
+}
+
+/// PS runs report the run-shape basics correctly: servers train nothing,
+/// workers train everything, and the losses come from the worker side.
+#[test]
+fn report_shape_separates_servers_from_workers() {
+    let report = run(ps_cfg(Consistency::Bsp, 2), 6);
+    let (servers, workers): (Vec<_>, Vec<_>) =
+        report.per_rank.iter().partition(|r| r.is_server);
+    assert_eq!(servers.len(), 2);
+    assert_eq!(workers.len(), 4);
+    assert!(servers.iter().all(|r| r.samples_trained == 0));
+    assert!(workers.iter().all(|r| r.samples_trained > 0));
+    assert!(workers.iter().all(|r| r.epoch_losses.len() == 2));
+    // Rank 0 (a worker) is where TrainReport::losses reads from.
+    assert!(!report.per_rank[0].is_server);
+    assert_eq!(report.losses().len(), 2);
+}

@@ -1,0 +1,199 @@
+//! Parameter-server parity and property tests (ISSUE 3) — Sim-mode, so
+//! they run without artifacts or PJRT:
+//!
+//! * **BSP-PS ≡ Flat**: a BSP parameter-server run produces the same
+//!   final model, bit for bit (`params_digest`), as a flat
+//!   recursive-doubling allreduce run over the same worker count —
+//!   across worker and shard counts.
+//! * **ShardMap partition properties**: disjoint, covering, balanced for
+//!   arbitrary `(n_elems, n_shards)`.
+//! * **SSP staleness bound**: observed staleness never exceeds `s`, with
+//!   a 2x straggler doing its best to violate it.
+
+use std::sync::Arc;
+
+use dtf::coordinator::{
+    run_training, ExecMode, SyncMode, TrainConfig, TrainMode, TrainReport,
+};
+use dtf::model::ParamSet;
+use dtf::mpi::{AllreduceAlgorithm, NetProfile};
+use dtf::ps::{Consistency, ShardMap};
+use dtf::runtime::Manifest;
+
+/// Spec-only manifest: 96-256-8 MLP — 26,888 parameters, several shards'
+/// worth at any tested server count.
+fn manifest() -> Arc<Manifest> {
+    Manifest::sim_mlp("pst", 96, 256, 8, 2048, 16)
+}
+
+fn sim_cfg() -> TrainConfig {
+    TrainConfig::new("pst")
+        .with_epochs(2)
+        .with_sync(SyncMode::GradientAverage)
+        .with_mode(ExecMode::Sim {
+            secs_per_sample: 2e-5,
+        })
+        .with_scale(1.0)
+        .with_steps_cap(6)
+}
+
+fn run_flat_rd(workers: usize) -> TrainReport {
+    let mut cfg = sim_cfg();
+    cfg.allreduce = AllreduceAlgorithm::RecursiveDoubling;
+    run_training(cfg, manifest(), workers, NetProfile::infiniband_fdr()).unwrap()
+}
+
+fn run_ps(workers: usize, servers: usize, consistency: Consistency) -> TrainReport {
+    let cfg = sim_cfg().with_train_mode(TrainMode::ParameterServer {
+        servers,
+        consistency,
+    });
+    run_training(
+        cfg,
+        manifest(),
+        workers + servers,
+        NetProfile::infiniband_fdr(),
+    )
+    .unwrap()
+}
+
+fn worker_digest(report: &TrainReport) -> u64 {
+    report
+        .per_rank
+        .iter()
+        .find(|r| !r.is_server)
+        .expect("at least one worker")
+        .params_digest
+}
+
+#[test]
+fn bsp_ps_matches_flat_rd_allreduce_bitwise() {
+    // The tentpole parity pin: across worker counts (power-of-two and
+    // not) and shard counts, BSP parameter-server training ends on the
+    // *identical bits* the flat recursive-doubling allreduce run ends on.
+    for (workers, servers) in [(2usize, 1usize), (3, 2), (4, 2), (5, 3)] {
+        let flat = run_flat_rd(workers);
+        let ps = run_ps(workers, servers, Consistency::Bsp);
+        assert!(flat.replicas_bitwise_identical());
+        assert!(
+            ps.replicas_bitwise_identical(),
+            "BSP workers diverged (w={workers}, s={servers})"
+        );
+        assert_eq!(
+            worker_digest(&flat),
+            worker_digest(&ps),
+            "BSP-PS != Flat rd (w={workers}, s={servers})"
+        );
+        // BSP observes zero staleness by definition.
+        assert_eq!(ps.staleness_max(), 0, "w={workers}, s={servers}");
+        // Sanity: the pseudo-gradients actually moved the model.
+        let virgin = {
+            let mut cfg = sim_cfg();
+            cfg.epochs = 0;
+            run_training(cfg, manifest(), workers, NetProfile::infiniband_fdr()).unwrap()
+        };
+        assert_ne!(worker_digest(&virgin), worker_digest(&ps));
+    }
+}
+
+#[test]
+fn ps_traffic_metrics_are_reported() {
+    let report = run_ps(3, 2, Consistency::Bsp);
+    for r in &report.per_rank {
+        if r.is_server {
+            assert!(r.push_bytes > 0, "server {} saw no pushes", r.world_rank);
+            assert_eq!(r.steps, 0);
+        } else {
+            assert!(r.push_bytes > 0, "worker {} pushed nothing", r.world_rank);
+            assert!(r.pull_wait_s >= 0.0);
+            assert!(r.steps > 0);
+            assert_eq!(r.buckets_synced, 0);
+        }
+    }
+    // The PS stall metric mirrors sync_exposed_s on the worker side.
+    let w = report.per_rank.iter().find(|r| !r.is_server).unwrap();
+    assert!((w.sync_exposed_s - w.pull_wait_s).abs() < 1e-12);
+}
+
+#[test]
+fn shard_map_partitions_are_disjoint_covering_balanced() {
+    for n in [0usize, 1, 5, 26_888, 178_110] {
+        for s in [1usize, 2, 3, 4, 7, 8, 16] {
+            let map = ShardMap::build(n, s);
+            assert_eq!(map.n_shards(), s);
+            assert_eq!(map.n_elems(), n);
+            // Covering + disjoint: consecutive ranges tile [0, n).
+            let mut prev = 0usize;
+            for i in 0..s {
+                let r = map.shard_range(i);
+                assert_eq!(r.start, prev, "gap/overlap at shard {i} (n={n}, s={s})");
+                prev = r.end;
+            }
+            assert_eq!(prev, n, "shards must cover the vector (n={n}, s={s})");
+            // Balanced: lengths differ by at most one element.
+            let lens: Vec<usize> = (0..s).map(|i| map.shard_range(i).len()).collect();
+            let lo = lens.iter().min().unwrap();
+            let hi = lens.iter().max().unwrap();
+            assert!(hi - lo <= 1, "unbalanced (n={n}, s={s}): {lens:?}");
+        }
+    }
+}
+
+#[test]
+fn shard_map_for_params_covers_the_tensor_tiling() {
+    let manifest = manifest();
+    let spec = manifest.arch("pst").unwrap();
+    let params = ParamSet::zeros(spec);
+    let map = ShardMap::for_params(&params, 3);
+    assert_eq!(map.n_elems(), params.n_params());
+    // Every tensor element has exactly one owner.
+    for i in 0..params.n_tensors() {
+        for idx in [params.tensor_range(i).start, params.tensor_range(i).end - 1] {
+            let owner = map.owner_of(idx);
+            assert!(map.shard_range(owner).contains(&idx));
+        }
+    }
+}
+
+#[test]
+fn ssp_staleness_never_exceeds_the_bound() {
+    // A 2x straggler pushes the fast workers as far ahead as the server
+    // lets them; the observed staleness high-water mark must still obey
+    // the bound, for every bound (0 included).
+    for bound in [0u64, 1, 2, 4] {
+        let cfg = sim_cfg()
+            .with_train_mode(TrainMode::ParameterServer {
+                servers: 2,
+                consistency: Consistency::Ssp { bound },
+            })
+            .with_straggler(0, 2.0);
+        let report =
+            run_training(cfg, manifest(), 6, NetProfile::infiniband_fdr()).unwrap();
+        assert!(
+            report.staleness_max() <= bound,
+            "ssp:{bound} observed staleness {}",
+            report.staleness_max()
+        );
+        // The final sync-pull flush leaves every worker on the same model.
+        assert!(report.replicas_bitwise_identical(), "ssp:{bound}");
+    }
+}
+
+#[test]
+fn asp_final_flush_still_converges_replicas() {
+    // ASP staleness is unbounded mid-run, but the end-of-training
+    // sync-pull must land every worker on the identical final model.
+    let cfg = sim_cfg()
+        .with_train_mode(TrainMode::ParameterServer {
+            servers: 1,
+            consistency: Consistency::Asp,
+        })
+        .with_straggler(0, 2.0);
+    let report = run_training(cfg, manifest(), 5, NetProfile::infiniband_fdr()).unwrap();
+    assert!(report.replicas_bitwise_identical());
+    // Everyone trained and pushed.
+    for r in report.per_rank.iter().filter(|r| !r.is_server) {
+        assert!(r.steps > 0);
+        assert!(r.push_bytes > 0);
+    }
+}
