@@ -15,7 +15,13 @@
 //!    Reports wall *and* virtual seconds per step — the virtual number is
 //!    the paper-model one: overlap hides communication that the flat path
 //!    exposes.
-//! 3. **PJRT execution latency** per architecture and entry point
+//! 3. **Rabenseifner vs rd for large buckets** (always runs, ISSUE 4):
+//!    the alpha-beta closed forms at the 64 MiB / p=8 acceptance point,
+//!    cross-checked by driving the real `IRabenseifner` / `IAllreduce`
+//!    state machines over the simulated transport at 8 MiB. CI fails the
+//!    bench-smoke job unless the modelled Rabenseifner time is strictly
+//!    lower than rd (by ≥30%) at 64 MiB.
+//! 4. **PJRT execution latency** per architecture and entry point
 //!    (skipped with a note when the AOT artifacts are absent).
 //!
 //! Emits `BENCH_allreduce.json` (override path with `DTF_BENCH_JSON`);
@@ -28,7 +34,7 @@ use std::time::{Duration, Instant};
 use dtf::coordinator::{BucketPlan, PipelineEngine, SyncStrategy};
 use dtf::model::init_xavier;
 use dtf::mpi::compat::ref_ring;
-use dtf::mpi::{allreduce_with, AllreduceAlgorithm, ReduceOp};
+use dtf::mpi::{allreduce_with, AllreduceAlgorithm, IAllreduce, IRabenseifner, ReduceOp};
 use dtf::mpi::{barrier, Communicator, MpiResult, NetProfile, World};
 use dtf::runtime::{Engine, HostSlice, Manifest};
 use dtf::util::rng::Rng;
@@ -184,6 +190,54 @@ fn bench_sync_strategy(
         .fold((0.0, 0.0), |acc, (w_s, v_s)| (acc.0.max(w_s), acc.1.max(v_s)))
 }
 
+/// The ISSUE-4 large-bucket comparison: closed-form alpha-beta times at
+/// the 64 MiB / p=8 acceptance point plus a live virtual-clock cross-check
+/// of the two nonblocking state machines at a memory-friendly size.
+struct RabVsRd {
+    large_bucket_bytes: usize,
+    modelled_rd_s: f64,
+    modelled_rab_s: f64,
+    crossover_bytes: Option<usize>,
+    sim_bucket_bytes: usize,
+    sim_rd_s: f64,
+    sim_rab_s: f64,
+}
+
+/// Max-over-ranks virtual seconds of one nonblocking allreduce of
+/// `n_elems` f32 at p=[`SYNC_P`] on the InfiniBand cost model, driving the
+/// real state machine (`wait`-driven, no compute to hide behind).
+fn sim_nonblocking_allreduce(rab: bool, n_elems: usize) -> f64 {
+    let w = World::new(SYNC_P, NetProfile::infiniband_fdr());
+    let clocks = w.run_unwrap(move |c| {
+        let mut v = vec![1.0f32; n_elems];
+        let mut scratch = vec![0.0f32; n_elems];
+        if rab {
+            let mut op = IRabenseifner::start(&c, ReduceOp::Sum, &mut v)?;
+            op.wait(&c, &mut v, &mut scratch)?;
+        } else {
+            let mut op = IAllreduce::start(&c, ReduceOp::Sum, &mut v)?;
+            op.wait(&c, &mut v, &mut scratch)?;
+        }
+        Ok(c.clock())
+    });
+    clocks.into_iter().fold(0.0, f64::max)
+}
+
+fn bench_rabenseifner_vs_rd() -> RabVsRd {
+    let prof = NetProfile::infiniband_fdr();
+    let large = 64usize << 20; // the 64 MiB acceptance bucket
+    let sim_bytes = 8usize << 20; // live-sim size: 8 ranks × 2 × 8 MiB resident
+    RabVsRd {
+        large_bucket_bytes: large,
+        modelled_rd_s: prof.rd_allreduce_time(SYNC_P, large),
+        modelled_rab_s: prof.rabenseifner_allreduce_time(SYNC_P, large),
+        crossover_bytes: prof.rabenseifner_crossover_bytes(SYNC_P),
+        sim_bucket_bytes: sim_bytes,
+        sim_rd_s: sim_nonblocking_allreduce(false, sim_bytes / 4),
+        sim_rab_s: sim_nonblocking_allreduce(true, sim_bytes / 4),
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn emit_json(
     path: &str,
@@ -195,8 +249,13 @@ fn emit_json(
     flat_rd: (f64, f64),
     bucketed: (f64, f64),
     n_buckets: usize,
+    rab: &RabVsRd,
 ) {
     let improvement = (base - pooled) / base;
+    let crossover = match rab.crossover_bytes {
+        Some(b) => b.to_string(),
+        None => "null".to_string(),
+    };
     let body = format!(
         "{{\n  \"bench\": \"allreduce_hot_path\",\n  \"arch\": \"mnist_dnn\",\n  \
          \"n_params\": {MNIST_N_PARAMS},\n  \"p\": {SYNC_P},\n  \"algorithm\": \"ring\",\n  \
@@ -209,6 +268,16 @@ fn emit_json(
          \"bucketed_step_wall_s\": {bw:.9},\n    \"bucketed_step_virtual_s\": {bv:.9},\n    \
          \"virtual_speedup_vs_flat_rd\": {sp_rd:.4},\n    \
          \"virtual_speedup_vs_flat_ring\": {sp_ring:.4}\n  }},\n  \
+         \"rabenseifner_vs_rd\": {{\n    \"p\": {SYNC_P},\n    \
+         \"large_bucket_bytes\": {lbb},\n    \
+         \"modelled_rd_s\": {mrd:.9},\n    \
+         \"modelled_rabenseifner_s\": {mrab:.9},\n    \
+         \"modelled_speedup\": {msp:.4},\n    \
+         \"auto_crossover_bytes\": {crossover},\n    \
+         \"sim_bucket_bytes\": {sbb},\n    \
+         \"sim_rd_virtual_s\": {srd:.9},\n    \
+         \"sim_rabenseifner_virtual_s\": {srab:.9},\n    \
+         \"sim_speedup\": {ssp:.4}\n  }},\n  \
          \"note\": \"baseline = pre-pool allocating transport (fresh Vec per hop); \
          pooled = BufferPool + recv_into. overlap section: flat_ring = compute then one \
          blocking ring allreduce (the trainer's Auto pick at this size); flat_rd = same \
@@ -216,7 +285,12 @@ fn emit_json(
          virtual_speedup_vs_flat_rd isolates the *overlap* win from the ring-vs-rd \
          difference; bucketed = per-layer IAllreduce pipeline (SyncStrategy::Bucketed) \
          with the same modelled backprop. Virtual time is the alpha-beta cost-model \
-         number where hidden communication is free. \
+         number where hidden communication is free. rabenseifner_vs_rd section \
+         (ISSUE 4): modelled_* are the NetProfile closed forms at the 64 MiB / p=8 \
+         acceptance point (CI fails unless rabenseifner is strictly lower, by >=30%); \
+         sim_* drive the real IRabenseifner/IAllreduce state machines over the \
+         simulated transport at 8 MiB as an emergent cross-check; \
+         auto_crossover_bytes is where BucketAlg::Auto switches on this profile. \
          Regenerate with `cargo bench --bench runtime_step`.\"\n}}\n",
         bucket_bytes = SyncStrategy::DEFAULT_BUCKET_BYTES,
         frw = flat_ring.0,
@@ -227,6 +301,14 @@ fn emit_json(
         bv = bucketed.1,
         sp_rd = flat_rd.1 / bucketed.1,
         sp_ring = flat_ring.1 / bucketed.1,
+        lbb = rab.large_bucket_bytes,
+        mrd = rab.modelled_rd_s,
+        mrab = rab.modelled_rab_s,
+        msp = rab.modelled_rd_s / rab.modelled_rab_s,
+        sbb = rab.sim_bucket_bytes,
+        srd = rab.sim_rd_s,
+        srab = rab.sim_rab_s,
+        ssp = rab.sim_rd_s / rab.sim_rab_s,
     );
     match std::fs::write(path, body) {
         Ok(()) => println!("wrote {path}"),
@@ -290,6 +372,27 @@ fn main() {
         flat_ring.1 / bucketed.1
     );
 
+    // ---- rabenseifner vs rd for large buckets (ISSUE 4) ------------------
+    let rab = bench_rabenseifner_vs_rd();
+    println!(
+        "\nrabenseifner vs rd, large buckets (p={SYNC_P}, InfiniBand model):\n  \
+         modelled @ {} MiB: rd {:>12}   rabenseifner {:>12}   ({:.2}x)\n  \
+         simulated @ {} MiB: rd {:>12}   rabenseifner {:>12}   ({:.2}x)\n  \
+         auto crossover: {}",
+        rab.large_bucket_bytes >> 20,
+        fmt_secs(rab.modelled_rd_s),
+        fmt_secs(rab.modelled_rab_s),
+        rab.modelled_rd_s / rab.modelled_rab_s,
+        rab.sim_bucket_bytes >> 20,
+        fmt_secs(rab.sim_rd_s),
+        fmt_secs(rab.sim_rab_s),
+        rab.sim_rd_s / rab.sim_rab_s,
+        match rab.crossover_bytes {
+            Some(b) => format!("{} KiB", b >> 10),
+            None => "never (rd always wins at this p/profile)".into(),
+        },
+    );
+
     // Default to the tracked repo-root record (cargo bench runs with cwd
     // rust/, which would otherwise leave an untracked copy behind).
     let json_path = std::env::var("DTF_BENCH_JSON").unwrap_or_else(|_| {
@@ -297,6 +400,7 @@ fn main() {
     });
     emit_json(
         &json_path, iters, base, pooled, compute_s, flat_ring, flat_rd, bucketed, n_buckets,
+        &rab,
     );
 
     // ---- PJRT execution latency (needs AOT artifacts) --------------------

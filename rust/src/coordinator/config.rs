@@ -1,6 +1,7 @@
 //! Training configuration — every §3.3 design axis is a knob here, so the
 //! ablation benches can flip them one at a time.
 
+use super::pipeline::{BucketAlg, DrainOrder, MIN_BUCKET_BYTES};
 use crate::mpi::ulfm::FaultPlan;
 use crate::mpi::AllreduceAlgorithm;
 use crate::ps::Consistency;
@@ -68,19 +69,49 @@ impl SyncStrategy {
     /// scaled to Table-1 models (mnist_dnn's 712 KB vector → ~6 buckets).
     pub const DEFAULT_BUCKET_BYTES: usize = 128 * 1024;
 
-    /// Parse `flat`, `bucketed`, or `bucketed:<bytes>`.
-    pub fn by_name(s: &str) -> Option<Self> {
+    /// Parse `flat`, `bucketed`, or `bucketed:<bytes>`, surfacing a
+    /// config-parse-time diagnosis for degenerate caps (ISSUE 4
+    /// satellite) instead of a generic usage error.
+    pub fn parse(s: &str) -> Result<Self, String> {
         match s {
-            "flat" => Some(Self::Flat),
-            "bucketed" => Some(Self::Bucketed {
+            "flat" => Ok(Self::Flat),
+            "bucketed" => Ok(Self::Bucketed {
                 max_bytes: Self::DEFAULT_BUCKET_BYTES,
             }),
-            _ => {
-                let rest = s.strip_prefix("bucketed:")?;
-                let max_bytes: usize = rest.parse().ok().filter(|&b| b > 0)?;
-                Some(Self::Bucketed { max_bytes })
+            other => {
+                let rest = other.strip_prefix("bucketed:").ok_or_else(|| {
+                    format!(
+                        "unknown sync strategy {other:?} (expected flat|bucketed[:<bytes>])"
+                    )
+                })?;
+                let max_bytes: usize = rest.parse().map_err(|_| {
+                    format!("bucket size cap must be a byte count, got {rest:?}")
+                })?;
+                let strategy = Self::Bucketed { max_bytes };
+                strategy.validate()?;
+                Ok(strategy)
             }
         }
+    }
+
+    pub fn by_name(s: &str) -> Option<Self> {
+        Self::parse(s).ok()
+    }
+
+    /// Reject caps below one f32 element: `BucketPlan::build` would clamp
+    /// them into degenerate 1-element chunks — technically correct, but a
+    /// silent ~1000x message-count amplification nobody asks for on
+    /// purpose.
+    pub fn validate(&self) -> Result<(), String> {
+        if let Self::Bucketed { max_bytes } = self {
+            if *max_bytes < MIN_BUCKET_BYTES {
+                return Err(format!(
+                    "bucket size cap must be at least {MIN_BUCKET_BYTES} bytes (one f32 \
+                     element), got {max_bytes}"
+                ));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -141,6 +172,14 @@ pub struct TrainConfig {
     pub sync_every: SyncEvery,
     /// Flat blocking allreduce vs bucketed overlapped pipeline.
     pub sync_strategy: SyncStrategy,
+    /// Nonblocking algorithm under each gradient bucket (`Bucketed`
+    /// only): rd, Rabenseifner, or size-adaptive `Auto` switching at the
+    /// alpha-beta crossover (`--bucket-alg` / `--bucket-alg-threshold`).
+    /// Every choice keeps the bitwise `Bucketed == Flat` guarantee.
+    pub bucket_alg: BucketAlg,
+    /// Drain order of the bucket pipeline (`Bucketed` only): launch order
+    /// or front-layers-first priority drain (`--drain`).
+    pub drain: DrainOrder,
     pub allreduce: AllreduceAlgorithm,
     /// Collective allreduce (the paper) vs sharded parameter server with
     /// BSP/ASP/SSP consistency (`sync_strategy`/`allreduce` are the
@@ -181,6 +220,10 @@ impl TrainConfig {
             sync: SyncMode::WeightAverage,
             sync_every: SyncEvery::Step,
             sync_strategy: SyncStrategy::Flat,
+            bucket_alg: BucketAlg::Auto {
+                threshold_bytes: None,
+            },
+            drain: DrainOrder::Priority,
             allreduce: AllreduceAlgorithm::Auto,
             train_mode: TrainMode::Allreduce,
             mode: ExecMode::Real,
@@ -236,6 +279,16 @@ impl TrainConfig {
         self
     }
 
+    pub fn with_bucket_alg(mut self, alg: BucketAlg) -> Self {
+        self.bucket_alg = alg;
+        self
+    }
+
+    pub fn with_drain(mut self, order: DrainOrder) -> Self {
+        self.drain = order;
+        self
+    }
+
     pub fn with_train_mode(mut self, m: TrainMode) -> Self {
         self.train_mode = m;
         self
@@ -244,6 +297,15 @@ impl TrainConfig {
     pub fn with_straggler(mut self, world_rank: usize, mult: f64) -> Self {
         self.straggler = Some((world_rank, mult));
         self
+    }
+
+    /// Config-level validation, run once before any rank thread spawns
+    /// (the launcher calls it): rejects degenerate bucket caps and
+    /// algorithm thresholds with a clear diagnosis instead of letting the
+    /// plan builder clamp them into 1-element chunks.
+    pub fn validate(&self) -> Result<(), String> {
+        self.sync_strategy.validate()?;
+        self.bucket_alg.validate()
     }
 
     /// Execution mode for a specific rank: Sim compute picks up the
@@ -288,6 +350,34 @@ mod tests {
         assert_eq!(SyncStrategy::by_name("bucketed:0"), None);
         assert_eq!(SyncStrategy::by_name("bucketed:x"), None);
         assert_eq!(SyncStrategy::by_name("ring"), None);
+    }
+
+    #[test]
+    fn degenerate_caps_are_rejected_with_a_diagnosis() {
+        // ISSUE 4 satellite: 0 / sub-element caps fail at config-parse
+        // time with a message that names the bound, not a generic usage
+        // error (and never reach BucketPlan's defensive clamp).
+        for bad in ["bucketed:0", "bucketed:3"] {
+            let err = SyncStrategy::parse(bad).unwrap_err();
+            assert!(err.contains("at least"), "{bad}: {err}");
+            assert!(err.contains("4 bytes"), "{bad}: {err}");
+        }
+        assert!(SyncStrategy::parse("bucketed:4").is_ok());
+        assert!(SyncStrategy::parse("bucketed:nope").unwrap_err().contains("byte count"));
+        // And the aggregate config validation wires both knobs through.
+        let mut cfg = TrainConfig::new("t");
+        assert!(cfg.validate().is_ok());
+        cfg.sync_strategy = SyncStrategy::Bucketed { max_bytes: 2 };
+        assert!(cfg.validate().is_err());
+        cfg.sync_strategy = SyncStrategy::Flat;
+        cfg.bucket_alg = BucketAlg::Auto {
+            threshold_bytes: Some(1),
+        };
+        assert!(cfg.validate().is_err());
+        cfg.bucket_alg = BucketAlg::Auto {
+            threshold_bytes: Some(1 << 20),
+        };
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

@@ -20,6 +20,9 @@ pub fn run_training(
     ranks: usize,
     profile: NetProfile,
 ) -> Result<TrainReport> {
+    // Parse-time config validation (bucket caps / algorithm thresholds):
+    // fail with the diagnosis before any rank thread spawns.
+    cfg.validate().map_err(|m| anyhow!(m))?;
     if let TrainMode::ParameterServer { servers, .. } = cfg.train_mode {
         ensure!(servers >= 1, "--ps-servers must be at least 1");
         ensure!(

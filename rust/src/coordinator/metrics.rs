@@ -33,6 +33,15 @@ pub struct RankMetrics {
     pub sync_exposed_s: f64,
     /// Gradient buckets all-reduced (0 under `SyncStrategy::Flat`).
     pub buckets_synced: u64,
+    /// Virtual seconds spent, summed over steps, between entering the
+    /// bucket drain and applying the **first front-layer bucket** (the
+    /// bucket containing flat-vector offset 0). Under
+    /// `DrainOrder::Priority` the drain proceeds front-to-back from
+    /// there, so a tiled next-step forward pass could start consuming
+    /// layer 0 at this point and stream the rest in apply order; under
+    /// `DrainOrder::Launch` this bucket lands last, so the metric spans
+    /// the whole drain. 0 under `SyncStrategy::Flat`.
+    pub front_apply_s: f64,
     /// Parameter-server mode: max observed staleness (own clock −
     /// slowest worker's clock) across this worker's pulls. Always 0
     /// under BSP; bounded by `s` under SSP; unbounded under ASP.
@@ -83,6 +92,7 @@ impl RankMetrics {
             comm_s: 0.0,
             sync_exposed_s: 0.0,
             buckets_synced: 0,
+            front_apply_s: 0.0,
             staleness_max: 0,
             pull_wait_s: 0.0,
             push_bytes: 0,
@@ -153,6 +163,23 @@ impl TrainReport {
             return 0.0;
         }
         alive.iter().map(|r| r.sync_exposed_s).sum::<f64>() / alive.len() as f64
+    }
+
+    /// Mean virtual seconds a surviving worker waited for the **first**
+    /// front-layer bucket across the run — compare `DrainOrder::Priority`
+    /// against `DrainOrder::Launch` to read the priority-drain win (the
+    /// forward-of-next-step latency MaTEx-style double buffering cares
+    /// about; see [`RankMetrics::front_apply_s`] for the exact scope).
+    pub fn front_apply_mean_s(&self) -> f64 {
+        let alive: Vec<_> = self
+            .per_rank
+            .iter()
+            .filter(|r| !r.died && !r.is_server)
+            .collect();
+        if alive.is_empty() {
+            return 0.0;
+        }
+        alive.iter().map(|r| r.front_apply_s).sum::<f64>() / alive.len() as f64
     }
 
     /// Do all surviving replicas hold bitwise-identical parameters?

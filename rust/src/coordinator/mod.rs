@@ -25,6 +25,8 @@ pub mod trainer;
 pub use config::{ExecMode, SyncEvery, SyncMode, SyncStrategy, TrainConfig, TrainMode};
 pub use launcher::run_training;
 pub use metrics::{EvalPoint, RankMetrics, TrainReport};
-pub use pipeline::{BucketPlan, GradBucket, PipelineEngine};
+pub use pipeline::{
+    BucketAlg, BucketPlan, DrainOrder, GradBucket, PipelineEngine, MIN_BUCKET_BYTES,
+};
 pub use replica::{Replica, StepOutcome};
 pub use trainer::train_rank;

@@ -8,13 +8,22 @@
 //! layer's gradient — back to front — that layer's piece of the vector can
 //! already be in flight while earlier layers are still computing.
 //!
-//! Three pieces:
+//! Four pieces:
 //!
 //! * [`BucketPlan`] partitions the flat parameter vector into size-capped
 //!   contiguous buckets along tensor boundaries (reusing `chunk_range` to
 //!   split tensors bigger than the cap), ordered **back to front** — the
 //!   order gradients become available.
-//! * [`PipelineEngine`] owns the per-bucket [`IAllreduce`] states and one
+//! * [`BucketAlg`] picks the nonblocking allreduce under each bucket:
+//!   [`IAllreduce`] (recursive doubling — latency-optimal, moves
+//!   `log₂p·n` bytes/rank) for small buckets, [`IRabenseifner`]
+//!   (reduce-scatter + allgather — bandwidth-optimal, `~2n` bytes/rank)
+//!   for large ones. `Auto` switches at the alpha-beta crossover derived
+//!   from the communicator's `NetProfile`
+//!   ([`NetProfile::rabenseifner_crossover_bytes`]) unless an explicit
+//!   threshold overrides it. The choice is a pure function of
+//!   (profile, p, bucket size), so every rank resolves identically.
+//! * [`PipelineEngine`] owns the per-bucket operation states and one
 //!   persistent scratch buffer (sized to the largest bucket — progression
 //!   is serial, so one scratch serves every in-flight operation). Both
 //!   are allocated once at trainer start; the per-step path is
@@ -28,12 +37,25 @@
 //!   (`netmodel::fold_arrival`) — the overlap win emerges from the cost
 //!   model rather than being asserted.
 //!
+//! **Priority-aware drain** ([`DrainOrder::Priority`], the default in the
+//! trainer): once backprop ends, the drain waits and applies buckets
+//! **front-most layer first** — the MaTEx-style double-buffering order
+//! (arXiv:1704.04560) — because the *next* step's forward pass consumes
+//! the front layers first. The engine reports the virtual latency until
+//! the front bucket was applied ([`PipelineEngine::last_front_apply_s`]);
+//! with tail buckets still landing afterwards, that latency is what a
+//! forward-of-next-step overlap would actually wait. Apply regions are
+//! disjoint slices of the flat vector, so drain order cannot change any
+//! value — parity is unaffected.
+//!
 //! **Replica consistency:** every rank builds the identical plan (same
-//! specs), launches buckets in the same order, and recursive doubling's
-//! combine schedule is position-independent, so the bucketed result is
-//! bit-identical to the flat `RecursiveDoubling` path — replicas stay
-//! bitwise equal, `Bucketed` vs `Flat` stays bitwise equal
-//! (`tests/pipeline_parity.rs`).
+//! specs), launches buckets in the same order, resolves the same
+//! per-bucket algorithm, and both schedules' combine trees are
+//! position-independent (rd trivially; Rabenseifner reproduces the rd
+//! butterfly shape per chunk — see `irabenseifner.rs`), so the bucketed
+//! result is bit-identical to the flat `RecursiveDoubling` path under
+//! *any* `BucketAlg` — replicas stay bitwise equal, `Bucketed` vs `Flat`
+//! stays bitwise equal (`tests/pipeline_parity.rs`).
 //!
 //! **ULFM:** any failure while launching or draining cancels every
 //! outstanding operation (`cancel_all`) before the error propagates, so
@@ -48,8 +70,164 @@ use crate::mpi::collectives::chunk_range;
 use crate::mpi::comm::Communicator;
 use crate::mpi::datatype::ReduceOp;
 use crate::mpi::error::{MpiError, MpiResult};
-use crate::mpi::IAllreduce;
+use crate::mpi::{IAllreduce, IRabenseifner};
 use crate::model::ParamSet;
+
+#[cfg(doc)]
+use crate::mpi::NetProfile;
+
+/// Smallest meaningful bucket-size cap / algorithm threshold: one f32
+/// element. Anything below degenerates into sub-element chunks; config
+/// parsing rejects it with a clear error (`SyncStrategy::validate`,
+/// `BucketAlg::validate`).
+pub const MIN_BUCKET_BYTES: usize = std::mem::size_of::<f32>();
+
+/// Which nonblocking allreduce runs under each gradient bucket.
+///
+/// Both choices carry the same bitwise guarantee (their combine trees are
+/// the recursive-doubling butterfly — see `irabenseifner.rs`), so this is
+/// purely a *performance* dial: rd moves `log₂p` full vectors per rank
+/// (latency-optimal), Rabenseifner `~2n` bytes total (bandwidth-optimal).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BucketAlg {
+    /// Recursive doubling ([`IAllreduce`]) for every bucket — the PR-2
+    /// behavior, right when all buckets sit below the crossover.
+    Rd,
+    /// Rabenseifner reduce-scatter + allgather ([`IRabenseifner`]) for
+    /// every bucket — right when the cap keeps buckets large.
+    Rabenseifner,
+    /// Size-adaptive: rd below the threshold, Rabenseifner at or above
+    /// it. `threshold_bytes: None` derives the alpha-beta crossover from
+    /// the communicator's profile at launch time
+    /// ([`NetProfile::rabenseifner_crossover_bytes`]); `Some(t)` pins it
+    /// (the `--bucket-alg-threshold` override).
+    Auto { threshold_bytes: Option<usize> },
+}
+
+impl BucketAlg {
+    /// Parse `rd`, `rabenseifner`/`rab`, `auto`, or `auto:<bytes>` with a
+    /// config-parse-time diagnosis instead of a generic usage error.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "rd" | "recursive-doubling" => Ok(Self::Rd),
+            "rabenseifner" | "rab" => Ok(Self::Rabenseifner),
+            "auto" => Ok(Self::Auto {
+                threshold_bytes: None,
+            }),
+            other => {
+                let rest = other.strip_prefix("auto:").ok_or_else(|| {
+                    format!(
+                        "unknown bucket algorithm {other:?} \
+                         (expected rd|rabenseifner|auto[:<bytes>])"
+                    )
+                })?;
+                let threshold: usize = rest.parse().map_err(|_| {
+                    format!("auto:<bytes> threshold must be a byte count, got {rest:?}")
+                })?;
+                let alg = Self::Auto {
+                    threshold_bytes: Some(threshold),
+                };
+                alg.validate()?;
+                Ok(alg)
+            }
+        }
+    }
+
+    /// Reject degenerate explicit thresholds (0 or below one element) at
+    /// config-parse time — ISSUE 4 satellite.
+    pub fn validate(&self) -> Result<(), String> {
+        if let Self::Auto {
+            threshold_bytes: Some(t),
+        } = self
+        {
+            if *t < MIN_BUCKET_BYTES {
+                return Err(format!(
+                    "bucket-algorithm threshold must be at least {MIN_BUCKET_BYTES} \
+                     bytes (one f32 element), got {t}"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Does a bucket of `nbytes` run Rabenseifner? A pure function of
+    /// (self, profile, p, size) — identical on every rank, which the
+    /// lockstep launch schedule requires.
+    fn picks_rabenseifner(self, comm: &Communicator, nbytes: usize) -> bool {
+        match self {
+            BucketAlg::Rd => false,
+            BucketAlg::Rabenseifner => true,
+            BucketAlg::Auto { threshold_bytes } => threshold_bytes
+                .or_else(|| comm.profile().rabenseifner_crossover_bytes(comm.size()))
+                .is_some_and(|t| nbytes >= t),
+        }
+    }
+}
+
+/// The order the drain phase waits/applies buckets in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrainOrder {
+    /// Launch order (back-to-front layers) — the PR-2 behavior; the
+    /// front-most layer lands last.
+    Launch,
+    /// Front-most layers first (MaTEx-style double buffering): the next
+    /// step's forward pass reads the front layers first, so applying them
+    /// first minimizes the forward-of-next-step wait. Values are
+    /// unaffected (apply regions are disjoint); only the latency profile
+    /// changes.
+    Priority,
+}
+
+impl DrainOrder {
+    pub fn by_name(s: &str) -> Option<Self> {
+        match s {
+            "launch" => Some(Self::Launch),
+            "priority" => Some(Self::Priority),
+            _ => None,
+        }
+    }
+}
+
+/// One in-flight bucket operation — rd or Rabenseifner, per
+/// [`BucketAlg`]; both expose the same drive surface.
+#[derive(Debug)]
+enum BucketOp {
+    Rd(IAllreduce),
+    Rabenseifner(IRabenseifner),
+}
+
+impl BucketOp {
+    fn drive_one_round(
+        &mut self,
+        comm: &Communicator,
+        data: &mut [f32],
+        scratch: &mut [f32],
+    ) -> MpiResult<bool> {
+        match self {
+            BucketOp::Rd(op) => op.drive_one_round(comm, data, scratch),
+            BucketOp::Rabenseifner(op) => op.drive_one_round(comm, data, scratch),
+        }
+    }
+
+    fn wait(
+        &mut self,
+        comm: &Communicator,
+        data: &mut [f32],
+        scratch: &mut [f32],
+    ) -> MpiResult<()> {
+        match self {
+            BucketOp::Rd(op) => op.wait(comm, data, scratch),
+            BucketOp::Rabenseifner(op) => op.wait(comm, data, scratch),
+        }
+    }
+
+    fn cancel(&mut self) {
+        match self {
+            BucketOp::Rd(op) => op.cancel(),
+            BucketOp::Rabenseifner(op) => op.cancel(),
+        }
+    }
+}
 
 /// One contiguous, size-capped slice of the flat vector; buckets appear in
 /// launch order (back to front over the layer tensors).
@@ -140,18 +318,30 @@ impl BucketPlan {
 /// Per-rank pipelined sync engine: plan + reusable in-flight state.
 pub struct PipelineEngine {
     plan: BucketPlan,
-    states: Vec<Option<IAllreduce>>,
+    alg: BucketAlg,
+    drain_order: DrainOrder,
+    states: Vec<Option<BucketOp>>,
     scratch: Vec<f32>,
+    /// Virtual seconds the last drain spent before the front-most layer's
+    /// bucket was applied (see [`Self::last_front_apply_s`]).
+    front_apply_last_s: f64,
 }
 
 impl PipelineEngine {
+    /// Engine with the PR-2 defaults (`BucketAlg::Rd`,
+    /// `DrainOrder::Launch`); override with [`Self::with_alg`] /
+    /// [`Self::with_drain`]. The trainer passes `TrainConfig::bucket_alg`
+    /// / `TrainConfig::drain` (size-adaptive + priority by default).
     pub fn new(plan: BucketPlan) -> PipelineEngine {
         let states = (0..plan.n_buckets()).map(|_| None).collect();
         let scratch = vec![0.0; plan.max_bucket_len()];
         PipelineEngine {
             plan,
+            alg: BucketAlg::Rd,
+            drain_order: DrainOrder::Launch,
             states,
             scratch,
+            front_apply_last_s: 0.0,
         }
     }
 
@@ -160,8 +350,31 @@ impl PipelineEngine {
         Self::new(BucketPlan::build(&params.tensor_ranges(), max_bytes))
     }
 
+    pub fn with_alg(mut self, alg: BucketAlg) -> PipelineEngine {
+        self.alg = alg;
+        self
+    }
+
+    pub fn with_drain(mut self, order: DrainOrder) -> PipelineEngine {
+        self.drain_order = order;
+        self
+    }
+
     pub fn plan(&self) -> &BucketPlan {
         &self.plan
+    }
+
+    /// Virtual seconds the last `sync_step`/`allreduce_overlapped` drain
+    /// spent between entering the drain and applying the **first
+    /// front-layer bucket** (the one containing flat offset 0) — the
+    /// point a tiled next-step forward pass could start under MaTEx-style
+    /// double buffering, with `DrainOrder::Priority` streaming the
+    /// remaining front-to-back buckets in exactly the order the forward
+    /// consumes them. Priority minimizes it (that bucket is waited
+    /// first); `DrainOrder::Launch` pays the whole drain. 0 when the
+    /// step needed no drain (p=1, `SyncMode::None`, or an empty plan).
+    pub fn last_front_apply_s(&self) -> f64 {
+        self.front_apply_last_s
     }
 
     /// Abandon every outstanding operation (ULFM recovery path).
@@ -205,7 +418,14 @@ impl PipelineEngine {
         for i in 0..self.plan.buckets.len() {
             let range = self.plan.buckets[i].range.clone();
             comm.advance(compute_secs * range.len() as f64 / total);
-            match IAllreduce::start(comm, ReduceOp::Sum, &mut data[range]) {
+            let nbytes = range.len() * std::mem::size_of::<f32>();
+            let started = if self.alg.picks_rabenseifner(comm, nbytes) {
+                IRabenseifner::start(comm, ReduceOp::Sum, &mut data[range])
+                    .map(BucketOp::Rabenseifner)
+            } else {
+                IAllreduce::start(comm, ReduceOp::Sum, &mut data[range]).map(BucketOp::Rd)
+            };
+            match started {
                 Ok(op) => self.states[i] = Some(op),
                 Err(e) => {
                     self.cancel_all();
@@ -227,16 +447,35 @@ impl PipelineEngine {
         Ok(())
     }
 
-    /// Drain phase: wait each bucket in launch order and hand its reduced
-    /// slice to `apply` (average + optimizer update) — the wait happens
-    /// only when the optimizer actually needs that bucket.
+    /// Drain phase: wait each bucket and hand its reduced slice to
+    /// `apply` (average + optimizer update) — the wait happens only when
+    /// the optimizer actually needs that bucket.
+    ///
+    /// [`DrainOrder::Launch`] walks launch order (back-to-front layers);
+    /// [`DrainOrder::Priority`] walks the reverse, so the **front-most**
+    /// layer — the first thing the next step's forward pass reads — is
+    /// waited and applied first while tail buckets keep landing. Either
+    /// way every rank uses the identical order, so the lockstep wait
+    /// schedule stays deadlock-free and virtual clocks reproducible.
+    /// The virtual latency until the front bucket's apply is recorded in
+    /// `front_apply_last_s`.
     fn drain(
         &mut self,
         comm: &Communicator,
         data: &mut [f32],
         mut apply: impl FnMut(&mut [f32], &Range<usize>),
     ) -> MpiResult<()> {
-        for i in 0..self.plan.buckets.len() {
+        let t0 = comm.clock();
+        self.front_apply_last_s = 0.0;
+        let n = self.plan.buckets.len();
+        // Launch order is back-to-front over the layers, so the bucket
+        // containing the front of the vector is the *last* launched.
+        let front = n.checked_sub(1);
+        for k in 0..n {
+            let i = match self.drain_order {
+                DrainOrder::Launch => k,
+                DrainOrder::Priority => n - 1 - k,
+            };
             let Some(mut op) = self.states[i].take() else {
                 continue;
             };
@@ -247,6 +486,9 @@ impl PipelineEngine {
                 return Err(e);
             }
             apply(slice, &range);
+            if Some(i) == front {
+                self.front_apply_last_s = comm.clock() - t0;
+            }
         }
         Ok(())
     }
@@ -278,6 +520,7 @@ impl PipelineEngine {
         compute_secs: f64,
     ) -> MpiResult<usize> {
         if comm.size() == 1 || mode == SyncMode::None {
+            self.front_apply_last_s = 0.0;
             comm.advance(compute_secs);
             if let (SyncMode::GradientAverage, StepOutcome::Grads { .. }) = (mode, outcome) {
                 replica.apply_local_grads();
@@ -470,6 +713,163 @@ mod tests {
             piped_time < flat_time * 0.9,
             "overlap should hide ≥10% of the step: piped {piped_time} vs flat {flat_time}"
         );
+    }
+
+    #[test]
+    fn bucket_alg_parse_and_validate() {
+        assert_eq!(BucketAlg::parse("rd"), Ok(BucketAlg::Rd));
+        assert_eq!(BucketAlg::parse("rabenseifner"), Ok(BucketAlg::Rabenseifner));
+        assert_eq!(BucketAlg::parse("rab"), Ok(BucketAlg::Rabenseifner));
+        assert_eq!(
+            BucketAlg::parse("auto"),
+            Ok(BucketAlg::Auto {
+                threshold_bytes: None
+            })
+        );
+        assert_eq!(
+            BucketAlg::parse("auto:65536"),
+            Ok(BucketAlg::Auto {
+                threshold_bytes: Some(65536)
+            })
+        );
+        // Degenerate thresholds are rejected with a diagnosis, not
+        // accepted into sub-element chunk behaviour (ISSUE 4 satellite).
+        assert!(BucketAlg::parse("auto:0").is_err());
+        assert!(BucketAlg::parse("auto:3").is_err());
+        assert!(BucketAlg::parse("auto:x").is_err());
+        assert!(BucketAlg::parse("ring").is_err());
+        assert!(BucketAlg::Auto {
+            threshold_bytes: Some(2)
+        }
+        .validate()
+        .is_err());
+        assert!(BucketAlg::Auto {
+            threshold_bytes: Some(4)
+        }
+        .validate()
+        .is_ok());
+        assert_eq!(DrainOrder::by_name("launch"), Some(DrainOrder::Launch));
+        assert_eq!(DrainOrder::by_name("priority"), Some(DrainOrder::Priority));
+        assert_eq!(DrainOrder::by_name("x"), None);
+    }
+
+    #[test]
+    fn auto_resolution_follows_profile_crossover_and_override() {
+        let w = World::new(4, NetProfile::infiniband_fdr());
+        w.run_unwrap(|c| {
+            let crossover = c
+                .profile()
+                .rabenseifner_crossover_bytes(c.size())
+                .expect("p=4 has a crossover");
+            let auto = BucketAlg::Auto {
+                threshold_bytes: None,
+            };
+            assert!(!auto.picks_rabenseifner(&c, crossover - 1));
+            assert!(auto.picks_rabenseifner(&c, crossover));
+            let pinned = BucketAlg::Auto {
+                threshold_bytes: Some(64),
+            };
+            assert!(pinned.picks_rabenseifner(&c, 64));
+            assert!(!pinned.picks_rabenseifner(&c, 63));
+            assert!(BucketAlg::Rabenseifner.picks_rabenseifner(&c, 1));
+            assert!(!BucketAlg::Rd.picks_rabenseifner(&c, usize::MAX));
+            Ok(())
+        });
+        // Free-bandwidth profile: no crossover, Auto degrades to rd.
+        let w = World::new(8, NetProfile::zero());
+        w.run_unwrap(|c| {
+            let auto = BucketAlg::Auto {
+                threshold_bytes: None,
+            };
+            assert!(!auto.picks_rabenseifner(&c, usize::MAX));
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rabenseifner_and_auto_engines_match_flat_rd_bitwise() {
+        // The tentpole parity claim at the engine level: whatever mix of
+        // rd/Rabenseifner the bucket algorithm resolves, the result is
+        // bit-identical to one flat recursive-doubling allreduce.
+        let algs = [
+            BucketAlg::Rabenseifner,
+            // Threshold inside the bucket-size range → a genuine mix.
+            BucketAlg::Auto {
+                threshold_bytes: Some(256),
+            },
+            BucketAlg::Auto {
+                threshold_bytes: None,
+            },
+        ];
+        for alg in algs {
+            for p in [2usize, 3, 5, 8] {
+                let sizes = [17usize, 64, 9, 33, 128];
+                let n: usize = sizes.iter().sum();
+                let w = World::new(p, NetProfile::zero());
+                let out = w.run_unwrap(move |c| {
+                    let mk = |r: usize| -> Vec<f32> {
+                        (0..n)
+                            .map(|i| ((r * 31 + i * 17) % 101) as f32 * 0.25 - 12.0)
+                            .collect()
+                    };
+                    let mut eng = PipelineEngine::new(BucketPlan::build(&ranges(&sizes), 256))
+                        .with_alg(alg)
+                        .with_drain(DrainOrder::Priority);
+                    let mut piped = mk(c.rank());
+                    eng.allreduce_overlapped(&c, &mut piped, 0.0)?;
+                    let mut flat = mk(c.rank());
+                    allreduce_with(
+                        &c,
+                        AllreduceAlgorithm::RecursiveDoubling,
+                        ReduceOp::Sum,
+                        &mut flat,
+                    )?;
+                    Ok((piped, flat))
+                });
+                for (rank, (piped, flat)) in out.iter().enumerate() {
+                    for i in 0..n {
+                        assert_eq!(
+                            piped[i].to_bits(),
+                            flat[i].to_bits(),
+                            "alg={alg:?} p={p} rank={rank} i={i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn priority_drain_applies_front_bucket_sooner() {
+        // p=8 on InfiniBand, four equal buckets, no compute to hide
+        // behind: the drain order decides when the front-most bucket
+        // lands. Priority must beat launch order on that latency while
+        // producing identical bits.
+        let sizes = [50_000usize, 50_000, 50_000, 50_000];
+        let n: usize = sizes.iter().sum();
+        let run = |order: DrainOrder| {
+            let w = World::new(8, NetProfile::infiniband_fdr());
+            let out = w.run_unwrap(move |c| {
+                let mut eng = PipelineEngine::new(BucketPlan::build(&ranges(&sizes), 200_000))
+                    .with_drain(order);
+                barrier(&c)?;
+                let mut v = vec![1.0f32; n];
+                eng.allreduce_overlapped(&c, &mut v, 0.0)?;
+                Ok((eng.last_front_apply_s(), v))
+            });
+            let lat = out.iter().map(|(l, _)| *l).fold(0.0, f64::max);
+            (lat, out.into_iter().next().unwrap().1)
+        };
+        let (launch_lat, launch_v) = run(DrainOrder::Launch);
+        let (prio_lat, prio_v) = run(DrainOrder::Priority);
+        assert!(
+            prio_lat < launch_lat,
+            "priority drain should apply the front bucket sooner: \
+             {prio_lat} vs {launch_lat}"
+        );
+        for (a, b) in launch_v.iter().zip(&prio_v) {
+            assert_eq!(a.to_bits(), b.to_bits(), "drain order must not change values");
+        }
     }
 
     #[test]

@@ -78,11 +78,15 @@ pub fn train_rank(
 
     // Bucketed strategy: build the (step-invariant) bucket plan and the
     // pipelined engine once — identical on every rank since it derives
-    // from the shared architecture spec. All per-step state is reused.
+    // from the shared architecture spec (and the per-bucket rd-vs-
+    // Rabenseifner choice from the shared profile). All per-step state is
+    // reused.
     let mut pipeline = match cfg.sync_strategy {
-        SyncStrategy::Bucketed { max_bytes } => {
-            Some(PipelineEngine::for_params(&replica.params, max_bytes))
-        }
+        SyncStrategy::Bucketed { max_bytes } => Some(
+            PipelineEngine::for_params(&replica.params, max_bytes)
+                .with_alg(cfg.bucket_alg)
+                .with_drain(cfg.drain),
+        ),
         SyncStrategy::Flat => None,
     };
 
@@ -235,6 +239,10 @@ fn run_epoch(
                 Some(engine) if cfg.sync != SyncMode::None && comm.size() > 1 => {
                     engine.sync_step(comm, replica, &outcome, cfg.sync, secs)?;
                     metrics.buckets_synced += engine.plan().n_buckets() as u64;
+                    // Latency until the front-most layer was applied —
+                    // what the next step's forward pass would wait; the
+                    // priority drain exists to shrink it.
+                    metrics.front_apply_s += engine.last_front_apply_s();
                 }
                 _ => {
                     comm.advance(secs);

@@ -9,7 +9,8 @@
 use std::sync::Arc;
 
 use dtf::coordinator::{
-    run_training, ExecMode, SyncEvery, SyncMode, SyncStrategy, TrainConfig, TrainMode,
+    run_training, BucketAlg, DrainOrder, ExecMode, SyncEvery, SyncMode, SyncStrategy,
+    TrainConfig, TrainMode,
 };
 use dtf::figures::{self, runner};
 use dtf::mpi::{AllreduceAlgorithm, NetProfile};
@@ -47,6 +48,8 @@ dtf — Distributed TensorFlow with MPI (PNNL 2016), Rust+JAX+Pallas reproductio
 USAGE:
   dtf train --arch <id> [--ranks N] [--epochs N] [--lr F] [--sync weight|grad|none]
             [--sync-every step|epoch] [--sync-strategy flat|bucketed[:BYTES]]
+            [--bucket-alg rd|rabenseifner|auto[:BYTES]] [--bucket-alg-threshold BYTES]
+            [--drain priority|launch]
             [--alg auto|ring|rd|tree] [--pool-trim N]
             [--train-mode allreduce|ps] [--ps-servers N]
             [--consistency bsp|asp|ssp:<s>] [--straggler RANK:MULT]
@@ -56,6 +59,14 @@ USAGE:
               [--profile ib|...] [--sps F]
   dtf inspect [--archs] [--artifacts]
   dtf calibrate --arch <id> [--write]
+
+Bucketed sync (`--sync-strategy bucketed`): --bucket-alg picks the nonblocking
+allreduce under each gradient bucket — rd (latency-optimal), rabenseifner
+(bandwidth-optimal reduce-scatter+allgather), or auto, which switches at the
+alpha-beta crossover derived from --profile (pin it with auto:<bytes> or
+--bucket-alg-threshold). All choices are bitwise-identical to flat rd.
+--drain priority applies front-layer buckets first (MaTEx-style), shrinking
+the front-layer apply latency the training report prints.
 
 Parameter-server mode (`--train-mode ps`): the last --ps-servers ranks shard
 the model and serve pull/push; --consistency picks bulk-synchronous (bsp,
@@ -74,16 +85,18 @@ fn load_manifest() -> Result<Arc<Manifest>> {
 }
 
 fn parse_profile(args: &Args) -> Result<NetProfile> {
-    let name = args.str_or("profile", if args.positional.first().map(|s| s.as_str()) == Some("figures") { "cluster" } else { "ib" });
+    let is_figures = args.positional.first().map(|s| s.as_str()) == Some("figures");
+    let name = args.str_or("profile", if is_figures { "cluster" } else { "ib" });
     NetProfile::by_name(name)
         .ok_or_else(|| anyhow::anyhow!("unknown --profile {name:?} (ib, socket, bgq, shm, zero)"))
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
     args.check_known(&[
-        "arch", "ranks", "epochs", "lr", "sync", "sync-every", "sync-strategy", "alg",
-        "pool-trim", "train-mode", "ps-servers", "consistency", "straggler", "profile",
-        "sim", "scale", "steps-cap", "eval-every", "seed", "quiet", "broadcast-init",
+        "arch", "ranks", "epochs", "lr", "sync", "sync-every", "sync-strategy",
+        "bucket-alg", "bucket-alg-threshold", "drain", "alg", "pool-trim", "train-mode",
+        "ps-servers", "consistency", "straggler", "profile", "sim", "scale", "steps-cap",
+        "eval-every", "seed", "quiet", "broadcast-init",
     ])?;
     let manifest = load_manifest()?;
     let arch = args
@@ -131,10 +144,60 @@ fn cmd_train(args: &Args) -> Result<()> {
         "epoch" => SyncEvery::Epoch,
         other => anyhow::bail!("--sync-every must be step|epoch, got {other}"),
     };
-    cfg.sync_strategy = SyncStrategy::by_name(args.str_or("sync-strategy", "flat"))
-        .ok_or_else(|| {
-            anyhow::anyhow!("--sync-strategy must be flat|bucketed|bucketed:<bytes>")
-        })?;
+    cfg.sync_strategy = SyncStrategy::parse(args.str_or("sync-strategy", "flat"))
+        .map_err(|m| anyhow::anyhow!("--sync-strategy: {m}"))?;
+    // The sync-strategy/bucket knobs shape the allreduce-mode Bucketed
+    // pipeline only; accepting them where they cannot act would silently
+    // do nothing — diagnose instead.
+    if matches!(cfg.train_mode, TrainMode::ParameterServer { .. }) {
+        for knob in ["sync-strategy", "bucket-alg", "bucket-alg-threshold", "drain"] {
+            if args.get(knob).is_some() {
+                anyhow::bail!(
+                    "--{knob} applies to --train-mode allreduce only; the \
+                     parameter-server path synchronizes via pull/push RPCs"
+                );
+            }
+        }
+    } else if cfg.sync_strategy == SyncStrategy::Flat {
+        for knob in ["bucket-alg", "bucket-alg-threshold", "drain"] {
+            if args.get(knob).is_some() {
+                anyhow::bail!(
+                    "--{knob} has no effect under --sync-strategy flat; \
+                     add --sync-strategy bucketed[:<bytes>]"
+                );
+            }
+        }
+    }
+    cfg.bucket_alg = BucketAlg::parse(args.str_or("bucket-alg", "auto"))
+        .map_err(|m| anyhow::anyhow!("--bucket-alg: {m}"))?;
+    if let Some(t) = args.get("bucket-alg-threshold") {
+        let threshold: usize = t
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--bucket-alg-threshold must be a byte count"))?;
+        match cfg.bucket_alg {
+            BucketAlg::Auto {
+                threshold_bytes: Some(pinned),
+            } => anyhow::bail!(
+                "--bucket-alg auto:{pinned} and --bucket-alg-threshold {threshold} \
+                 both pin the crossover; pass only one"
+            ),
+            BucketAlg::Auto {
+                threshold_bytes: None,
+            } => {
+                cfg.bucket_alg = BucketAlg::Auto {
+                    threshold_bytes: Some(threshold),
+                };
+                cfg.bucket_alg
+                    .validate()
+                    .map_err(|m| anyhow::anyhow!("--bucket-alg-threshold: {m}"))?;
+            }
+            _ => anyhow::bail!(
+                "--bucket-alg-threshold only applies to --bucket-alg auto"
+            ),
+        }
+    }
+    cfg.drain = DrainOrder::by_name(args.str_or("drain", "priority"))
+        .ok_or_else(|| anyhow::anyhow!("--drain must be priority|launch"))?;
     cfg.allreduce = AllreduceAlgorithm::by_name(args.str_or("alg", "auto"))
         .ok_or_else(|| anyhow::anyhow!("--alg must be auto|ring|rd|tree"))?;
     if let Some(keep) = args.get("pool-trim") {
@@ -168,6 +231,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         "  sync stall         {:.4} s/rank (mean; what overlap hides)",
         report.sync_exposed_mean_s()
     );
+    if report.per_rank.iter().any(|m| m.buckets_synced > 0) {
+        println!(
+            "  front-layer ready  {:.4} s/rank (mean; first front-layer bucket applied — \
+             a tiled forward could start here)",
+            report.front_apply_mean_s()
+        );
+    }
     println!("  samples trained    {}", report.total_samples());
     if report.per_rank.iter().any(|m| m.is_server) {
         println!(

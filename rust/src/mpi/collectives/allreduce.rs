@@ -29,7 +29,7 @@ use crate::mpi::datatype::{reduce_in_place, Reducible, ReduceOp};
 use crate::mpi::error::{MpiError, MpiResult};
 
 use super::bcast::bcast_into;
-use super::chunk_range;
+use super::{chunk_range, pof2_core};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AllreduceAlgorithm {
@@ -114,7 +114,7 @@ fn recursive_doubling<T: Reducible>(
     let me = comm.rank();
     let n = data.len();
     let tag = comm.next_coll_tag(CollKind::Allreduce);
-    let pof2 = p.next_power_of_two() >> usize::from(!p.is_power_of_two());
+    let pof2 = pof2_core(p);
     let rem = p - pof2;
     // One full-vector scratch for the whole call; the RAII guard returns
     // it to the pool on every exit path (including `?` on peer failure).

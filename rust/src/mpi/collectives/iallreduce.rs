@@ -37,6 +37,7 @@
 //! two produce bit-identical results (`tests/pipeline_parity.rs` also pins
 //! this against the frozen `compat` reference).
 
+use crate::mpi::collectives::pof2_core;
 use crate::mpi::comm::{CollKind, Communicator};
 use crate::mpi::datatype::{reduce_in_place, Reducible, ReduceOp};
 use crate::mpi::error::{MpiError, MpiResult};
@@ -97,7 +98,7 @@ impl IAllreduce {
                 phase: Phase::Done,
             });
         }
-        let pof2 = p.next_power_of_two() >> usize::from(!p.is_power_of_two());
+        let pof2 = pof2_core(p);
         let rem = p - pof2;
         let mut op_state = IAllreduce {
             op,

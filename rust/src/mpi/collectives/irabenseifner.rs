@@ -1,0 +1,674 @@
+//! Nonblocking **bandwidth-optimal** allreduce (`MPI_Iallreduce` with the
+//! Rabenseifner schedule): recursive-halving reduce-scatter followed by a
+//! recursive-doubling allgather, driven as a state machine through the
+//! request layer's test/wait discipline — the same `start` / `test` /
+//! `wait` / `drive_one_round` / `cancel` surface as [`IAllreduce`].
+//!
+//! # Why a second nonblocking algorithm
+//!
+//! [`IAllreduce`] (recursive doubling) moves the **full** vector every
+//! round — `log₂p · n` bytes in, `log₂p · n` out per rank. That is
+//! latency-optimal, and right for the small buckets the gradient pipeline
+//! was built around; but a *large* bucket pays a `log₂p` bandwidth factor
+//! exactly where bandwidth dominates (Awan et al., arXiv:1810.11112:
+//! large-message DNN allreduce is bandwidth-bound). This schedule moves
+//! `2·n·(pof2-1)/pof2 ≈ 2n` bytes per rank total:
+//!
+//! * **Reduce-scatter** (recursive halving): `log₂p` rounds with peer
+//!   `nr ^ mask` (`mask = 1, 2, …, pof2/2`); each round the live window
+//!   halves — send the half the peer keeps (`n/2`, then `n/4`, …), reduce
+//!   the received half into the half we keep. After the last round each
+//!   core rank owns one fully reduced chunk of the vector.
+//! * **Allgather** (recursive doubling, masks in reverse): the same peers
+//!   in reverse order; each round exchanges the now-complete window with
+//!   the round peer, doubling it, until every rank holds the full reduced
+//!   vector. Pure data movement — no arithmetic, so no rounding.
+//!
+//! Non-power-of-two `p` uses the standard fold-in pre-step — **the exact
+//! pre/post phase of the repo's recursive doubling** (`allreduce.rs`,
+//! [`IAllreduce`]): the first `2·rem` ranks pair up, evens push their full
+//! vector to the odd neighbour and retire until the post-phase hands the
+//! final vector back.
+//!
+//! # Bitwise parity with recursive doubling
+//!
+//! The trainer's `Bucketed == Flat` guarantee requires every bucket
+//! algorithm to reproduce the flat `RecursiveDoubling` result **bit for
+//! bit**. This schedule does, by construction — the same argument as
+//! `ps::rd_order_sum` (PR 3), applied per chunk:
+//!
+//! * Every element's reduction is a **pre-sorted chunk combine schedule**
+//!   fixed by the mask order `1, 2, 4, …`: at round `mask` the rank that
+//!   still tracks the element combines *its own subcube partial* with the
+//!   *peer subcube partial* (`acc = acc ⊕ incoming`) — exactly the
+//!   pairings of the recursive-doubling butterfly, independent of the
+//!   element's position in the vector and of which rank ends up owning
+//!   its chunk.
+//! * The combine must be **bitwise-commutative** (`a ⊕ b` bitwise equals
+//!   `b ⊕ a`); then only the combine-*tree shape* affects rounding, and
+//!   the shape is identical to recursive doubling's. By induction over
+//!   rounds, every member of a subcube holds bitwise-equal partials, so
+//!   the final chunk values equal the rd result, and the allgather only
+//!   copies them. IEEE-754 `+` and `×` are bitwise-commutative
+//!   unconditionally (the trainer's Sum path always qualifies); min/max
+//!   qualify for every input free of `-0.0`-vs-`+0.0` ties and NaNs —
+//!   on such a tie `combine` keeps a positional operand, and *even
+//!   blocking rd* then yields rank-divergent bits, so no allreduce
+//!   schedule can promise more there.
+//! * The pre/post fold-in phases are shared with rd verbatim.
+//!
+//! Rounds are serialized by the state machine (round `k+1`'s send is
+//! posted only after round `k`'s message is consumed), so the combine
+//! order is also independent of message *arrival* interleaving —
+//! `tests/pipeline_parity.rs` pins `IRabenseifner == blocking rd ==
+//! IAllreduce` bitwise across dtypes, world sizes, and layouts.
+//!
+//! # Driving contract
+//!
+//! Identical to [`IAllreduce`]: the handle owns no buffers — the caller
+//! passes the *same* `data` and a scratch of at least `data.len()` to
+//! every drive call, so one persistent scratch serves any number of
+//! in-flight operations and `start` performs **zero heap allocations**
+//! (pinned by `tests/alloc_free_pipeline.rs`). A peer may be revisited
+//! (reduce-scatter round `mask` and allgather round `mask` share the
+//! peer and the operation tag); mailbox matching is FIFO per `(src,
+//! tag)`, so the reduce-scatter message is always consumed first.
+
+use crate::mpi::collectives::{chunk_range, pof2_core};
+use crate::mpi::comm::{CollKind, Communicator};
+use crate::mpi::datatype::{reduce_in_place, Reducible, ReduceOp};
+use crate::mpi::error::{MpiError, MpiResult};
+use crate::mpi::Tag;
+
+#[cfg(doc)]
+use crate::mpi::IAllreduce;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Odd pre-phase rank: waiting for the even partner's vector.
+    PreRecv,
+    /// Recursive-halving reduce-scatter: waiting for the round-`mask`
+    /// peer's half-window partial.
+    ReduceScatter { mask: usize },
+    /// Recursive-doubling allgather (masks descending): waiting for the
+    /// round-`mask` peer's reduced window.
+    Allgather { mask: usize },
+    /// Even pre-phase rank: retired from the core, waiting for the final
+    /// vector from the odd partner.
+    PostRecv,
+    Done,
+}
+
+/// A posted nonblocking Rabenseifner allreduce. See the module docs for
+/// the driving contract (same `data`/`scratch` on every call).
+#[derive(Debug)]
+#[must_use = "an irabenseifner makes no progress until test()/wait() drives it"]
+pub struct IRabenseifner {
+    op: ReduceOp,
+    tag: Tag,
+    /// Element count the operation was posted with — every later call must
+    /// pass a `data` of exactly this length.
+    n: usize,
+    me: usize,
+    pof2: usize,
+    rem: usize,
+    /// Rank id within the power-of-two core (-1 = retired even pre-rank).
+    newrank: isize,
+    phase: Phase,
+}
+
+impl IRabenseifner {
+    /// Post the operation: computes the schedule and sends this rank's
+    /// first-round message (charging the sender's injection overhead now).
+    /// `data` holds this rank's contribution and will hold the result.
+    pub fn start<T: Reducible>(
+        comm: &Communicator,
+        op: ReduceOp,
+        data: &mut [T],
+    ) -> MpiResult<IRabenseifner> {
+        let p = comm.size();
+        let me = comm.rank();
+        let tag = comm.next_coll_tag(CollKind::Irabenseifner);
+        let n = data.len();
+        if p == 1 {
+            return Ok(IRabenseifner {
+                op,
+                tag,
+                n,
+                me,
+                pof2: 1,
+                rem: 0,
+                newrank: 0,
+                phase: Phase::Done,
+            });
+        }
+        let pof2 = pof2_core(p);
+        let rem = p - pof2;
+        let mut op_state = IRabenseifner {
+            op,
+            tag,
+            n,
+            me,
+            pof2,
+            rem,
+            newrank: 0,
+            phase: Phase::Done,
+        };
+        if me < 2 * rem {
+            if me % 2 == 0 {
+                // Push our vector to the odd neighbour and retire until the
+                // post-phase hands the final vector back.
+                comm.send(me + 1, tag, data)?;
+                op_state.newrank = -1;
+                op_state.phase = Phase::PostRecv;
+            } else {
+                op_state.newrank = (me / 2) as isize;
+                op_state.phase = Phase::PreRecv;
+            }
+        } else {
+            op_state.newrank = (me - rem) as isize;
+            op_state.enter_core(comm, data)?;
+        }
+        Ok(op_state)
+    }
+
+    /// Translate a core-rank id back to a communicator rank.
+    fn core_peer(&self, mask: usize) -> usize {
+        let peer_nr = (self.newrank as usize) ^ mask;
+        if peer_nr < self.rem {
+            peer_nr * 2 + 1
+        } else {
+            peer_nr + self.rem
+        }
+    }
+
+    /// Chunk-index window `[clo, chi)` this core rank holds **before**
+    /// reduce-scatter round `mask` (equivalently: after allgather round
+    /// `mask` restores it) — the result of replaying the split decisions
+    /// of every earlier round. Pure arithmetic in the rank's mask bits, so
+    /// no per-operation schedule storage is needed.
+    fn window_before(&self, mask: usize) -> (usize, usize) {
+        let nr = self.newrank as usize;
+        let (mut clo, mut chi) = (0usize, self.pof2);
+        let mut m = 1usize;
+        while m < mask {
+            let half = (chi - clo) / 2;
+            if nr & m == 0 {
+                chi -= half; // kept the lower half at round m
+            } else {
+                clo += half; // kept the upper half
+            }
+            m <<= 1;
+        }
+        (clo, chi)
+    }
+
+    /// Element range covered by chunks `[clo, chi)` of the `pof2`-way
+    /// `chunk_range` tiling of the vector.
+    fn span(&self, clo: usize, chi: usize) -> std::ops::Range<usize> {
+        chunk_range(self.n, self.pof2, clo).0..chunk_range(self.n, self.pof2, chi).0
+    }
+
+    /// Begin the core exchange: post the reduce-scatter round-1 send.
+    /// Called with the pre-phase combine already folded in.
+    fn enter_core<T: Reducible>(
+        &mut self,
+        comm: &Communicator,
+        data: &mut [T],
+    ) -> MpiResult<()> {
+        debug_assert!(self.pof2 >= 2, "p=1 is handled at start");
+        self.post_rs_send(comm, data, 1)
+    }
+
+    /// Post reduce-scatter round `mask`: send the half of the current
+    /// window that the round peer keeps.
+    fn post_rs_send<T: Reducible>(
+        &mut self,
+        comm: &Communicator,
+        data: &[T],
+        mask: usize,
+    ) -> MpiResult<()> {
+        let (clo, chi) = self.window_before(mask);
+        let half = (chi - clo) / 2;
+        let send = if (self.newrank as usize) & mask == 0 {
+            self.span(clo + half, chi) // keep lower, send upper
+        } else {
+            self.span(clo, clo + half) // keep upper, send lower
+        };
+        comm.send(self.core_peer(mask), self.tag, &data[send])?;
+        self.phase = Phase::ReduceScatter { mask };
+        Ok(())
+    }
+
+    /// Post allgather round `mask`: send the whole window completed so far
+    /// (the peer holds the complementary half of the round's target
+    /// window).
+    fn post_ag_send<T: Reducible>(
+        &mut self,
+        comm: &Communicator,
+        data: &[T],
+        mask: usize,
+    ) -> MpiResult<()> {
+        let (clo, chi) = self.window_before(mask << 1);
+        comm.send(self.core_peer(mask), self.tag, &data[self.span(clo, chi)])?;
+        self.phase = Phase::Allgather { mask };
+        Ok(())
+    }
+
+    /// The rank whose message the current phase is waiting on.
+    fn pending_src(&self) -> Option<usize> {
+        match self.phase {
+            Phase::PreRecv => Some(self.me - 1),
+            Phase::ReduceScatter { mask } | Phase::Allgather { mask } => {
+                Some(self.core_peer(mask))
+            }
+            Phase::PostRecv => Some(self.me + 1),
+            Phase::Done => None,
+        }
+    }
+
+    /// Fold one received message into the state machine, posting the next
+    /// round's send where the schedule calls for it.
+    fn on_message<T: Reducible>(
+        &mut self,
+        comm: &Communicator,
+        data: &mut [T],
+        incoming: &[T],
+    ) -> MpiResult<()> {
+        match self.phase {
+            Phase::PreRecv => {
+                reduce_in_place(self.op, data, incoming)?;
+                self.enter_core(comm, data)
+            }
+            Phase::ReduceScatter { mask } => {
+                let (clo, chi) = self.window_before(mask);
+                let half = (chi - clo) / 2;
+                let keep = if (self.newrank as usize) & mask == 0 {
+                    self.span(clo, clo + half)
+                } else {
+                    self.span(clo + half, chi)
+                };
+                // `reduce_in_place` rejects a length mismatch.
+                reduce_in_place(self.op, &mut data[keep], incoming)?;
+                let next = mask << 1;
+                if next < self.pof2 {
+                    self.post_rs_send(comm, data, next)
+                } else {
+                    // Reduce-scatter complete: this rank's window is one
+                    // fully reduced chunk. Allgather runs the same peers
+                    // in reverse mask order, widest first.
+                    self.post_ag_send(comm, data, self.pof2 >> 1)
+                }
+            }
+            Phase::Allgather { mask } => {
+                let (clo, chi) = self.window_before(mask);
+                let (kl, kh) = self.window_before(mask << 1);
+                // The payload is the complementary half of the target
+                // window — fully reduced by the peer's subcube.
+                let recv = if kl == clo {
+                    self.span(kh, chi)
+                } else {
+                    self.span(clo, kl)
+                };
+                if incoming.len() != recv.end - recv.start {
+                    return Err(MpiError::CountMismatch {
+                        expected: recv.end - recv.start,
+                        got: incoming.len(),
+                    });
+                }
+                data[recv].copy_from_slice(incoming);
+                let next = mask >> 1;
+                if next >= 1 {
+                    self.post_ag_send(comm, data, next)
+                } else {
+                    // Core finished. Odd pre-phase ranks hand the final
+                    // vector back to their retired even partner.
+                    if self.me < 2 * self.rem {
+                        comm.send(self.me - 1, self.tag, data)?;
+                    }
+                    self.phase = Phase::Done;
+                    Ok(())
+                }
+            }
+            Phase::PostRecv => {
+                if incoming.len() != self.n {
+                    return Err(MpiError::CountMismatch {
+                        expected: self.n,
+                        got: incoming.len(),
+                    });
+                }
+                data.copy_from_slice(incoming);
+                self.phase = Phase::Done;
+                Ok(())
+            }
+            Phase::Done => Ok(()),
+        }
+    }
+
+    fn check_buffers<T: Reducible>(&self, data: &[T], scratch: &[T]) -> MpiResult<()> {
+        if data.len() != self.n || scratch.len() < self.n {
+            return Err(MpiError::Inconsistent(format!(
+                "irabenseifner driven with data len {} / scratch len {}, posted with n={}",
+                data.len(),
+                scratch.len(),
+                self.n
+            )));
+        }
+        Ok(())
+    }
+
+    /// Advance **at most one round**, blocking for that round's message —
+    /// the deterministic progress hook (see [`IAllreduce::drive_one_round`]
+    /// for the full rationale: consumption order depends only on program
+    /// order, so virtual clocks stay bit-reproducible).
+    ///
+    /// Returns whether a round was consumed. Skips (`Ok(false)`) when the
+    /// operation is complete or parked in the post-phase.
+    pub fn drive_one_round<T: Reducible>(
+        &mut self,
+        comm: &Communicator,
+        data: &mut [T],
+        scratch: &mut [T],
+    ) -> MpiResult<bool> {
+        self.check_buffers(data, scratch)?;
+        let src = match self.phase {
+            Phase::Done | Phase::PostRecv => return Ok(false),
+            _ => self.pending_src().expect("non-terminal phase has a source"),
+        };
+        let (cnt, _) = match comm.recv_into(Some(src), self.tag, &mut scratch[..self.n]) {
+            Ok(v) => v,
+            Err(e) => {
+                self.cancel();
+                return Err(e);
+            }
+        };
+        let (incoming, _) = scratch.split_at(cnt);
+        if let Err(e) = self.on_message(comm, data, incoming) {
+            self.cancel();
+            return Err(e);
+        }
+        Ok(true)
+    }
+
+    /// Nonblocking progress: consume every already-queued round message,
+    /// advancing as many rounds as possible. Returns completion.
+    pub fn test<T: Reducible>(
+        &mut self,
+        comm: &Communicator,
+        data: &mut [T],
+        scratch: &mut [T],
+    ) -> MpiResult<bool> {
+        self.check_buffers(data, scratch)?;
+        loop {
+            let Some(src) = self.pending_src() else {
+                return Ok(true);
+            };
+            match comm.try_recv_into(Some(src), self.tag, &mut scratch[..self.n])? {
+                Some((cnt, _)) => {
+                    let (incoming, _) = scratch.split_at(cnt);
+                    self.on_message(comm, data, incoming)?;
+                }
+                None => return Ok(false),
+            }
+        }
+    }
+
+    /// Block until the operation completes (remaining rounds run here).
+    /// Errors (peer failure / revocation) leave the handle cancelled.
+    pub fn wait<T: Reducible>(
+        &mut self,
+        comm: &Communicator,
+        data: &mut [T],
+        scratch: &mut [T],
+    ) -> MpiResult<()> {
+        self.check_buffers(data, scratch)?;
+        while let Some(src) = self.pending_src() {
+            let res = comm.recv_into(Some(src), self.tag, &mut scratch[..self.n]);
+            let (cnt, _) = match res {
+                Ok(v) => v,
+                Err(e) => {
+                    self.cancel();
+                    return Err(e);
+                }
+            };
+            let (incoming, _) = scratch.split_at(cnt);
+            if let Err(e) = self.on_message(comm, data, incoming) {
+                self.cancel();
+                return Err(e);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.phase == Phase::Done
+    }
+
+    /// Abandon the operation (ULFM recovery path). Outstanding envelopes
+    /// stay in their mailboxes; sound for the same reason as
+    /// [`IAllreduce::cancel`] — tags are per-operation unique and the
+    /// revoked group's storage is reclaimed when it drops.
+    pub fn cancel(&mut self) {
+        self.phase = Phase::Done;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::collectives::allreduce_with;
+    use crate::mpi::collectives::AllreduceAlgorithm;
+    use crate::mpi::netmodel::NetProfile;
+    use crate::mpi::world::World;
+
+    #[test]
+    fn wait_driven_matches_blocking_rd_bitwise() {
+        for p in 1..=13usize {
+            let n = 97; // not a multiple of any p — ragged chunks
+            let w = World::new(p, NetProfile::zero());
+            let out = w.run_unwrap(move |c| {
+                let r = c.rank();
+                let mk = || -> Vec<f32> {
+                    (0..n).map(|i| ((r * 31 + i * 17) % 101) as f32 * 0.25 - 12.0).collect()
+                };
+                let mut nb = mk();
+                let mut scratch = vec![0.0f32; n];
+                let mut op = IRabenseifner::start(&c, ReduceOp::Sum, &mut nb)?;
+                op.wait(&c, &mut nb, &mut scratch)?;
+                assert!(op.is_complete());
+                let mut blocking = mk();
+                allreduce_with(
+                    &c,
+                    AllreduceAlgorithm::RecursiveDoubling,
+                    ReduceOp::Sum,
+                    &mut blocking,
+                )?;
+                Ok((nb, blocking))
+            });
+            for (rank, (nb, blocking)) in out.iter().enumerate() {
+                for i in 0..n {
+                    assert_eq!(
+                        nb[i].to_bits(),
+                        blocking[i].to_bits(),
+                        "p={p} rank={rank} i={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn short_vectors_with_empty_chunks_are_exact() {
+        // n < pof2 → some owned chunks are empty; the schedule still runs
+        // every round (with empty payloads) and must stay exact.
+        for p in [4usize, 6, 8, 9] {
+            for n in [0usize, 1, 3, 5] {
+                let w = World::new(p, NetProfile::zero());
+                let out = w.run_unwrap(move |c| {
+                    let mut v: Vec<f64> =
+                        (0..n).map(|i| (c.rank() * n + i) as f64).collect();
+                    let mut scratch = vec![0.0f64; n];
+                    let mut op = IRabenseifner::start(&c, ReduceOp::Sum, &mut v)?;
+                    op.wait(&c, &mut v, &mut scratch)?;
+                    Ok(v)
+                });
+                for v in out {
+                    for (i, &x) in v.iter().enumerate() {
+                        let want: f64 = (0..p).map(|r| (r * n + i) as f64).sum();
+                        assert_eq!(x, want, "p={p} n={n} i={i}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn test_driven_polling_completes() {
+        let w = World::new(4, NetProfile::zero());
+        let out = w.run_unwrap(|c| {
+            let mut v = vec![c.rank() as f64 + 1.0; 16];
+            let mut scratch = vec![0.0f64; 16];
+            let mut op = IRabenseifner::start(&c, ReduceOp::Sum, &mut v)?;
+            while !op.test(&c, &mut v, &mut scratch)? {
+                std::thread::yield_now();
+            }
+            Ok(v[0])
+        });
+        for v in out {
+            assert_eq!(v, 10.0); // 1+2+3+4
+        }
+    }
+
+    #[test]
+    fn concurrent_ops_and_mixed_algorithms_complete_out_of_order() {
+        // Two in-flight Rabenseifner ops plus an IAllreduce per rank,
+        // waited in reverse launch order: tag/kind uniqueness must keep
+        // their rounds (and the revisited RS/AG peers) from cross-matching.
+        let w = World::new(5, NetProfile::zero());
+        let out = w.run_unwrap(|c| {
+            let n = 33;
+            let mut bufs: Vec<Vec<f32>> = (0..3)
+                .map(|k| vec![(c.rank() + k + 1) as f32; n])
+                .collect();
+            let mut scratch = vec![0.0f32; n];
+            let mut rab0 = IRabenseifner::start(&c, ReduceOp::Sum, &mut bufs[0])?;
+            let mut rab1 = IRabenseifner::start(&c, ReduceOp::Sum, &mut bufs[1])?;
+            let mut rd2 = crate::mpi::IAllreduce::start(&c, ReduceOp::Sum, &mut bufs[2])?;
+            rd2.wait(&c, &mut bufs[2], &mut scratch)?;
+            rab1.wait(&c, &mut bufs[1], &mut scratch)?;
+            rab0.wait(&c, &mut bufs[0], &mut scratch)?;
+            Ok(bufs.into_iter().map(|b| b[0]).collect::<Vec<f32>>())
+        });
+        // sum over ranks of (rank + k + 1) = 15 + 5k for p=5 (ranks 0..4).
+        for v in out {
+            assert_eq!(v, vec![15.0, 20.0, 25.0]);
+        }
+    }
+
+    #[test]
+    fn integer_max_across_uneven_world() {
+        for p in [2usize, 3, 6, 7] {
+            let w = World::new(p, NetProfile::zero());
+            let out = w.run_unwrap(move |c| {
+                let mut v: Vec<u64> = (0..11).map(|i| (c.rank() * 11 + i) as u64).collect();
+                let mut scratch = vec![0u64; 11];
+                let mut op = IRabenseifner::start(&c, ReduceOp::Max, &mut v)?;
+                op.wait(&c, &mut v, &mut scratch)?;
+                Ok(v)
+            });
+            for v in out {
+                for (i, &x) in v.iter().enumerate() {
+                    assert_eq!(x, ((p - 1) * 11 + i) as u64, "p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bandwidth_optimality_shows_in_virtual_time() {
+        // 1M floats at p=8 on InfiniBand: rd moves log₂p·n per rank,
+        // Rabenseifner ~2n — the modelled ≥30% win the pipeline's Auto
+        // mode banks on (ISSUE 4 acceptance).
+        let n = 1_000_000usize;
+        let time_of = |rab: bool| {
+            let w = World::new(8, NetProfile::infiniband_fdr());
+            let clocks = w.run_unwrap(move |c| {
+                let mut v = vec![1.0f32; n];
+                let mut scratch = vec![0.0f32; n];
+                if rab {
+                    let mut op = IRabenseifner::start(&c, ReduceOp::Sum, &mut v)?;
+                    op.wait(&c, &mut v, &mut scratch)?;
+                } else {
+                    let mut op = crate::mpi::IAllreduce::start(&c, ReduceOp::Sum, &mut v)?;
+                    op.wait(&c, &mut v, &mut scratch)?;
+                }
+                Ok(c.clock())
+            });
+            clocks.into_iter().fold(0.0, f64::max)
+        };
+        let t_rd = time_of(false);
+        let t_rab = time_of(true);
+        assert!(
+            t_rab < t_rd * 0.7,
+            "rabenseifner {t_rab} should beat rd {t_rd} by ≥30% at this size"
+        );
+    }
+
+    #[test]
+    fn peer_failure_mid_operation_errors_and_cancels() {
+        let w = World::new(4, NetProfile::zero());
+        let out = w.run_unwrap(|c| {
+            if c.rank() == 3 {
+                c.fail_self();
+                return Ok(true);
+            }
+            while c.alive_ranks().len() != 3 {
+                std::thread::yield_now();
+            }
+            let mut v = vec![1.0f32; 8];
+            let mut scratch = vec![0.0f32; 8];
+            // Rank 3 is dead; survivors revoke on first contact so no one
+            // blocks on a peer that will never progress (same protocol as
+            // the IAllreduce test).
+            match IRabenseifner::start(&c, ReduceOp::Sum, &mut v) {
+                Err(MpiError::ProcFailed { .. }) => {
+                    c.revoke();
+                    Ok(true)
+                }
+                Err(MpiError::Revoked) => Ok(true),
+                Err(e) => Err(e.into()),
+                Ok(mut op) => match op.wait(&c, &mut v, &mut scratch) {
+                    Err(MpiError::ProcFailed { .. }) => {
+                        c.revoke();
+                        assert!(op.is_complete(), "wait error must cancel the handle");
+                        Ok(true)
+                    }
+                    Err(MpiError::Revoked) => {
+                        assert!(op.is_complete(), "wait error must cancel the handle");
+                        Ok(true)
+                    }
+                    Err(e) => Err(e.into()),
+                    Ok(()) => Ok(true),
+                },
+            }
+        });
+        assert!(out.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn mismatched_buffer_length_is_rejected() {
+        let w = World::new(2, NetProfile::zero());
+        w.run_unwrap(|c| {
+            let mut v = vec![1.0f32; 8];
+            let mut scratch = vec![0.0f32; 8];
+            let mut op = IRabenseifner::start(&c, ReduceOp::Sum, &mut v)?;
+            let mut wrong = vec![0.0f32; 4];
+            assert!(matches!(
+                op.test(&c, &mut wrong, &mut scratch),
+                Err(MpiError::Inconsistent(_))
+            ));
+            op.wait(&c, &mut v, &mut scratch)?;
+            Ok(())
+        });
+    }
+}

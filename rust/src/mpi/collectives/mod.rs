@@ -26,6 +26,15 @@
 //! allreduce of the same vector — the ring's chunk-indexed combine order
 //! is not (see `iallreduce.rs` for the full argument).
 //!
+//! [`IRabenseifner`] is its **bandwidth-optimal** sibling (reduce-scatter
+//! + allgather, `~2n` bytes per rank instead of `log₂p·n`): the same
+//! driving surface, and the same bitwise-parity guarantee — its per-chunk
+//! combine schedule reproduces the recursive-doubling butterfly tree
+//! shape exactly, so rd, Rabenseifner, and any bucketed mix of the two
+//! agree bit for bit (see `irabenseifner.rs`). The pipeline's
+//! `BucketAlg::Auto` picks between them per bucket at the alpha-beta
+//! crossover ([`crate::mpi::NetProfile::rabenseifner_crossover_bytes`]).
+//!
 //! # Shared discipline
 //!
 //! All collectives must be called by every (alive) rank of the communicator
@@ -51,6 +60,7 @@ mod barrier;
 mod bcast;
 mod gather;
 mod iallreduce;
+mod irabenseifner;
 mod reduce;
 mod scatter;
 
@@ -61,6 +71,7 @@ pub use barrier::barrier;
 pub use bcast::{bcast, bcast_into};
 pub use gather::{gather, gather_vecs};
 pub use iallreduce::IAllreduce;
+pub use irabenseifner::IRabenseifner;
 pub use reduce::reduce;
 pub use scatter::{scatter_even, scatterv};
 
@@ -154,6 +165,17 @@ impl CollectiveExt for Communicator {
     }
 }
 
+/// Largest power of two ≤ `p` — the size of the butterfly core every
+/// rd-shaped schedule runs over (the `rem = p - pof2` leftover ranks fold
+/// in through the pre/post phase). Single source of truth shared by the
+/// blocking `recursive_doubling`, the `IAllreduce`/`IRabenseifner` state
+/// machines, and the `NetProfile` closed forms/crossover — these must
+/// agree on the core size or the cost model silently diverges from the
+/// simulator.
+pub fn pof2_core(p: usize) -> usize {
+    p.next_power_of_two() >> usize::from(!p.is_power_of_two())
+}
+
 /// Contiguous chunk `[start, end)` of `n` items split as evenly as possible
 /// over `p` parts (first `n % p` parts get one extra). Shared by the ring
 /// allreduce, scatter, and the data sharder — and property-tested once.
@@ -168,6 +190,25 @@ pub fn chunk_range(n: usize, p: usize, i: usize) -> (usize, usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn pof2_core_is_largest_power_of_two_below_p() {
+        let cases = [
+            (1usize, 1usize),
+            (2, 2),
+            (3, 2),
+            (4, 4),
+            (5, 4),
+            (7, 4),
+            (8, 8),
+            (9, 8),
+            (16, 16),
+            (100, 64),
+        ];
+        for (p, want) in cases {
+            assert_eq!(pof2_core(p), want, "p={p}");
+        }
+    }
 
     #[test]
     fn chunk_ranges_partition() {

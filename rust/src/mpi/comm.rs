@@ -130,6 +130,10 @@ pub enum CollKind {
     /// Nonblocking allreduce — its own kind so an in-flight pipelined sync
     /// can never collide with a blocking collective issued the same step.
     Iallreduce = 11,
+    /// Nonblocking Rabenseifner (reduce-scatter + allgather) allreduce —
+    /// distinct from `Iallreduce` so mixed-algorithm bucket pipelines
+    /// (`BucketAlg::Auto`) keep per-operation tag uniqueness by kind too.
+    Irabenseifner = 12,
 }
 
 const COLL_BIT: Tag = 1 << 31;

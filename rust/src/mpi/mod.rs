@@ -80,8 +80,8 @@ pub mod world;
 pub use channel::{Envelope, Mailbox, Tag, ANY_SOURCE};
 pub use collectives::{
     allgather, allgather_into, allreduce, allreduce_with, alltoall, barrier, bcast,
-    bcast_into, chunk_range, gather, gather_vecs, scatter_even, scatterv,
-    AllreduceAlgorithm, CollectiveExt, IAllreduce,
+    bcast_into, chunk_range, gather, gather_vecs, pof2_core, scatter_even, scatterv,
+    AllreduceAlgorithm, CollectiveExt, IAllreduce, IRabenseifner,
 };
 pub use comm::{CommStats, Communicator, WorldState};
 pub use datatype::{Buffer, Datatype, Reducible, ReduceOp};

@@ -107,6 +107,87 @@ impl NetProfile {
         2.0 * self.send_overhead_s + self.p2p_time(req_bytes) + self.p2p_time(resp_bytes)
     }
 
+    /// Closed-form alpha-beta time of one **recursive-doubling** allreduce
+    /// of `nbytes` over `p` ranks (inter-node, flat topology): `log₂pof2`
+    /// serial rounds each moving the full vector, plus the fold-in
+    /// pre/post exchange when `p` is not a power of two. This is exactly
+    /// the round structure of [`IAllreduce`](crate::mpi::IAllreduce), so
+    /// the simulated virtual clock tracks this formula (property-tested
+    /// below) — the number the pipeline's size-adaptive bucket algorithm
+    /// compares against [`Self::rabenseifner_allreduce_time`].
+    pub fn rd_allreduce_time(&self, p: usize, nbytes: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let pof2 = crate::mpi::collectives::pof2_core(p);
+        let hop = |bytes: f64| {
+            self.send_overhead_s + self.alpha_s + bytes / self.beta_bytes_per_s
+        };
+        let n = nbytes as f64;
+        let mut t = pof2.trailing_zeros() as f64 * hop(n);
+        if p != pof2 {
+            t += 2.0 * hop(n); // fold-in pre-step + hand-back post-step
+        }
+        t
+    }
+
+    /// Closed-form alpha-beta time of one **Rabenseifner** (reduce-scatter
+    /// + allgather) allreduce of `nbytes` over `p` ranks: `2·log₂pof2`
+    /// serial rounds with halving message sizes (`n/2, n/4, …, n/pof2`,
+    /// then back up), totalling `~2n·(pof2-1)/pof2` bytes per rank — the
+    /// bandwidth-optimal schedule of
+    /// [`IRabenseifner`](crate::mpi::IRabenseifner). Same fold-in pre/post
+    /// surcharge for non-power-of-two `p` as recursive doubling.
+    pub fn rabenseifner_allreduce_time(&self, p: usize, nbytes: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let pof2 = crate::mpi::collectives::pof2_core(p);
+        let hop = |bytes: f64| {
+            self.send_overhead_s + self.alpha_s + bytes / self.beta_bytes_per_s
+        };
+        let n = nbytes as f64;
+        let mut size = n / 2.0;
+        let mut core = 0.0;
+        for _ in 0..pof2.trailing_zeros() {
+            core += hop(size);
+            size /= 2.0;
+        }
+        let mut t = 2.0 * core; // reduce-scatter down + allgather back up
+        if p != pof2 {
+            t += 2.0 * hop(n);
+        }
+        t
+    }
+
+    /// Smallest message size (bytes) at which the Rabenseifner schedule's
+    /// modelled time beats recursive doubling at world size `p` — the
+    /// size-adaptive crossover `BucketAlg::Auto` uses when no explicit
+    /// threshold is configured. `None` when recursive doubling never
+    /// loses: `p ≤ 3` (a 2-rank core moves the same bytes either way but
+    /// Rabenseifner pays twice the latency) or a free-bandwidth profile
+    /// (`beta = ∞`, e.g. [`NetProfile::zero`]).
+    ///
+    /// Derivation: the fold-in pre/post costs are identical, so only the
+    /// cores differ — rd spends `log₂pof2 · n/β` on bandwidth and
+    /// `log₂pof2` latencies; Rabenseifner `2n(pof2-1)/(pof2·β)` and
+    /// `2·log₂pof2` latencies. Equating gives
+    /// `n* = log₂pof2 · (α+o) · β / (log₂pof2 − 2(pof2−1)/pof2)`.
+    pub fn rabenseifner_crossover_bytes(&self, p: usize) -> Option<usize> {
+        if p <= 1 {
+            return None;
+        }
+        let pof2 = crate::mpi::collectives::pof2_core(p);
+        let logp = pof2.trailing_zeros() as f64;
+        let gain_per_byte =
+            (logp - 2.0 * (pof2 as f64 - 1.0) / pof2 as f64) / self.beta_bytes_per_s;
+        if gain_per_byte <= 0.0 || !gain_per_byte.is_finite() {
+            return None;
+        }
+        let lat_penalty = logp * (self.alpha_s + self.send_overhead_s);
+        Some((lat_penalty / gain_per_byte).ceil() as usize)
+    }
+
     pub fn same_node(&self, a: usize, b: usize) -> bool {
         if self.cores_per_node == usize::MAX {
             return true; // flat profile: uniform cost either way
@@ -289,8 +370,122 @@ mod tests {
     }
 
     #[test]
+    fn rabenseifner_beats_rd_for_large_buckets_at_p8() {
+        // The ISSUE-4 acceptance number: ≥30% modelled win for a 64 MiB
+        // bucket at p=8 on the paper-class fabric.
+        let prof = NetProfile::infiniband_fdr();
+        let n = 64 << 20;
+        let rd = prof.rd_allreduce_time(8, n);
+        let rab = prof.rabenseifner_allreduce_time(8, n);
+        assert!(
+            rab < rd * 0.7,
+            "rabenseifner {rab} must beat rd {rd} by ≥30% at 64 MiB, p=8"
+        );
+        // Tiny messages go the other way: rd pays half the latencies.
+        let rd_s = prof.rd_allreduce_time(8, 64);
+        let rab_s = prof.rabenseifner_allreduce_time(8, 64);
+        assert!(rd_s < rab_s, "rd {rd_s} should win at 64 B vs {rab_s}");
+        // p=1 is free either way.
+        assert_eq!(prof.rd_allreduce_time(1, n), 0.0);
+        assert_eq!(prof.rabenseifner_allreduce_time(1, n), 0.0);
+    }
+
+    #[test]
+    fn crossover_separates_the_regimes() {
+        let prof = NetProfile::infiniband_fdr();
+        // No win possible with a 2-rank core (p ≤ 3) or free bandwidth.
+        assert_eq!(prof.rabenseifner_crossover_bytes(1), None);
+        assert_eq!(prof.rabenseifner_crossover_bytes(2), None);
+        assert_eq!(prof.rabenseifner_crossover_bytes(3), None);
+        assert_eq!(NetProfile::zero().rabenseifner_crossover_bytes(8), None);
+        // p ≥ 4: a finite threshold that actually separates the regimes.
+        for p in [4usize, 8, 16] {
+            let x = prof.rabenseifner_crossover_bytes(p).unwrap();
+            assert!(x > 0);
+            assert!(
+                prof.rd_allreduce_time(p, x / 2) <= prof.rabenseifner_allreduce_time(p, x / 2),
+                "below the crossover rd must not lose (p={p})"
+            );
+            assert!(
+                prof.rabenseifner_allreduce_time(p, 2 * x) < prof.rd_allreduce_time(p, 2 * x),
+                "above the crossover rabenseifner must win (p={p})"
+            );
+        }
+        // IB at p=8 lands in the tens-of-KiB range (sanity anchor for the
+        // README table; exact value moves with the profile constants).
+        let x8 = prof.rabenseifner_crossover_bytes(8).unwrap();
+        assert!((4 * 1024..256 * 1024).contains(&x8), "{x8}");
+    }
+
+    #[test]
+    fn closed_forms_track_the_simulated_clocks() {
+        // The simulator *is* the model: driving the real nonblocking state
+        // machines over the alpha-beta transport cross-checks the closed
+        // forms. At a power of two every round strictly serializes (each
+        // send is posted only after the previous round's recv), so the
+        // forms are *exact*; at non-pof2 the fold-in pre-phase skews the
+        // ranks and core-resident ranks run ahead, hiding part of a round
+        // — the closed form is then a (tight-ish) upper bound, which is
+        // the conservative direction for the Auto crossover.
+        use crate::mpi::datatype::ReduceOp;
+        use crate::mpi::world::World;
+        use crate::mpi::{IAllreduce, IRabenseifner};
+        let n_elems = 250_000usize; // 1 MB of f32 — bandwidth-dominated
+        let sim_of = |p: usize, rab: bool| {
+            let w = World::new(p, NetProfile::infiniband_fdr());
+            let clocks = w.run_unwrap(move |c| {
+                let mut v = vec![1.0f32; n_elems];
+                let mut scratch = vec![0.0f32; n_elems];
+                if rab {
+                    let mut op = IRabenseifner::start(&c, ReduceOp::Sum, &mut v)?;
+                    op.wait(&c, &mut v, &mut scratch)?;
+                } else {
+                    let mut op = IAllreduce::start(&c, ReduceOp::Sum, &mut v)?;
+                    op.wait(&c, &mut v, &mut scratch)?;
+                }
+                Ok(c.clock())
+            });
+            clocks.into_iter().fold(0.0, f64::max)
+        };
+        let prof = NetProfile::infiniband_fdr();
+        let model_of = |p: usize, rab: bool| {
+            if rab {
+                prof.rabenseifner_allreduce_time(p, n_elems * 4)
+            } else {
+                prof.rd_allreduce_time(p, n_elems * 4)
+            }
+        };
+        for rab in [false, true] {
+            // pof2: exact (1% slack for chunk raggedness only).
+            let (sim, model) = (sim_of(8, rab), model_of(8, rab));
+            let err = (sim - model).abs() / model;
+            assert!(
+                err < 0.01,
+                "p=8 rab={rab}: sim {sim} vs closed form {model} ({err:.4} off)"
+            );
+            // non-pof2: bounded above by the form, below by the core-only
+            // rounds (pre-phase overlap can hide at most the skew).
+            let (sim6, model6) = (sim_of(6, rab), model_of(6, rab));
+            assert!(
+                sim6 <= model6 * 1.01,
+                "p=6 rab={rab}: sim {sim6} exceeds the closed-form bound {model6}"
+            );
+            assert!(
+                sim6 >= model6 * 0.5,
+                "p=6 rab={rab}: sim {sim6} implausibly below the model {model6}"
+            );
+        }
+        // And the emergent clocks agree with the crossover's direction at
+        // this (large) size: Rabenseifner wins at p=8.
+        assert!(sim_of(8, true) < sim_of(8, false));
+    }
+
+    #[test]
     fn profiles_resolve_by_name() {
-        for n in ["ib", "socket", "bgq", "shm", "zero", "infiniband-hw", "cluster", "socket-cluster"] {
+        let names = [
+            "ib", "socket", "bgq", "shm", "zero", "infiniband-hw", "cluster", "socket-cluster",
+        ];
+        for n in names {
             assert!(NetProfile::by_name(n).is_some(), "{n}");
         }
         assert!(NetProfile::by_name("nope").is_none());

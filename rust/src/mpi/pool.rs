@@ -396,6 +396,120 @@ mod tests {
     }
 
     #[test]
+    fn prop_trim_to_keep_bound_holds_per_shelf_across_stripes() {
+        // ISSUE 4 satellite: under striping, `trim_to(keep)` must (a)
+        // free *exactly* the per-shelf excess over `keep`, summed over
+        // every `(dtype, bucket)` shelf wherever its stripe lives — no
+        // shelf over-trimmed, none missed, none double-counted across
+        // stripes — and (b) leave every shelf still serving exactly
+        // `min(shelved, keep)` pool hits. Dtypes and size classes are
+        // chosen so the keys provably spread over multiple stripes
+        // (`stripes_spread_hot_keys_and_stay_consistent` pins that).
+        use crate::util::quickprop::{run_prop, Config};
+
+        // One release/acquire driver per dtype so the loop below stays
+        // monomorphic per class.
+        fn release_n<T: crate::mpi::datatype::Datatype>(
+            pool: &BufferPool,
+            count: usize,
+            len: usize,
+        ) {
+            for _ in 0..count {
+                pool.release_vec(Vec::<T>::with_capacity(len));
+            }
+        }
+        fn acquire_hold<T: crate::mpi::datatype::Datatype>(
+            pool: &BufferPool,
+            count: usize,
+            len: usize,
+        ) {
+            // Hold all acquisitions until the end of the class so a hit
+            // cannot be re-served (dropping an acquired Vec does not
+            // return it to the pool).
+            let held: Vec<Vec<T>> = (0..count).map(|_| pool.acquire::<T>(len)).collect();
+            assert!(held.iter().all(|v| v.capacity() >= len));
+        }
+
+        run_prop(
+            "trim_to keep-bound per (dtype,bucket) shelf",
+            Config { cases: 60, seed: 31 },
+            |rng, _| {
+                let pool = BufferPool::new();
+                // Power-of-two lengths: request and capacity buckets
+                // agree, so a class is exactly one shelf.
+                let lens = [8usize, 64, 512, 4096];
+                let mut counts = Vec::new(); // (dtype_id, len, released)
+                for &len in &lens {
+                    for dtype in 0..3u8 {
+                        // May exceed MAX_PER_SHELF: the shelf bound drops
+                        // the overflow at release time already.
+                        let cnt = rng.below(MAX_PER_SHELF + 14);
+                        match dtype {
+                            0 => release_n::<f32>(&pool, cnt, len),
+                            1 => release_n::<f64>(&pool, cnt, len),
+                            _ => release_n::<i32>(&pool, cnt, len),
+                        }
+                        counts.push((dtype, len, cnt));
+                    }
+                }
+                // Release-time bookkeeping: shelved = min(cnt, bound).
+                let shelved: Vec<usize> = counts
+                    .iter()
+                    .map(|&(_, _, cnt)| cnt.min(MAX_PER_SHELF))
+                    .collect();
+                let st = pool.stats();
+                let want_recycled: usize = shelved.iter().sum();
+                let want_dropped: usize =
+                    counts.iter().map(|&(_, _, c)| c).sum::<usize>() - want_recycled;
+                if st.recycled != want_recycled as u64 || st.dropped != want_dropped as u64 {
+                    return Err(format!(
+                        "release bookkeeping off: {st:?}, want recycled {want_recycled} \
+                         dropped {want_dropped}"
+                    ));
+                }
+                // Trim: freed must equal the per-shelf excess, summed.
+                let keep = rng.below(MAX_PER_SHELF + 9);
+                let want_freed: usize =
+                    shelved.iter().map(|&s| s.saturating_sub(keep)).sum();
+                let freed = pool.trim_to(keep);
+                if freed != want_freed {
+                    return Err(format!(
+                        "trim_to({keep}) freed {freed}, want {want_freed} (counts {counts:?})"
+                    ));
+                }
+                if pool.stats().trimmed != want_freed as u64 {
+                    return Err("stats.trimmed out of sync with return value".into());
+                }
+                // Every shelf still serves exactly min(shelved, keep)
+                // hits — the keep bound held per shelf, and no stripe
+                // leaked buffers into another's shelves.
+                let before = pool.stats();
+                let mut want_hits = 0usize;
+                for (i, &(dtype, len, _)) in counts.iter().enumerate() {
+                    let kept = shelved[i].min(keep);
+                    want_hits += kept;
+                    match dtype {
+                        0 => acquire_hold::<f32>(&pool, kept + 1, len),
+                        1 => acquire_hold::<f64>(&pool, kept + 1, len),
+                        _ => acquire_hold::<i32>(&pool, kept + 1, len),
+                    }
+                }
+                let after = pool.stats();
+                let hits = (after.hits - before.hits) as usize;
+                let misses = (after.misses - before.misses) as usize;
+                if hits != want_hits || misses != counts.len() {
+                    return Err(format!(
+                        "post-trim supply off: {hits} hits (want {want_hits}), \
+                         {misses} misses (want {}) at keep={keep}",
+                        counts.len()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn zero_len_requests_skip_the_pool() {
         let pool = BufferPool::new();
         let v = pool.acquire::<u64>(0);

@@ -36,7 +36,7 @@ use super::{Consistency, KIND_DONE, KIND_PULL, KIND_PUSH, KIND_SYNC_PULL, REQ_HE
 use super::{TAG_PS_REQ, TAG_PS_RESP, TAG_PS_SEED};
 use crate::mpi::comm::Communicator;
 use crate::mpi::ulfm::FaultPlan;
-use crate::mpi::{Datatype, MpiError, MpiResult};
+use crate::mpi::{pof2_core, Datatype, MpiError, MpiResult};
 
 /// How a serve loop ended (errors propagate separately for ULFM recovery).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -87,7 +87,7 @@ pub fn rd_order_sum(parts: &mut [Vec<f32>], out: &mut [f32]) {
     let w = parts.len();
     assert!(w > 0, "rd_order_sum needs at least one contribution");
     debug_assert!(parts.iter().all(|p| p.len() == out.len()));
-    let pof2 = w.next_power_of_two() >> usize::from(!w.is_power_of_two());
+    let pof2 = pof2_core(w);
     let rem = w - pof2;
     // parts index holding (virtual) rank `nr`'s accumulator.
     let slot = |nr: usize| if nr < rem { 2 * nr + 1 } else { nr + rem };

@@ -1,8 +1,12 @@
-//! Acceptance pin (ISSUE 2): the **pipelined** steady-state sync path —
-//! `SyncStrategy::Bucketed` + `SyncMode::GradientAverage`, one nonblocking
-//! allreduce per gradient bucket per step — performs **exactly zero** heap
-//! allocations after warmup, just like the flat path it replaces
-//! (`alloc_free_sync.rs`).
+//! Acceptance pin (ISSUE 2, extended by ISSUE 4): the **pipelined**
+//! steady-state sync path — `SyncStrategy::Bucketed` +
+//! `SyncMode::GradientAverage`, one nonblocking allreduce per gradient
+//! bucket per step — performs **exactly zero** heap allocations after
+//! warmup, just like the flat path it replaces (`alloc_free_sync.rs`).
+//! The tracked window drives both bucket algorithms (recursive doubling
+//! and Rabenseifner, under the priority drain), so the new reduce-scatter
+//! + allgather path is held to the same bar: `IRabenseifner::start`
+//! computes its windows arithmetically, owning no schedule storage.
 //!
 //! Method: identical to the flat-path pin — counting `#[global_allocator]`
 //! with a process-wide tracking flag, pool shelves preloaded past peak
@@ -18,7 +22,9 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
-use dtf::coordinator::{ExecMode, PipelineEngine, Replica, StepOutcome, SyncMode};
+use dtf::coordinator::{
+    BucketAlg, DrainOrder, ExecMode, PipelineEngine, Replica, StepOutcome, SyncMode,
+};
 use dtf::model::ArchSpec;
 use dtf::mpi::{barrier, NetProfile, World};
 use dtf::runtime::Manifest;
@@ -87,9 +93,14 @@ fn steady_state_pipelined_sync_performs_zero_allocations() {
             0.1,
             7,
         )?;
-        // Engine + plan + scratch are built once, before tracking.
+        // Engines + plans + scratch are built once, before tracking: the
+        // PR-2 rd path and the ISSUE-4 Rabenseifner path (priority drain)
+        // share the tracked window.
         let mut engine = PipelineEngine::for_params(&replica.params, BUCKET_BYTES);
         assert_eq!(engine.plan().n_buckets(), 3, "fixture drifted");
+        let mut engine_rab = PipelineEngine::for_params(&replica.params, BUCKET_BYTES)
+            .with_alg(BucketAlg::Rabenseifner)
+            .with_drain(DrainOrder::Priority);
         let outcome = StepOutcome::Grads { loss: 1.0 };
 
         // Deterministic supply: stock every f32 shelf a bucket-sized
@@ -117,9 +128,11 @@ fn steady_state_pipelined_sync_performs_zero_allocations() {
         }
 
         // Warmup: grows replica.sync_scratch once, touches every shelf
-        // key and queue capacity the steady state will use.
+        // key and queue capacity the steady state will use — for both
+        // bucket algorithms.
         for _ in 0..8 {
             engine.sync_step(&c, &mut replica, &outcome, SyncMode::GradientAverage, 0.0)?;
+            engine_rab.sync_step(&c, &mut replica, &outcome, SyncMode::GradientAverage, 0.0)?;
         }
 
         barrier(&c)?;
@@ -131,6 +144,7 @@ fn steady_state_pipelined_sync_performs_zero_allocations() {
         // ---- the tracked window: the exact per-step pipelined path ----
         for _ in 0..25 {
             engine.sync_step(&c, &mut replica, &outcome, SyncMode::GradientAverage, 0.0)?;
+            engine_rab.sync_step(&c, &mut replica, &outcome, SyncMode::GradientAverage, 0.0)?;
         }
 
         barrier(&c)?;

@@ -8,7 +8,8 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use dtf::coordinator::{
-    run_training, ExecMode, SyncMode, SyncStrategy, TrainConfig, TrainReport,
+    run_training, BucketAlg, DrainOrder, ExecMode, SyncMode, SyncStrategy, TrainConfig,
+    TrainReport,
 };
 use dtf::model::ArchSpec;
 use dtf::mpi::ulfm::FaultPlan;
@@ -98,6 +99,71 @@ fn bucketed_matches_flat_bitwise_end_to_end() {
     // Bucket accounting: every step synced the full plan.
     assert!(bucketed.per_rank.iter().all(|r| r.buckets_synced > 0));
     assert!(flat.per_rank.iter().all(|r| r.buckets_synced == 0));
+}
+
+#[test]
+fn bucketed_auto_and_rabenseifner_match_flat_bitwise_end_to_end() {
+    // ISSUE 4 acceptance: `Bucketed + Auto` == `Flat` digests end-to-end.
+    // At p=4 on InfiniBand the 64 KiB-capped plan straddles the derived
+    // alpha-beta crossover (~48 KiB), so Auto{None} genuinely mixes
+    // Rabenseifner (w0's 64 KiB chunks) with rd (the small tail buckets)
+    // inside every step; the pure-Rabenseifner arm covers the other
+    // extreme.
+    let flat = run(sim_cfg(SyncStrategy::Flat), 4);
+    for alg in [
+        BucketAlg::Auto {
+            threshold_bytes: None,
+        },
+        BucketAlg::Auto {
+            threshold_bytes: Some(48 * 1024),
+        },
+        BucketAlg::Rabenseifner,
+    ] {
+        let bucketed = run(
+            sim_cfg(SyncStrategy::Bucketed {
+                max_bytes: 64 * 1024,
+            })
+            .with_bucket_alg(alg),
+            4,
+        );
+        assert!(bucketed.replicas_bitwise_identical(), "{alg:?}");
+        assert_eq!(
+            flat.per_rank[0].params_digest, bucketed.per_rank[0].params_digest,
+            "{alg:?} diverged from Flat"
+        );
+        assert!(bucketed.per_rank.iter().all(|r| r.buckets_synced > 0));
+    }
+}
+
+#[test]
+fn priority_drain_reduces_front_layer_apply_latency() {
+    // ISSUE 4 acceptance: the priority drain applies the front-most
+    // layer's bucket sooner than launch-order drain (the
+    // `sync_exposed_s`-style per-rank metric `front_apply_s`), at
+    // identical final bits.
+    let base = || {
+        sim_cfg(SyncStrategy::Bucketed {
+            max_bytes: 32 * 1024,
+        })
+    };
+    let launch = run(base().with_drain(DrainOrder::Launch), 8);
+    let priority = run(base().with_drain(DrainOrder::Priority), 8);
+    let (fl, fp) = (launch.front_apply_mean_s(), priority.front_apply_mean_s());
+    assert!(fl > 0.0, "launch drain must expose front-layer latency");
+    assert!(
+        fp < fl * 0.7,
+        "priority drain should cut ≥30% of the front-layer apply latency: \
+         priority {fp} vs launch {fl}"
+    );
+    // Drain order is a latency policy, not a numeric one: same bits.
+    assert_eq!(
+        launch.per_rank[0].params_digest,
+        priority.per_rank[0].params_digest
+    );
+    assert!(priority.replicas_bitwise_identical());
+    // Flat runs report no front-layer metric at all.
+    let flat = run(sim_cfg(SyncStrategy::Flat), 8);
+    assert_eq!(flat.front_apply_mean_s(), 0.0);
 }
 
 #[test]

@@ -1,27 +1,35 @@
-//! Parity pins for the nonblocking/bucketed sync stack (ISSUE 2).
+//! Parity pins for the nonblocking/bucketed sync stack (ISSUE 2, extended
+//! by ISSUE 4 with the Rabenseifner schedule).
 //!
-//! Three layers of guarantee, property-tested with the in-tree quickprop
+//! Four layers of guarantee, property-tested with the in-tree quickprop
 //! harness (seeded, reproducible):
 //!
 //! 1. `IAllreduce` (nonblocking recursive doubling) is **bitwise**
 //!    identical to the blocking `RecursiveDoubling` path *and* to the
 //!    frozen pre-pool reference in `mpi::compat`, across ranks, dtypes,
 //!    and sizes.
-//! 2. The bucketed pipeline (`PipelineEngine::allreduce_overlapped`) is
+//! 2. `IRabenseifner` (nonblocking reduce-scatter + allgather) is
+//!    **bitwise** identical to both of the above, across ranks (power-of-
+//!    two and not), dtypes, and sizes: its per-chunk combine schedule is
+//!    the recursive-doubling butterfly tree shape, pre-sorted by rank and
+//!    independent of chunk position or message arrival — so the
+//!    bandwidth-optimal schedule costs no reproducibility.
+//! 3. The bucketed pipeline (`PipelineEngine::allreduce_overlapped`) is
 //!    bitwise identical to a flat `RecursiveDoubling` allreduce of the
-//!    same vector, across random tensor layouts, bucket caps, and world
-//!    sizes — the property `SyncStrategy::Bucketed` leans on. (The ring
-//!    cannot give this: its combine order is chunk-indexed, so bucketing
-//!    would change the rounding. Recursive doubling's schedule is
-//!    position-independent.)
-//! 3. `BucketPlan` always partitions the vector: buckets tile `[0, n)`,
+//!    same vector, across random tensor layouts, bucket caps, world
+//!    sizes, **bucket algorithms (rd / Rabenseifner / size-adaptive Auto
+//!    mixes), and drain orders** — the property `SyncStrategy::Bucketed`
+//!    leans on. (The ring cannot give this: its combine order is
+//!    chunk-indexed, so bucketing would change the rounding.)
+//! 4. `BucketPlan` always partitions the vector: buckets tile `[0, n)`,
 //!    respect the byte cap (splitting oversized tensors via
 //!    `chunk_range`), and appear in back-to-front launch order.
 
-use dtf::coordinator::{BucketPlan, PipelineEngine};
+use dtf::coordinator::{BucketAlg, BucketPlan, DrainOrder, PipelineEngine};
 use dtf::mpi::compat::ref_allreduce;
 use dtf::mpi::{
-    allreduce_with, AllreduceAlgorithm, IAllreduce, NetProfile, ReduceOp, World,
+    allreduce_with, AllreduceAlgorithm, IAllreduce, IRabenseifner, NetProfile, ReduceOp,
+    World,
 };
 use dtf::util::quickprop::{gen, run_prop, Config};
 
@@ -124,6 +132,188 @@ fn prop_iallreduce_exact_for_integer_dtypes() {
                         return Err(format!(
                             "p={p} n={n} rank={r} i={i}: ({}, {}, {}) vs ({sum}, {mx}, {mn})",
                             vi[i], vu[i], vd[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_irabenseifner_bitwise_matches_rd_and_iallreduce() {
+    // The ISSUE 4 tentpole parity pin: the bandwidth-optimal nonblocking
+    // schedule agrees bit for bit with blocking recursive doubling (and
+    // with the nonblocking rd it shares the pipeline with), across world
+    // sizes including every acceptance p ∈ {2,3,4,8} and beyond.
+    run_prop(
+        "irabenseifner == blocking rd == iallreduce (f32)",
+        Config { cases: 30, seed: 40404 },
+        |rng, case| {
+            // First cases sweep the acceptance set deterministically,
+            // then randomize.
+            let p = match case {
+                0..=3 => [2usize, 3, 4, 8][case],
+                _ => gen::usize_in(rng, 1, 12),
+            };
+            let n = gen::usize_in(rng, 1, 500);
+            let op = [ReduceOp::Sum, ReduceOp::Max, ReduceOp::Min][rng.below(3)];
+            let inputs: Vec<Vec<f32>> =
+                (0..p).map(|_| gen::f32_vec(rng, n, 8.0)).collect();
+            let inputs2 = inputs.clone();
+            let w = World::new(p, NetProfile::zero());
+            let out = w.run_unwrap(move |c| {
+                let mut scratch = vec![0.0f32; n];
+                let mut rab = inputs2[c.rank()].clone();
+                let mut oph = IRabenseifner::start(&c, op, &mut rab)?;
+                oph.wait(&c, &mut rab, &mut scratch)?;
+                let mut nb = inputs2[c.rank()].clone();
+                let mut oph = IAllreduce::start(&c, op, &mut nb)?;
+                oph.wait(&c, &mut nb, &mut scratch)?;
+                let mut blocking = inputs2[c.rank()].clone();
+                allreduce_with(
+                    &c,
+                    AllreduceAlgorithm::RecursiveDoubling,
+                    op,
+                    &mut blocking,
+                )?;
+                Ok((rab, nb, blocking))
+            });
+            for (r, (rab, nb, blocking)) in out.iter().enumerate() {
+                for i in 0..n {
+                    if rab[i].to_bits() != blocking[i].to_bits()
+                        || rab[i].to_bits() != nb[i].to_bits()
+                    {
+                        return Err(format!(
+                            "p={p} op={op:?} n={n} rank={r} i={i}: \
+                             rabenseifner {} vs blocking {} vs iallreduce {}",
+                            rab[i], blocking[i], nb[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_irabenseifner_exact_for_integer_and_f64_dtypes() {
+    run_prop(
+        "irabenseifner integer/f64 dtypes exact",
+        Config { cases: 15, seed: 88 },
+        |rng, _| {
+            let p = gen::usize_in(rng, 2, 9);
+            let n = gen::usize_in(rng, 1, 200);
+            let base: Vec<i64> = (0..p * n)
+                .map(|_| rng.below(1000) as i64 - 500)
+                .collect();
+            let base2 = base.clone();
+            let w = World::new(p, NetProfile::zero());
+            let out = w.run_unwrap(move |c| {
+                let r = c.rank();
+                let mut vi: Vec<i32> =
+                    base2[r * n..(r + 1) * n].iter().map(|&x| x as i32).collect();
+                let mut si = vec![0i32; n];
+                let mut op = IRabenseifner::start(&c, ReduceOp::Sum, &mut vi)?;
+                op.wait(&c, &mut vi, &mut si)?;
+
+                let mut vu: Vec<u64> = base2[r * n..(r + 1) * n]
+                    .iter()
+                    .map(|&x| (x + 500) as u64)
+                    .collect();
+                let mut su = vec![0u64; n];
+                let mut op = IRabenseifner::start(&c, ReduceOp::Max, &mut vu)?;
+                op.wait(&c, &mut vu, &mut su)?;
+
+                let mut vd: Vec<f64> =
+                    base2[r * n..(r + 1) * n].iter().map(|&x| x as f64).collect();
+                let mut sd = vec![0.0f64; n];
+                let mut op = IRabenseifner::start(&c, ReduceOp::Min, &mut vd)?;
+                op.wait(&c, &mut vd, &mut sd)?;
+                Ok((vi, vu, vd))
+            });
+            for (r, (vi, vu, vd)) in out.iter().enumerate() {
+                for i in 0..n {
+                    let col = (0..p).map(|q| base[q * n + i]);
+                    let sum: i64 = col.clone().sum();
+                    let mx = col.clone().map(|x| (x + 500) as u64).max().unwrap();
+                    let mn = col.clone().map(|x| x as f64).fold(f64::INFINITY, f64::min);
+                    if i64::from(vi[i]) != sum || vu[i] != mx || vd[i] != mn {
+                        return Err(format!(
+                            "p={p} n={n} rank={r} i={i}: ({}, {}, {}) vs ({sum}, {mx}, {mn})",
+                            vi[i], vu[i], vd[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bucketed_any_alg_and_drain_bitwise_matches_flat_rd() {
+    // Layer-3 parity across the new axes: the bucket algorithm (rd /
+    // Rabenseifner / Auto with a random threshold, so cases mix both
+    // inside one step) and the drain order must not change a single bit
+    // of the result.
+    run_prop(
+        "bucketed {rd,rab,auto} x {launch,priority} == flat rd",
+        Config { cases: 25, seed: 171717 },
+        |rng, _| {
+            let p = gen::usize_in(rng, 1, 9);
+            let n_tensors = gen::usize_in(rng, 1, 8);
+            let sizes: Vec<usize> =
+                (0..n_tensors).map(|_| gen::usize_in(rng, 1, 300)).collect();
+            let n: usize = sizes.iter().sum();
+            let max_bytes = gen::usize_in(rng, 4, n * 8);
+            let alg = match rng.below(3) {
+                0 => BucketAlg::Rd,
+                1 => BucketAlg::Rabenseifner,
+                _ => BucketAlg::Auto {
+                    threshold_bytes: Some(gen::usize_in(rng, 4, n * 4)),
+                },
+            };
+            let drain = if rng.below(2) == 0 {
+                DrainOrder::Launch
+            } else {
+                DrainOrder::Priority
+            };
+            let inputs: Vec<Vec<f32>> =
+                (0..p).map(|_| gen::f32_vec(rng, n, 5.0)).collect();
+            let inputs2 = inputs.clone();
+            let sizes2 = sizes.clone();
+            let w = World::new(p, NetProfile::zero());
+            let out = w.run_unwrap(move |c| {
+                let mut ranges = Vec::new();
+                let mut off = 0usize;
+                for &s in &sizes2 {
+                    ranges.push(off..off + s);
+                    off += s;
+                }
+                let mut eng = PipelineEngine::new(BucketPlan::build(&ranges, max_bytes))
+                    .with_alg(alg)
+                    .with_drain(drain);
+                let mut piped = inputs2[c.rank()].clone();
+                eng.allreduce_overlapped(&c, &mut piped, 1e-3)?;
+                let mut flat = inputs2[c.rank()].clone();
+                allreduce_with(
+                    &c,
+                    AllreduceAlgorithm::RecursiveDoubling,
+                    ReduceOp::Sum,
+                    &mut flat,
+                )?;
+                Ok((piped, flat))
+            });
+            for (r, (piped, flat)) in out.iter().enumerate() {
+                for i in 0..n {
+                    if piped[i].to_bits() != flat[i].to_bits() {
+                        return Err(format!(
+                            "p={p} sizes={sizes:?} cap={max_bytes}B alg={alg:?} \
+                             drain={drain:?} rank={r} i={i}: piped {} vs flat {}",
+                            piped[i], flat[i]
                         ));
                     }
                 }
