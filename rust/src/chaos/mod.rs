@@ -1,0 +1,324 @@
+//! Seeded chaos engine (ISSUE 6 tentpole): randomized-but-reproducible
+//! fault schedules for the robustness property tests.
+//!
+//! [`FaultPlan`] is a hand-written list of kills; a [`ChaosPlan`]
+//! *generates* one from a seed — rank kills on both the step axis
+//! (`FaultPlan`) and the virtual-clock axis ([`ChaosConfig::clock_kills`]),
+//! a straggler, and a message-delay stretch — under structural safety
+//! constraints (never kill rank 0 or a protected rank, always keep at
+//! least two ranks alive). Because generation is a pure function of the
+//! seed, a CI failure reproduces from one integer.
+//!
+//! When a seeded schedule *does* break an invariant, [`shrink_search`]
+//! greedily minimizes it: each [`ChaosPlan::shrink`] candidate removes one
+//! ingredient (a kill, the straggler, the delay), and the search keeps
+//! shrinking as long as some candidate still fails. The reported
+//! counterexample is locally minimal — removing any single remaining
+//! ingredient makes the failure disappear.
+
+use crate::coordinator::config::{ChaosConfig, TrainConfig};
+use crate::mpi::ulfm::FaultPlan;
+use crate::util::rng::Rng;
+
+/// One generated fault schedule. All fields are plain data so plans can be
+/// compared, printed in failure messages, and shrunk structurally.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosPlan {
+    /// Seed the plan was generated from (also seeds the delivery session
+    /// when the plan is applied, so drain decisions are reproducible too).
+    pub seed: u64,
+    /// Step-axis kills `(step, world_rank)` — become the `FaultPlan`.
+    pub step_kills: Vec<(usize, usize)>,
+    /// Clock-axis kills `(vtime_s, world_rank)` — become
+    /// `ChaosConfig::clock_kills`.
+    pub clock_kills: Vec<(f64, usize)>,
+    /// At most one straggler `(world_rank, multiplier > 1)`.
+    pub straggler: Option<(usize, f64)>,
+    /// Message-transit stretch bound for the delivery session.
+    pub delay_max: f64,
+}
+
+impl ChaosPlan {
+    /// Generate a schedule from `seed` for a `world`-rank run spanning
+    /// steps `0..max_step` and roughly `horizon_s` of virtual time.
+    ///
+    /// Structural safety (so every generated plan is *survivable* and the
+    /// property tests assert recovery, not vacuous crashes):
+    /// * ranks in `protected` are never killed (callers protect rank 0,
+    ///   and in PS mode enough servers/workers to keep both pools alive);
+    /// * at least two ranks always survive;
+    /// * a rank dies at most once across both axes.
+    pub fn generate(
+        seed: u64,
+        world: usize,
+        max_step: usize,
+        horizon_s: f64,
+        protected: &[usize],
+    ) -> ChaosPlan {
+        let mut rng = Rng::new(seed ^ 0xC4A0_5EED);
+        let killable: Vec<usize> = (0..world)
+            .filter(|r| *r != 0 && !protected.contains(r))
+            .collect();
+        // Keep ≥2 survivors; with the protected set that is usually looser.
+        let budget = killable.len().min(world.saturating_sub(2));
+        let n_kills = if budget == 0 {
+            0
+        } else {
+            // Bias toward small schedules (0..=min(2, budget), uniform).
+            rng.below(budget.min(2) + 1)
+        };
+        let mut victims = killable;
+        // Seeded choice of victims: shuffle, take the prefix.
+        let perm = rng.permutation(victims.len());
+        victims = perm.into_iter().map(|i| victims[i]).collect();
+        victims.truncate(n_kills);
+
+        let mut step_kills = Vec::new();
+        let mut clock_kills = Vec::new();
+        for &v in &victims {
+            if max_step > 0 && rng.uniform() < 0.5 {
+                step_kills.push((rng.below(max_step), v));
+            } else {
+                clock_kills.push((rng.range(0.0, horizon_s.max(1e-9)), v));
+            }
+        }
+        // Straggler on any rank (it slows, it doesn't kill), 50% of plans.
+        let straggler = if world >= 2 && rng.uniform() < 0.5 {
+            Some((rng.below(world), rng.range(1.5, 3.0)))
+        } else {
+            None
+        };
+        // Delay stretch on ~2/3 of plans.
+        let delay_max = if rng.uniform() < 2.0 / 3.0 {
+            rng.range(0.1, 1.0)
+        } else {
+            0.0
+        };
+        ChaosPlan {
+            seed,
+            step_kills,
+            clock_kills,
+            straggler,
+            delay_max,
+        }
+    }
+
+    /// Nothing left to remove — the empty schedule.
+    pub fn is_trivial(&self) -> bool {
+        self.step_kills.is_empty()
+            && self.clock_kills.is_empty()
+            && self.straggler.is_none()
+            && self.delay_max == 0.0
+    }
+
+    /// Total removable ingredients (shrink-progress measure).
+    pub fn weight(&self) -> usize {
+        self.step_kills.len()
+            + self.clock_kills.len()
+            + usize::from(self.straggler.is_some())
+            + usize::from(self.delay_max > 0.0)
+    }
+
+    /// The step-axis kills as a [`FaultPlan`].
+    pub fn to_fault_plan(&self) -> FaultPlan {
+        FaultPlan {
+            failures: self.step_kills.clone(),
+        }
+    }
+
+    /// Install the schedule on a config: fault plan, clock kills, seeded
+    /// delivery session (drain decisions + delays), straggler.
+    pub fn apply_to(&self, cfg: TrainConfig) -> TrainConfig {
+        let mut cfg = cfg;
+        cfg.fault_plan = self.to_fault_plan();
+        cfg.chaos = ChaosConfig {
+            seed: Some(self.seed),
+            delay_max: self.delay_max,
+            clock_kills: self.clock_kills.clone(),
+            record: false,
+            replay: None,
+        };
+        if let Some((rank, mult)) = self.straggler {
+            cfg.straggler = Some((rank, mult));
+        }
+        cfg
+    }
+
+    /// Same structural checks the launcher applies, callable on the plan
+    /// itself (tests assert every generated plan passes).
+    pub fn validate(&self, world: usize) -> Result<(), String> {
+        self.to_fault_plan().validate(world, None, "step")?;
+        let chaos = ChaosConfig {
+            seed: Some(self.seed),
+            delay_max: self.delay_max,
+            clock_kills: self.clock_kills.clone(),
+            ..ChaosConfig::default()
+        };
+        chaos.validate(world)?;
+        let killed = self.step_kills.len() + self.clock_kills.len();
+        if world < killed + 2 {
+            return Err(format!(
+                "plan kills {killed} of {world} ranks; at least two must survive"
+            ));
+        }
+        for &(_, r) in &self.clock_kills {
+            if self.step_kills.iter().any(|&(_, sr)| sr == r) {
+                return Err(format!("rank {r} is killed on both axes"));
+            }
+        }
+        Ok(())
+    }
+
+    /// One-step-smaller candidate plans: each drops exactly one
+    /// ingredient. Empty iff the plan [`is_trivial`](Self::is_trivial).
+    pub fn shrink(&self) -> Vec<ChaosPlan> {
+        let mut out = Vec::new();
+        for i in 0..self.step_kills.len() {
+            let mut p = self.clone();
+            p.step_kills.remove(i);
+            out.push(p);
+        }
+        for i in 0..self.clock_kills.len() {
+            let mut p = self.clone();
+            p.clock_kills.remove(i);
+            out.push(p);
+        }
+        if self.straggler.is_some() {
+            let mut p = self.clone();
+            p.straggler = None;
+            out.push(p);
+        }
+        if self.delay_max > 0.0 {
+            let mut p = self.clone();
+            p.delay_max = 0.0;
+            out.push(p);
+        }
+        out
+    }
+}
+
+/// Greedy shrink search: given a failing `plan` and a predicate that
+/// re-runs the scenario (`true` = still fails), repeatedly move to the
+/// first failing shrink candidate until none fails. Returns a locally
+/// minimal failing plan; each round strictly reduces
+/// [`ChaosPlan::weight`], so the search terminates in at most `weight`
+/// rounds (each re-running ≤ `weight` candidates).
+pub fn shrink_search(plan: ChaosPlan, mut still_fails: impl FnMut(&ChaosPlan) -> bool) -> ChaosPlan {
+    let mut current = plan;
+    'outer: loop {
+        for candidate in current.shrink() {
+            if still_fails(&candidate) {
+                current = candidate;
+                continue 'outer;
+            }
+        }
+        return current;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_pure_in_the_seed() {
+        for seed in [0u64, 1, 0xDEAD_BEEF, u64::MAX] {
+            let a = ChaosPlan::generate(seed, 8, 10, 2.0, &[6, 7]);
+            let b = ChaosPlan::generate(seed, 8, 10, 2.0, &[6, 7]);
+            assert_eq!(a, b);
+        }
+        let a = ChaosPlan::generate(1, 8, 10, 2.0, &[]);
+        let b = ChaosPlan::generate(2, 8, 10, 2.0, &[]);
+        assert!(a != b || a.is_trivial(), "distinct seeds should usually differ");
+    }
+
+    #[test]
+    fn generated_plans_respect_structural_safety() {
+        for seed in 0..200u64 {
+            for world in [2usize, 3, 4, 8] {
+                let protected = if world > 4 { vec![world - 1] } else { vec![] };
+                let plan = ChaosPlan::generate(seed, world, 6, 1.0, &protected);
+                plan.validate(world)
+                    .unwrap_or_else(|e| panic!("seed {seed} world {world}: {e}"));
+                for &(_, r) in plan.step_kills.iter().chain(&plan.clock_kills) {
+                    assert_ne!(r, 0, "rank 0 must never be killed (seed {seed})");
+                    assert!(
+                        !protected.contains(&r),
+                        "protected rank {r} killed (seed {seed})"
+                    );
+                }
+                let killed = plan.step_kills.len() + plan.clock_kills.len();
+                assert!(world - killed >= 2, "seed {seed}: {killed} kills in world {world}");
+                if let Some((r, m)) = plan.straggler {
+                    assert!(r < world && m > 1.0);
+                }
+                assert!(plan.delay_max >= 0.0 && plan.delay_max < 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn apply_to_installs_every_axis() {
+        let plan = ChaosPlan {
+            seed: 0xAB,
+            step_kills: vec![(1, 2)],
+            clock_kills: vec![(0.5, 3)],
+            straggler: Some((1, 2.0)),
+            delay_max: 0.25,
+        };
+        let cfg = plan.apply_to(TrainConfig::new("t"));
+        assert_eq!(cfg.fault_plan.failures, vec![(1, 2)]);
+        assert_eq!(cfg.chaos.seed, Some(0xAB));
+        assert_eq!(cfg.chaos.clock_kills, vec![(0.5, 3)]);
+        assert_eq!(cfg.chaos.delay_max, 0.25);
+        assert_eq!(cfg.straggler, Some((1, 2.0)));
+    }
+
+    #[test]
+    fn shrink_drops_exactly_one_ingredient_per_candidate() {
+        let plan = ChaosPlan {
+            seed: 1,
+            step_kills: vec![(0, 1), (2, 3)],
+            clock_kills: vec![(0.1, 2)],
+            straggler: Some((0, 2.0)),
+            delay_max: 0.5,
+        };
+        let cands = plan.shrink();
+        assert_eq!(cands.len(), plan.weight());
+        for c in &cands {
+            assert_eq!(c.weight(), plan.weight() - 1);
+        }
+        let trivial = ChaosPlan {
+            seed: 1,
+            step_kills: vec![],
+            clock_kills: vec![],
+            straggler: None,
+            delay_max: 0.0,
+        };
+        assert!(trivial.is_trivial());
+        assert!(trivial.shrink().is_empty());
+    }
+
+    #[test]
+    fn shrink_search_finds_a_locally_minimal_failing_plan() {
+        // Synthetic invariant: the scenario "fails" iff the plan still
+        // kills rank 3 on the step axis. Everything else is noise the
+        // search must strip away.
+        let plan = ChaosPlan {
+            seed: 9,
+            step_kills: vec![(0, 1), (2, 3)],
+            clock_kills: vec![(0.1, 2), (0.7, 4)],
+            straggler: Some((0, 2.5)),
+            delay_max: 0.9,
+        };
+        let fails =
+            |p: &ChaosPlan| p.step_kills.iter().any(|&(_, r)| r == 3);
+        assert!(fails(&plan));
+        let min = shrink_search(plan, fails);
+        assert_eq!(min.step_kills, vec![(2, 3)]);
+        assert!(min.clock_kills.is_empty());
+        assert!(min.straggler.is_none());
+        assert_eq!(min.delay_max, 0.0);
+        assert_eq!(min.weight(), 1);
+    }
+}

@@ -1,7 +1,10 @@
 //! Training configuration — every §3.3 design axis is a knob here, so the
 //! ablation benches can flip them one at a time.
 
+use std::sync::Arc;
+
 use super::pipeline::{BucketAlg, DrainOrder, MIN_BUCKET_BYTES};
+use crate::mpi::events::DeliverySeq;
 use crate::mpi::ulfm::FaultPlan;
 use crate::mpi::AllreduceAlgorithm;
 use crate::ps::Consistency;
@@ -162,6 +165,135 @@ pub enum ExecMode {
     Sim { secs_per_sample: f64 },
 }
 
+/// Seeded chaos / deterministic-replay knobs (ISSUE 6 tentpole). One value
+/// shared by every rank thread: each rank derives its own
+/// [`DeliverySeq`] session from it via [`ChaosConfig::session_for`].
+///
+/// The three session shapes are mutually layered, not exclusive:
+/// * `seed` alone — fully seeded runs: delivery decisions and message
+///   delays come from the seed, logs are recomputable, two runs with the
+///   same seed are bitwise identical.
+/// * `record` — decisions follow wall-clock completion order and are
+///   written into per-rank event logs (surfaced on
+///   `RankMetrics::event_log`) for later replay.
+/// * `replay` — per-rank logs from a previous `record`/seeded run;
+///   decisions and delays are consumed from the log, reproducing that
+///   run byte-for-byte.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosConfig {
+    /// Chaos seed (`--chaos-seed`). `Some` installs a seeded session on
+    /// every rank even when `delay_max` is 0 (deterministic opportunistic
+    /// drain without injected delays).
+    pub seed: Option<u64>,
+    /// Maximum extra message-transit stretch: each message's transit time
+    /// is multiplied by a seeded factor in `[1, 1 + delay_max]`
+    /// (`--chaos-delay`). Requires a session (seed / record / replay).
+    pub delay_max: f64,
+    /// Kills on the *virtual-clock* axis: `(vtime_s, world_rank)` — the
+    /// rank fails at the first step boundary where its clock has passed
+    /// `vtime_s`. Complements `FaultPlan`'s step-axis kills.
+    pub clock_kills: Vec<(f64, usize)>,
+    /// Record delivery decisions/delays into per-rank event logs
+    /// (`--record-events`).
+    pub record: bool,
+    /// Per-world-rank event logs to replay (`--replay-events`). `Arc`
+    /// because `TrainConfig` is cloned into every rank thread.
+    pub replay: Option<Arc<Vec<Vec<u8>>>>,
+}
+
+impl ChaosConfig {
+    /// Does any chaos/replay machinery need to be engaged for this run?
+    pub fn active(&self) -> bool {
+        self.seed.is_some()
+            || self.record
+            || self.replay.is_some()
+            || !self.clock_kills.is_empty()
+    }
+
+    /// Build this rank's delivery session. Priority: replay > record >
+    /// seeded; `None` when no session shape is requested (clock kills
+    /// alone need no session — they only consult the rank clock).
+    pub fn session_for(&self, world_rank: usize) -> Option<DeliverySeq> {
+        if let Some(logs) = &self.replay {
+            let bytes = logs.get(world_rank)?;
+            return Some(
+                DeliverySeq::replayer(bytes)
+                    .expect("replay log validated before launch (ChaosConfig::validate)"),
+            );
+        }
+        if self.record {
+            return Some(DeliverySeq::recorder(self.seed.unwrap_or(0), self.delay_max));
+        }
+        Some(DeliverySeq::seeded(self.seed?, self.delay_max))
+    }
+
+    /// The first clock-axis kill (if any) for `world_rank` — the trainer
+    /// checks `clock >= vtime` at each step boundary.
+    pub fn clock_kill_for(&self, world_rank: usize) -> Option<f64> {
+        self.clock_kills
+            .iter()
+            .filter(|&&(_, r)| r == world_rank)
+            .map(|&(t, _)| t)
+            .fold(None, |acc: Option<f64>, t| {
+                Some(acc.map_or(t, |a| a.min(t)))
+            })
+    }
+
+    /// Launch-time validation (same spirit as [`FaultPlan::validate`]):
+    /// named-bound diagnostics before any rank thread spawns.
+    pub fn validate(&self, ranks: usize) -> Result<(), String> {
+        if self.record && self.replay.is_some() {
+            return Err(
+                "cannot both record and replay events in one run — pick one".into(),
+            );
+        }
+        if self.delay_max < 0.0 || !self.delay_max.is_finite() {
+            return Err(format!(
+                "chaos delay must be a finite non-negative stretch factor, got {}",
+                self.delay_max
+            ));
+        }
+        if self.delay_max > 0.0 && self.seed.is_none() && !self.record && self.replay.is_none()
+        {
+            return Err(
+                "chaos delay needs a delivery session: pass a chaos seed (or record/replay)"
+                    .into(),
+            );
+        }
+        if let Some(logs) = &self.replay {
+            if logs.len() != ranks {
+                return Err(format!(
+                    "replay log holds {} rank logs, but the run spawns {ranks} ranks",
+                    logs.len()
+                ));
+            }
+            for (r, bytes) in logs.iter().enumerate() {
+                DeliverySeq::replayer(bytes)
+                    .map_err(|e| format!("replay log for rank {r} is corrupt: {e}"))?;
+            }
+        }
+        for (i, &(t, rank)) in self.clock_kills.iter().enumerate() {
+            if rank >= ranks {
+                return Err(format!(
+                    "clock kill targets world rank {rank}, outside the {ranks}-rank world"
+                ));
+            }
+            if !t.is_finite() || t < 0.0 {
+                return Err(format!(
+                    "clock kill for rank {rank} at vtime {t}s — kill times must be finite \
+                     and non-negative"
+                ));
+            }
+            if self.clock_kills[..i].iter().any(|&(_, r)| r == rank) {
+                return Err(format!(
+                    "clock kills name world rank {rank} twice; a rank can die only once"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
     /// Table-1 architecture id (e.g. "mnist_dnn").
@@ -202,6 +334,8 @@ pub struct TrainConfig {
     pub broadcast_init: bool,
     pub seed: u64,
     pub fault_plan: FaultPlan,
+    /// Seeded chaos / record / replay session configuration (ISSUE 6).
+    pub chaos: ChaosConfig,
     /// Trim the communicator group's buffer pool down to this many buffers
     /// per shelf at every epoch boundary (`None` = never trim, the
     /// churn-free default). Bounds idle pool retention on long runs at the
@@ -234,6 +368,7 @@ impl TrainConfig {
             broadcast_init: false,
             seed: 0xD7F,
             fault_plan: FaultPlan::none(),
+            chaos: ChaosConfig::default(),
             pool_trim: None,
             verbose: false,
         }
@@ -296,6 +431,18 @@ impl TrainConfig {
 
     pub fn with_straggler(mut self, world_rank: usize, mult: f64) -> Self {
         self.straggler = Some((world_rank, mult));
+        self
+    }
+
+    pub fn with_chaos(mut self, chaos: ChaosConfig) -> Self {
+        self.chaos = chaos;
+        self
+    }
+
+    /// Shorthand for a fully seeded chaos session with no injected delays
+    /// (deterministic opportunistic drain / reproducible logs).
+    pub fn with_chaos_seed(mut self, seed: u64) -> Self {
+        self.chaos.seed = Some(seed);
         self
     }
 
@@ -416,6 +563,92 @@ mod tests {
         // Real mode ignores the knob entirely.
         let real = TrainConfig::new("t").with_straggler(0, 4.0);
         assert_eq!(real.effective_mode(0), ExecMode::Real);
+    }
+
+    #[test]
+    fn chaos_config_session_priority_and_validation() {
+        use crate::mpi::events::EventMode;
+        // No session shape requested → no session, not active.
+        let none = ChaosConfig::default();
+        assert!(!none.active());
+        assert!(none.session_for(0).is_none());
+        none.validate(4).unwrap();
+        // Seeded.
+        let seeded = ChaosConfig {
+            seed: Some(7),
+            delay_max: 0.5,
+            ..Default::default()
+        };
+        assert_eq!(seeded.session_for(2).unwrap().mode(), EventMode::Seeded);
+        seeded.validate(4).unwrap();
+        // Record wins over seed; replay wins over both.
+        let rec = ChaosConfig {
+            seed: Some(7),
+            record: true,
+            ..Default::default()
+        };
+        assert_eq!(rec.session_for(0).unwrap().mode(), EventMode::Record);
+        let empty_log = crate::mpi::events::EventLog::new().encode();
+        let rep = ChaosConfig {
+            seed: Some(7),
+            record: false,
+            replay: Some(Arc::new(vec![empty_log.clone(); 4])),
+            ..Default::default()
+        };
+        assert_eq!(rep.session_for(3).unwrap().mode(), EventMode::Replay);
+        rep.validate(4).unwrap();
+        // Diagnostics name the violated bound.
+        let e = ChaosConfig {
+            record: true,
+            replay: Some(Arc::new(vec![empty_log.clone()])),
+            ..Default::default()
+        }
+        .validate(1)
+        .unwrap_err();
+        assert!(e.contains("record and replay"), "{e}");
+        let e = ChaosConfig {
+            delay_max: 0.5,
+            ..Default::default()
+        }
+        .validate(2)
+        .unwrap_err();
+        assert!(e.contains("chaos seed"), "{e}");
+        let e = ChaosConfig {
+            replay: Some(Arc::new(vec![empty_log.clone(); 3])),
+            ..Default::default()
+        }
+        .validate(4)
+        .unwrap_err();
+        assert!(e.contains("3 rank logs") && e.contains("4 ranks"), "{e}");
+        let e = ChaosConfig {
+            replay: Some(Arc::new(vec![vec![0xFF; 8]])),
+            ..Default::default()
+        }
+        .validate(1)
+        .unwrap_err();
+        assert!(e.contains("rank 0") && e.contains("corrupt"), "{e}");
+        let e = ChaosConfig {
+            clock_kills: vec![(0.5, 9)],
+            ..Default::default()
+        }
+        .validate(4)
+        .unwrap_err();
+        assert!(e.contains("rank 9") && e.contains("4-rank"), "{e}");
+        let e = ChaosConfig {
+            clock_kills: vec![(0.5, 1), (0.9, 1)],
+            ..Default::default()
+        }
+        .validate(4)
+        .unwrap_err();
+        assert!(e.contains("twice"), "{e}");
+        // clock_kill_for picks the earliest kill for the rank.
+        let ck = ChaosConfig {
+            clock_kills: vec![(0.9, 1), (0.2, 2)],
+            ..Default::default()
+        };
+        assert_eq!(ck.clock_kill_for(2), Some(0.2));
+        assert_eq!(ck.clock_kill_for(0), None);
+        assert!(ck.active());
     }
 
     #[test]

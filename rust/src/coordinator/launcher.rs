@@ -44,7 +44,36 @@ pub fn run_training(
             rank < ranks,
             "--straggler rank {rank} is outside the {ranks}-rank world"
         );
-        ensure!(mult > 0.0, "--straggler multiplier must be positive");
+        ensure!(
+            mult > 1.0,
+            "--straggler multiplier must exceed 1.0 (it *slows* the rank; \
+             got {mult}, which would make rank {rank} as fast or faster)"
+        );
+    }
+    // Fault-plan validation against the axis the kills actually fire on:
+    // the allreduce trainer checks the plan once per *epoch*; PS servers
+    // fire on the shared `min_clock` *step* counter (workers per epoch),
+    // which spans up to steps/epoch x epochs ticks.
+    let (fault_bound, fault_axis) = match cfg.train_mode {
+        TrainMode::Allreduce => (Some(cfg.epochs), "epoch"),
+        TrainMode::ParameterServer { .. } => (
+            cfg.max_steps_per_epoch
+                .map(|s| (s * cfg.epochs).max(cfg.epochs)),
+            "clock step",
+        ),
+    };
+    cfg.fault_plan
+        .validate(ranks, fault_bound, fault_axis)
+        .map_err(|m| anyhow!(m))?;
+    cfg.chaos.validate(ranks).map_err(|m| anyhow!(m))?;
+    // A rank named on both kill axes would "die twice" — reject the plan
+    // up front rather than let the second kill silently never fire.
+    for &(_, rank) in &cfg.chaos.clock_kills {
+        ensure!(
+            !cfg.fault_plan.failures.iter().any(|&(_, r)| r == rank),
+            "world rank {rank} is killed by both the fault plan (step axis) and a \
+             chaos clock kill; a rank can die only once"
+        );
     }
     let arch = cfg.arch.clone();
     let mut cfg = cfg;

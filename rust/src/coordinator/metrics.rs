@@ -80,6 +80,11 @@ pub struct RankMetrics {
     /// must agree on it exactly, and `Bucketed` must match `Flat` under a
     /// position-independent allreduce schedule.
     pub params_digest: u64,
+    /// Serialized per-rank event log ([`crate::mpi::EventLog`]) when a
+    /// chaos/record/replay session was installed — assemble with
+    /// [`crate::mpi::encode_world`] for `--record-events` /
+    /// `--replay-events`.
+    pub event_log: Option<Vec<u8>>,
 }
 
 impl RankMetrics {
@@ -108,6 +113,7 @@ impl RankMetrics {
             died: false,
             final_world: 0,
             params_digest: 0,
+            event_log: None,
         }
     }
 

@@ -22,7 +22,9 @@ pub mod replica;
 pub mod sync;
 pub mod trainer;
 
-pub use config::{ExecMode, SyncEvery, SyncMode, SyncStrategy, TrainConfig, TrainMode};
+pub use config::{
+    ChaosConfig, ExecMode, SyncEvery, SyncMode, SyncStrategy, TrainConfig, TrainMode,
+};
 pub use launcher::run_training;
 pub use metrics::{EvalPoint, RankMetrics, TrainReport};
 pub use pipeline::{

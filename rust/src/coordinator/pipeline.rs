@@ -48,6 +48,14 @@
 //! disjoint slices of the flat vector, so drain order cannot change any
 //! value — parity is unaffected.
 //!
+//! **Opportunistic drain** ([`DrainOrder::Opportunistic`], ISSUE 6): apply
+//! buckets in *completion* order instead of a fixed one — either genuine
+//! wall-clock `test()` polling (optionally recorded to an event log) or a
+//! seeded rank-shared randomized schedule that interleaves all in-flight
+//! buckets near round-robin, with deterministic virtual clocks and a
+//! byte-reproducible log. See `mpi::events` for the session modes and
+//! `tests/replay_determinism.rs` for the pinned guarantees.
+//!
 //! **Replica consistency:** every rank builds the identical plan (same
 //! specs), launches buckets in the same order, resolves the same
 //! per-bucket algorithm, and both schedules' combine trees are
@@ -176,6 +184,18 @@ pub enum DrainOrder {
     /// unaffected (apply regions are disjoint); only the latency profile
     /// changes.
     Priority,
+    /// Opportunistic drain (ISSUE 6 tentpole): progress whichever bucket
+    /// can move and apply whichever completes first, instead of a fixed
+    /// wait order. Legal because apply regions are disjoint and both
+    /// combine trees are arrival-order independent — values stay bitwise
+    /// identical to [`DrainOrder::Launch`]. Reproducibility comes from the
+    /// communicator's event session (`mpi::events`): a *Seeded* session
+    /// drives a rank-shared randomized schedule (deterministic clocks, no
+    /// deadlock — the shared schedule keeps the wait-for graph acyclic); a
+    /// *Record* session polls `test()` in wall-clock completion order and
+    /// logs the apply order; a *Replay* session re-executes a log. With no
+    /// session installed it polls wall-clock without logging.
+    Opportunistic,
 }
 
 impl DrainOrder {
@@ -183,6 +203,7 @@ impl DrainOrder {
         match s {
             "launch" => Some(Self::Launch),
             "priority" => Some(Self::Priority),
+            "opportunistic" | "opp" => Some(Self::Opportunistic),
             _ => None,
         }
     }
@@ -218,6 +239,27 @@ impl BucketOp {
         match self {
             BucketOp::Rd(op) => op.wait(comm, data, scratch),
             BucketOp::Rabenseifner(op) => op.wait(comm, data, scratch),
+        }
+    }
+
+    /// Nonblocking progress: consume every queued round, posting follow-up
+    /// sends; returns completion (the opportunistic drain's poll hook).
+    fn test(
+        &mut self,
+        comm: &Communicator,
+        data: &mut [f32],
+        scratch: &mut [f32],
+    ) -> MpiResult<bool> {
+        match self {
+            BucketOp::Rd(op) => op.test(comm, data, scratch),
+            BucketOp::Rabenseifner(op) => op.test(comm, data, scratch),
+        }
+    }
+
+    fn is_complete(&self) -> bool {
+        match self {
+            BucketOp::Rd(op) => op.is_complete(),
+            BucketOp::Rabenseifner(op) => op.is_complete(),
         }
     }
 
@@ -465,6 +507,9 @@ impl PipelineEngine {
         data: &mut [f32],
         mut apply: impl FnMut(&mut [f32], &Range<usize>),
     ) -> MpiResult<()> {
+        if self.drain_order == DrainOrder::Opportunistic {
+            return self.drain_opportunistic(comm, data, apply);
+        }
         let t0 = comm.clock();
         self.front_apply_last_s = 0.0;
         let n = self.plan.buckets.len();
@@ -475,6 +520,7 @@ impl PipelineEngine {
             let i = match self.drain_order {
                 DrainOrder::Launch => k,
                 DrainOrder::Priority => n - 1 - k,
+                DrainOrder::Opportunistic => unreachable!("dispatched above"),
             };
             let Some(mut op) = self.states[i].take() else {
                 continue;
@@ -488,6 +534,194 @@ impl PipelineEngine {
             apply(slice, &range);
             if Some(i) == front {
                 self.front_apply_last_s = comm.clock() - t0;
+            }
+        }
+        Ok(())
+    }
+
+    /// One opportunistic decision on bucket `i`: advance one blocking
+    /// round, falling through to a blocking wait when the op is parked in
+    /// its post-phase (a retired non-pof2 rank — its sends for *every*
+    /// bucket were posted at launch, so blocking on the hand-back cannot
+    /// deadlock while the core ranks progress under the shared schedule).
+    /// Returns completion.
+    fn drive_decision(
+        &mut self,
+        comm: &Communicator,
+        data: &mut [f32],
+        i: usize,
+    ) -> MpiResult<bool> {
+        let range = self.plan.buckets[i].range.clone();
+        let Some(op) = self.states[i].as_mut() else {
+            return Ok(true);
+        };
+        let progressed = op.drive_one_round(comm, &mut data[range.clone()], &mut self.scratch)?;
+        if !progressed && !op.is_complete() {
+            op.wait(comm, &mut data[range], &mut self.scratch)?;
+        }
+        Ok(op.is_complete())
+    }
+
+    /// [`DrainOrder::Opportunistic`]: apply buckets in completion order.
+    /// The decision source depends on the communicator's event session —
+    /// see the enum doc. All paths produce values bitwise identical to the
+    /// fixed orders (disjoint applies, arrival-order-independent combines).
+    fn drain_opportunistic(
+        &mut self,
+        comm: &Communicator,
+        data: &mut [f32],
+        mut apply: impl FnMut(&mut [f32], &Range<usize>),
+    ) -> MpiResult<()> {
+        use crate::mpi::events::{Event, EventMode};
+        let t0 = comm.clock();
+        self.front_apply_last_s = 0.0;
+        let n = self.plan.buckets.len();
+        let front = n.checked_sub(1);
+        let mut remaining = self.states.iter().filter(|s| s.is_some()).count();
+        if remaining == 0 {
+            return Ok(());
+        }
+        // Shared per-bucket finish bookkeeping (front-apply latency).
+        macro_rules! apply_bucket {
+            ($i:expr) => {{
+                let i = $i;
+                self.states[i] = None;
+                let range = self.plan.buckets[i].range.clone();
+                let slice = &mut data[range.clone()];
+                apply(slice, &range);
+                remaining -= 1;
+                if Some(i) == front {
+                    self.front_apply_last_s = comm.clock() - t0;
+                }
+            }};
+        }
+        let mode = comm.with_events(|s| s.mode());
+        match mode {
+            // Seeded: a rank-shared randomized drive schedule — real
+            // interleaving across buckets with deterministic clocks. Every
+            // rank consumes the identical decision stream (locally skipping
+            // already-complete buckets), so the blocking drives stay
+            // deadlock-free for the same reason the fixed launch schedule
+            // is: the wait-for graph of a shared schedule is acyclic.
+            Some(EventMode::Seeded) => {
+                let mut sched = comm
+                    .with_events(|s| s.begin_drain(n))
+                    .flatten()
+                    .expect("seeded sessions hand out drain schedules");
+                while remaining > 0 {
+                    let i = sched.next();
+                    if self.states[i].is_none() {
+                        continue;
+                    }
+                    comm.with_events(|s| s.log_decision(Event::Drive { bucket: i as u32 }));
+                    match self.drive_decision(comm, data, i) {
+                        Err(e) => {
+                            self.cancel_all();
+                            return Err(e);
+                        }
+                        Ok(false) => {}
+                        Ok(true) => {
+                            comm.with_events(|s| {
+                                s.log_decision(Event::Apply { bucket: i as u32 })
+                            });
+                            apply_bucket!(i);
+                        }
+                    }
+                }
+            }
+            // Replay: re-execute the recorded decisions (echoing them).
+            // Seeded logs carry Drive+Apply; Record logs carry Apply only
+            // (the waits re-block on exactly the messages the recorded
+            // completion order implies). Log exhaustion (the recorded rank
+            // died or finished early) falls back to launch-order waits.
+            Some(EventMode::Replay) => {
+                while remaining > 0 {
+                    match comm.with_events(|s| s.next_decision()).flatten() {
+                        Some(Event::Drive { bucket }) if (bucket as usize) < n => {
+                            if let Err(e) = self.drive_decision(comm, data, bucket as usize) {
+                                self.cancel_all();
+                                return Err(e);
+                            }
+                        }
+                        Some(Event::Apply { bucket }) if (bucket as usize) < n => {
+                            let i = bucket as usize;
+                            if self.states[i].is_none() {
+                                continue;
+                            }
+                            let range = self.plan.buckets[i].range.clone();
+                            let res = self.states[i].as_mut().unwrap().wait(
+                                comm,
+                                &mut data[range],
+                                &mut self.scratch,
+                            );
+                            if let Err(e) = res {
+                                self.cancel_all();
+                                return Err(e);
+                            }
+                            apply_bucket!(i);
+                        }
+                        Some(_) => {} // Kill records are informational
+                        None => {
+                            for i in 0..n {
+                                if self.states[i].is_none() {
+                                    continue;
+                                }
+                                let range = self.plan.buckets[i].range.clone();
+                                let res = self.states[i].as_mut().unwrap().wait(
+                                    comm,
+                                    &mut data[range],
+                                    &mut self.scratch,
+                                );
+                                if let Err(e) = res {
+                                    self.cancel_all();
+                                    return Err(e);
+                                }
+                                apply_bucket!(i);
+                            }
+                        }
+                    }
+                }
+            }
+            // Record / no session: genuine wall-clock opportunism — poll
+            // every in-flight bucket with `test()` and apply whichever
+            // completes first. Livelock-free: `test()` posts follow-up
+            // sends as it consumes rounds, so pure polling across ranks
+            // makes global progress. A Record session logs the apply order
+            // so the run can be replayed exactly.
+            Some(EventMode::Record) | None => {
+                let record = mode == Some(EventMode::Record);
+                while remaining > 0 {
+                    let mut progressed = false;
+                    for i in 0..n {
+                        if self.states[i].is_none() {
+                            continue;
+                        }
+                        let range = self.plan.buckets[i].range.clone();
+                        let done = match self.states[i].as_mut().unwrap().test(
+                            comm,
+                            &mut data[range],
+                            &mut self.scratch,
+                        ) {
+                            Ok(d) => d,
+                            Err(e) => {
+                                self.cancel_all();
+                                return Err(e);
+                            }
+                        };
+                        if done {
+                            if record {
+                                comm.with_events(|s| {
+                                    s.log_decision(Event::Apply { bucket: i as u32 })
+                                });
+                            }
+                            apply_bucket!(i);
+                            progressed = true;
+                        }
+                    }
+                    if remaining > 0 && !progressed {
+                        std::thread::yield_now();
+                    }
+                }
             }
         }
         Ok(())
@@ -750,7 +984,61 @@ mod tests {
         .is_ok());
         assert_eq!(DrainOrder::by_name("launch"), Some(DrainOrder::Launch));
         assert_eq!(DrainOrder::by_name("priority"), Some(DrainOrder::Priority));
+        assert_eq!(
+            DrainOrder::by_name("opportunistic"),
+            Some(DrainOrder::Opportunistic)
+        );
+        assert_eq!(DrainOrder::by_name("opp"), Some(DrainOrder::Opportunistic));
         assert_eq!(DrainOrder::by_name("x"), None);
+    }
+
+    #[test]
+    fn opportunistic_drain_matches_flat_rd_bitwise_all_session_modes() {
+        use crate::mpi::events::DeliverySeq;
+        // Non-pof2 p exercises the parked-post-phase fallback on retired
+        // ranks; sessions exercise Seeded (with delays) and no-session
+        // wall-clock polling.
+        for seeded in [false, true] {
+            for p in [2usize, 3, 5, 8] {
+                let sizes = [17usize, 64, 9, 33, 128];
+                let n: usize = sizes.iter().sum();
+                let w = World::new(p, NetProfile::infiniband_fdr());
+                let out = w.run_unwrap(move |c| {
+                    if seeded {
+                        c.install_events(DeliverySeq::seeded(0xC0FFEE, 0.75));
+                    }
+                    let mk = |r: usize| -> Vec<f32> {
+                        (0..n)
+                            .map(|i| ((r * 31 + i * 17) % 101) as f32 * 0.25 - 12.0)
+                            .collect()
+                    };
+                    let mut eng = PipelineEngine::new(BucketPlan::build(&ranges(&sizes), 256))
+                        .with_alg(BucketAlg::Auto {
+                            threshold_bytes: Some(256),
+                        })
+                        .with_drain(DrainOrder::Opportunistic);
+                    let mut piped = mk(c.rank());
+                    eng.allreduce_overlapped(&c, &mut piped, 0.0)?;
+                    let mut flat = mk(c.rank());
+                    allreduce_with(
+                        &c,
+                        AllreduceAlgorithm::RecursiveDoubling,
+                        ReduceOp::Sum,
+                        &mut flat,
+                    )?;
+                    Ok((piped, flat))
+                });
+                for (rank, (piped, flat)) in out.iter().enumerate() {
+                    for i in 0..n {
+                        assert_eq!(
+                            piped[i].to_bits(),
+                            flat[i].to_bits(),
+                            "seeded={seeded} p={p} rank={rank} i={i}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

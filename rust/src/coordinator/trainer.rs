@@ -34,6 +34,12 @@ pub fn train_rank(
     let wall0 = Instant::now();
     let mut metrics = RankMetrics::new(comm.world_rank());
     let spec = manifest.arch(&cfg.arch)?.clone();
+    // Chaos / record / replay: install this rank's delivery session before
+    // any message moves; it follows the rank through ULFM shrinks and is
+    // harvested into `metrics.event_log` on every exit path below.
+    if let Some(session) = cfg.chaos.session_for(comm.world_rank()) {
+        comm.install_events(session);
+    }
 
     // ---- rank-0 read + scatter (§3.3.1) --------------------------------
     let t_io = Instant::now();
@@ -107,6 +113,11 @@ pub fn train_rank(
             pipeline.as_mut(),
         ) {
             Ok(mean_loss) => {
+                if metrics.died {
+                    // A clock-axis chaos kill fired inside the epoch
+                    // (see `run_epoch`); this rank is already failed.
+                    break;
+                }
                 metrics.epoch_losses.push(mean_loss);
                 if cfg.verbose && comm.rank() == 0 && replica.is_real() {
                     eprintln!(
@@ -178,6 +189,7 @@ pub fn train_rank(
     metrics.clock_s = comm.clock();
     metrics.wall_s = wall0.elapsed().as_secs_f64();
     metrics.final_world = comm.size();
+    metrics.event_log = comm.take_events().map(|s| s.into_log_bytes());
     Ok(metrics)
 }
 
@@ -209,7 +221,20 @@ fn run_epoch(
     let mut it = BatchIter::train(shard, replica.batch, rng);
     let mut loss_sum = 0f64;
     let mut loss_n = 0usize;
+    // Clock-axis chaos kill: this rank dies at the first step boundary
+    // where its virtual clock has passed the scheduled time.
+    let clock_kill = cfg.chaos.clock_kill_for(comm.world_rank());
     for _ in 0..steps {
+        if let Some(t) = clock_kill {
+            if comm.clock() >= t {
+                comm.with_events(|s| {
+                    s.record_kill(metrics.steps as usize, comm.world_rank())
+                });
+                comm.fail_self();
+                metrics.died = true;
+                return Ok(f64::NAN);
+            }
+        }
         let mut x = std::mem::take(&mut replica.x_buf);
         let mut y = std::mem::take(&mut replica.y_buf);
         let got = it.next_into(&mut x, &mut y);

@@ -30,8 +30,13 @@
 //! * [`perfmodel`] — the paper's analytic model ((m/p)·n²·l compute,
 //!   n²·l communication) used to cross-check the simulator.
 //! * [`figures`] — harness regenerating every figure/table in the paper.
+//! * [`chaos`] — seeded chaos engine: randomized-but-reproducible fault
+//!   schedules (step/clock kills, stragglers, message delays) with
+//!   structural shrinking, driving the robustness property tests; the
+//!   event-log record/replay layer lives in [`mpi::events`].
 
 
+pub mod chaos;
 pub mod coordinator;
 pub mod data;
 pub mod dataflow;

@@ -55,6 +55,8 @@ USAGE:
             [--consistency bsp|asp|ssp:<s>] [--straggler RANK:MULT]
             [--profile ib|socket|bgq|shm] [--sim <secs/sample>|auto]
             [--scale F] [--steps-cap N] [--eval-every N] [--seed N] [--quiet]
+            [--chaos-seed N] [--chaos-delay F]
+            [--record-events FILE] [--replay-events FILE]
   dtf figures [--id fig1..fig6|higgs|ablate-*|all] [--epochs N] [--out-dir D]
               [--profile ib|...] [--sps F]
   dtf inspect [--archs] [--artifacts]
@@ -74,6 +76,16 @@ bitwise-identical to allreduce), fully asynchronous (asp), or stale-
 synchronous with bound s (ssp:<s>). --straggler slows one Sim rank to see
 the relaxed modes tolerate it. `calibrate --write` records CALIBRATION.json
 for the runtime_step bench.
+
+Reproducibility & chaos (README §Reproducibility): --chaos-seed installs a
+seeded delivery session on every rank — drain decisions and message delays
+become a pure function of the seed, so two runs with the same seed are
+bitwise-identical. --chaos-delay D stretches each message's transit by a
+seeded factor in [1, 1+D] (default 0.25 when --chaos-seed is set).
+--record-events FILE captures per-rank event logs; --replay-events FILE
+re-runs them byte-for-byte (pass the same train flags as the recorded run).
+--drain opportunistic applies whichever bucket completes first (still
+bitwise-equal to launch order; deterministic under --chaos-seed/replay).
 
 Architectures (Table 1): adult_dnn acoustic_dnn mnist_dnn cifar10_dnn
                          higgs_dnn mnist_cnn cifar10_cnn
@@ -96,7 +108,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         "arch", "ranks", "epochs", "lr", "sync", "sync-every", "sync-strategy",
         "bucket-alg", "bucket-alg-threshold", "drain", "alg", "pool-trim", "train-mode",
         "ps-servers", "consistency", "straggler", "profile", "sim", "scale", "steps-cap",
-        "eval-every", "seed", "quiet", "broadcast-init",
+        "eval-every", "seed", "quiet", "broadcast-init", "chaos-seed", "chaos-delay",
+        "record-events", "replay-events",
     ])?;
     let manifest = load_manifest()?;
     let arch = args
@@ -197,7 +210,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
     }
     cfg.drain = DrainOrder::by_name(args.str_or("drain", "priority"))
-        .ok_or_else(|| anyhow::anyhow!("--drain must be priority|launch"))?;
+        .ok_or_else(|| anyhow::anyhow!("--drain must be priority|launch|opportunistic"))?;
     cfg.allreduce = AllreduceAlgorithm::by_name(args.str_or("alg", "auto"))
         .ok_or_else(|| anyhow::anyhow!("--alg must be auto|ring|rd|tree"))?;
     if let Some(keep) = args.get("pool-trim") {
@@ -216,8 +229,40 @@ fn cmd_train(args: &Args) -> Result<()> {
         };
     }
 
+    // Chaos / reproducibility knobs (ISSUE 6): seeded delivery sessions,
+    // event-log record, and byte-exact replay. Validated (log shape, rank
+    // counts, record×replay exclusivity) in the launcher before spawning.
+    if let Some(seed) = args.get("chaos-seed") {
+        cfg.chaos.seed = Some(
+            seed.parse()
+                .map_err(|_| anyhow::anyhow!("--chaos-seed must be a u64, got {seed:?}"))?,
+        );
+    }
+    cfg.chaos.delay_max =
+        args.f64_or("chaos-delay", if cfg.chaos.seed.is_some() { 0.25 } else { 0.0 })?;
+    let record_path = args.get("record-events");
+    cfg.chaos.record = record_path.is_some();
+    if let Some(path) = args.get("replay-events") {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("--replay-events: cannot read {path:?}: {e}"))?;
+        let logs = dtf::mpi::decode_world(&bytes)
+            .map_err(|m| anyhow::anyhow!("--replay-events {path:?}: {m}"))?;
+        cfg.chaos.replay = Some(Arc::new(logs));
+    }
+
     let profile = parse_profile(args)?;
     let report = run_training(cfg, manifest, ranks, profile)?;
+
+    if let Some(path) = record_path {
+        let logs: Vec<Vec<u8>> = report
+            .per_rank
+            .iter()
+            .map(|r| r.event_log.clone().unwrap_or_default())
+            .collect();
+        std::fs::write(path, dtf::mpi::encode_world(&logs))
+            .map_err(|e| anyhow::anyhow!("--record-events: cannot write {path:?}: {e}"))?;
+        eprintln!("recorded event log for {} ranks -> {path}", logs.len());
+    }
 
     println!("\n=== training report: {} on {} ranks ===", report.arch, report.ranks);
     println!(

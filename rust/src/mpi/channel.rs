@@ -138,6 +138,16 @@ impl Mailbox {
     }
 
     /// Mark the mailbox closed (world teardown); wakes all blocked readers.
+    ///
+    /// Close/receive contract (relied on by the shutdown and chaos-test
+    /// paths):
+    /// * A receive posted against a **closed, empty (or non-matching)**
+    ///   mailbox returns `Err(MpiError::Shutdown)` immediately — it never
+    ///   blocks, because both receive paths test the match *before* the
+    ///   closed flag each time they hold the lock.
+    /// * Envelopes delivered **before** `close()` remain drainable: a
+    ///   matching `try_recv_match`/`recv_match` after close still returns
+    ///   them. Close stops future waiting, not in-flight data.
     pub fn close(&self) {
         self.inner.lock().unwrap().closed = true;
         self.cv.notify_all();
@@ -364,6 +374,56 @@ mod tests {
         // Closed + drained: Shutdown (matches the blocking path).
         let _ = mb.try_recv_match(Some(0), Some(1)).unwrap().unwrap();
         mb.close();
+        assert!(matches!(
+            mb.try_recv_match(Some(0), Some(1)),
+            Err(MpiError::Shutdown)
+        ));
+    }
+
+    #[test]
+    fn recv_match_on_closed_empty_mailbox_errors_immediately() {
+        // ISSUE 6 satellite: a receive posted *after* close on an empty (or
+        // non-matching) mailbox must return Shutdown at once, not hang in
+        // the spin/park phases.
+        let mb = Mailbox::new();
+        mb.close();
+        let t0 = std::time::Instant::now();
+        assert!(matches!(
+            mb.recv_match(Some(0), Some(0), || None),
+            Err(MpiError::Shutdown)
+        ));
+        // Spin phase alone is ~tens of µs; a park would cost ≥ POLL (5ms).
+        // Generous bound: the error must arrive well under one poll tick
+        // times the spin budget.
+        assert!(
+            t0.elapsed() < Duration::from_millis(500),
+            "closed-mailbox receive took {:?} — it blocked",
+            t0.elapsed()
+        );
+        // Non-matching queued data doesn't resurrect the receive either.
+        let mb = Mailbox::new();
+        mb.push(env(1, 9, vec![1.0]));
+        mb.close();
+        assert!(matches!(
+            mb.recv_match(Some(0), Some(0), || None),
+            Err(MpiError::Shutdown)
+        ));
+    }
+
+    #[test]
+    fn close_does_not_discard_delivered_envelopes() {
+        // Envelopes pushed before close() stay drainable — close stops
+        // future waiting, not in-flight data (see `close` doc).
+        let mb = Mailbox::new();
+        mb.push(env(0, 1, vec![1.0]));
+        mb.push(env(0, 1, vec![2.0]));
+        mb.close();
+        let a = mb.try_recv_match(Some(0), Some(1)).unwrap().unwrap();
+        assert_eq!(a.take_buffer(), Buffer::F32(vec![1.0]));
+        // Blocking path drains the second one too, in FIFO order.
+        let b = mb.recv_match(Some(0), Some(1), || None).unwrap();
+        assert_eq!(b.take_buffer(), Buffer::F32(vec![2.0]));
+        // Only once drained does the closed flag surface.
         assert!(matches!(
             mb.try_recv_match(Some(0), Some(1)),
             Err(MpiError::Shutdown)

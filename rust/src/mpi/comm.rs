@@ -7,7 +7,7 @@
 //! [`WorldState`] (failure flags + the registry used to materialize new
 //! communicators deterministically across threads).
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
@@ -17,6 +17,7 @@ use std::sync::{Arc, Mutex};
 use super::channel::{Envelope, Mailbox, Tag};
 use super::datatype::{Buffer, Datatype};
 use super::error::{MpiError, MpiResult};
+use super::events::DeliverySeq;
 use super::netmodel::{fold_arrival, NetProfile};
 use super::pool::BufferPool;
 
@@ -146,6 +147,9 @@ pub struct Communicator {
     clock: Cell<f64>,
     coll_seq: Cell<u32>,
     stats: Cell<CommStats>,
+    /// Optional chaos/replay session (`RefCell`, not `Rc`: the communicator
+    /// must stay `Send` — it is moved into its rank's thread at spawn).
+    events: RefCell<Option<DeliverySeq>>,
 }
 
 impl Communicator {
@@ -163,7 +167,31 @@ impl Communicator {
             clock: Cell::new(0.0),
             coll_seq: Cell::new(0),
             stats: Cell::new(CommStats::default()),
+            events: RefCell::new(None),
         }
+    }
+
+    // ---- chaos / event-replay session -----------------------------------
+
+    /// Install a [`DeliverySeq`] session: message sends start sampling
+    /// chaos delays and drain decisions are produced/recorded/replayed per
+    /// its mode (see `mpi::events`).
+    pub fn install_events(&self, seq: DeliverySeq) {
+        *self.events.borrow_mut() = Some(seq);
+    }
+
+    /// Remove and return the session (e.g. to serialize its event log).
+    pub fn take_events(&self) -> Option<DeliverySeq> {
+        self.events.borrow_mut().take()
+    }
+
+    /// Run `f` on the installed session, if any.
+    pub fn with_events<R>(&self, f: impl FnOnce(&mut DeliverySeq) -> R) -> Option<R> {
+        self.events.borrow_mut().as_mut().map(f)
+    }
+
+    pub fn has_events(&self) -> bool {
+        self.events.borrow().is_some()
     }
 
     // ---- identity -------------------------------------------------------
@@ -310,12 +338,26 @@ impl Communicator {
         self.advance(o);
         self.add_comm_time(o);
         // Topology-aware cost: intra-node messages ride shared memory.
-        let arrival = self.clock.get()
-            + self.profile.p2p_time_between(
+        let mut transit = self.profile.p2p_time_between(
+            self.group.world_ranks[self.rank],
+            self.group.world_ranks[dst],
+            nbytes,
+        );
+        // Chaos delay injection: stretch the transit time by the session's
+        // sampled factor. Delivery order across different (src, tag) pairs
+        // can reorder; FIFO per (src, tag) is preserved because a given
+        // pair's messages share the factor *keying* but mailbox matching
+        // stays queue-order (see `channel.rs`).
+        if let Some(f) = self.with_events(|s| {
+            s.delay_factor(
                 self.group.world_ranks[self.rank],
                 self.group.world_ranks[dst],
-                nbytes,
-            );
+                tag,
+            )
+        }) {
+            transit *= f;
+        }
+        let arrival = self.clock.get() + transit;
         let mut s = self.stats.get();
         s.msgs_sent += 1;
         s.bytes_sent += nbytes as u64;
@@ -628,6 +670,11 @@ impl Communicator {
         let group = self.world.get_or_create_group(context, &world_ranks);
         let comm = Communicator::new(new_rank, group, self.world.clone(), self.profile.clone());
         comm.set_clock(self.clock());
+        // The chaos/replay session follows the rank through recovery (the
+        // shrunk comm replaces the parent); `split` deliberately does NOT
+        // move it — PS ranks use parent and sub-communicator concurrently,
+        // and the session lives with the parent.
+        *comm.events.borrow_mut() = self.events.borrow_mut().take();
         Ok(comm)
     }
 
@@ -854,6 +901,47 @@ mod tests {
     fn world_ranks_exposed_in_comm_rank_order() {
         let (c0, _c1) = pair();
         assert_eq!(c0.world_ranks(), &[0, 1]);
+    }
+
+    #[test]
+    fn chaos_delay_stretches_transit_deterministically() {
+        use crate::mpi::events::DeliverySeq;
+        let base = {
+            let (c0, c1) = pair();
+            c0.send(1, 5, &[1.0f32; 64]).unwrap();
+            c1.recv::<f32>(Some(0), 5).unwrap();
+            c1.clock()
+        };
+        let run = || {
+            let (c0, c1) = pair();
+            c0.install_events(DeliverySeq::seeded(99, 1.0));
+            c0.send(1, 5, &[1.0f32; 64]).unwrap();
+            c1.recv::<f32>(Some(0), 5).unwrap();
+            c1.clock()
+        };
+        let (a, b) = (run(), run());
+        assert!(a > base, "delayed arrival {a} must exceed undelayed {base}");
+        assert_eq!(a, b, "same seed → same delay → same clock");
+        // Transit at most doubles under delay_max = 1.0.
+        let p = NetProfile::infiniband_fdr();
+        let transit = base - p.send_overhead_s;
+        assert!(a - p.send_overhead_s <= 2.0 * transit + 1e-12);
+    }
+
+    #[test]
+    fn shrink_moves_event_session_to_survivor_comm() {
+        use crate::mpi::events::DeliverySeq;
+        let world = WorldState::new(3);
+        let group = Arc::new(CommGroup::new(0, vec![0, 1, 2]));
+        let profile = Arc::new(NetProfile::zero());
+        let c0 = Communicator::new(0, group.clone(), world.clone(), profile.clone());
+        let c2 = Communicator::new(2, group, world, profile);
+        c0.install_events(DeliverySeq::seeded(1, 0.5));
+        c2.fail_self();
+        let small = c0.shrink().unwrap();
+        assert!(!c0.has_events(), "session must move, not copy");
+        assert!(small.has_events());
+        assert!(small.take_events().is_some());
     }
 
     #[test]

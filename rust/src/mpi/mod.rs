@@ -71,6 +71,7 @@ pub mod comm;
 pub mod compat;
 pub mod datatype;
 pub mod error;
+pub mod events;
 pub mod netmodel;
 pub mod pool;
 pub mod request;
@@ -86,6 +87,9 @@ pub use collectives::{
 pub use comm::{CommStats, Communicator, WorldState};
 pub use datatype::{Buffer, Datatype, Reducible, ReduceOp};
 pub use error::{MpiError, MpiResult};
+pub use events::{
+    decode_world, encode_world, DeliverySeq, DrainSchedule, Event, EventLog, EventMode,
+};
 pub use netmodel::{fold_arrival, NetProfile};
 pub use pool::{BufferPool, PooledScratch, PoolStats};
 pub use request::{wait_all, RecvRequest, SendRequest};

@@ -25,10 +25,18 @@
 //!
 //! Determinism note: whether `test` completes on a given call depends on
 //! wall-clock thread interleaving (did the sender run yet?), so *virtual
-//! clocks* along a `test`-polling path can vary run to run. Code that must
-//! be bit-and-clock reproducible — the trainer's pipelined sync — drives
-//! requests only through `wait`/`wait_all` at fixed program points, where
-//! the fold order is determined by program order alone.
+//! clocks* along a `test`-polling path can vary run to run. Two ways to
+//! get reproducibility back:
+//!
+//! * drive requests only through `wait`/`wait_all` at fixed program
+//!   points, where the fold order is determined by program order alone
+//!   (the trainer's `Launch`/`Priority` bucket drains); or
+//! * route `test`-polling decisions through a delivery session
+//!   ([`events::DeliverySeq`](super::events::DeliverySeq) on the
+//!   communicator): in `Seeded` mode the poll order is a pure function of
+//!   the seed, and `Record`/`Replay` capture a wall-clock order once and
+//!   re-run it byte-for-byte (the `DrainOrder::Opportunistic` pipeline
+//!   drain).
 
 use super::comm::Communicator;
 use super::datatype::Datatype;

@@ -36,14 +36,54 @@ impl FaultPlan {
     }
 
     /// Apply the plan on the calling rank; returns true if this rank died
-    /// (the caller should then exit its training loop).
+    /// (the caller should then exit its training loop). A firing fault is
+    /// recorded into the rank's event log when a session is installed.
     pub fn apply(&self, step: usize, comm: &Communicator) -> bool {
         if self.dies(step, comm.world_rank()) {
+            comm.with_events(|s| s.record_kill(step, comm.world_rank()));
             comm.fail_self();
             true
         } else {
             false
         }
+    }
+
+    /// Parse-time validation (ISSUE 6 satellite, style of
+    /// `TrainConfig::validate`): every entry must name a rank inside the
+    /// `world`, a rank may die at most once, and — when the caller knows
+    /// the step axis's bound — the kill step must be reachable.
+    /// `axis` names the step axis in diagnostics ("epoch" for the
+    /// allreduce trainer, "clock step" for the parameter server, whose
+    /// servers fire on the shared `min_clock`); `max_step: None` skips the
+    /// bound check (step count not known up front).
+    pub fn validate(
+        &self,
+        world: usize,
+        max_step: Option<usize>,
+        axis: &str,
+    ) -> Result<(), String> {
+        for (i, &(step, rank)) in self.failures.iter().enumerate() {
+            if rank >= world {
+                return Err(format!(
+                    "fault plan kills world rank {rank}, outside the {world}-rank world"
+                ));
+            }
+            if let Some(bound) = max_step {
+                if step >= bound {
+                    return Err(format!(
+                        "fault plan kills rank {rank} at {axis} {step}, but the run spans \
+                         {axis}s 0..{bound} — it would never fire"
+                    ));
+                }
+            }
+            if let Some(&(other, _)) = self.failures[..i].iter().find(|&&(_, r)| r == rank) {
+                return Err(format!(
+                    "fault plan kills world rank {rank} twice ({axis}s {other} and {step}); \
+                     a rank can die only once"
+                ));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -164,6 +204,130 @@ mod tests {
         assert!(!plan.dies(2, 1));
         assert!(plan.dies(3, 1));
         assert!(!plan.dies(3, 0));
+    }
+
+    #[test]
+    fn fault_plan_validate_diagnoses_named_bounds() {
+        // Rank outside the world.
+        let e = FaultPlan::kill_at(0, 4).validate(4, None, "epoch").unwrap_err();
+        assert!(e.contains("rank 4") && e.contains("4-rank world"), "{e}");
+        // Step beyond the configured bound, named by axis.
+        let e = FaultPlan::kill_at(5, 1)
+            .validate(4, Some(3), "epoch")
+            .unwrap_err();
+        assert!(e.contains("epoch 5") && e.contains("0..3"), "{e}");
+        // Duplicate rank entries.
+        let plan = FaultPlan {
+            failures: vec![(1, 2), (3, 2)],
+        };
+        let e = plan.validate(4, Some(10), "clock step").unwrap_err();
+        assert!(e.contains("twice") && e.contains("1 and 3"), "{e}");
+        // Valid plans pass, with or without a known bound.
+        FaultPlan::kill_at(2, 1).validate(4, Some(3), "epoch").unwrap();
+        FaultPlan::kill_at(100, 1).validate(4, None, "epoch").unwrap();
+        FaultPlan::none().validate(1, Some(0), "epoch").unwrap();
+    }
+
+    /// ISSUE 6 satellite: the `shrink_renumbers_survivors` scenario as a
+    /// quickprop property over random failure subsets — survivors are
+    /// renumbered densely (ranks 0..k), world-rank order is preserved, and
+    /// a *second* failure during recovery still converges (shrink again).
+    #[test]
+    fn prop_shrink_renumbers_random_failure_subsets() {
+        use crate::util::quickprop::{gen, run_prop, Config};
+        run_prop(
+            "shrink-random-subsets",
+            Config {
+                cases: 24,
+                seed: 0x5EED_51AE,
+            },
+            |rng, _case| {
+                let p = gen::usize_in(rng, 3, 8);
+                // 1..=p-2 first-wave victims, keeping ≥2 survivors so a
+                // second failure still leaves a communicator.
+                let n_kill = gen::usize_in(rng, 1, p - 2);
+                let mut perm = rng.permutation(p);
+                let first: Vec<usize> = perm.drain(..n_kill).collect();
+                // One of the remaining ranks dies *during* recovery
+                // (after the first shrink) when survivors allow it.
+                let second = if perm.len() > 2 {
+                    Some(perm[0])
+                } else {
+                    None
+                };
+                let w = World::new(p, NetProfile::zero());
+                let first_cl = first.clone();
+                let out = w.run_unwrap(move |c| {
+                    let me = c.rank();
+                    if first_cl.contains(&me) {
+                        c.fail_self();
+                        return Ok(None);
+                    }
+                    while c.alive_ranks().len() != p - first_cl.len() {
+                        std::thread::yield_now();
+                    }
+                    let small = c.shrink()?;
+                    let survived_first =
+                        (small.rank(), small.size(), small.world_rank());
+                    // Second failure mid-recovery: one survivor dies, the
+                    // rest must shrink again and agree on the final shape.
+                    if let Some(victim) = second {
+                        if me == victim {
+                            small.fail_self();
+                            return Ok(Some((survived_first, None)));
+                        }
+                        while small.alive_ranks().len() != small.size() - 1 {
+                            std::thread::yield_now();
+                        }
+                        let tiny = small.shrink()?;
+                        return Ok(Some((
+                            survived_first,
+                            Some((tiny.rank(), tiny.size(), tiny.world_rank())),
+                        )));
+                    }
+                    Ok(Some((survived_first, None)))
+                });
+                // First-wave survivors, in world-rank order.
+                let mut survivors: Vec<usize> =
+                    (0..p).filter(|r| !first.contains(r)).collect();
+                survivors.sort_unstable();
+                for (new_rank, &wr) in survivors.iter().enumerate() {
+                    let Some((got, _)) = out[wr] else {
+                        return Err(format!("survivor {wr} produced no result"));
+                    };
+                    // Dense renumbering, order preserved, world id kept.
+                    if got != (new_rank, survivors.len(), wr) {
+                        return Err(format!(
+                            "first shrink: world rank {wr} got {got:?}, \
+                             expected ({new_rank}, {}, {wr})",
+                            survivors.len()
+                        ));
+                    }
+                }
+                if let Some(victim) = second {
+                    let final_survivors: Vec<usize> = survivors
+                        .iter()
+                        .copied()
+                        .filter(|&r| r != victim)
+                        .collect();
+                    for (new_rank, &wr) in final_survivors.iter().enumerate() {
+                        let Some((_, Some(got))) = out[wr] else {
+                            return Err(format!(
+                                "rank {wr} missing second-shrink result"
+                            ));
+                        };
+                        if got != (new_rank, final_survivors.len(), wr) {
+                            return Err(format!(
+                                "second shrink: world rank {wr} got {got:?}, \
+                                 expected ({new_rank}, {}, {wr})",
+                                final_survivors.len()
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

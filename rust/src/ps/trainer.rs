@@ -73,6 +73,13 @@ pub fn train_rank_ps(
         "parameter-server mode synchronizes every step"
     );
     let wall0 = Instant::now();
+    // Chaos / record / replay: install this rank's delivery session before
+    // any message moves. `split` deliberately leaves it on the parent
+    // communicator (pull/push traffic), and `shrink` carries it across
+    // recovery; it is harvested into `metrics.event_log` below.
+    if let Some(session) = cfg.chaos.session_for(comm.world_rank()) {
+        comm.install_events(session);
+    }
     let mut state = PsRank {
         cfg,
         manifest: &manifest,
@@ -130,6 +137,7 @@ pub fn train_rank_ps(
     metrics.clock_s = comm.clock();
     metrics.wall_s = wall0.elapsed().as_secs_f64();
     metrics.final_world = comm.size();
+    metrics.event_log = comm.take_events().map(|s| s.into_log_bytes());
     Ok(metrics)
 }
 
@@ -195,6 +203,17 @@ impl PsRank<'_> {
     }
 
     fn serve_era(&mut self, comm: &Communicator, roles: &Roles) -> MpiResult<EraEnd> {
+        // Clock-axis chaos kill, checked at era boundaries (the serve loop
+        // itself is driven by worker traffic; step-axis server kills fire
+        // inside it on the shared `min_clock` via the fault plan).
+        if let Some(t) = self.cfg.chaos.clock_kill_for(comm.world_rank()) {
+            if comm.clock() >= t {
+                comm.with_events(|s| s.record_kill(self.epoch, comm.world_rank()));
+                comm.fail_self();
+                self.metrics.died = true;
+                return Ok(EraEnd::Died);
+            }
+        }
         let spec = self.manifest.arch(&self.cfg.arch).map_err(inc)?;
         let n_params: usize = spec.param_shapes.iter().map(|s| s.numel()).sum();
         let map = ShardMap::build(n_params, roles.server_ranks.len());
@@ -356,6 +375,10 @@ impl PsRank<'_> {
                 return Ok(EraEnd::Died);
             }
             let local = self.worker_epoch(comm, client, steps)?;
+            if self.metrics.died {
+                // A clock-axis chaos kill fired mid-epoch.
+                return Ok(EraEnd::Died);
+            }
             // Record locally; a retried epoch overwrites its slot.
             if self.epoch_loss_acc.len() <= self.epoch {
                 self.epoch_loss_acc.resize(self.epoch + 1, [0.0; 2]);
@@ -436,12 +459,24 @@ impl PsRank<'_> {
         client: &mut PsClient,
         steps: usize,
     ) -> MpiResult<[f64; 2]> {
+        let clock_kill = self.cfg.chaos.clock_kill_for(comm.world_rank());
         let replica = self.replica.as_mut().expect("worker replica");
         let shard = self.train_shard.as_ref().expect("worker shard");
         let mut it = BatchIter::train(shard, replica.batch, &mut self.rng);
         let mut loss_sum = 0f64;
         let mut loss_n = 0usize;
         for _ in 0..steps {
+            // Clock-axis chaos kill at the step boundary.
+            if let Some(t) = clock_kill {
+                if comm.clock() >= t {
+                    comm.with_events(|s| {
+                        s.record_kill(self.metrics.steps as usize, comm.world_rank())
+                    });
+                    comm.fail_self();
+                    self.metrics.died = true;
+                    return Ok([loss_sum, loss_n as f64]);
+                }
+            }
             let mut x = std::mem::take(&mut replica.x_buf);
             let mut y = std::mem::take(&mut replica.y_buf);
             let got = it.next_into(&mut x, &mut y);

@@ -1,0 +1,236 @@
+//! ISSUE 6 acceptance: the seeded chaos sweep. Over 100 generated fault
+//! schedules run against every sync topology — flat allreduce, bucketed
+//! opportunistic pipeline, and the parameter server under BSP/ASP/SSP —
+//! asserting the recovery invariants:
+//!
+//! * the run completes (no deadlock) and surviving replicas are bitwise
+//!   identical;
+//! * every step-axis kill fires and nobody dies who was not scheduled to;
+//! * kill-free schedules (delays/stragglers only) leave the exact modes'
+//!   `params_digest` bitwise-equal to the undisturbed baseline;
+//! * SSP staleness never exceeds its bound.
+//!
+//! On a violation the failing plan is greedily shrunk
+//! ([`dtf::chaos::shrink_search`]) and the panic reports the locally
+//! minimal schedule plus the seed that regenerates the original.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+
+use dtf::chaos::{shrink_search, ChaosPlan};
+use dtf::coordinator::{
+    run_training, DrainOrder, ExecMode, SyncMode, SyncStrategy, TrainConfig, TrainMode,
+    TrainReport,
+};
+use dtf::mpi::{AllreduceAlgorithm, NetProfile};
+use dtf::ps::Consistency;
+use dtf::runtime::Manifest;
+
+const EPOCHS: usize = 2;
+const STEPS_CAP: usize = 6;
+/// Virtual-time horizon for clock-axis kills: roughly the span of a run
+/// (6 steps x 2 epochs x ~0.3 ms/step plus sync), so most sampled kill
+/// times land inside the run and actually fire.
+const HORIZON_S: f64 = 0.005;
+
+#[derive(Clone, Copy)]
+enum Scenario {
+    Flat,
+    Bucketed,
+    Ps(Consistency),
+}
+
+impl Scenario {
+    fn name(self) -> String {
+        match self {
+            Scenario::Flat => "flat".into(),
+            Scenario::Bucketed => "bucketed-opportunistic".into(),
+            Scenario::Ps(c) => format!("ps-{}", c.name()),
+        }
+    }
+
+    fn ranks(self) -> usize {
+        match self {
+            Scenario::Flat | Scenario::Bucketed => 4,
+            Scenario::Ps(_) => 6,
+        }
+    }
+
+    /// Ranks the generator must never kill, beyond its built-in rank-0
+    /// protection: the last shard server, so the PS pool survives any
+    /// schedule (workers 0..=3, servers {4, 5} at p=6).
+    fn protected(self) -> Vec<usize> {
+        match self {
+            Scenario::Flat | Scenario::Bucketed => vec![],
+            Scenario::Ps(_) => vec![self.ranks() - 1],
+        }
+    }
+
+    fn exact(self) -> bool {
+        !matches!(
+            self,
+            Scenario::Ps(Consistency::Asp) | Scenario::Ps(Consistency::Ssp { .. })
+        )
+    }
+
+    fn cfg(self) -> TrainConfig {
+        let mut cfg = TrainConfig::new("chp")
+            .with_epochs(EPOCHS)
+            .with_sync(SyncMode::GradientAverage)
+            .with_mode(ExecMode::Sim {
+                secs_per_sample: 2e-5,
+            })
+            .with_scale(1.0)
+            .with_steps_cap(STEPS_CAP);
+        cfg.allreduce = AllreduceAlgorithm::RecursiveDoubling;
+        match self {
+            Scenario::Flat => cfg.with_strategy(SyncStrategy::Flat),
+            Scenario::Bucketed => cfg
+                .with_strategy(SyncStrategy::Bucketed {
+                    max_bytes: 16 * 1024,
+                })
+                .with_drain(DrainOrder::Opportunistic),
+            Scenario::Ps(consistency) => cfg.with_train_mode(TrainMode::ParameterServer {
+                servers: 2,
+                consistency,
+            }),
+        }
+    }
+}
+
+fn manifest() -> Arc<Manifest> {
+    Manifest::sim_mlp("chp", 96, 256, 8, 4096, 16)
+}
+
+fn run(cfg: TrainConfig, ranks: usize) -> dtf::Result<TrainReport> {
+    run_training(cfg, manifest(), ranks, NetProfile::infiniband_fdr())
+}
+
+fn baseline_digest(scen: Scenario) -> u64 {
+    let report = run(scen.cfg(), scen.ranks()).expect("undisturbed baseline run");
+    assert!(report.replicas_bitwise_identical());
+    report
+        .per_rank
+        .iter()
+        .find(|r| !r.died && !r.is_server)
+        .unwrap()
+        .params_digest
+}
+
+/// Run one schedule and check every recovery invariant. `Err` is a
+/// human-readable violation (also the shrink predicate's failure signal).
+fn check(scen: Scenario, plan: &ChaosPlan, baseline: u64) -> Result<(), String> {
+    let cfg = plan.apply_to(scen.cfg());
+    let ranks = scen.ranks();
+    // A rank-thread panic must count as a failed (shrinkable) schedule,
+    // not abort the whole sweep.
+    let report = match catch_unwind(AssertUnwindSafe(|| run(cfg, ranks))) {
+        Err(_) => return Err("a rank thread panicked".into()),
+        Ok(Err(e)) => return Err(format!("run_training failed: {e}")),
+        Ok(Ok(r)) => r,
+    };
+    if !report.replicas_bitwise_identical() {
+        return Err("surviving replicas diverged bitwise".into());
+    }
+    let mut victims: Vec<usize> = plan.step_kills.iter().map(|&(_, r)| r).collect();
+    victims.extend(plan.clock_kills.iter().map(|&(_, r)| r));
+    for r in &report.per_rank {
+        if r.died && !victims.contains(&r.world_rank) {
+            return Err(format!("rank {} died without being scheduled", r.world_rank));
+        }
+        if !r.died && !r.is_server && r.steps == 0 {
+            return Err(format!("surviving worker {} made no progress", r.world_rank));
+        }
+    }
+    // Step-axis kills land at program points every mode must reach
+    // (epoch/min-clock boundaries below the configured horizon).
+    for &(step, rank) in &plan.step_kills {
+        let victim = report
+            .per_rank
+            .iter()
+            .find(|r| r.world_rank == rank)
+            .ok_or_else(|| format!("rank {rank} missing from report"))?;
+        if !victim.died {
+            return Err(format!("step kill ({step}, {rank}) never fired"));
+        }
+    }
+    if scen.exact() && plan.step_kills.is_empty() && plan.clock_kills.is_empty() {
+        let digest = report
+            .per_rank
+            .iter()
+            .find(|r| !r.died && !r.is_server)
+            .unwrap()
+            .params_digest;
+        if digest != baseline {
+            return Err(format!(
+                "kill-free schedule perturbed an exact mode: digest {digest:#x} \
+                 vs baseline {baseline:#x}"
+            ));
+        }
+    }
+    if let Scenario::Ps(Consistency::Ssp { bound }) = scen {
+        let observed = report.staleness_max();
+        if observed > bound {
+            return Err(format!("SSP staleness {observed} exceeds bound {bound}"));
+        }
+    }
+    Ok(())
+}
+
+/// Sweep `n` seeded schedules through a scenario; on a violation, shrink
+/// to a locally minimal failing plan and panic with both.
+fn sweep(scen: Scenario, seed_base: u64, n: u64) {
+    let baseline = baseline_digest(scen);
+    let mut nontrivial = 0usize;
+    for seed in seed_base..seed_base + n {
+        let plan = ChaosPlan::generate(
+            seed,
+            scen.ranks(),
+            EPOCHS,
+            HORIZON_S,
+            &scen.protected(),
+        );
+        plan.validate(scen.ranks())
+            .unwrap_or_else(|e| panic!("{} seed {seed}: generator emitted {e}", scen.name()));
+        nontrivial += usize::from(!plan.is_trivial());
+        if let Err(violation) = check(scen, &plan, baseline) {
+            let minimal =
+                shrink_search(plan.clone(), |p| check(scen, p, baseline).is_err());
+            panic!(
+                "{} seed {seed}: {violation}\n  original plan: {plan:?}\n  \
+                 minimal failing plan: {minimal:?}",
+                scen.name()
+            );
+        }
+    }
+    assert!(
+        nontrivial >= n as usize / 3,
+        "{}: sweep was mostly vacuous ({nontrivial}/{n} non-trivial plans)",
+        scen.name()
+    );
+}
+
+#[test]
+fn chaos_sweep_flat_allreduce() {
+    sweep(Scenario::Flat, 0, 24);
+}
+
+#[test]
+fn chaos_sweep_bucketed_opportunistic() {
+    sweep(Scenario::Bucketed, 1000, 24);
+}
+
+#[test]
+fn chaos_sweep_ps_bsp() {
+    sweep(Scenario::Ps(Consistency::Bsp), 2000, 21);
+}
+
+#[test]
+fn chaos_sweep_ps_asp() {
+    sweep(Scenario::Ps(Consistency::Asp), 3000, 21);
+}
+
+#[test]
+fn chaos_sweep_ps_ssp() {
+    sweep(Scenario::Ps(Consistency::Ssp { bound: 2 }), 4000, 21);
+}
