@@ -6,17 +6,21 @@
 //! Runs entirely in Sim mode — no AOT artifacts or PJRT needed: compute is
 //! charged to the virtual clock from a calibrated per-sample cost, and the
 //! alpha-beta network model prices every message, so the printed virtual
-//! times are the paper-style numbers. The same job runs twice, once per
-//! `SyncStrategy`; the delta is exactly the communication the pipeline
-//! hides behind backprop. The final parameter digests agree bit for bit —
-//! overlap costs no reproducibility (recursive doubling's combine order is
-//! position-independent; see `coordinator::pipeline`).
+//! times are the paper-style numbers. The same job runs three times: flat
+//! blocking, bucketed pipelined, and (ISSUE 7) the topology-aware variant
+//! — `--bucket-alg hier --drain opportunistic` on 4-rank nodes, where each
+//! bucket runs the two-level intra/inter schedule and completed buckets
+//! apply in completion order under a seeded delivery session. The final
+//! parameter digests agree bit for bit across all three — overlap,
+//! hierarchy, and drain order cost no reproducibility (every schedule
+//! keeps the recursive-doubling combine tree; see `coordinator::pipeline`
+//! and `mpi::collectives::ihierarchical`).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use dtf::coordinator::{
-    run_training, ExecMode, SyncMode, SyncStrategy, TrainConfig,
+    run_training, BucketAlg, DrainOrder, ExecMode, SyncMode, SyncStrategy, TrainConfig,
 };
 use dtf::model::ArchSpec;
 use dtf::mpi::{AllreduceAlgorithm, NetProfile};
@@ -51,7 +55,7 @@ fn manifest() -> dtf::Result<Arc<Manifest>> {
 fn main() -> dtf::Result<()> {
     let ranks = 8;
     let profile = NetProfile::infiniband_fdr();
-    let mk = |strategy: SyncStrategy| {
+    let mk = |strategy: SyncStrategy, topology: bool| {
         let mut cfg = TrainConfig::new("demo")
             .with_epochs(3)
             .with_sync(SyncMode::GradientAverage)
@@ -62,21 +66,41 @@ fn main() -> dtf::Result<()> {
             .with_steps_cap(16)
             .with_strategy(strategy);
         cfg.allreduce = AllreduceAlgorithm::RecursiveDoubling;
+        // The topology variant mirrors `--cores-per-node 4 --bucket-alg
+        // hier --drain opportunistic --chaos-seed 7`: the launcher grafts
+        // the node structure onto the profile, the trainer builds the
+        // Topology, and the seeded session keeps the opportunistic drain
+        // deterministic.
+        if topology {
+            cfg = cfg
+                .with_cores_per_node(4)
+                .with_bucket_alg(BucketAlg::Hierarchical)
+                .with_drain(DrainOrder::Opportunistic)
+                .with_chaos_seed(7);
+        }
         run_training(cfg, manifest()?, ranks, profile.clone())
     };
 
     println!("=== overlap_sync: 280k-param MLP, p={ranks}, InfiniBand cost model ===\n");
     let mut digests = Vec::new();
-    for (name, strategy) in [
-        ("flat     (blocking allreduce)", SyncStrategy::Flat),
+    for (name, strategy, topology) in [
+        ("flat     (blocking allreduce)", SyncStrategy::Flat, false),
         (
             "bucketed (pipelined, 128 KiB)",
             SyncStrategy::Bucketed {
                 max_bytes: SyncStrategy::DEFAULT_BUCKET_BYTES,
             },
+            false,
+        ),
+        (
+            "hier     (2 nodes x 4 ranks, opportunistic drain)",
+            SyncStrategy::Bucketed {
+                max_bytes: SyncStrategy::DEFAULT_BUCKET_BYTES,
+            },
+            true,
         ),
     ] {
-        let report = mk(strategy)?;
+        let report = mk(strategy, topology)?;
         println!("  {name}");
         println!(
             "    train makespan {:.4} s   sync stall {:.6} s/rank   buckets/rank {}",
@@ -88,7 +112,7 @@ fn main() -> dtf::Result<()> {
         digests.push(report.per_rank[0].params_digest);
     }
     println!(
-        "\n  final params bitwise identical across strategies: {}",
+        "\n  final params bitwise identical across all three variants: {}",
         if digests.windows(2).all(|w| w[0] == w[1]) {
             "yes"
         } else {

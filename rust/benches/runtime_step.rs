@@ -34,8 +34,10 @@ use std::time::{Duration, Instant};
 use dtf::coordinator::{BucketPlan, PipelineEngine, SyncStrategy};
 use dtf::model::init_xavier;
 use dtf::mpi::compat::ref_ring;
-use dtf::mpi::{allreduce_with, AllreduceAlgorithm, IAllreduce, IRabenseifner, ReduceOp};
-use dtf::mpi::{barrier, Communicator, MpiResult, NetProfile, World};
+use dtf::mpi::{
+    allreduce_with, AllreduceAlgorithm, IAllreduce, IHierarchical, IRabenseifner, ReduceOp,
+};
+use dtf::mpi::{barrier, Communicator, MpiResult, NetProfile, Topology, World};
 use dtf::runtime::{Engine, HostSlice, Manifest};
 use dtf::util::rng::Rng;
 use dtf::util::stats::{bench_fn, fmt_secs, header};
@@ -238,6 +240,80 @@ fn bench_rabenseifner_vs_rd() -> RabVsRd {
     }
 }
 
+/// ISSUE-7 acceptance grid: 16 ranks as 4 nodes of 4 on the InfiniBand
+/// model, flat-vs-hierarchical at the 64 MiB point.
+const HIER_P: usize = 16;
+const HIER_CPN: usize = 4;
+
+/// The ISSUE-7 topology comparison: closed forms at 64 MiB / p=16 /
+/// cores_per_node=4, plus a live virtual-clock cross-check. The flat arm
+/// runs on the *flat* InfiniBand profile — a runtime that doesn't exploit
+/// locality pays inter-node prices on every hop, which is exactly the
+/// regime the hierarchical schedule exists to beat. (Flat Rabenseifner
+/// simulated *on* the node-structured profile picks up the intra discount
+/// implicitly through block packing and roughly ties — so that comparison
+/// would only measure the pricing overlay, not the schedule.)
+struct HierVsFlat {
+    large_bucket_bytes: usize,
+    modelled_flat_rab_s: f64,
+    modelled_hier_s: f64,
+    crossover_bytes: Option<usize>,
+    sim_bucket_bytes: usize,
+    sim_flat_rab_s: f64,
+    sim_hier_s: f64,
+}
+
+/// Max-over-ranks virtual seconds of one wait-driven hierarchical
+/// allreduce of `n_elems` f32 at p=[`HIER_P`] on the node-structured
+/// InfiniBand model (topology built outside the measured window, like the
+/// trainer does).
+fn sim_hierarchical_allreduce(n_elems: usize) -> f64 {
+    let w = World::new(HIER_P, NetProfile::infiniband_fdr().on_nodes(HIER_CPN));
+    let clocks = w.run_unwrap(move |c| {
+        let topo = Topology::build(&c)?;
+        barrier(&c)?;
+        let base = c.clock();
+        let mut v = vec![1.0f32; n_elems];
+        let mut scratch = vec![0.0f32; n_elems];
+        let mut op = IHierarchical::start(topo, &c, ReduceOp::Sum, &mut v)?;
+        op.wait(&c, &mut v, &mut scratch)?;
+        Ok(c.clock() - base)
+    });
+    clocks.into_iter().fold(0.0, f64::max)
+}
+
+/// Flat-Rabenseifner control at the same p on the flat profile.
+fn sim_flat_rabenseifner_p16(n_elems: usize) -> f64 {
+    let w = World::new(HIER_P, NetProfile::infiniband_fdr());
+    let clocks = w.run_unwrap(move |c| {
+        barrier(&c)?;
+        let base = c.clock();
+        let mut v = vec![1.0f32; n_elems];
+        let mut scratch = vec![0.0f32; n_elems];
+        let mut op = IRabenseifner::start(&c, ReduceOp::Sum, &mut v)?;
+        op.wait(&c, &mut v, &mut scratch)?;
+        Ok(c.clock() - base)
+    });
+    clocks.into_iter().fold(0.0, f64::max)
+}
+
+fn bench_hierarchy_vs_flat() -> HierVsFlat {
+    let flat = NetProfile::infiniband_fdr();
+    let node = flat.clone().on_nodes(HIER_CPN);
+    let large = 64usize << 20;
+    // Live-sim size: 16 ranks × 2 buffers × 4 MiB = 128 MiB resident.
+    let sim_bytes = 4usize << 20;
+    HierVsFlat {
+        large_bucket_bytes: large,
+        modelled_flat_rab_s: flat.rabenseifner_allreduce_time(HIER_P, large),
+        modelled_hier_s: node.hierarchical_allreduce_time(HIER_P, large),
+        crossover_bytes: node.hierarchical_crossover_bytes(HIER_P),
+        sim_bucket_bytes: sim_bytes,
+        sim_flat_rab_s: sim_flat_rabenseifner_p16(sim_bytes / 4),
+        sim_hier_s: sim_hierarchical_allreduce(sim_bytes / 4),
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn emit_json(
     path: &str,
@@ -250,9 +326,14 @@ fn emit_json(
     bucketed: (f64, f64),
     n_buckets: usize,
     rab: &RabVsRd,
+    hier: &HierVsFlat,
 ) {
     let improvement = (base - pooled) / base;
     let crossover = match rab.crossover_bytes {
+        Some(b) => b.to_string(),
+        None => "null".to_string(),
+    };
+    let hier_crossover = match hier.crossover_bytes {
         Some(b) => b.to_string(),
         None => "null".to_string(),
     };
@@ -278,6 +359,17 @@ fn emit_json(
          \"sim_rd_virtual_s\": {srd:.9},\n    \
          \"sim_rabenseifner_virtual_s\": {srab:.9},\n    \
          \"sim_speedup\": {ssp:.4}\n  }},\n  \
+         \"hierarchy_vs_flat\": {{\n    \"p\": {hp},\n    \
+         \"cores_per_node\": {hcpn},\n    \
+         \"large_bucket_bytes\": {hlbb},\n    \
+         \"modelled_flat_rabenseifner_s\": {hmrab:.9},\n    \
+         \"modelled_hierarchical_s\": {hmh:.9},\n    \
+         \"modelled_speedup\": {hmsp:.4},\n    \
+         \"hier_crossover_bytes\": {hier_crossover},\n    \
+         \"sim_bucket_bytes\": {hsbb},\n    \
+         \"sim_flat_rabenseifner_virtual_s\": {hsrab:.9},\n    \
+         \"sim_hierarchical_virtual_s\": {hsh:.9},\n    \
+         \"sim_speedup\": {hssp:.4}\n  }},\n  \
          \"note\": \"baseline = pre-pool allocating transport (fresh Vec per hop); \
          pooled = BufferPool + recv_into. overlap section: flat_ring = compute then one \
          blocking ring allreduce (the trainer's Auto pick at this size); flat_rd = same \
@@ -291,6 +383,13 @@ fn emit_json(
          sim_* drive the real IRabenseifner/IAllreduce state machines over the \
          simulated transport at 8 MiB as an emergent cross-check; \
          auto_crossover_bytes is where BucketAlg::Auto switches on this profile. \
+         hierarchy_vs_flat section (ISSUE 7): modelled_* compare flat Rabenseifner \
+         at flat InfiniBand prices (a runtime that ignores node locality) against \
+         the two-level IHierarchical closed form on the node-structured profile at \
+         the 64 MiB / p=16 / cores_per_node=4 acceptance point (CI fails unless \
+         hierarchical is >=20% lower); sim_* drive the real state machines at 4 MiB \
+         as the emergent cross-check; hier_crossover_bytes is where BucketAlg::Auto \
+         upgrades buckets to IHierarchical on this topology. \
          Regenerate with `cargo bench --bench runtime_step`.\"\n}}\n",
         bucket_bytes = SyncStrategy::DEFAULT_BUCKET_BYTES,
         frw = flat_ring.0,
@@ -309,6 +408,16 @@ fn emit_json(
         srd = rab.sim_rd_s,
         srab = rab.sim_rab_s,
         ssp = rab.sim_rd_s / rab.sim_rab_s,
+        hp = HIER_P,
+        hcpn = HIER_CPN,
+        hlbb = hier.large_bucket_bytes,
+        hmrab = hier.modelled_flat_rab_s,
+        hmh = hier.modelled_hier_s,
+        hmsp = hier.modelled_flat_rab_s / hier.modelled_hier_s,
+        hsbb = hier.sim_bucket_bytes,
+        hsrab = hier.sim_flat_rab_s,
+        hsh = hier.sim_hier_s,
+        hssp = hier.sim_flat_rab_s / hier.sim_hier_s,
     );
     match std::fs::write(path, body) {
         Ok(()) => println!("wrote {path}"),
@@ -393,6 +502,28 @@ fn main() {
         },
     );
 
+    // ---- hierarchical vs flat on a node topology (ISSUE 7) ---------------
+    let hier = bench_hierarchy_vs_flat();
+    println!(
+        "\nhierarchical vs flat rabenseifner (p={HIER_P}, {HIER_CPN} ranks/node, \
+         InfiniBand model):\n  \
+         modelled @ {} MiB: flat rab {:>12}   hierarchical {:>12}   ({:.2}x)\n  \
+         simulated @ {} MiB: flat rab {:>12}   hierarchical {:>12}   ({:.2}x)\n  \
+         auto hier crossover: {}",
+        hier.large_bucket_bytes >> 20,
+        fmt_secs(hier.modelled_flat_rab_s),
+        fmt_secs(hier.modelled_hier_s),
+        hier.modelled_flat_rab_s / hier.modelled_hier_s,
+        hier.sim_bucket_bytes >> 20,
+        fmt_secs(hier.sim_flat_rab_s),
+        fmt_secs(hier.sim_hier_s),
+        hier.sim_flat_rab_s / hier.sim_hier_s,
+        match hier.crossover_bytes {
+            Some(b) => format!("{} KiB", b >> 10),
+            None => "never (flat wins at this p/topology)".into(),
+        },
+    );
+
     // Default to the tracked repo-root record (cargo bench runs with cwd
     // rust/, which would otherwise leave an untracked copy behind).
     let json_path = std::env::var("DTF_BENCH_JSON").unwrap_or_else(|_| {
@@ -400,7 +531,7 @@ fn main() {
     });
     emit_json(
         &json_path, iters, base, pooled, compute_s, flat_ring, flat_rd, bucketed, n_buckets,
-        &rab,
+        &rab, &hier,
     );
 
     // ---- PJRT execution latency (needs AOT artifacts) --------------------

@@ -336,6 +336,14 @@ pub struct TrainConfig {
     pub fault_plan: FaultPlan,
     /// Seeded chaos / record / replay session configuration (ISSUE 6).
     pub chaos: ChaosConfig,
+    /// Ranks per simulated node (`--cores-per-node`): overlays node
+    /// structure on the network profile (intra-node links get
+    /// shared-memory pricing, `NetProfile::on_nodes`) and lets the
+    /// bucketed pipeline build a [`crate::mpi::Topology`] for the
+    /// hierarchical allreduce (ISSUE 7). `None` keeps the profile's own
+    /// node structure (flat for the built-in fabrics except
+    /// `haswell_cluster`).
+    pub cores_per_node: Option<usize>,
     /// Trim the communicator group's buffer pool down to this many buffers
     /// per shelf at every epoch boundary (`None` = never trim, the
     /// churn-free default). Bounds idle pool retention on long runs at the
@@ -369,6 +377,7 @@ impl TrainConfig {
             seed: 0xD7F,
             fault_plan: FaultPlan::none(),
             chaos: ChaosConfig::default(),
+            cores_per_node: None,
             pool_trim: None,
             verbose: false,
         }
@@ -446,13 +455,24 @@ impl TrainConfig {
         self
     }
 
+    pub fn with_cores_per_node(mut self, cpn: usize) -> Self {
+        self.cores_per_node = Some(cpn);
+        self
+    }
+
     /// Config-level validation, run once before any rank thread spawns
-    /// (the launcher calls it): rejects degenerate bucket caps and
-    /// algorithm thresholds with a clear diagnosis instead of letting the
-    /// plan builder clamp them into 1-element chunks.
+    /// (the launcher calls it): rejects degenerate bucket caps, algorithm
+    /// thresholds, and node sizes with a clear diagnosis instead of
+    /// letting downstream code clamp or divide by them.
     pub fn validate(&self) -> Result<(), String> {
         self.sync_strategy.validate()?;
-        self.bucket_alg.validate()
+        self.bucket_alg.validate()?;
+        if self.cores_per_node == Some(0) {
+            return Err(
+                "cores-per-node must be at least 1 rank per node, got 0".into(),
+            );
+        }
+        Ok(())
     }
 
     /// Execution mode for a specific rank: Sim compute picks up the
@@ -525,6 +545,16 @@ mod tests {
             threshold_bytes: Some(1 << 20),
         };
         assert!(cfg.validate().is_ok());
+        // ISSUE 7 satellite: zero ranks per node is rejected by name; any
+        // positive node size (even bigger than the world) validates —
+        // oversize is a launcher warning, not an error.
+        cfg.cores_per_node = Some(0);
+        let e = cfg.validate().unwrap_err();
+        assert!(e.contains("cores-per-node") && e.contains("at least 1"), "{e}");
+        cfg.cores_per_node = Some(64);
+        assert!(cfg.validate().is_ok());
+        cfg = cfg.with_cores_per_node(4);
+        assert_eq!(cfg.cores_per_node, Some(4));
     }
 
     #[test]

@@ -77,6 +77,21 @@ pub fn run_training(
     }
     let arch = cfg.arch.clone();
     let mut cfg = cfg;
+    let mut profile = profile;
+    // Node-structure overlay (`--cores-per-node`): remap the profile
+    // *before* contention and world construction so intra-node pricing,
+    // compute contention, and the trainer's Topology all see the same
+    // grouping. Oversize is legal (one node holds everything) but almost
+    // certainly a typo'd flag — warn with the bound by name.
+    if let Some(cpn) = cfg.cores_per_node {
+        if cpn > ranks {
+            eprintln!(
+                "warning: --cores-per-node {cpn} exceeds the {ranks}-rank world; \
+                 all ranks land on one node (hierarchical sync degenerates to flat)"
+            );
+        }
+        profile = profile.on_nodes(cpn);
+    }
     // Simulated compute pays the node-occupancy (DRAM contention) tax of
     // the chosen topology profile — see NetProfile::compute_contention.
     if let super::config::ExecMode::Sim { secs_per_sample } = cfg.mode {

@@ -71,6 +71,7 @@
 //! state; stale envelopes die with the revoked communicator group.
 
 use std::ops::Range;
+use std::sync::Arc;
 
 use super::config::SyncMode;
 use super::replica::{Replica, StepOutcome};
@@ -78,7 +79,8 @@ use crate::mpi::collectives::chunk_range;
 use crate::mpi::comm::Communicator;
 use crate::mpi::datatype::ReduceOp;
 use crate::mpi::error::{MpiError, MpiResult};
-use crate::mpi::{IAllreduce, IRabenseifner};
+use crate::mpi::topology::Topology;
+use crate::mpi::{IAllreduce, IHierarchical, IRabenseifner};
 use crate::model::ParamSet;
 
 #[cfg(doc)]
@@ -104,21 +106,34 @@ pub enum BucketAlg {
     /// Rabenseifner reduce-scatter + allgather ([`IRabenseifner`]) for
     /// every bucket — right when the cap keeps buckets large.
     Rabenseifner,
+    /// Topology-aware two-level allreduce ([`IHierarchical`]) for every
+    /// bucket: intra-node reduce-scatter on shared-memory links, an
+    /// inter-node Rabenseifner per rail on the (1/s)-size shards, and an
+    /// intra-node allgather. Needs a [`Topology`] on the engine
+    /// ([`PipelineEngine::with_topology`]); without one it degrades to
+    /// [`BucketAlg::Rabenseifner`] (the flat schedule the hierarchical
+    /// handle itself falls back to on irregular node grids).
+    Hierarchical,
     /// Size-adaptive: rd below the threshold, Rabenseifner at or above
     /// it. `threshold_bytes: None` derives the alpha-beta crossover from
     /// the communicator's profile at launch time
     /// ([`NetProfile::rabenseifner_crossover_bytes`]); `Some(t)` pins it
-    /// (the `--bucket-alg-threshold` override).
+    /// (the `--bucket-alg-threshold` override). When the engine carries a
+    /// regular [`Topology`], buckets past the hierarchical crossover
+    /// ([`NetProfile::hierarchical_crossover_bytes`]) upgrade further to
+    /// [`IHierarchical`].
     Auto { threshold_bytes: Option<usize> },
 }
 
 impl BucketAlg {
-    /// Parse `rd`, `rabenseifner`/`rab`, `auto`, or `auto:<bytes>` with a
-    /// config-parse-time diagnosis instead of a generic usage error.
+    /// Parse `rd`, `rabenseifner`/`rab`, `hier`/`hierarchical`, `auto`,
+    /// or `auto:<bytes>` with a config-parse-time diagnosis instead of a
+    /// generic usage error.
     pub fn parse(s: &str) -> Result<Self, String> {
         match s {
             "rd" | "recursive-doubling" => Ok(Self::Rd),
             "rabenseifner" | "rab" => Ok(Self::Rabenseifner),
+            "hier" | "hierarchical" => Ok(Self::Hierarchical),
             "auto" => Ok(Self::Auto {
                 threshold_bytes: None,
             }),
@@ -126,7 +141,7 @@ impl BucketAlg {
                 let rest = other.strip_prefix("auto:").ok_or_else(|| {
                     format!(
                         "unknown bucket algorithm {other:?} \
-                         (expected rd|rabenseifner|auto[:<bytes>])"
+                         (expected rd|rabenseifner|hier|auto[:<bytes>])"
                     )
                 })?;
                 let threshold: usize = rest.parse().map_err(|_| {
@@ -158,13 +173,47 @@ impl BucketAlg {
         Ok(())
     }
 
+    /// Does a bucket of `nbytes` run the hierarchical schedule? A pure
+    /// function of (self, shared topology, profile, p, size) — identical
+    /// on every rank, which the lockstep launch schedule requires (the
+    /// topology itself is built from the shared profile, so its presence
+    /// and regularity agree across ranks).
+    ///
+    /// `Hierarchical` picks it whenever a topology handle exists (the
+    /// handle degrades to flat Rabenseifner internally on irregular
+    /// grids). `Auto` is stricter: only a *regular* topology on a profile
+    /// with real node structure, and only past the modelled size where
+    /// the two-level schedule beats both flat forms
+    /// ([`NetProfile::hierarchical_crossover_bytes`]).
+    fn picks_hierarchical(
+        self,
+        comm: &Communicator,
+        topo: Option<&Arc<Topology>>,
+        nbytes: usize,
+    ) -> bool {
+        let Some(topo) = topo else { return false };
+        match self {
+            BucketAlg::Rd | BucketAlg::Rabenseifner => false,
+            BucketAlg::Hierarchical => true,
+            BucketAlg::Auto { .. } => {
+                topo.regular()
+                    && comm
+                        .profile()
+                        .hierarchical_crossover_bytes(comm.size())
+                        .is_some_and(|t| nbytes >= t)
+            }
+        }
+    }
+
     /// Does a bucket of `nbytes` run Rabenseifner? A pure function of
     /// (self, profile, p, size) — identical on every rank, which the
-    /// lockstep launch schedule requires.
+    /// lockstep launch schedule requires. `Hierarchical` lands here when
+    /// the engine has no topology handle: flat Rabenseifner is exactly
+    /// the schedule the hierarchical handle itself degrades to.
     fn picks_rabenseifner(self, comm: &Communicator, nbytes: usize) -> bool {
         match self {
             BucketAlg::Rd => false,
-            BucketAlg::Rabenseifner => true,
+            BucketAlg::Rabenseifner | BucketAlg::Hierarchical => true,
             BucketAlg::Auto { threshold_bytes } => threshold_bytes
                 .or_else(|| comm.profile().rabenseifner_crossover_bytes(comm.size()))
                 .is_some_and(|t| nbytes >= t),
@@ -209,12 +258,13 @@ impl DrainOrder {
     }
 }
 
-/// One in-flight bucket operation — rd or Rabenseifner, per
-/// [`BucketAlg`]; both expose the same drive surface.
+/// One in-flight bucket operation — rd, Rabenseifner, or hierarchical,
+/// per [`BucketAlg`]; all three expose the same drive surface.
 #[derive(Debug)]
 enum BucketOp {
     Rd(IAllreduce),
     Rabenseifner(IRabenseifner),
+    Hierarchical(IHierarchical),
 }
 
 impl BucketOp {
@@ -227,6 +277,7 @@ impl BucketOp {
         match self {
             BucketOp::Rd(op) => op.drive_one_round(comm, data, scratch),
             BucketOp::Rabenseifner(op) => op.drive_one_round(comm, data, scratch),
+            BucketOp::Hierarchical(op) => op.drive_one_round(comm, data, scratch),
         }
     }
 
@@ -239,6 +290,7 @@ impl BucketOp {
         match self {
             BucketOp::Rd(op) => op.wait(comm, data, scratch),
             BucketOp::Rabenseifner(op) => op.wait(comm, data, scratch),
+            BucketOp::Hierarchical(op) => op.wait(comm, data, scratch),
         }
     }
 
@@ -253,6 +305,7 @@ impl BucketOp {
         match self {
             BucketOp::Rd(op) => op.test(comm, data, scratch),
             BucketOp::Rabenseifner(op) => op.test(comm, data, scratch),
+            BucketOp::Hierarchical(op) => op.test(comm, data, scratch),
         }
     }
 
@@ -260,6 +313,7 @@ impl BucketOp {
         match self {
             BucketOp::Rd(op) => op.is_complete(),
             BucketOp::Rabenseifner(op) => op.is_complete(),
+            BucketOp::Hierarchical(op) => op.is_complete(),
         }
     }
 
@@ -267,6 +321,7 @@ impl BucketOp {
         match self {
             BucketOp::Rd(op) => op.cancel(),
             BucketOp::Rabenseifner(op) => op.cancel(),
+            BucketOp::Hierarchical(op) => op.cancel(),
         }
     }
 }
@@ -362,6 +417,11 @@ pub struct PipelineEngine {
     plan: BucketPlan,
     alg: BucketAlg,
     drain_order: DrainOrder,
+    /// Node-structure subcomms for [`BucketAlg::Hierarchical`] / the Auto
+    /// upgrade. Built collectively by the trainer (every rank must hold
+    /// one or none — the launch schedule requires agreement) and swapped
+    /// out after ULFM shrink ([`Self::set_topology`]).
+    topo: Option<Arc<Topology>>,
     states: Vec<Option<BucketOp>>,
     scratch: Vec<f32>,
     /// Virtual seconds the last drain spent before the front-most layer's
@@ -381,6 +441,7 @@ impl PipelineEngine {
             plan,
             alg: BucketAlg::Rd,
             drain_order: DrainOrder::Launch,
+            topo: None,
             states,
             scratch,
             front_apply_last_s: 0.0,
@@ -400,6 +461,23 @@ impl PipelineEngine {
     pub fn with_drain(mut self, order: DrainOrder) -> PipelineEngine {
         self.drain_order = order;
         self
+    }
+
+    /// Attach the node-structure subcomms that [`BucketAlg::Hierarchical`]
+    /// buckets (and the Auto upgrade) run over. Must be called with the
+    /// same decision on every rank — [`Topology::build`] is collective and
+    /// the trainer gates the call on shared config + profile, so this
+    /// holds by construction.
+    pub fn with_topology(mut self, topo: Arc<Topology>) -> PipelineEngine {
+        self.topo = Some(topo);
+        self
+    }
+
+    /// Replace (or clear) the topology — the ULFM recovery path: the old
+    /// subcomms die with the revoked parent, and the trainer rebuilds over
+    /// the shrunk communicator.
+    pub fn set_topology(&mut self, topo: Option<Arc<Topology>>) {
+        self.topo = topo;
     }
 
     pub fn plan(&self) -> &BucketPlan {
@@ -461,7 +539,12 @@ impl PipelineEngine {
             let range = self.plan.buckets[i].range.clone();
             comm.advance(compute_secs * range.len() as f64 / total);
             let nbytes = range.len() * std::mem::size_of::<f32>();
-            let started = if self.alg.picks_rabenseifner(comm, nbytes) {
+            let started = if self.alg.picks_hierarchical(comm, self.topo.as_ref(), nbytes)
+            {
+                let topo = Arc::clone(self.topo.as_ref().expect("picks_hierarchical"));
+                IHierarchical::start(topo, comm, ReduceOp::Sum, &mut data[range])
+                    .map(BucketOp::Hierarchical)
+            } else if self.alg.picks_rabenseifner(comm, nbytes) {
                 IRabenseifner::start(comm, ReduceOp::Sum, &mut data[range])
                     .map(BucketOp::Rabenseifner)
             } else {
@@ -954,6 +1037,8 @@ mod tests {
         assert_eq!(BucketAlg::parse("rd"), Ok(BucketAlg::Rd));
         assert_eq!(BucketAlg::parse("rabenseifner"), Ok(BucketAlg::Rabenseifner));
         assert_eq!(BucketAlg::parse("rab"), Ok(BucketAlg::Rabenseifner));
+        assert_eq!(BucketAlg::parse("hier"), Ok(BucketAlg::Hierarchical));
+        assert_eq!(BucketAlg::parse("hierarchical"), Ok(BucketAlg::Hierarchical));
         assert_eq!(
             BucketAlg::parse("auto"),
             Ok(BucketAlg::Auto {
@@ -1122,6 +1207,100 @@ mod tests {
                             "alg={alg:?} p={p} rank={rank} i={i}"
                         );
                     }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_resolution_follows_topology_and_crossover() {
+        // Regular grid (p=8, 4 ranks/node): explicit Hierarchical needs
+        // only a topology handle; Auto additionally demands the modelled
+        // crossover. Without a handle, Hierarchical degrades to the flat
+        // Rabenseifner pick.
+        let w = World::new(8, NetProfile::infiniband_fdr().on_nodes(4));
+        w.run_unwrap(|c| {
+            let topo = Topology::build(&c)?;
+            assert!(topo.regular());
+            let hier = BucketAlg::Hierarchical;
+            assert!(hier.picks_hierarchical(&c, Some(&topo), MIN_BUCKET_BYTES));
+            assert!(!hier.picks_hierarchical(&c, None, usize::MAX));
+            assert!(hier.picks_rabenseifner(&c, MIN_BUCKET_BYTES));
+            let auto = BucketAlg::Auto {
+                threshold_bytes: None,
+            };
+            let x = c
+                .profile()
+                .hierarchical_crossover_bytes(c.size())
+                .expect("p=8 over 2 nodes has a hierarchical crossover");
+            assert!(auto.picks_hierarchical(&c, Some(&topo), x));
+            assert!(!auto.picks_hierarchical(&c, Some(&topo), x - 1));
+            assert!(!BucketAlg::Rd.picks_hierarchical(&c, Some(&topo), usize::MAX));
+            assert!(
+                !BucketAlg::Rabenseifner.picks_hierarchical(&c, Some(&topo), usize::MAX)
+            );
+            Ok(())
+        });
+        // Irregular grid (6 ranks on 4-core nodes): Auto never upgrades —
+        // the handle would run flat Rabenseifner anyway, so the upgrade
+        // buys nothing; explicit Hierarchical still opts in (and the
+        // handle's fallback keeps it correct).
+        let w = World::new(6, NetProfile::infiniband_fdr().on_nodes(4));
+        w.run_unwrap(|c| {
+            let topo = Topology::build(&c)?;
+            assert!(!topo.regular());
+            let auto = BucketAlg::Auto {
+                threshold_bytes: None,
+            };
+            assert!(!auto.picks_hierarchical(&c, Some(&topo), usize::MAX));
+            assert!(BucketAlg::Hierarchical.picks_hierarchical(
+                &c,
+                Some(&topo),
+                MIN_BUCKET_BYTES
+            ));
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hierarchical_engine_matches_flat_rd_bitwise() {
+        // Engine-level tentpole parity: hierarchical buckets over a real
+        // topology agree bit for bit with one flat rd allreduce — on
+        // regular grids (the two-level schedule) and irregular ones (the
+        // handle's flat fallback), under the priority drain.
+        for (p, cpn) in [(8usize, 2usize), (8, 4), (6, 2), (10, 4)] {
+            let sizes = [17usize, 64, 9, 33, 128];
+            let n: usize = sizes.iter().sum();
+            let w = World::new(p, NetProfile::zero().on_nodes(cpn));
+            let out = w.run_unwrap(move |c| {
+                let topo = Topology::build(&c)?;
+                let mk = |r: usize| -> Vec<f32> {
+                    (0..n)
+                        .map(|i| ((r * 31 + i * 17) % 101) as f32 * 0.25 - 12.0)
+                        .collect()
+                };
+                let mut eng = PipelineEngine::new(BucketPlan::build(&ranges(&sizes), 256))
+                    .with_alg(BucketAlg::Hierarchical)
+                    .with_topology(topo)
+                    .with_drain(DrainOrder::Priority);
+                let mut piped = mk(c.rank());
+                eng.allreduce_overlapped(&c, &mut piped, 0.0)?;
+                let mut flat = mk(c.rank());
+                allreduce_with(
+                    &c,
+                    AllreduceAlgorithm::RecursiveDoubling,
+                    ReduceOp::Sum,
+                    &mut flat,
+                )?;
+                Ok((piped, flat))
+            });
+            for (rank, (piped, flat)) in out.iter().enumerate() {
+                for i in 0..n {
+                    assert_eq!(
+                        piped[i].to_bits(),
+                        flat[i].to_bits(),
+                        "p={p} cpn={cpn} rank={rank} i={i}"
+                    );
                 }
             }
         }

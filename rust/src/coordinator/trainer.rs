@@ -15,12 +15,12 @@ use std::time::Instant;
 
 use super::config::{SyncEvery, SyncMode, SyncStrategy, TrainConfig};
 use super::metrics::{EvalPoint, RankMetrics};
-use super::pipeline::PipelineEngine;
+use super::pipeline::{BucketAlg, PipelineEngine};
 use super::replica::Replica;
 use super::sync::{sync_metrics, sync_replica};
 use crate::data::{load_train_test, scatter_dataset, BatchIter, Dataset};
 use crate::mpi::comm::Communicator;
-use crate::mpi::{allreduce_with, bcast, AllreduceAlgorithm, MpiError, ReduceOp};
+use crate::mpi::{allreduce_with, bcast, AllreduceAlgorithm, MpiError, ReduceOp, Topology};
 use crate::runtime::Manifest;
 use crate::util::rng::Rng;
 use crate::Result;
@@ -95,6 +95,19 @@ pub fn train_rank(
         ),
         SyncStrategy::Flat => None,
     };
+    // Hierarchical sync (ISSUE 7) needs the node-structure subcomms.
+    // `Topology::build` is collective; the gate is a pure function of the
+    // shared config + profile, so every rank calls it or none does — and
+    // it must be re-evaluated after every shrink (the old subcomms die
+    // with the revoked parent).
+    let mut topo = if pipeline.is_some() && wants_topology(cfg, &comm) {
+        Some(Topology::build(&comm)?)
+    } else {
+        None
+    };
+    if let (Some(engine), Some(t)) = (pipeline.as_mut(), topo.as_ref()) {
+        engine.set_topology(Some(Arc::clone(t)));
+    }
 
     // ---- epochs ----------------------------------------------------------
     let mut epoch = 0usize;
@@ -150,14 +163,28 @@ pub fn train_rank(
             }
             Err(MpiError::ProcFailed { .. }) | Err(MpiError::Revoked) => {
                 // ULFM recovery: cancel any in-flight bucket allreduces
-                // (their envelopes die with the revoked group), revoke so
-                // every survivor aborts, shrink, re-align replicas, retry
-                // this epoch on the survivors.
+                // (their envelopes die with the revoked group), revoke the
+                // topology subcomms *and* the parent so every survivor
+                // aborts — a peer parked in a leaf/rail recv only wakes on
+                // its own subcomm's revocation — then shrink, rebuild the
+                // topology over the survivors, re-align replicas, and
+                // retry this epoch.
                 if let Some(engine) = pipeline.as_mut() {
                     engine.cancel_all();
                 }
+                if let Some(t) = topo.as_ref() {
+                    t.revoke_all();
+                }
                 comm.revoke();
                 comm = comm.shrink()?;
+                topo = if pipeline.is_some() && wants_topology(cfg, &comm) {
+                    Some(Topology::build(&comm)?)
+                } else {
+                    None
+                };
+                if let Some(engine) = pipeline.as_mut() {
+                    engine.set_topology(topo.clone());
+                }
                 realign(&comm, &mut replica)?;
                 if cfg.verbose && comm.rank() == 0 {
                     eprintln!(
@@ -296,6 +323,20 @@ fn run_epoch(
     let mut agg = [loss_sum, loss_n as f64];
     sync_metrics(comm, &mut agg)?;
     Ok(if agg[1] > 0.0 { agg[0] / agg[1] } else { f64::NAN })
+}
+
+/// Does this run's bucketed pipeline want node-structure subcomms? A pure
+/// function of shared state (config + the communicator's profile), so all
+/// ranks agree — the collective `Topology::build` depends on that.
+/// `Auto` only bothers when the profile actually has node structure;
+/// explicit `Hierarchical` always builds (the handle degrades to flat
+/// Rabenseifner itself on irregular groupings).
+fn wants_topology(cfg: &TrainConfig, comm: &Communicator) -> bool {
+    match cfg.bucket_alg {
+        BucketAlg::Hierarchical => true,
+        BucketAlg::Auto { .. } => comm.profile().cores_per_node != usize::MAX,
+        BucketAlg::Rd | BucketAlg::Rabenseifner => false,
+    }
 }
 
 /// Post-recovery re-alignment: one weight-average brings every surviving

@@ -48,8 +48,8 @@ dtf — Distributed TensorFlow with MPI (PNNL 2016), Rust+JAX+Pallas reproductio
 USAGE:
   dtf train --arch <id> [--ranks N] [--epochs N] [--lr F] [--sync weight|grad|none]
             [--sync-every step|epoch] [--sync-strategy flat|bucketed[:BYTES]]
-            [--bucket-alg rd|rabenseifner|auto[:BYTES]] [--bucket-alg-threshold BYTES]
-            [--drain priority|launch]
+            [--bucket-alg rd|rabenseifner|hier|auto[:BYTES]] [--bucket-alg-threshold BYTES]
+            [--drain priority|launch] [--cores-per-node N]
             [--alg auto|ring|rd|tree] [--pool-trim N]
             [--train-mode allreduce|ps] [--ps-servers N]
             [--consistency bsp|asp|ssp:<s>] [--straggler RANK:MULT]
@@ -64,11 +64,15 @@ USAGE:
 
 Bucketed sync (`--sync-strategy bucketed`): --bucket-alg picks the nonblocking
 allreduce under each gradient bucket — rd (latency-optimal), rabenseifner
-(bandwidth-optimal reduce-scatter+allgather), or auto, which switches at the
-alpha-beta crossover derived from --profile (pin it with auto:<bytes> or
---bucket-alg-threshold). All choices are bitwise-identical to flat rd.
---drain priority applies front-layer buckets first (MaTEx-style), shrinking
-the front-layer apply latency the training report prints.
+(bandwidth-optimal reduce-scatter+allgather), hier (topology-aware two-level:
+intra-node reduce + inter-node Rabenseifner over --cores-per-node groupings),
+or auto, which switches at the alpha-beta crossovers derived from --profile
+(pin the rab one with auto:<bytes> or --bucket-alg-threshold). All choices
+are bitwise-identical to flat rd. --cores-per-node N overlays node structure
+on the profile (shared-memory pricing inside each N-rank node) — hier needs
+it unless the profile has its own (socket). --drain priority applies
+front-layer buckets first (MaTEx-style), shrinking the front-layer apply
+latency the training report prints.
 
 Parameter-server mode (`--train-mode ps`): the last --ps-servers ranks shard
 the model and serve pull/push; --consistency picks bulk-synchronous (bsp,
@@ -106,10 +110,10 @@ fn parse_profile(args: &Args) -> Result<NetProfile> {
 fn cmd_train(args: &Args) -> Result<()> {
     args.check_known(&[
         "arch", "ranks", "epochs", "lr", "sync", "sync-every", "sync-strategy",
-        "bucket-alg", "bucket-alg-threshold", "drain", "alg", "pool-trim", "train-mode",
-        "ps-servers", "consistency", "straggler", "profile", "sim", "scale", "steps-cap",
-        "eval-every", "seed", "quiet", "broadcast-init", "chaos-seed", "chaos-delay",
-        "record-events", "replay-events",
+        "bucket-alg", "bucket-alg-threshold", "drain", "cores-per-node", "alg",
+        "pool-trim", "train-mode", "ps-servers", "consistency", "straggler", "profile",
+        "sim", "scale", "steps-cap", "eval-every", "seed", "quiet", "broadcast-init",
+        "chaos-seed", "chaos-delay", "record-events", "replay-events",
     ])?;
     let manifest = load_manifest()?;
     let arch = args
@@ -211,6 +215,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     cfg.drain = DrainOrder::by_name(args.str_or("drain", "priority"))
         .ok_or_else(|| anyhow::anyhow!("--drain must be priority|launch|opportunistic"))?;
+    if let Some(cpn) = args.get("cores-per-node") {
+        cfg.cores_per_node = Some(cpn.parse().map_err(|_| {
+            anyhow::anyhow!("--cores-per-node must be a rank count, got {cpn:?}")
+        })?);
+    }
     cfg.allreduce = AllreduceAlgorithm::by_name(args.str_or("alg", "auto"))
         .ok_or_else(|| anyhow::anyhow!("--alg must be auto|ring|rd|tree"))?;
     if let Some(keep) = args.get("pool-trim") {

@@ -1,0 +1,852 @@
+//! Nonblocking **hierarchical (topology-aware)** allreduce: intra-node
+//! reduce-scatter on shared-memory links, inter-node Rabenseifner per
+//! *rail*, intra-node allgather — the same `start` / `test` / `wait` /
+//! `drive_one_round` / `cancel` drive surface as [`IAllreduce`] and
+//! [`IRabenseifner`], so `PipelineEngine` buckets, every `DrainOrder`,
+//! and chaos/replay work unchanged.
+//!
+//! # Schedule
+//!
+//! Over a [`Topology`] with `m` nodes of `s` ranks each (`s` a power of
+//! two — see *Regularity* below), a vector of `n` elements runs three
+//! phases:
+//!
+//! 1. **Intra reduce-scatter** (leaf comm, masks `1..s/2` ascending,
+//!    recursive halving): after `log₂s` shared-memory rounds, member
+//!    `j` of every node owns one fully node-reduced chunk (`n/s`
+//!    elements) — the same chunk index on every node.
+//! 2. **Inter Rabenseifner** (rail comm): the `m` owners of one chunk
+//!    — member `j` of each node — run a full [`IRabenseifner`] over
+//!    just that chunk. All `s` rails proceed concurrently, so the
+//!    inter-node wires carry `~2·(n/s)·(m-1)/m` bytes per rank instead
+//!    of funnelling `2n` through a node leader; this is what makes the
+//!    modelled win at `p=16 / cores_per_node=4` exceed the leader-
+//!    funnel bound (a leader-only inter phase moves `1.5n` vs flat
+//!    Rabenseifner's `1.875n` inter bytes — capped at exactly 20% even
+//!    with free intra links; the rail split moves `0.375n`).
+//! 3. **Intra allgather** (leaf comm, masks descending): the reverse
+//!    exchange redistributes the finished chunks node-wide.
+//!
+//! Phase 1/3 are the reduce-scatter/allgather halves of the
+//! Rabenseifner schedule with no fold-in (`s` is a power of two);
+//! phase 2 reuses [`IRabenseifner`] verbatim on a sub-slice.
+//!
+//! # Bitwise parity with flat recursive doubling
+//!
+//! The trainer's `Bucketed == Flat` guarantee requires bit-identity to
+//! the flat rd butterfly. The two-level composition preserves it: for
+//! any element, phase 1 combines exactly the rd-butterfly subtrees over
+//! the *low* `log₂s` rank bits (the in-node bits — node groups are
+//! consecutive equal-size blocks, so these are literal rank bits), and
+//! phase 2's per-chunk combine replays the rd butterfly over the node
+//! index (the high bits), including rd's fold-in pre/post step when `m`
+//! is not a power of two — at the node level, pairing node `2k` with
+//! node `2k+1` combines the same two subtrees the flat fold-in pairs
+//! (the first `2·rem·s` ranks), just grouped per node. Every combine is
+//! `acc ⊕ incoming` with a bitwise-commutative `⊕`, so only the tree
+//! shape matters (the `irabenseifner.rs` argument), and the shape is
+//! the flat butterfly's. Phase 3 only copies. `tests` pins this across
+//! `p × cores_per_node` grids, including non-power-of-two node counts.
+//!
+//! # Regularity and the flat fallback
+//!
+//! The composition argument needs equal-size power-of-two node blocks
+//! ([`Topology::regular`]). Ragged groupings (e.g. survivors of a ULFM
+//! `shrink()` that punched a hole in one node) have *no* two-level
+//! schedule matching the flat butterfly — counterexample `p=10,
+//! cores_per_node=4`: the flat fold-in pairs ranks of node 2 with
+//! node 1's remainder, crossing group boundaries mid-block. `start`
+//! therefore degenerates to a flat [`IRabenseifner`] on the parent
+//! communicator whenever the topology is irregular (or stale — built
+//! over a different membership than `comm`). Either way the result is
+//! bitwise rd — callers never need to care which path ran.
+//!
+//! # Tags, clocks, driving contract
+//!
+//! All tags are reserved at `start`: the leaf comm supplies one
+//! `Ihierarchical` tag for both intra phases (FIFO per `(src, tag)`
+//! keeps RS-before-AG ordering at the shared peers, exactly as
+//! `IRabenseifner` relies on), and the rail comm's `Irabenseifner`
+//! counter is drawn *eagerly* for the phase-2 handle — ranks reach
+//! phase 2 at rank-dependent times, but every rank starts buckets in
+//! the same program order, so reserving at `start` keeps the subcomm
+//! counters symmetric. The rank's virtual clock is a single timeline
+//! threaded through parent and subcomms: every drive call fences the
+//! parent clock into the subcomms first and folds the furthest subcomm
+//! clock back after ([`Topology::sync_clock_in`]).
+//!
+//! The buffer contract is [`IRabenseifner`]'s: the handle owns no
+//! buffers, the caller passes the same `data` and a scratch of at least
+//! `data.len()` to every call, and `start` performs zero heap
+//! allocations after warmup (`tests/alloc_free_pipeline.rs`) — the
+//! only refcount it takes is the `Arc<Topology>` clone.
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::mpi::collectives::chunk_range;
+use crate::mpi::comm::{CollKind, Communicator};
+use crate::mpi::datatype::{reduce_in_place, Reducible, ReduceOp};
+use crate::mpi::error::{MpiError, MpiResult};
+use crate::mpi::topology::Topology;
+use crate::mpi::Tag;
+
+use super::irabenseifner::IRabenseifner;
+
+#[cfg(doc)]
+use crate::mpi::IAllreduce;
+
+#[derive(Debug)]
+enum Phase {
+    /// Irregular/stale topology: flat Rabenseifner on the parent comm.
+    Flat(IRabenseifner),
+    /// Intra-node recursive-halving reduce-scatter: waiting for the
+    /// round-`mask` leaf peer's half-window partial.
+    IntraRs { mask: usize },
+    /// Inter-node Rabenseifner over this rank's owned chunk (`span`),
+    /// on the rail comm.
+    Inter { inner: IRabenseifner, span: Range<usize> },
+    /// Intra-node allgather (masks descending): waiting for the
+    /// round-`mask` leaf peer's reduced window.
+    IntraAg { mask: usize },
+    Done,
+}
+
+/// A posted nonblocking hierarchical allreduce. See the module docs for
+/// the driving contract (same `data`/`scratch` on every call).
+#[derive(Debug)]
+#[must_use = "an ihierarchical makes no progress until test()/wait() drives it"]
+pub struct IHierarchical {
+    topo: Arc<Topology>,
+    op: ReduceOp,
+    /// Element count the operation was posted with.
+    n: usize,
+    /// Node size (= leaf comm size); power of two on the regular path.
+    s: usize,
+    /// My in-node offset (= leaf rank = rail id).
+    j: usize,
+    /// Tag for both intra phases, on the leaf comm.
+    leaf_tag: Tag,
+    /// Reserved tag for the phase-2 handle, on the rail comm.
+    rail_tag: Tag,
+    phase: Phase,
+}
+
+impl IHierarchical {
+    /// Post the operation. `topo` must have been built (collectively)
+    /// over `comm`; if it is irregular — or stale relative to `comm`'s
+    /// membership — the handle runs a flat Rabenseifner on `comm`
+    /// instead, preserving bit-identity either way. Every rank of
+    /// `comm` must start its operations in the same program order.
+    pub fn start<T: Reducible>(
+        topo: Arc<Topology>,
+        comm: &Communicator,
+        op: ReduceOp,
+        data: &mut [T],
+    ) -> MpiResult<IHierarchical> {
+        let n = data.len();
+        // `regular` and `parent_size` derive from shared membership, so
+        // every rank takes the same branch (tag counters stay aligned).
+        if !topo.regular() || topo.parent_size() != comm.size() {
+            let inner = IRabenseifner::start(comm, op, data)?;
+            let phase = if inner.is_complete() {
+                Phase::Done
+            } else {
+                Phase::Flat(inner)
+            };
+            return Ok(IHierarchical {
+                topo,
+                op,
+                n,
+                s: 1,
+                j: 0,
+                leaf_tag: 0,
+                rail_tag: 0,
+                phase,
+            });
+        }
+        let leaf_tag = topo.leaf().next_coll_tag(CollKind::Ihierarchical);
+        let rail_tag = topo.rail().next_coll_tag(CollKind::Irabenseifner);
+        let mut op_state = IHierarchical {
+            s: topo.node_size(),
+            j: topo.node_offset(),
+            topo,
+            op,
+            n,
+            leaf_tag,
+            rail_tag,
+            phase: Phase::Done,
+        };
+        let t = Arc::clone(&op_state.topo);
+        t.sync_clock_in(comm.clock());
+        let res = if op_state.s == 1 {
+            // Every rank its own node: pure inter phase (= flat rab).
+            op_state.enter_inter(&t, data)
+        } else {
+            op_state.post_rs_send(t.leaf(), data, 1)
+        };
+        let tm = t.max_clock();
+        if tm > comm.clock() {
+            comm.set_clock(tm);
+        }
+        res?;
+        Ok(op_state)
+    }
+
+    /// Chunk-index window `[clo, chi)` of the `s`-way tiling this rank
+    /// holds before intra reduce-scatter round `mask` (equivalently:
+    /// after intra allgather round `mask` restores it) — the
+    /// `IRabenseifner::window_before` arithmetic with `pof2 = s` and no
+    /// fold-in (`newrank = j`).
+    fn window_before(&self, mask: usize) -> (usize, usize) {
+        let (mut clo, mut chi) = (0usize, self.s);
+        let mut m = 1usize;
+        while m < mask {
+            let half = (chi - clo) / 2;
+            if self.j & m == 0 {
+                chi -= half; // kept the lower half at round m
+            } else {
+                clo += half; // kept the upper half
+            }
+            m <<= 1;
+        }
+        (clo, chi)
+    }
+
+    /// Element range covered by chunks `[clo, chi)` of the `s`-way
+    /// tiling.
+    fn span(&self, clo: usize, chi: usize) -> Range<usize> {
+        chunk_range(self.n, self.s, clo).0..chunk_range(self.n, self.s, chi).0
+    }
+
+    /// Post intra reduce-scatter round `mask`: send the half of the
+    /// current window the leaf peer keeps.
+    fn post_rs_send<T: Reducible>(
+        &mut self,
+        leaf: &Communicator,
+        data: &[T],
+        mask: usize,
+    ) -> MpiResult<()> {
+        let (clo, chi) = self.window_before(mask);
+        let half = (chi - clo) / 2;
+        let send = if self.j & mask == 0 {
+            self.span(clo + half, chi) // keep lower, send upper
+        } else {
+            self.span(clo, clo + half) // keep upper, send lower
+        };
+        leaf.send(self.j ^ mask, self.leaf_tag, &data[send])?;
+        self.phase = Phase::IntraRs { mask };
+        Ok(())
+    }
+
+    /// Post intra allgather round `mask`: send the window completed so
+    /// far (the leaf peer holds the complementary half).
+    fn post_ag_send<T: Reducible>(
+        &mut self,
+        leaf: &Communicator,
+        data: &[T],
+        mask: usize,
+    ) -> MpiResult<()> {
+        let (clo, chi) = self.window_before(mask << 1);
+        leaf.send(self.j ^ mask, self.leaf_tag, &data[self.span(clo, chi)])?;
+        self.phase = Phase::IntraAg { mask };
+        Ok(())
+    }
+
+    /// Reduce-scatter finished: this rank owns one node-reduced chunk.
+    /// Start the inter-node Rabenseifner over it on the rail comm, with
+    /// the tag reserved at `start`.
+    fn enter_inter<T: Reducible>(&mut self, topo: &Topology, data: &mut [T]) -> MpiResult<()> {
+        let (clo, _) = self.window_before(self.s); // single chunk [clo, clo+1)
+        let span = self.span(clo, clo + 1);
+        let inner =
+            IRabenseifner::start_with_tag(topo.rail(), self.op, &mut data[span.clone()], self.rail_tag)?;
+        if inner.is_complete() {
+            // Single-node topology (rail size 1): nothing inter-node.
+            self.enter_allgather(topo, data)
+        } else {
+            self.phase = Phase::Inter { inner, span };
+            Ok(())
+        }
+    }
+
+    /// Inter phase finished: redistribute the reduced chunks node-wide.
+    fn enter_allgather<T: Reducible>(&mut self, topo: &Topology, data: &mut [T]) -> MpiResult<()> {
+        if self.s == 1 {
+            self.phase = Phase::Done;
+            return Ok(());
+        }
+        self.post_ag_send(topo.leaf(), data, self.s >> 1)
+    }
+
+    /// Fold one received intra-phase message into the state machine,
+    /// posting the next round (or phase) where the schedule calls for
+    /// it.
+    fn on_intra_message<T: Reducible>(
+        &mut self,
+        topo: &Topology,
+        data: &mut [T],
+        incoming: &[T],
+    ) -> MpiResult<()> {
+        match self.phase {
+            Phase::IntraRs { mask } => {
+                let (clo, chi) = self.window_before(mask);
+                let half = (chi - clo) / 2;
+                let keep = if self.j & mask == 0 {
+                    self.span(clo, clo + half)
+                } else {
+                    self.span(clo + half, chi)
+                };
+                reduce_in_place(self.op, &mut data[keep], incoming)?;
+                let next = mask << 1;
+                if next < self.s {
+                    self.post_rs_send(topo.leaf(), data, next)
+                } else {
+                    self.enter_inter(topo, data)
+                }
+            }
+            Phase::IntraAg { mask } => {
+                let (clo, chi) = self.window_before(mask);
+                let (kl, kh) = self.window_before(mask << 1);
+                let recv = if kl == clo {
+                    self.span(kh, chi)
+                } else {
+                    self.span(clo, kl)
+                };
+                if incoming.len() != recv.end - recv.start {
+                    return Err(MpiError::CountMismatch {
+                        expected: recv.end - recv.start,
+                        got: incoming.len(),
+                    });
+                }
+                data[recv].copy_from_slice(incoming);
+                let next = mask >> 1;
+                if next >= 1 {
+                    self.post_ag_send(topo.leaf(), data, next)
+                } else {
+                    self.phase = Phase::Done;
+                    Ok(())
+                }
+            }
+            _ => unreachable!("on_intra_message outside an intra phase"),
+        }
+    }
+
+    fn check_buffers<T: Reducible>(&self, data: &[T], scratch: &[T]) -> MpiResult<()> {
+        if data.len() != self.n || scratch.len() < self.n {
+            return Err(MpiError::Inconsistent(format!(
+                "ihierarchical driven with data len {} / scratch len {}, posted with n={}",
+                data.len(),
+                scratch.len(),
+                self.n
+            )));
+        }
+        Ok(())
+    }
+
+    /// Advance **at most one round**, blocking for that round's message
+    /// (deterministic progress — consumption order depends only on
+    /// program order). Returns whether a round was consumed; `Ok(false)`
+    /// when complete or when the inter phase is parked in its fold-in
+    /// post-phase (finish with [`wait`](Self::wait)).
+    pub fn drive_one_round<T: Reducible>(
+        &mut self,
+        comm: &Communicator,
+        data: &mut [T],
+        scratch: &mut [T],
+    ) -> MpiResult<bool> {
+        self.check_buffers(data, scratch)?;
+        if matches!(self.phase, Phase::Done) {
+            return Ok(false);
+        }
+        if let Phase::Flat(inner) = &mut self.phase {
+            let r = inner.drive_one_round(comm, data, scratch);
+            if r.is_err() || inner.is_complete() {
+                self.phase = Phase::Done;
+            }
+            return r;
+        }
+        let topo = Arc::clone(&self.topo);
+        topo.sync_clock_in(comm.clock());
+        let out = self.drive_regular_once(&topo, data, scratch);
+        let t = topo.max_clock();
+        if t > comm.clock() {
+            comm.set_clock(t);
+        }
+        if out.is_err() {
+            self.cancel();
+        }
+        out
+    }
+
+    fn drive_regular_once<T: Reducible>(
+        &mut self,
+        topo: &Topology,
+        data: &mut [T],
+        scratch: &mut [T],
+    ) -> MpiResult<bool> {
+        match &mut self.phase {
+            Phase::IntraRs { mask } | Phase::IntraAg { mask } => {
+                let src = self.j ^ *mask;
+                let (cnt, _) = topo.leaf().recv_into(Some(src), self.leaf_tag, &mut scratch[..self.n])?;
+                let (incoming, _) = scratch.split_at(cnt);
+                self.on_intra_message(topo, data, incoming)?;
+                Ok(true)
+            }
+            Phase::Inter { inner, span } => {
+                let sp = span.clone();
+                let len = sp.end - sp.start;
+                let advanced = inner.drive_one_round(topo.rail(), &mut data[sp], &mut scratch[..len])?;
+                if inner.is_complete() {
+                    self.enter_allgather(topo, data)?;
+                    Ok(true)
+                } else {
+                    Ok(advanced)
+                }
+            }
+            Phase::Flat(_) | Phase::Done => Ok(false),
+        }
+    }
+
+    /// Nonblocking progress: consume every already-queued message,
+    /// advancing as many rounds (and phases) as possible. Returns
+    /// completion.
+    pub fn test<T: Reducible>(
+        &mut self,
+        comm: &Communicator,
+        data: &mut [T],
+        scratch: &mut [T],
+    ) -> MpiResult<bool> {
+        self.check_buffers(data, scratch)?;
+        if matches!(self.phase, Phase::Done) {
+            return Ok(true);
+        }
+        if let Phase::Flat(inner) = &mut self.phase {
+            let r = inner.test(comm, data, scratch);
+            if r.is_err() || inner.is_complete() {
+                self.phase = Phase::Done;
+            }
+            return r;
+        }
+        let topo = Arc::clone(&self.topo);
+        topo.sync_clock_in(comm.clock());
+        let out = self.test_regular(&topo, data, scratch);
+        let t = topo.max_clock();
+        if t > comm.clock() {
+            comm.set_clock(t);
+        }
+        if out.is_err() {
+            self.cancel();
+        }
+        out
+    }
+
+    fn test_regular<T: Reducible>(
+        &mut self,
+        topo: &Topology,
+        data: &mut [T],
+        scratch: &mut [T],
+    ) -> MpiResult<bool> {
+        loop {
+            match &mut self.phase {
+                Phase::Done => return Ok(true),
+                Phase::IntraRs { mask } | Phase::IntraAg { mask } => {
+                    let src = self.j ^ *mask;
+                    match topo
+                        .leaf()
+                        .try_recv_into(Some(src), self.leaf_tag, &mut scratch[..self.n])?
+                    {
+                        Some((cnt, _)) => {
+                            let (incoming, _) = scratch.split_at(cnt);
+                            self.on_intra_message(topo, data, incoming)?;
+                        }
+                        None => return Ok(false),
+                    }
+                }
+                Phase::Inter { inner, span } => {
+                    let sp = span.clone();
+                    let len = sp.end - sp.start;
+                    if inner.test(topo.rail(), &mut data[sp], &mut scratch[..len])? {
+                        self.enter_allgather(topo, data)?;
+                    } else {
+                        return Ok(false);
+                    }
+                }
+                Phase::Flat(_) => unreachable!("flat phase handled by the wrapper"),
+            }
+        }
+    }
+
+    /// Block until the operation completes (remaining rounds run here).
+    /// Errors (peer failure / revocation) leave the handle cancelled.
+    pub fn wait<T: Reducible>(
+        &mut self,
+        comm: &Communicator,
+        data: &mut [T],
+        scratch: &mut [T],
+    ) -> MpiResult<()> {
+        self.check_buffers(data, scratch)?;
+        if matches!(self.phase, Phase::Done) {
+            return Ok(());
+        }
+        if let Phase::Flat(inner) = &mut self.phase {
+            let r = inner.wait(comm, data, scratch);
+            self.phase = Phase::Done; // Ok ⇒ complete; Err ⇒ cancelled
+            return r;
+        }
+        let topo = Arc::clone(&self.topo);
+        topo.sync_clock_in(comm.clock());
+        let out = self.wait_regular(&topo, data, scratch);
+        let t = topo.max_clock();
+        if t > comm.clock() {
+            comm.set_clock(t);
+        }
+        if out.is_err() {
+            self.cancel();
+        }
+        out
+    }
+
+    fn wait_regular<T: Reducible>(
+        &mut self,
+        topo: &Topology,
+        data: &mut [T],
+        scratch: &mut [T],
+    ) -> MpiResult<()> {
+        loop {
+            match &mut self.phase {
+                Phase::Done => return Ok(()),
+                Phase::IntraRs { mask } | Phase::IntraAg { mask } => {
+                    let src = self.j ^ *mask;
+                    let (cnt, _) =
+                        topo.leaf().recv_into(Some(src), self.leaf_tag, &mut scratch[..self.n])?;
+                    let (incoming, _) = scratch.split_at(cnt);
+                    self.on_intra_message(topo, data, incoming)?;
+                }
+                Phase::Inter { inner, span } => {
+                    let sp = span.clone();
+                    let len = sp.end - sp.start;
+                    inner.wait(topo.rail(), &mut data[sp], &mut scratch[..len])?;
+                    self.enter_allgather(topo, data)?;
+                }
+                Phase::Flat(_) => unreachable!("flat phase handled by the wrapper"),
+            }
+        }
+    }
+
+    pub fn is_complete(&self) -> bool {
+        matches!(self.phase, Phase::Done)
+    }
+
+    /// Abandon the operation (ULFM recovery path). Outstanding envelopes
+    /// stay in their mailboxes — tags are per-operation unique on each
+    /// subcomm, and the revoked groups' storage is reclaimed when they
+    /// drop (same soundness argument as [`IRabenseifner::cancel`]).
+    pub fn cancel(&mut self) {
+        if let Phase::Flat(inner) | Phase::Inter { inner, .. } = &mut self.phase {
+            inner.cancel();
+        }
+        self.phase = Phase::Done;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::collectives::{allreduce_with, AllreduceAlgorithm};
+    use crate::mpi::netmodel::NetProfile;
+    use crate::mpi::world::World;
+
+    fn pattern(rank: usize, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| ((rank * 31 + i * 17) % 101) as f32 * 0.25 - 12.0)
+            .collect()
+    }
+
+    #[test]
+    fn wait_driven_matches_blocking_rd_bitwise_across_grid() {
+        // The acceptance grid, plus non-pof2 node counts (p=12/cpn=4,
+        // p=6/cpn=2) and ragged groupings (p=10/cpn=4, p=5/cpn=2) that
+        // must take the flat fallback — parity must hold on all of them.
+        let grid: Vec<(usize, usize)> = [2usize, 4, 8, 16]
+            .iter()
+            .flat_map(|&p| [1usize, 2, 4].iter().map(move |&c| (p, c)))
+            .chain([(12, 4), (6, 2), (10, 4), (5, 2)])
+            .collect();
+        for (p, cpn) in grid {
+            let n = 97; // not a multiple of any p — ragged chunks
+            let prof = NetProfile::zero().on_nodes(cpn);
+            let w = World::new(p, prof);
+            let out = w.run_unwrap(move |c| {
+                let topo = Topology::build(&c)?;
+                let mut nb = pattern(c.rank(), n);
+                let mut scratch = vec![0.0f32; n];
+                let mut op = IHierarchical::start(Arc::clone(&topo), &c, ReduceOp::Sum, &mut nb)?;
+                op.wait(&c, &mut nb, &mut scratch)?;
+                assert!(op.is_complete());
+                let mut blocking = pattern(c.rank(), n);
+                allreduce_with(
+                    &c,
+                    AllreduceAlgorithm::RecursiveDoubling,
+                    ReduceOp::Sum,
+                    &mut blocking,
+                )?;
+                Ok((nb, blocking, topo.regular()))
+            });
+            let want_regular = p % cpn.min(p) == 0 && {
+                let s = cpn.min(p);
+                s.is_power_of_two()
+            };
+            for (rank, (nb, blocking, regular)) in out.iter().enumerate() {
+                assert_eq!(
+                    *regular, want_regular,
+                    "p={p} cpn={cpn}: regularity must match the block structure"
+                );
+                for i in 0..n {
+                    assert_eq!(
+                        nb[i].to_bits(),
+                        blocking[i].to_bits(),
+                        "p={p} cpn={cpn} rank={rank} i={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn short_vectors_with_empty_chunks_are_exact() {
+        // n < p → some owned chunks are empty on both levels; every
+        // round still runs (empty payloads) and must stay exact.
+        for (p, cpn) in [(8usize, 2usize), (8, 4), (12, 4)] {
+            for n in [0usize, 1, 3, 5] {
+                let w = World::new(p, NetProfile::zero().on_nodes(cpn));
+                let out = w.run_unwrap(move |c| {
+                    let topo = Topology::build(&c)?;
+                    let mut v: Vec<f64> = (0..n).map(|i| (c.rank() * n + i) as f64).collect();
+                    let mut scratch = vec![0.0f64; n];
+                    let mut op = IHierarchical::start(topo, &c, ReduceOp::Sum, &mut v)?;
+                    op.wait(&c, &mut v, &mut scratch)?;
+                    Ok(v)
+                });
+                for v in out {
+                    for (i, &x) in v.iter().enumerate() {
+                        let want: f64 = (0..p).map(|r| (r * n + i) as f64).sum();
+                        assert_eq!(x, want, "p={p} cpn={cpn} n={n} i={i}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn test_driven_polling_completes() {
+        let w = World::new(8, NetProfile::zero().on_nodes(4));
+        let out = w.run_unwrap(|c| {
+            let topo = Topology::build(&c)?;
+            let mut v = vec![c.rank() as f64 + 1.0; 16];
+            let mut scratch = vec![0.0f64; 16];
+            let mut op = IHierarchical::start(topo, &c, ReduceOp::Sum, &mut v)?;
+            while !op.test(&c, &mut v, &mut scratch)? {
+                std::thread::yield_now();
+            }
+            Ok(v[0])
+        });
+        for v in out {
+            assert_eq!(v, 36.0); // 1+2+…+8
+        }
+    }
+
+    #[test]
+    fn concurrent_ops_and_mixed_algorithms_complete_out_of_order() {
+        // Two in-flight hierarchical ops plus a flat IRabenseifner per
+        // rank, waited in reverse launch order: the eager tag
+        // reservation must keep the subcomm rounds from cross-matching
+        // even though ranks reach the rail phase at different times.
+        let w = World::new(8, NetProfile::zero().on_nodes(2));
+        let out = w.run_unwrap(|c| {
+            let topo = Topology::build(&c)?;
+            let n = 33;
+            let mut bufs: Vec<Vec<f32>> =
+                (0..3).map(|k| vec![(c.rank() + k + 1) as f32; n]).collect();
+            let mut scratch = vec![0.0f32; n];
+            let mut h0 = IHierarchical::start(Arc::clone(&topo), &c, ReduceOp::Sum, &mut bufs[0])?;
+            let mut h1 = IHierarchical::start(Arc::clone(&topo), &c, ReduceOp::Sum, &mut bufs[1])?;
+            let mut rab = IRabenseifner::start(&c, ReduceOp::Sum, &mut bufs[2])?;
+            rab.wait(&c, &mut bufs[2], &mut scratch)?;
+            h1.wait(&c, &mut bufs[1], &mut scratch)?;
+            h0.wait(&c, &mut bufs[0], &mut scratch)?;
+            Ok(bufs.into_iter().map(|b| b[0]).collect::<Vec<f32>>())
+        });
+        // sum over ranks of (rank + k + 1) = 36 + 8k for p=8.
+        for v in out {
+            assert_eq!(v, vec![36.0, 44.0, 52.0]);
+        }
+    }
+
+    #[test]
+    fn integer_max_across_grid() {
+        for (p, cpn) in [(4usize, 2usize), (6, 2), (12, 4)] {
+            let w = World::new(p, NetProfile::zero().on_nodes(cpn));
+            let out = w.run_unwrap(move |c| {
+                let topo = Topology::build(&c)?;
+                let mut v: Vec<u64> = (0..11).map(|i| (c.rank() * 11 + i) as u64).collect();
+                let mut scratch = vec![0u64; 11];
+                let mut op = IHierarchical::start(topo, &c, ReduceOp::Max, &mut v)?;
+                op.wait(&c, &mut v, &mut scratch)?;
+                Ok(v)
+            });
+            for v in out {
+                for (i, &x) in v.iter().enumerate() {
+                    assert_eq!(x, ((p - 1) * 11 + i) as u64, "p={p} cpn={cpn}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn topology_win_shows_in_virtual_time() {
+        // The ISSUE-7 live-sim cross-check at bench scale's little
+        // sibling: 1M floats, p=16, 4 ranks/node. The hierarchical
+        // schedule on the topology profile must beat flat Rabenseifner
+        // on the flat IB profile by ≥20% of virtual time (the modelled
+        // number is ~40%; see NetProfile::hierarchical_allreduce_time).
+        let n = 1 << 20;
+        let t_hier = {
+            let w = World::new(16, NetProfile::infiniband_fdr().on_nodes(4));
+            let clocks = w.run_unwrap(move |c| {
+                let topo = Topology::build(&c)?;
+                let base = c.clock();
+                let mut v = vec![1.0f32; n];
+                let mut scratch = vec![0.0f32; n];
+                let mut op = IHierarchical::start(topo, &c, ReduceOp::Sum, &mut v)?;
+                op.wait(&c, &mut v, &mut scratch)?;
+                Ok(c.clock() - base)
+            });
+            clocks.into_iter().fold(0.0, f64::max)
+        };
+        let t_flat = {
+            let w = World::new(16, NetProfile::infiniband_fdr());
+            let clocks = w.run_unwrap(move |c| {
+                let mut v = vec![1.0f32; n];
+                let mut scratch = vec![0.0f32; n];
+                let mut op = IRabenseifner::start(&c, ReduceOp::Sum, &mut v)?;
+                op.wait(&c, &mut v, &mut scratch)?;
+                Ok(c.clock())
+            });
+            clocks.into_iter().fold(0.0, f64::max)
+        };
+        assert!(
+            t_hier < t_flat * 0.8,
+            "hierarchical {t_hier} should beat flat rabenseifner {t_flat} by ≥20%"
+        );
+    }
+
+    #[test]
+    fn ulfm_mid_collective_cancel_shrink_rebuild() {
+        // The acceptance scenario: a rank dies mid-collective; every
+        // survivor's wait errors, the topology is revoked (unblocking
+        // ranks parked in intra recvs), the parent shrinks, the
+        // topology rebuilds over the survivors (ragged → flat
+        // fallback), and the retried allreduce is bitwise rd.
+        let w = World::new(6, NetProfile::zero().on_nodes(2));
+        let out = w.run_unwrap(|c| {
+            let topo = Topology::build(&c)?;
+            let n = 41;
+            let mut v = pattern(c.rank(), n);
+            let mut scratch = vec![0.0f32; n];
+            // One clean collective first, so the failure hits mid-stream;
+            // the barrier drains it fully before the failure is injected.
+            let mut warm = IHierarchical::start(Arc::clone(&topo), &c, ReduceOp::Sum, &mut v)?;
+            warm.wait(&c, &mut v, &mut scratch)?;
+            crate::mpi::collectives::barrier(&c)?;
+            if c.rank() == 5 {
+                c.fail_self();
+                return Ok(None);
+            }
+            while c.alive_ranks().len() != 5 {
+                std::thread::yield_now();
+            }
+            let mut v2 = pattern(c.rank(), n);
+            let attempt = (|| -> MpiResult<()> {
+                let mut op =
+                    IHierarchical::start(Arc::clone(&topo), &c, ReduceOp::Sum, &mut v2)?;
+                op.wait(&c, &mut v2, &mut scratch)
+            })();
+            match attempt {
+                Ok(()) => {
+                    // Impossible: every survivor's schedule transitively
+                    // needs rank 5 (leaf {4,5}, rail {1,3,5}, or an AG
+                    // message from a rank that does).
+                    panic!("rank {} completed against a dead peer", c.rank());
+                }
+                Err(MpiError::ProcFailed { .. }) | Err(MpiError::Revoked) => {
+                    topo.revoke_all();
+                    c.revoke();
+                }
+                Err(e) => return Err(e.into()),
+            }
+            let shrunk = c.shrink()?;
+            let topo2 = Topology::build(&shrunk)?;
+            // Survivors {0..4} at cpn=2 → blocks 2/2/1: irregular.
+            assert!(!topo2.regular());
+            let mut v3 = pattern(c.rank(), n);
+            let mut op = IHierarchical::start(topo2, &shrunk, ReduceOp::Sum, &mut v3)?;
+            op.wait(&shrunk, &mut v3, &mut scratch)?;
+            let mut blocking = pattern(c.rank(), n);
+            allreduce_with(
+                &shrunk,
+                AllreduceAlgorithm::RecursiveDoubling,
+                ReduceOp::Sum,
+                &mut blocking,
+            )?;
+            Ok(Some((v3, blocking)))
+        });
+        let survivors: Vec<_> = out.into_iter().flatten().collect();
+        assert_eq!(survivors.len(), 5);
+        for (v3, blocking) in survivors {
+            for i in 0..v3.len() {
+                assert_eq!(v3[i].to_bits(), blocking[i].to_bits(), "i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn stale_topology_falls_back_flat_and_stays_exact() {
+        // A topology built over the parent, used with a *different*
+        // (split) comm: membership mismatch must route to the flat
+        // fallback on the passed comm, not scramble the subcomms.
+        let w = World::new(4, NetProfile::zero().on_nodes(2));
+        let out = w.run_unwrap(|c| {
+            let stale = Topology::build(&c)?;
+            let half = c.split((c.rank() % 2) as u32, c.rank() as i32)?;
+            let mut v = vec![(c.rank() + 1) as f32; 8];
+            let mut scratch = vec![0.0f32; 8];
+            let mut op = IHierarchical::start(stale, &half, ReduceOp::Sum, &mut v)?;
+            op.wait(&half, &mut v, &mut scratch)?;
+            Ok(v[0])
+        });
+        // Ranks {0,2} sum to 4, ranks {1,3} sum to 6.
+        for (rank, v) in out.into_iter().enumerate() {
+            let want = if rank % 2 == 0 { 4.0 } else { 6.0 };
+            assert_eq!(v, want, "rank={rank}");
+        }
+    }
+
+    #[test]
+    fn mismatched_buffer_length_is_rejected() {
+        let w = World::new(4, NetProfile::zero().on_nodes(2));
+        w.run_unwrap(|c| {
+            let topo = Topology::build(&c)?;
+            let mut v = vec![1.0f32; 8];
+            let mut scratch = vec![0.0f32; 8];
+            let mut op = IHierarchical::start(topo, &c, ReduceOp::Sum, &mut v)?;
+            let mut wrong = vec![0.0f32; 4];
+            assert!(matches!(
+                op.test(&c, &mut wrong, &mut scratch),
+                Err(MpiError::Inconsistent(_))
+            ));
+            op.wait(&c, &mut v, &mut scratch)?;
+            Ok(())
+        });
+    }
+}

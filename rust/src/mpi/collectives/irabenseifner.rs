@@ -126,9 +126,24 @@ impl IRabenseifner {
         op: ReduceOp,
         data: &mut [T],
     ) -> MpiResult<IRabenseifner> {
+        let tag = comm.next_coll_tag(CollKind::Irabenseifner);
+        Self::start_with_tag(comm, op, data, tag)
+    }
+
+    /// `start` with a caller-reserved tag. `IHierarchical` draws the rail
+    /// comm's tag eagerly at *its* start (all ranks start buckets in the
+    /// same program order, so the subcomm counters stay symmetric) and
+    /// begins the inter-node phase only when its intra reduce-scatter
+    /// completes — which happens at a rank-dependent time, too late to
+    /// draw a tag consistently.
+    pub(crate) fn start_with_tag<T: Reducible>(
+        comm: &Communicator,
+        op: ReduceOp,
+        data: &mut [T],
+        tag: Tag,
+    ) -> MpiResult<IRabenseifner> {
         let p = comm.size();
         let me = comm.rank();
-        let tag = comm.next_coll_tag(CollKind::Irabenseifner);
         let n = data.len();
         if p == 1 {
             return Ok(IRabenseifner {

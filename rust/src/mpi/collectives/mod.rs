@@ -35,6 +35,16 @@
 //! `BucketAlg::Auto` picks between them per bucket at the alpha-beta
 //! crossover ([`crate::mpi::NetProfile::rabenseifner_crossover_bytes`]).
 //!
+//! [`IHierarchical`] is the **topology-aware** member of the family:
+//! over a [`Topology`](crate::mpi::Topology) it reduce-scatters inside
+//! each node on shared-memory links, runs an [`IRabenseifner`] per
+//! in-node *rail* across nodes on the (1/s)-size shards, and allgathers
+//! back inside the node — same drive surface, same bitwise-rd parity
+//! (the butterfly composes across the two levels on regular node
+//! grids; irregular groupings degenerate to flat Rabenseifner — see
+//! `ihierarchical.rs`). `BucketAlg::Auto` weighs it in via
+//! [`crate::mpi::NetProfile::hierarchical_allreduce_time`].
+//!
 //! # Shared discipline
 //!
 //! All collectives must be called by every (alive) rank of the communicator
@@ -60,6 +70,7 @@ mod barrier;
 mod bcast;
 mod gather;
 mod iallreduce;
+mod ihierarchical;
 mod irabenseifner;
 mod reduce;
 mod scatter;
@@ -71,6 +82,7 @@ pub use barrier::barrier;
 pub use bcast::{bcast, bcast_into};
 pub use gather::{gather, gather_vecs};
 pub use iallreduce::IAllreduce;
+pub use ihierarchical::IHierarchical;
 pub use irabenseifner::IRabenseifner;
 pub use reduce::reduce;
 pub use scatter::{scatter_even, scatterv};

@@ -135,6 +135,10 @@ pub enum CollKind {
     /// distinct from `Iallreduce` so mixed-algorithm bucket pipelines
     /// (`BucketAlg::Auto`) keep per-operation tag uniqueness by kind too.
     Irabenseifner = 12,
+    /// Nonblocking hierarchical allreduce: tags the intra-node rounds on
+    /// the leaf subcomm (the inter-node phase draws an `Irabenseifner`
+    /// tag on the rail subcomm at `start`, keeping counters symmetric).
+    Ihierarchical = 13,
 }
 
 const COLL_BIT: Tag = 1 << 31;

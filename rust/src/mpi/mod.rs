@@ -75,6 +75,7 @@ pub mod events;
 pub mod netmodel;
 pub mod pool;
 pub mod request;
+pub mod topology;
 pub mod ulfm;
 pub mod world;
 
@@ -82,7 +83,7 @@ pub use channel::{Envelope, Mailbox, Tag, ANY_SOURCE};
 pub use collectives::{
     allgather, allgather_into, allreduce, allreduce_with, alltoall, barrier, bcast,
     bcast_into, chunk_range, gather, gather_vecs, pof2_core, scatter_even, scatterv,
-    AllreduceAlgorithm, CollectiveExt, IAllreduce, IRabenseifner,
+    AllreduceAlgorithm, CollectiveExt, IAllreduce, IHierarchical, IRabenseifner,
 };
 pub use comm::{CommStats, Communicator, WorldState};
 pub use datatype::{Buffer, Datatype, Reducible, ReduceOp};
@@ -93,5 +94,6 @@ pub use events::{
 pub use netmodel::{fold_arrival, NetProfile};
 pub use pool::{BufferPool, PooledScratch, PoolStats};
 pub use request::{wait_all, RecvRequest, SendRequest};
+pub use topology::Topology;
 pub use ulfm::{try_collective, FaultPlan, Recovery};
 pub use world::World;

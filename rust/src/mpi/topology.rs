@@ -1,0 +1,333 @@
+//! Node topology over a communicator: the subcomm layer under the
+//! hierarchical allreduce (and, later, per-node PS placement).
+//!
+//! A [`Topology`] derives node groupings from the profile's
+//! `cores_per_node` (the same `world_rank / cores_per_node` keying as
+//! [`NetProfile::same_node`](crate::mpi::NetProfile::same_node)) and
+//! splits the parent communicator twice:
+//!
+//! * **leaf** — the ranks of *my* node (shared-memory links), and
+//! * **rail** — the ranks at *my offset* inside every node. Rail 0 is
+//!   the classic "node leader" comm; the other rails exist so the
+//!   inter-node phase of [`IHierarchical`](crate::mpi::IHierarchical)
+//!   can run on *every* member's shard concurrently instead of
+//!   funnelling all inter-node bytes through the leader NIC.
+//!
+//! Both splits are collective over the parent, issued in a fixed order,
+//! so every member's collective-tag counters stay rank-symmetric — the
+//! property all collectives on the subcomms rely on.
+//!
+//! # Regularity
+//!
+//! The hierarchical schedule composes the rd butterfly across two
+//! levels, which is bitwise-identical to the flat butterfly **iff** the
+//! node groups are equal-size blocks whose size is a power of two (the
+//! node *count* may be anything — the node-level fold-in then matches
+//! the flat fold-in block for block). [`Topology::regular`] reports
+//! whether the current membership satisfies this; when it does not
+//! (e.g. after a ULFM `shrink()` punched a hole in one node),
+//! `IHierarchical` degenerates to the flat Rabenseifner schedule on the
+//! parent comm, which is itself rd-parity — so the bitwise guarantee
+//! holds on *every* topology, and the two-level speedup on the regular
+//! ones.
+//!
+//! # ULFM
+//!
+//! Subcomms are derived state: on failure the trainer revokes them
+//! alongside the parent ([`Topology::revoke_all`] unblocks any rank
+//! parked inside an intra-phase recv), shrinks the parent, and rebuilds
+//! the topology over the survivors with [`Topology::build`] — the
+//! groupings re-derive from the surviving *world* ranks, so a node that
+//! lost a core simply becomes a smaller (possibly irregular) group.
+
+use std::sync::Arc;
+
+use super::comm::Communicator;
+use super::error::MpiResult;
+
+/// Node-grouped subcommunicators of one parent communicator. Build with
+/// [`Topology::build`]; clone the `Arc` into each in-flight collective.
+#[derive(Debug)]
+pub struct Topology {
+    /// My node's ranks (shared-memory links), ordered by parent rank.
+    leaf: Communicator,
+    /// The ranks at my in-node offset across all nodes ("rail"); rail 0
+    /// is the node-leader comm.
+    rail: Communicator,
+    /// Dense node index of my node (0-based, in parent-rank order).
+    node_id: usize,
+    /// My position inside my node (0 = node leader).
+    node_offset: usize,
+    /// Number of node groups.
+    node_count: usize,
+    /// Ranks per node — uniform iff `regular`; otherwise my node's size.
+    node_size: usize,
+    /// Equal-size power-of-two node blocks (see module docs).
+    regular: bool,
+    /// Size of the parent communicator the split was derived from.
+    parent_size: usize,
+}
+
+impl Topology {
+    /// Collectively derive the node grouping and split the parent.
+    /// Every rank of `comm` must call this in the same program order
+    /// (it issues two collective `split`s).
+    pub fn build(comm: &Communicator) -> MpiResult<Arc<Topology>> {
+        let cpn = comm.profile().cores_per_node;
+        let groups = node_groups(comm.world_ranks(), cpn);
+        let me = comm.rank();
+        let (node_id, node_offset) = locate(&groups, me);
+        let leaf = comm.split(node_id as u32, me as i32)?;
+        let rail = comm.split(node_offset as u32, me as i32)?;
+        Ok(Arc::new(Topology {
+            leaf,
+            rail,
+            node_id,
+            node_offset,
+            node_count: groups.len(),
+            node_size: groups[node_id].len(),
+            regular: groups_regular(&groups),
+            parent_size: comm.size(),
+        }))
+    }
+
+    pub fn leaf(&self) -> &Communicator {
+        &self.leaf
+    }
+
+    pub fn rail(&self) -> &Communicator {
+        &self.rail
+    }
+
+    pub fn node_id(&self) -> usize {
+        self.node_id
+    }
+
+    pub fn node_offset(&self) -> usize {
+        self.node_offset
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.node_count
+    }
+
+    /// Ranks per node. Uniform across nodes exactly when [`regular`]
+    /// holds (the only case the hierarchical schedule uses it).
+    ///
+    /// [`regular`]: Topology::regular
+    pub fn node_size(&self) -> usize {
+        self.node_size
+    }
+
+    pub fn parent_size(&self) -> usize {
+        self.parent_size
+    }
+
+    /// My in-node offset is 0: I am my node's leader (rail-0 member).
+    pub fn is_leader(&self) -> bool {
+        self.node_offset == 0
+    }
+
+    /// Equal-size power-of-two node blocks — the precondition for the
+    /// two-level schedule to be bitwise-identical to flat rd.
+    pub fn regular(&self) -> bool {
+        self.regular
+    }
+
+    /// ULFM: revoke the derived subcomms so any rank blocked inside an
+    /// intra-node round unblocks with `Revoked`. The caller revokes the
+    /// parent separately (the subcomms cannot reach it).
+    pub fn revoke_all(&self) {
+        self.leaf.revoke();
+        self.rail.revoke();
+    }
+
+    /// Raise every subcomm clock to at least `t` (the parent timeline).
+    /// The rank's virtual time is a single line; the subcomms each carry
+    /// a `Cell` snapshot, so the hierarchical collective fences them
+    /// together before and after driving (see `ihierarchical.rs`).
+    pub fn sync_clock_in(&self, t: f64) {
+        if self.leaf.clock() < t {
+            self.leaf.set_clock(t);
+        }
+        if self.rail.clock() < t {
+            self.rail.set_clock(t);
+        }
+    }
+
+    /// The furthest subcomm clock — folded back into the parent after a
+    /// drive call.
+    pub fn max_clock(&self) -> f64 {
+        self.leaf.clock().max(self.rail.clock())
+    }
+}
+
+/// Pure grouping: partition comm ranks `0..world_ranks.len()` into node
+/// groups by `world_rank / cores_per_node` (`usize::MAX` or `0` = one
+/// node, matching `NetProfile::same_node`'s flat case). `world_ranks`
+/// is ascending for every communicator this crate builds (split/shrink
+/// sort membership), so equal keys form contiguous runs and the groups
+/// come out as consecutive blocks in comm-rank order.
+pub fn node_groups(world_ranks: &[usize], cores_per_node: usize) -> Vec<Vec<usize>> {
+    debug_assert!(world_ranks.windows(2).all(|w| w[0] < w[1]));
+    let key = |w: usize| {
+        if cores_per_node == 0 || cores_per_node == usize::MAX {
+            0
+        } else {
+            w / cores_per_node
+        }
+    };
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    let mut last = None;
+    for (r, &w) in world_ranks.iter().enumerate() {
+        let k = key(w);
+        if last != Some(k) {
+            groups.push(Vec::new());
+            last = Some(k);
+        }
+        groups.last_mut().expect("pushed above").push(r);
+    }
+    if groups.is_empty() {
+        groups.push(Vec::new()); // degenerate: empty membership
+    }
+    groups
+}
+
+/// Equal-size power-of-two blocks (see module docs for why this is the
+/// bitwise-parity precondition).
+pub fn groups_regular(groups: &[Vec<usize>]) -> bool {
+    let s = groups.first().map_or(0, Vec::len);
+    s > 0 && s.is_power_of_two() && groups.iter().all(|g| g.len() == s)
+}
+
+fn locate(groups: &[Vec<usize>], rank: usize) -> (usize, usize) {
+    for (gi, g) in groups.iter().enumerate() {
+        if let Some(off) = g.iter().position(|&r| r == rank) {
+            return (gi, off);
+        }
+    }
+    unreachable!("rank {rank} must appear in its own grouping");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::netmodel::NetProfile;
+    use crate::mpi::world::World;
+
+    #[test]
+    fn node_groups_partition_and_block_structure() {
+        // Fresh world of 10 ranks, 4 per node: blocks 4/4/2.
+        let wr: Vec<usize> = (0..10).collect();
+        let g = node_groups(&wr, 4);
+        assert_eq!(g, vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7], vec![8, 9]]);
+        assert!(!groups_regular(&g));
+        // 8 ranks, 4 per node: regular.
+        let g = node_groups(&(0..8).collect::<Vec<_>>(), 4);
+        assert!(groups_regular(&g));
+        // Flat (MAX) and "0" both collapse to one node.
+        for cpn in [usize::MAX, 0] {
+            let g = node_groups(&(0..6).collect::<Vec<_>>(), cpn);
+            assert_eq!(g.len(), 1);
+            assert_eq!(g[0], vec![0, 1, 2, 3, 4, 5]);
+        }
+        // Survivor renumbering: world ranks {0,1,2,3,5,6,7,8} at cpn=4 —
+        // node 1 lost world-rank 4, so blocks are 4/3/1 and irregular.
+        let g = node_groups(&[0, 1, 2, 3, 5, 6, 7, 8], 4);
+        assert_eq!(g, vec![vec![0, 1, 2, 3], vec![4, 5, 6], vec![7]]);
+        assert!(!groups_regular(&g));
+    }
+
+    #[test]
+    fn grouping_agrees_with_same_node() {
+        let prof = NetProfile::infiniband_fdr().on_nodes(4);
+        let wr: Vec<usize> = (0..12).collect();
+        let g = node_groups(&wr, prof.cores_per_node);
+        for a in 0..wr.len() {
+            for b in 0..wr.len() {
+                let same_group = g.iter().any(|grp| grp.contains(&a) && grp.contains(&b));
+                assert_eq!(
+                    same_group,
+                    prof.same_node(wr[a], wr[b]),
+                    "ranks {a},{b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn build_splits_leaf_and_rail() {
+        let prof = NetProfile::infiniband_fdr().on_nodes(2);
+        let w = World::new(6, prof);
+        let out = w.run_unwrap(|c| {
+            let t = Topology::build(&c)?;
+            assert_eq!(t.node_count(), 3);
+            assert_eq!(t.node_size(), 2);
+            assert!(t.regular());
+            assert_eq!(t.parent_size(), 6);
+            assert_eq!(t.node_id(), c.rank() / 2);
+            assert_eq!(t.node_offset(), c.rank() % 2);
+            assert_eq!(t.is_leader(), c.rank() % 2 == 0);
+            // Leaf: my node's two ranks; rail: my offset across nodes.
+            assert_eq!(t.leaf().size(), 2);
+            assert_eq!(t.rail().size(), 3);
+            assert_eq!(t.leaf().rank(), t.node_offset());
+            assert_eq!(t.rail().rank(), t.node_id());
+            let leaf_worlds = t.leaf().world_ranks().to_vec();
+            let rail_worlds = t.rail().world_ranks().to_vec();
+            Ok((c.rank(), leaf_worlds, rail_worlds))
+        });
+        for (rank, leaf_worlds, rail_worlds) in out {
+            let node = rank / 2;
+            assert_eq!(leaf_worlds, vec![2 * node, 2 * node + 1]);
+            let off = rank % 2;
+            assert_eq!(rail_worlds, vec![off, 2 + off, 4 + off]);
+        }
+    }
+
+    #[test]
+    fn flat_profile_is_one_regular_node_when_pof2() {
+        let w = World::new(4, NetProfile::infiniband_fdr());
+        w.run_unwrap(|c| {
+            let t = Topology::build(&c)?;
+            assert_eq!(t.node_count(), 1);
+            assert_eq!(t.node_size(), 4);
+            assert!(t.regular());
+            assert_eq!(t.leaf().size(), 4);
+            assert_eq!(t.rail().size(), 1);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rebuild_after_shrink_rederives_groups() {
+        let prof = NetProfile::infiniband_fdr().on_nodes(2);
+        let w = World::new(6, prof);
+        let out = w.run_unwrap(|c| {
+            if c.rank() == 3 {
+                c.fail_self();
+                return Ok(None);
+            }
+            while c.alive_ranks().len() != 5 {
+                std::thread::yield_now();
+            }
+            let shrunk = c.shrink()?;
+            let t = Topology::build(&shrunk)?;
+            // Survivors {0,1,2,4,5} at cpn=2: nodes {0,1},{2},{4,5} —
+            // ragged middle node, so the grouping must go irregular.
+            assert_eq!(t.node_count(), 3);
+            assert!(!t.regular());
+            Ok(Some((shrunk.rank(), t.node_id())))
+        });
+        let got: Vec<_> = out.into_iter().flatten().collect();
+        assert_eq!(got.len(), 5);
+        for (rank, node_id) in got {
+            let want = match rank {
+                0 | 1 => 0, // world 0,1
+                2 => 1,     // world 2
+                _ => 2,     // world 4,5
+            };
+            assert_eq!(node_id, want, "shrunk rank {rank}");
+        }
+    }
+}

@@ -3,10 +3,13 @@
 //! `SyncMode::GradientAverage`, one nonblocking allreduce per gradient
 //! bucket per step — performs **exactly zero** heap allocations after
 //! warmup, just like the flat path it replaces (`alloc_free_sync.rs`).
-//! The tracked window drives both bucket algorithms (recursive doubling
-//! and Rabenseifner, under the priority drain), so the new reduce-scatter
-//! + allgather path is held to the same bar: `IRabenseifner::start`
-//! computes its windows arithmetically, owning no schedule storage.
+//! The tracked window drives all three bucket algorithms (recursive
+//! doubling, Rabenseifner, and the ISSUE-7 hierarchical two-level
+//! schedule, under the priority drain), so each nonblocking path is held
+//! to the same bar: `IRabenseifner::start` computes its windows
+//! arithmetically, owning no schedule storage, and `IHierarchical::start`
+//! holds only an `Arc` to the pre-built topology plus an inline inner
+//! Rabenseifner — no per-start heap.
 //!
 //! Method: identical to the flat-path pin — counting `#[global_allocator]`
 //! with a process-wide tracking flag, pool shelves preloaded past peak
@@ -26,7 +29,7 @@ use dtf::coordinator::{
     BucketAlg, DrainOrder, ExecMode, PipelineEngine, Replica, StepOutcome, SyncMode,
 };
 use dtf::model::ArchSpec;
-use dtf::mpi::{barrier, NetProfile, World};
+use dtf::mpi::{barrier, NetProfile, Topology, World};
 use dtf::runtime::Manifest;
 
 struct CountingAlloc;
@@ -82,7 +85,10 @@ fn steady_state_pipelined_sync_performs_zero_allocations() {
     // launch/drive/drain, not just a degenerate single bucket.
     const BUCKET_BYTES: usize = 24;
     let manifest = tiny_manifest();
-    let w = World::new(P, NetProfile::zero());
+    // 2-rank nodes (zero-cost links throughout — `on_nodes` only grafts
+    // intra pricing onto finite-beta profiles) so the hierarchical engine
+    // runs its real two-level schedule over a regular 2×2 topology.
+    let w = World::new(P, NetProfile::zero().on_nodes(2));
     w.run_unwrap(move |c| {
         let mut replica = Replica::new(
             &manifest,
@@ -101,11 +107,22 @@ fn steady_state_pipelined_sync_performs_zero_allocations() {
         let mut engine_rab = PipelineEngine::for_params(&replica.params, BUCKET_BYTES)
             .with_alg(BucketAlg::Rabenseifner)
             .with_drain(DrainOrder::Priority);
+        // ISSUE 7: the topology (two collective splits) is built once at
+        // trainer start, before the steady state — only its *use* sits in
+        // the tracked window. `IHierarchical::start` must then be
+        // allocation-free: its acceptance pin.
+        let topo = Topology::build(&c)?;
+        assert!(topo.regular(), "fixture drifted: 4 ranks / 2-rank nodes");
+        let mut engine_hier = PipelineEngine::for_params(&replica.params, BUCKET_BYTES)
+            .with_alg(BucketAlg::Hierarchical)
+            .with_topology(Arc::clone(&topo))
+            .with_drain(DrainOrder::Priority);
         let outcome = StepOutcome::Grads { loss: 1.0 };
 
         // Deterministic supply: stock every f32 shelf a bucket-sized
         // message can land on (requests of 1..=6 elements → shelves 0..3),
-        // plus the barrier's i32 payloads.
+        // plus the barrier's i32 payloads. The leaf/rail subcomm groups
+        // own their own pools — stock those from each subcomm's rank 0.
         if c.rank() == 0 {
             let pool = c.pool();
             pool.preload::<f32>(32, 1);
@@ -114,6 +131,15 @@ fn steady_state_pipelined_sync_performs_zero_allocations() {
             pool.preload::<f32>(32, 8);
             pool.preload::<f32>(32, 16);
             pool.preload::<i32>(32, 1);
+        }
+        for sub in [topo.leaf(), topo.rail()] {
+            if sub.rank() == 0 {
+                let pool = sub.pool();
+                pool.preload::<f32>(32, 1);
+                pool.preload::<f32>(32, 2);
+                pool.preload::<f32>(32, 4);
+                pool.preload::<f32>(32, 8);
+            }
         }
         // Pre-grow the mailbox queues past any depth the measured loop
         // can reach, so VecDeque growth cannot fire inside the window.
@@ -133,6 +159,7 @@ fn steady_state_pipelined_sync_performs_zero_allocations() {
         for _ in 0..8 {
             engine.sync_step(&c, &mut replica, &outcome, SyncMode::GradientAverage, 0.0)?;
             engine_rab.sync_step(&c, &mut replica, &outcome, SyncMode::GradientAverage, 0.0)?;
+            engine_hier.sync_step(&c, &mut replica, &outcome, SyncMode::GradientAverage, 0.0)?;
         }
 
         barrier(&c)?;
@@ -145,6 +172,7 @@ fn steady_state_pipelined_sync_performs_zero_allocations() {
         for _ in 0..25 {
             engine.sync_step(&c, &mut replica, &outcome, SyncMode::GradientAverage, 0.0)?;
             engine_rab.sync_step(&c, &mut replica, &outcome, SyncMode::GradientAverage, 0.0)?;
+            engine_hier.sync_step(&c, &mut replica, &outcome, SyncMode::GradientAverage, 0.0)?;
         }
 
         barrier(&c)?;

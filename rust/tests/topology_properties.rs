@@ -1,0 +1,222 @@
+//! Property-based invariants for the topology layer (ISSUE 7 satellite):
+//! the node-grouping function under the hierarchical allreduce must be a
+//! true partition, agree with the profile's `same_node` relation, elect
+//! one unique leader per node, and stay stable under the rank renumbering
+//! a ULFM shrink performs — driven by the in-tree quickprop harness
+//! (seeded, reproducible).
+
+use dtf::mpi::topology::{groups_regular, node_groups};
+use dtf::mpi::{NetProfile, Topology, World};
+use dtf::util::quickprop::{gen, run_prop, Config};
+
+/// Random ascending world-rank set: a survivor subset of `0..world`,
+/// mirroring what a shrunk communicator's `world_ranks()` looks like.
+fn gen_world_ranks(rng: &mut dtf::util::rng::Rng, world: usize) -> Vec<usize> {
+    let mut ranks: Vec<usize> = (0..world).filter(|_| rng.below(4) != 0).collect();
+    if ranks.is_empty() {
+        ranks.push(rng.below(world.max(1)));
+    }
+    ranks
+}
+
+#[test]
+fn prop_node_groups_partition_into_contiguous_blocks() {
+    // For random (survivor set, cores_per_node): groups are non-empty,
+    // disjoint, covering, in ascending order, and each group holds
+    // exactly the survivors sharing one `w / cpn` node key.
+    run_prop(
+        "node_groups partitions",
+        Config { cases: 200, seed: 0x707 },
+        |rng, _| {
+            let world = gen::usize_in(rng, 1, 40);
+            let ranks = gen_world_ranks(rng, world);
+            let cpn = match rng.below(6) {
+                0 => usize::MAX,
+                n => n, // 1..=5
+            };
+            // Groups hold *comm* ranks (positions in `ranks`); the node
+            // key derives from the *world* rank at that position.
+            let groups = node_groups(&ranks, cpn);
+            let flat: Vec<usize> = groups.iter().flatten().copied().collect();
+            let want: Vec<usize> = (0..ranks.len()).collect();
+            if flat != want {
+                return Err(format!(
+                    "cpn={cpn} ranks={ranks:?}: flattened groups {flat:?} \
+                     are not the comm ranks 0..{}",
+                    ranks.len()
+                ));
+            }
+            let key = |r: usize| {
+                if cpn == 0 || cpn == usize::MAX {
+                    0
+                } else {
+                    ranks[r] / cpn
+                }
+            };
+            for g in &groups {
+                if g.is_empty() {
+                    return Err(format!("cpn={cpn} ranks={ranks:?}: empty group"));
+                }
+                if g.iter().any(|&r| key(r) != key(g[0])) {
+                    return Err(format!("cpn={cpn}: group {g:?} spans node keys"));
+                }
+            }
+            // Adjacent groups carry distinct (ascending) node keys, so no
+            // node is split across two groups.
+            for pair in groups.windows(2) {
+                if key(pair[0][0]) >= key(pair[1][0]) {
+                    return Err(format!(
+                        "cpn={cpn}: node keys not strictly ascending: {groups:?}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_leaders_unique_and_regularity_matches_definition() {
+    run_prop(
+        "leaders unique, regularity",
+        Config { cases: 200, seed: 0x708 },
+        |rng, _| {
+            let world = gen::usize_in(rng, 1, 40);
+            let ranks = gen_world_ranks(rng, world);
+            let cpn = gen::usize_in(rng, 1, 6);
+            let groups = node_groups(&ranks, cpn);
+            // One leader (smallest member) per node, all distinct.
+            let mut leaders: Vec<usize> = groups.iter().map(|g| g[0]).collect();
+            let n_leaders = leaders.len();
+            leaders.dedup();
+            if leaders.len() != n_leaders {
+                return Err(format!("duplicate leaders in {groups:?}"));
+            }
+            // `groups_regular` is exactly "equal power-of-two sizes".
+            let s0 = groups[0].len();
+            let want = s0.is_power_of_two() && groups.iter().all(|g| g.len() == s0);
+            if groups_regular(&groups) != want {
+                return Err(format!(
+                    "cpn={cpn} ranks={ranks:?}: groups_regular disagrees \
+                     (sizes {:?})",
+                    groups.iter().map(Vec::len).collect::<Vec<_>>()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_grouping_agrees_with_profile_same_node() {
+    // Two ranks land in one group exactly when the NetProfile the
+    // topology was derived from says they share a node — the pricing and
+    // the subcomm structure must never disagree.
+    run_prop(
+        "grouping == same_node",
+        Config { cases: 100, seed: 0x709 },
+        |rng, _| {
+            let world = gen::usize_in(rng, 1, 24);
+            let ranks = gen_world_ranks(rng, world);
+            let cpn = gen::usize_in(rng, 1, 6);
+            let profile = NetProfile::infiniband_fdr().on_nodes(cpn);
+            let groups = node_groups(&ranks, cpn);
+            // Groups hold comm ranks; the profile speaks world ranks.
+            let node_of = |r: usize| -> usize {
+                groups.iter().position(|g| g.contains(&r)).unwrap()
+            };
+            for a in 0..ranks.len() {
+                for b in 0..ranks.len() {
+                    let grouped = node_of(a) == node_of(b);
+                    if grouped != profile.same_node(ranks[a], ranks[b]) {
+                        return Err(format!(
+                            "cpn={cpn}: world ranks {},{} grouped={grouped} \
+                             but same_node={}",
+                            ranks[a],
+                            ranks[b],
+                            profile.same_node(ranks[a], ranks[b])
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_grouping_stable_under_shrink_renumbering() {
+    // Killing ranks and re-deriving over the survivors must give exactly
+    // the full grouping with the dead removed (and emptied nodes
+    // dropped): node membership keys off *world* ranks, so the shrink's
+    // dense renumbering cannot migrate a survivor between nodes.
+    run_prop(
+        "shrink-stable grouping",
+        Config { cases: 200, seed: 0x70A },
+        |rng, _| {
+            let world = gen::usize_in(rng, 2, 40);
+            let all: Vec<usize> = (0..world).collect();
+            let cpn = gen::usize_in(rng, 1, 6);
+            let survivors = gen_world_ranks(rng, world);
+            // Over the full world, comm rank == world rank, so `full`
+            // reads directly in world-rank space.
+            let full = node_groups(&all, cpn);
+            let shrunk = node_groups(&survivors, cpn);
+            // Grouping must commute with the shrink's dense renumbering:
+            // drop the dead from each full group, rewrite each surviving
+            // world rank to its new comm rank, drop emptied nodes.
+            let expect: Vec<Vec<usize>> = full
+                .iter()
+                .map(|g| {
+                    g.iter()
+                        .filter_map(|w| survivors.iter().position(|s| s == w))
+                        .collect()
+                })
+                .filter(|g: &Vec<usize>| !g.is_empty())
+                .collect();
+            if shrunk != expect {
+                return Err(format!(
+                    "cpn={cpn} survivors={survivors:?}: {shrunk:?} != {expect:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn live_topology_matches_pure_grouping_after_shrink() {
+    // End-to-end cross-check of the pure properties against the real
+    // collective build: p=6 on 2-rank nodes, kill rank 4, shrink, and
+    // every survivor's rebuilt Topology must present exactly the grouping
+    // `node_groups` predicts over the survivor set {0,1,2,3,5}.
+    let w = World::new(6, NetProfile::infiniband_fdr().on_nodes(2));
+    let out = w.run_unwrap(|c| {
+        if c.world_rank() == 4 {
+            c.fail_self();
+            return Ok(None);
+        }
+        while c.alive_ranks().len() != 5 {
+            std::thread::yield_now();
+        }
+        let c = c.shrink()?;
+        let topo = Topology::build(&c)?;
+        Ok(Some((
+            c.rank(),
+            topo.node_id(),
+            topo.node_offset(),
+            topo.node_count(),
+            topo.regular(),
+        )))
+    });
+    // Comm-rank groups over survivor world set {0,1,2,3,5}: world rank 5
+    // renumbers to comm rank 4 and sits alone on the third node.
+    let groups = node_groups(&[0, 1, 2, 3, 5], 2);
+    assert_eq!(groups, vec![vec![0, 1], vec![2, 3], vec![4]]);
+    for info in out.into_iter().flatten() {
+        let (rank, node_id, offset, count, regular) = info;
+        assert_eq!(count, 3, "rank {rank}");
+        assert!(!regular, "rank {rank}: ragged survivor grid must be irregular");
+        assert_eq!(groups[node_id][offset], rank, "rank {rank} mislocated");
+    }
+}
