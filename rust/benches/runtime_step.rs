@@ -39,6 +39,7 @@ use dtf::mpi::{
 };
 use dtf::mpi::{barrier, Communicator, MpiResult, NetProfile, Topology, World};
 use dtf::runtime::{Engine, HostSlice, Manifest};
+use dtf::trace::{self, Kind as TraceKind, Lane, Tracer};
 use dtf::util::rng::Rng;
 use dtf::util::stats::{bench_fn, fmt_secs, header};
 
@@ -192,6 +193,42 @@ fn bench_sync_strategy(
         .fold((0.0, 0.0), |acc, (w_s, v_s)| (acc.0.max(w_s), acc.1.max(v_s)))
 }
 
+/// Trace-derived overlap efficiency of the bucketed arm (ISSUE 8
+/// satellite): a few pipelined steps with the span tracer installed on
+/// each rank's comm, a sync-window span wrapped around every step (what
+/// the trainer does), and the per-rank blobs fed through the same
+/// analysis `dtf trace overlap` runs — aggregate
+/// `1 − Σ exposed / Σ sync-window`, in `[0, 1]`.
+fn bench_overlap_efficiency(compute_s: f64, iters: usize) -> f64 {
+    let p = SYNC_P;
+    let n = MNIST_N_PARAMS;
+    let w = World::new(p, NetProfile::infiniband_fdr());
+    let blobs = w.run_unwrap(move |c| {
+        c.install_tracer(Tracer::new(c.rank()));
+        let mut engine = PipelineEngine::new(BucketPlan::build(
+            &mnist_ranges(),
+            SyncStrategy::DEFAULT_BUCKET_BYTES,
+        ));
+        let mut v = vec![1.0f32; n];
+        let scale = 1.0 / p as f32;
+        for step in 0..iters {
+            let t0 = c.clock();
+            engine.allreduce_overlapped(&c, &mut v, compute_s)?;
+            c.trace_span(Lane::Comm, TraceKind::SyncWindow, step as u32, t0);
+            for x in v.iter_mut() {
+                *x *= scale;
+            }
+        }
+        Ok(c.take_tracer().map(|t| t.to_bytes()).unwrap_or_default())
+    });
+    let stats: Vec<trace::RankStats> = blobs
+        .iter()
+        .filter_map(|b| trace::decode_rank(b).ok())
+        .map(|rt| trace::rank_stats(&rt))
+        .collect();
+    trace::aggregate_overlap_efficiency(&stats)
+}
+
 /// The ISSUE-4 large-bucket comparison: closed-form alpha-beta times at
 /// the 64 MiB / p=8 acceptance point plus a live virtual-clock cross-check
 /// of the two nonblocking state machines at a memory-friendly size.
@@ -324,6 +361,7 @@ fn emit_json(
     flat_ring: (f64, f64),
     flat_rd: (f64, f64),
     bucketed: (f64, f64),
+    overlap_eff: f64,
     n_buckets: usize,
     rab: &RabVsRd,
     hier: &HierVsFlat,
@@ -348,7 +386,8 @@ fn emit_json(
          \"flat_rd_step_wall_s\": {fdw:.9},\n    \"flat_rd_step_virtual_s\": {fdv:.9},\n    \
          \"bucketed_step_wall_s\": {bw:.9},\n    \"bucketed_step_virtual_s\": {bv:.9},\n    \
          \"virtual_speedup_vs_flat_rd\": {sp_rd:.4},\n    \
-         \"virtual_speedup_vs_flat_ring\": {sp_ring:.4}\n  }},\n  \
+         \"virtual_speedup_vs_flat_ring\": {sp_ring:.4},\n    \
+         \"overlap_efficiency\": {overlap_eff:.6}\n  }},\n  \
          \"rabenseifner_vs_rd\": {{\n    \"p\": {SYNC_P},\n    \
          \"large_bucket_bytes\": {lbb},\n    \
          \"modelled_rd_s\": {mrd:.9},\n    \
@@ -377,7 +416,10 @@ fn emit_json(
          virtual_speedup_vs_flat_rd isolates the *overlap* win from the ring-vs-rd \
          difference; bucketed = per-layer IAllreduce pipeline (SyncStrategy::Bucketed) \
          with the same modelled backprop. Virtual time is the alpha-beta cost-model \
-         number where hidden communication is free. rabenseifner_vs_rd section \
+         number where hidden communication is free. overlap_efficiency (ISSUE 8) is \
+         trace-derived: the bucketed arm re-runs with the span tracer installed and the \
+         aggregate 1 - exposed/sync-window figure comes from the same analysis `dtf \
+         trace overlap` prints. rabenseifner_vs_rd section \
          (ISSUE 4): modelled_* are the NetProfile closed forms at the 64 MiB / p=8 \
          acceptance point (CI fails unless rabenseifner is strictly lower, by >=30%); \
          sim_* drive the real IRabenseifner/IAllreduce state machines over the \
@@ -480,6 +522,11 @@ fn main() {
         flat_rd.1 / bucketed.1,
         flat_ring.1 / bucketed.1
     );
+    let overlap_eff = bench_overlap_efficiency(compute_s, iters.min(20));
+    println!(
+        "  overlap efficiency (trace-derived)       {:.1}% of sync-window time hidden",
+        overlap_eff * 100.0
+    );
 
     // ---- rabenseifner vs rd for large buckets (ISSUE 4) ------------------
     let rab = bench_rabenseifner_vs_rd();
@@ -530,8 +577,8 @@ fn main() {
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_allreduce.json").to_string()
     });
     emit_json(
-        &json_path, iters, base, pooled, compute_s, flat_ring, flat_rd, bucketed, n_buckets,
-        &rab, &hier,
+        &json_path, iters, base, pooled, compute_s, flat_ring, flat_rd, bucketed, overlap_eff,
+        n_buckets, &rab, &hier,
     );
 
     // ---- PJRT execution latency (needs AOT artifacts) --------------------

@@ -349,6 +349,11 @@ pub struct TrainConfig {
     /// churn-free default). Bounds idle pool retention on long runs at the
     /// cost of a few warm-up allocations at the next epoch's first steps.
     pub pool_trim: Option<usize>,
+    /// Install the per-rank virtual-clock span tracer (`--trace`). Traces
+    /// are gathered to rank 0 at the end of training and exported as
+    /// Chrome trace-event JSON; disabled (the default) the hook sites
+    /// cost one branch and allocate nothing.
+    pub trace: bool,
     /// Print per-epoch progress lines from rank 0.
     pub verbose: bool,
 }
@@ -379,6 +384,7 @@ impl TrainConfig {
             chaos: ChaosConfig::default(),
             cores_per_node: None,
             pool_trim: None,
+            trace: false,
             verbose: false,
         }
     }
@@ -457,6 +463,11 @@ impl TrainConfig {
 
     pub fn with_cores_per_node(mut self, cpn: usize) -> Self {
         self.cores_per_node = Some(cpn);
+        self
+    }
+
+    pub fn with_trace(mut self, t: bool) -> Self {
+        self.trace = t;
         self
     }
 

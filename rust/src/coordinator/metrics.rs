@@ -85,6 +85,14 @@ pub struct RankMetrics {
     /// [`crate::mpi::encode_world`] for `--record-events` /
     /// `--replay-events`.
     pub event_log: Option<Vec<u8>>,
+    /// Serialized per-rank span trace ([`crate::trace`]) when `--trace`
+    /// installed a tracer. Present even on ranks a fault plan killed
+    /// (their buffer survives locally; they just miss the gather).
+    pub trace: Option<Vec<u8>>,
+    /// Rank 0 only: every survivor's trace blob, gathered over the final
+    /// communicator — feed to [`crate::trace::decode_world`] and
+    /// [`crate::trace::chrome_trace_json`] for the `--trace` output file.
+    pub trace_world: Option<Vec<Vec<u8>>>,
 }
 
 impl RankMetrics {
@@ -114,6 +122,8 @@ impl RankMetrics {
             final_world: 0,
             params_digest: 0,
             event_log: None,
+            trace: None,
+            trace_world: None,
         }
     }
 
@@ -169,6 +179,36 @@ impl TrainReport {
             return 0.0;
         }
         alive.iter().map(|r| r.sync_exposed_s).sum::<f64>() / alive.len() as f64
+    }
+
+    /// Fraction of communication time hidden behind compute, averaged
+    /// over surviving workers: `1 − sync_exposed_s / comm_s` (PS workers
+    /// substitute `pull_wait_s` for the exposed time), clamped to [0, 1].
+    /// Flat sync exposes every allreduce, driving this toward 0; the
+    /// bucketed pipeline overlaps, driving it toward 1. `dtf trace
+    /// summarize` recomputes the same number from the trace spans and
+    /// cross-checks it against this aggregate.
+    pub fn overlap_efficiency(&self) -> f64 {
+        let workers: Vec<_> = self
+            .per_rank
+            .iter()
+            .filter(|r| !r.died && !r.is_server && r.comm_s > 0.0)
+            .collect();
+        if workers.is_empty() {
+            return 1.0;
+        }
+        workers
+            .iter()
+            .map(|r| {
+                let exposed = if r.pull_wait_s > 0.0 {
+                    r.pull_wait_s
+                } else {
+                    r.sync_exposed_s
+                };
+                (1.0 - exposed / r.comm_s).clamp(0.0, 1.0)
+            })
+            .sum::<f64>()
+            / workers.len() as f64
     }
 
     /// Mean virtual seconds a surviving worker waited for the **first**
@@ -334,6 +374,20 @@ mod tests {
         assert!(r.replicas_bitwise_identical());
         assert_eq!(r.staleness_max(), 2);
         assert!((r.pull_wait_mean_s() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_efficiency_from_exposed_and_comm() {
+        let mut r = report();
+        r.per_rank[0].sync_exposed_s = 1.0; // comm 2.0 → 0.5 hidden
+        r.per_rank[1].sync_exposed_s = 6.0; // comm 6.0 → fully exposed
+        assert!((r.overlap_efficiency() - 0.25).abs() < 1e-12);
+        // PS workers substitute their pull-wait stall.
+        r.per_rank[0].pull_wait_s = 2.0; // fully exposed
+        assert!(r.overlap_efficiency().abs() < 1e-12);
+        // Exposure can exceed comm_s (clock skew); clamp holds the range.
+        r.per_rank[0].pull_wait_s = 100.0;
+        assert!(r.overlap_efficiency() >= 0.0);
     }
 
     #[test]

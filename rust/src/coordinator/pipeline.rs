@@ -82,6 +82,7 @@ use crate::mpi::error::{MpiError, MpiResult};
 use crate::mpi::topology::Topology;
 use crate::mpi::{IAllreduce, IHierarchical, IRabenseifner};
 use crate::model::ParamSet;
+use crate::trace::{Kind as TraceKind, Lane};
 
 #[cfg(doc)]
 use crate::mpi::NetProfile;
@@ -537,7 +538,9 @@ impl PipelineEngine {
         let total = self.plan.n_elems.max(1) as f64;
         for i in 0..self.plan.buckets.len() {
             let range = self.plan.buckets[i].range.clone();
+            let ct0 = comm.clock();
             comm.advance(compute_secs * range.len() as f64 / total);
+            comm.trace_span(Lane::Compute, TraceKind::Compute, i as u32, ct0);
             let nbytes = range.len() * std::mem::size_of::<f32>();
             let started = if self.alg.picks_hierarchical(comm, self.topo.as_ref(), nbytes)
             {
@@ -551,7 +554,10 @@ impl PipelineEngine {
                 IAllreduce::start(comm, ReduceOp::Sum, &mut data[range]).map(BucketOp::Rd)
             };
             match started {
-                Ok(op) => self.states[i] = Some(op),
+                Ok(op) => {
+                    self.states[i] = Some(op);
+                    comm.trace_instant(Lane::Comm, TraceKind::BucketLaunch, i as u32);
+                }
                 Err(e) => {
                     self.cancel_all();
                     return Err(e);
@@ -559,13 +565,20 @@ impl PipelineEngine {
             }
             for j in 0..i {
                 let r = self.plan.buckets[j].range.clone();
+                let dt0 = comm.clock();
                 let drove = match self.states[j].as_mut() {
                     Some(op) => op.drive_one_round(comm, &mut data[r], &mut self.scratch),
                     None => Ok(false),
                 };
-                if let Err(e) = drove {
-                    self.cancel_all();
-                    return Err(e);
+                match drove {
+                    Err(e) => {
+                        self.cancel_all();
+                        return Err(e);
+                    }
+                    Ok(true) => {
+                        comm.trace_span(Lane::Comm, TraceKind::BucketDrive, j as u32, dt0)
+                    }
+                    Ok(false) => {}
                 }
             }
         }
@@ -610,11 +623,15 @@ impl PipelineEngine {
             };
             let range = self.plan.buckets[i].range.clone();
             let slice = &mut data[range.clone()];
+            let wt0 = comm.clock();
             if let Err(e) = op.wait(comm, slice, &mut self.scratch) {
                 self.cancel_all();
                 return Err(e);
             }
+            comm.trace_span(Lane::Comm, TraceKind::BucketWait, i as u32, wt0);
+            let at0 = comm.clock();
             apply(slice, &range);
+            comm.trace_span(Lane::Apply, TraceKind::BucketApply, i as u32, at0);
             if Some(i) == front {
                 self.front_apply_last_s = comm.clock() - t0;
             }
@@ -671,7 +688,9 @@ impl PipelineEngine {
                 self.states[i] = None;
                 let range = self.plan.buckets[i].range.clone();
                 let slice = &mut data[range.clone()];
+                let at0 = comm.clock();
                 apply(slice, &range);
+                comm.trace_span(Lane::Apply, TraceKind::BucketApply, i as u32, at0);
                 remaining -= 1;
                 if Some(i) == front {
                     self.front_apply_last_s = comm.clock() - t0;
@@ -697,18 +716,20 @@ impl PipelineEngine {
                         continue;
                     }
                     comm.with_events(|s| s.log_decision(Event::Drive { bucket: i as u32 }));
-                    match self.drive_decision(comm, data, i) {
+                    let dt0 = comm.clock();
+                    let done = match self.drive_decision(comm, data, i) {
                         Err(e) => {
                             self.cancel_all();
                             return Err(e);
                         }
-                        Ok(false) => {}
-                        Ok(true) => {
-                            comm.with_events(|s| {
-                                s.log_decision(Event::Apply { bucket: i as u32 })
-                            });
-                            apply_bucket!(i);
-                        }
+                        Ok(d) => d,
+                    };
+                    comm.trace_span(Lane::Comm, TraceKind::BucketDrive, i as u32, dt0);
+                    if done {
+                        comm.with_events(|s| {
+                            s.log_decision(Event::Apply { bucket: i as u32 })
+                        });
+                        apply_bucket!(i);
                     }
                 }
             }
@@ -721,10 +742,12 @@ impl PipelineEngine {
                 while remaining > 0 {
                     match comm.with_events(|s| s.next_decision()).flatten() {
                         Some(Event::Drive { bucket }) if (bucket as usize) < n => {
+                            let dt0 = comm.clock();
                             if let Err(e) = self.drive_decision(comm, data, bucket as usize) {
                                 self.cancel_all();
                                 return Err(e);
                             }
+                            comm.trace_span(Lane::Comm, TraceKind::BucketDrive, bucket, dt0);
                         }
                         Some(Event::Apply { bucket }) if (bucket as usize) < n => {
                             let i = bucket as usize;
@@ -732,6 +755,7 @@ impl PipelineEngine {
                                 continue;
                             }
                             let range = self.plan.buckets[i].range.clone();
+                            let wt0 = comm.clock();
                             let res = self.states[i].as_mut().unwrap().wait(
                                 comm,
                                 &mut data[range],
@@ -741,6 +765,7 @@ impl PipelineEngine {
                                 self.cancel_all();
                                 return Err(e);
                             }
+                            comm.trace_span(Lane::Comm, TraceKind::BucketWait, i as u32, wt0);
                             apply_bucket!(i);
                         }
                         Some(_) => {} // Kill records are informational
@@ -750,6 +775,7 @@ impl PipelineEngine {
                                     continue;
                                 }
                                 let range = self.plan.buckets[i].range.clone();
+                                let wt0 = comm.clock();
                                 let res = self.states[i].as_mut().unwrap().wait(
                                     comm,
                                     &mut data[range],
@@ -759,6 +785,12 @@ impl PipelineEngine {
                                     self.cancel_all();
                                     return Err(e);
                                 }
+                                comm.trace_span(
+                                    Lane::Comm,
+                                    TraceKind::BucketWait,
+                                    i as u32,
+                                    wt0,
+                                );
                                 apply_bucket!(i);
                             }
                         }
@@ -838,7 +870,9 @@ impl PipelineEngine {
     ) -> MpiResult<usize> {
         if comm.size() == 1 || mode == SyncMode::None {
             self.front_apply_last_s = 0.0;
+            let ct0 = comm.clock();
             comm.advance(compute_secs);
+            comm.trace_span(Lane::Compute, TraceKind::Compute, 0, ct0);
             if let (SyncMode::GradientAverage, StepOutcome::Grads { .. }) = (mode, outcome) {
                 replica.apply_local_grads();
             }

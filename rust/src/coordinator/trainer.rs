@@ -20,8 +20,11 @@ use super::replica::Replica;
 use super::sync::{sync_metrics, sync_replica};
 use crate::data::{load_train_test, scatter_dataset, BatchIter, Dataset};
 use crate::mpi::comm::Communicator;
-use crate::mpi::{allreduce_with, bcast, AllreduceAlgorithm, MpiError, ReduceOp, Topology};
+use crate::mpi::{
+    allreduce_with, bcast, gather_vecs, AllreduceAlgorithm, MpiError, ReduceOp, Topology,
+};
 use crate::runtime::Manifest;
+use crate::trace::{Kind as TraceKind, Lane, Tracer};
 use crate::util::rng::Rng;
 use crate::Result;
 
@@ -39,6 +42,13 @@ pub fn train_rank(
     // harvested into `metrics.event_log` on every exit path below.
     if let Some(session) = cfg.chaos.session_for(comm.world_rank()) {
         comm.install_events(session);
+    }
+    // Virtual-clock tracing (ISSUE 8): the tracer rides the communicator
+    // exactly like the event session — installed before any message,
+    // moved across ULFM shrinks, harvested at exit. Stamps are virtual
+    // seconds, so a fixed seed yields byte-identical traces.
+    if cfg.trace {
+        comm.install_tracer(Tracer::new(comm.world_rank()));
     }
 
     // ---- rank-0 read + scatter (§3.3.1) --------------------------------
@@ -113,6 +123,7 @@ pub fn train_rank(
     let mut epoch = 0usize;
     while epoch < cfg.epochs {
         if cfg.fault_plan.apply(epoch, &comm) {
+            comm.trace_instant(Lane::Comm, TraceKind::Fault, epoch as u32);
             metrics.died = true;
             break;
         }
@@ -169,6 +180,7 @@ pub fn train_rank(
                 // its own subcomm's revocation — then shrink, rebuild the
                 // topology over the survivors, re-align replicas, and
                 // retry this epoch.
+                comm.trace_instant(Lane::Comm, TraceKind::Revoke, epoch as u32);
                 if let Some(engine) = pipeline.as_mut() {
                     engine.cancel_all();
                 }
@@ -176,7 +188,10 @@ pub fn train_rank(
                     t.revoke_all();
                 }
                 comm.revoke();
+                let shrink_t0 = comm.clock();
                 comm = comm.shrink()?;
+                comm.trace_span(Lane::Comm, TraceKind::Shrink, epoch as u32, shrink_t0);
+                let rebuild_t0 = comm.clock();
                 topo = if pipeline.is_some() && wants_topology(cfg, &comm) {
                     Some(Topology::build(&comm)?)
                 } else {
@@ -186,6 +201,7 @@ pub fn train_rank(
                     engine.set_topology(topo.clone());
                 }
                 realign(&comm, &mut replica)?;
+                comm.trace_span(Lane::Comm, TraceKind::Rebuild, epoch as u32, rebuild_t0);
                 if cfg.verbose && comm.rank() == 0 {
                     eprintln!(
                         "[{}] recovered from rank failure; continuing with p={}",
@@ -217,6 +233,25 @@ pub fn train_rank(
     metrics.wall_s = wall0.elapsed().as_secs_f64();
     metrics.final_world = comm.size();
     metrics.event_log = comm.take_events().map(|s| s.into_log_bytes());
+    // Trace harvest: stamp the trainer's exposed-time aggregate into the
+    // trace (the `dtf trace summarize` cross-check target), serialize the
+    // per-rank buffer, then gather every survivor's blob to rank 0 over
+    // the final communicator. Dead ranks keep their local blob but cannot
+    // join the collective.
+    if comm.has_tracer() {
+        comm.trace_counter(Lane::Comm, TraceKind::SyncExposedS, 0, metrics.sync_exposed_s);
+        let blob = comm.take_tracer().map(|t| t.to_bytes());
+        if !metrics.died {
+            if let Some(b) = blob.as_ref() {
+                match gather_vecs::<u8>(&comm, 0, b) {
+                    Ok(world) => metrics.trace_world = world,
+                    Err(MpiError::ProcFailed { .. }) | Err(MpiError::Revoked) => {}
+                    Err(e) => return Err(e.into()),
+                }
+            }
+        }
+        metrics.trace = blob;
+    }
     Ok(metrics)
 }
 
@@ -257,6 +292,7 @@ fn run_epoch(
                 comm.with_events(|s| {
                     s.record_kill(metrics.steps as usize, comm.world_rank())
                 });
+                comm.trace_instant(Lane::Comm, TraceKind::Fault, metrics.steps as u32);
                 comm.fail_self();
                 metrics.died = true;
                 return Ok(f64::NAN);
@@ -285,6 +321,7 @@ fn run_epoch(
         // bucket's allreduce after its layers' share of backprop); every
         // other path charges it up front. Whatever the clock moved beyond
         // `secs` is synchronization stall — the overlap metric.
+        let step_arg = (metrics.steps - 1) as u32;
         let sync_t0 = comm.clock();
         match cfg.sync_every {
             SyncEvery::Step => match pipeline.as_deref_mut() {
@@ -298,11 +335,14 @@ fn run_epoch(
                 }
                 _ => {
                     comm.advance(secs);
+                    comm.trace_span(Lane::Compute, TraceKind::Compute, step_arg, sync_t0);
                     sync_replica(comm, replica, &outcome, cfg.sync, cfg.allreduce)?;
+                    comm.trace_instant(Lane::Apply, TraceKind::Apply, step_arg);
                 }
             },
             SyncEvery::Epoch => {
                 comm.advance(secs);
+                comm.trace_span(Lane::Compute, TraceKind::Compute, step_arg, sync_t0);
                 // No communication inside the epoch; gradient mode still
                 // applies its *local* update (allocation-free).
                 if let super::replica::StepOutcome::Grads { .. } = outcome {
@@ -310,6 +350,11 @@ fn run_epoch(
                 }
             }
         }
+        // One sync window per step: [backprop start, sync complete). The
+        // trace-derived exposed time — window minus the compute overlap
+        // inside it — matches the `sync_exposed_s` line below (that is
+        // the `dtf trace summarize` cross-check).
+        comm.trace_span(Lane::Comm, TraceKind::SyncWindow, step_arg, sync_t0);
         metrics.sync_exposed_s += (comm.clock() - sync_t0 - secs).max(0.0);
     }
     if cfg.sync_every == SyncEvery::Epoch && cfg.sync != SyncMode::None {

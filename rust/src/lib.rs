@@ -34,6 +34,10 @@
 //!   schedules (step/clock kills, stragglers, message delays) with
 //!   structural shrinking, driving the robustness property tests; the
 //!   event-log record/replay layer lives in [`mpi::events`].
+//! * [`trace`] — deterministic virtual-clock tracing: a per-rank span
+//!   tracer riding on the `Communicator`, Chrome trace-event export
+//!   (`--trace out.json`, Perfetto-loadable), and the `dtf trace`
+//!   analysis commands (summarize / critical-path / overlap).
 
 
 pub mod chaos;
@@ -46,6 +50,7 @@ pub mod mpi;
 pub mod perfmodel;
 pub mod ps;
 pub mod runtime;
+pub mod trace;
 pub mod util;
 
 /// Convenience result type used across the crate.

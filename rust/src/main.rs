@@ -5,6 +5,7 @@
 //!   figures   regenerate the paper's figures/tables (DESIGN.md §6)
 //!   inspect   print Table 1 / manifest details
 //!   calibrate measure per-sample step time for an architecture
+//!   trace     analyze a Chrome trace captured with `train --trace`
 
 use std::sync::Arc;
 
@@ -32,6 +33,7 @@ fn run() -> Result<()> {
         Some("figures") => cmd_figures(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("calibrate") => cmd_calibrate(&args),
+        Some("trace") => cmd_trace(&args),
         Some("help") | None => {
             print!("{}", USAGE);
             Ok(())
@@ -56,11 +58,12 @@ USAGE:
             [--profile ib|socket|bgq|shm] [--sim <secs/sample>|auto]
             [--scale F] [--steps-cap N] [--eval-every N] [--seed N] [--quiet]
             [--chaos-seed N] [--chaos-delay F]
-            [--record-events FILE] [--replay-events FILE]
+            [--record-events FILE] [--replay-events FILE] [--trace FILE]
   dtf figures [--id fig1..fig6|higgs|ablate-*|all] [--epochs N] [--out-dir D]
               [--profile ib|...] [--sps F]
   dtf inspect [--archs] [--artifacts]
   dtf calibrate --arch <id> [--write]
+  dtf trace <summarize|critical-path|overlap> <trace.json> [--top N]
 
 Bucketed sync (`--sync-strategy bucketed`): --bucket-alg picks the nonblocking
 allreduce under each gradient bucket — rd (latency-optimal), rabenseifner
@@ -91,6 +94,16 @@ re-runs them byte-for-byte (pass the same train flags as the recorded run).
 --drain opportunistic applies whichever bucket completes first (still
 bitwise-equal to launch order; deterministic under --chaos-seed/replay).
 
+Tracing (README §Observability): --trace FILE installs a per-rank span
+tracer on the virtual clock (zero perturbation — digests match the untraced
+run bit-for-bit) and writes a Chrome trace-event JSON at exit: one process
+per rank, compute/comm/apply lanes as threads, loadable in Perfetto or
+chrome://tracing. Same seed ⇒ byte-identical trace. `dtf trace summarize`
+prints per-rank time breakdowns with an exposed-communication cross-check
+against the trainer's sync_exposed_s counter; `critical-path` ranks the
+longest bucket stalls; `overlap` reports per-rank and aggregate overlap
+efficiency.
+
 Architectures (Table 1): adult_dnn acoustic_dnn mnist_dnn cifar10_dnn
                          higgs_dnn mnist_cnn cifar10_cnn
 Artifacts dir: ./artifacts (override with DTF_ARTIFACTS). Run `make artifacts`.
@@ -113,7 +126,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         "bucket-alg", "bucket-alg-threshold", "drain", "cores-per-node", "alg",
         "pool-trim", "train-mode", "ps-servers", "consistency", "straggler", "profile",
         "sim", "scale", "steps-cap", "eval-every", "seed", "quiet", "broadcast-init",
-        "chaos-seed", "chaos-delay", "record-events", "replay-events",
+        "chaos-seed", "chaos-delay", "record-events", "replay-events", "trace",
     ])?;
     let manifest = load_manifest()?;
     let arch = args
@@ -251,6 +264,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         args.f64_or("chaos-delay", if cfg.chaos.seed.is_some() { 0.25 } else { 0.0 })?;
     let record_path = args.get("record-events");
     cfg.chaos.record = record_path.is_some();
+    let trace_path = args.get("trace");
+    cfg.trace = trace_path.is_some();
     if let Some(path) = args.get("replay-events") {
         let bytes = std::fs::read(path)
             .map_err(|e| anyhow::anyhow!("--replay-events: cannot read {path:?}: {e}"))?;
@@ -273,6 +288,21 @@ fn cmd_train(args: &Args) -> Result<()> {
         eprintln!("recorded event log for {} ranks -> {path}", logs.len());
     }
 
+    if let Some(path) = trace_path {
+        // Rank 0 gathered every survivor's blob; dead ranks leave empty
+        // slots that decode_world skips.
+        let blobs = report
+            .per_rank
+            .iter()
+            .find_map(|r| r.trace_world.clone())
+            .unwrap_or_default();
+        let ranks = dtf::trace::decode_world(&blobs)
+            .map_err(|m| anyhow::anyhow!("--trace: {m}"))?;
+        std::fs::write(path, dtf::trace::chrome_trace_json(&ranks))
+            .map_err(|e| anyhow::anyhow!("--trace: cannot write {path:?}: {e}"))?;
+        eprintln!("wrote chrome trace for {} ranks -> {path}", ranks.len());
+    }
+
     println!("\n=== training report: {} on {} ranks ===", report.arch, report.ranks);
     println!(
         "  virtual makespan   {:.4} s (training {:.4} s)",
@@ -284,6 +314,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!(
         "  sync stall         {:.4} s/rank (mean; what overlap hides)",
         report.sync_exposed_mean_s()
+    );
+    println!(
+        "  overlap efficiency {:.1}% (share of communication hidden under compute)",
+        report.overlap_efficiency() * 100.0
     );
     if report.per_rank.iter().any(|m| m.buckets_synced > 0) {
         println!(
@@ -310,6 +344,33 @@ fn cmd_train(args: &Args) -> Result<()> {
             ev.accuracy * 100.0
         );
     }
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    args.check_known(&["top"])?;
+    let mut pos = args.positional.iter().skip(1).map(|s| s.as_str());
+    let action = pos.next().unwrap_or("summarize");
+    let path = pos.next().ok_or_else(|| {
+        anyhow::anyhow!("usage: dtf trace <summarize|critical-path|overlap> <trace.json> [--top N]")
+    })?;
+    let top = args.usize_or("top", 5)?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {path:?}: {e}"))?;
+    let ranks = dtf::trace::parse_chrome_trace(&text)
+        .map_err(|m| anyhow::anyhow!("{path}: {m}"))?;
+    if ranks.is_empty() {
+        anyhow::bail!("{path}: no trace events (captured with `dtf train --trace`?)");
+    }
+    let out = match action {
+        "summarize" => dtf::trace::summarize(&ranks, top),
+        "critical-path" => dtf::trace::critical_path(&ranks, top),
+        "overlap" => dtf::trace::overlap_report(&ranks),
+        other => anyhow::bail!(
+            "unknown trace action {other:?} (summarize|critical-path|overlap)"
+        ),
+    };
+    print!("{out}");
     Ok(())
 }
 

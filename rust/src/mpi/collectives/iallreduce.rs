@@ -42,6 +42,7 @@ use crate::mpi::comm::{CollKind, Communicator};
 use crate::mpi::datatype::{reduce_in_place, Reducible, ReduceOp};
 use crate::mpi::error::{MpiError, MpiResult};
 use crate::mpi::Tag;
+use crate::trace::{Kind as TraceKind, Lane};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Phase {
@@ -71,6 +72,10 @@ pub struct IAllreduce {
     /// Rank id within the power-of-two core (-1 = retired even pre-rank).
     newrank: isize,
     phase: Phase,
+    /// Virtual time the current phase began waiting — the start stamp of
+    /// the per-round trace span emitted at each phase transition (unused
+    /// when no tracer is installed on the driving comm).
+    phase_t0: f64,
 }
 
 impl IAllreduce {
@@ -96,6 +101,7 @@ impl IAllreduce {
                 rem: 0,
                 newrank: 0,
                 phase: Phase::Done,
+                phase_t0: comm.clock(),
             });
         }
         let pof2 = pof2_core(p);
@@ -109,6 +115,7 @@ impl IAllreduce {
             rem,
             newrank: 0,
             phase: Phase::Done,
+            phase_t0: comm.clock(),
         };
         if me < 2 * rem {
             if me % 2 == 0 {
@@ -125,6 +132,7 @@ impl IAllreduce {
             op_state.newrank = (me - rem) as isize;
             op_state.enter_core(comm, data)?;
         }
+        op_state.phase_t0 = comm.clock();
         Ok(op_state)
     }
 
@@ -172,10 +180,14 @@ impl IAllreduce {
         match self.phase {
             Phase::PreRecv => {
                 reduce_in_place(self.op, data, incoming)?;
-                self.enter_core(comm, data)
+                comm.trace_span(Lane::Comm, TraceKind::CollPre, self.tag, self.phase_t0);
+                self.enter_core(comm, data)?;
+                self.phase_t0 = comm.clock();
+                Ok(())
             }
             Phase::Core { mask } => {
                 reduce_in_place(self.op, data, incoming)?;
+                comm.trace_span(Lane::Comm, TraceKind::CollRound, self.tag, self.phase_t0);
                 let next = mask << 1;
                 if next < self.pof2 {
                     comm.send(self.core_peer(next), self.tag, data)?;
@@ -188,6 +200,7 @@ impl IAllreduce {
                     }
                     self.phase = Phase::Done;
                 }
+                self.phase_t0 = comm.clock();
                 Ok(())
             }
             Phase::PostRecv => {
@@ -198,7 +211,9 @@ impl IAllreduce {
                     });
                 }
                 data.copy_from_slice(incoming);
+                comm.trace_span(Lane::Comm, TraceKind::CollPost, self.tag, self.phase_t0);
                 self.phase = Phase::Done;
+                self.phase_t0 = comm.clock();
                 Ok(())
             }
             Phase::Done => Ok(()),

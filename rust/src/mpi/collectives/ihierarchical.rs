@@ -90,6 +90,7 @@ use crate::mpi::datatype::{reduce_in_place, Reducible, ReduceOp};
 use crate::mpi::error::{MpiError, MpiResult};
 use crate::mpi::topology::Topology;
 use crate::mpi::Tag;
+use crate::trace::{Kind as TraceKind, Lane};
 
 use super::irabenseifner::IRabenseifner;
 
@@ -130,6 +131,11 @@ pub struct IHierarchical {
     /// Reserved tag for the phase-2 handle, on the rail comm.
     rail_tag: Tag,
     phase: Phase,
+    /// Clock stamp when the current phase began. The subcomms carry no
+    /// tracer, so the intra/inter phase spans are emitted through the
+    /// *parent* comm at each transition, with explicit stamps read off
+    /// the subcomm timeline ([`Topology::max_clock`]).
+    phase_t0: f64,
 }
 
 impl IHierarchical {
@@ -154,6 +160,8 @@ impl IHierarchical {
             } else {
                 Phase::Flat(inner)
             };
+            // The flat fallback runs on the parent comm, whose own
+            // tracer (if any) records the Coll* spans — no Hier* spans.
             return Ok(IHierarchical {
                 topo,
                 op,
@@ -163,6 +171,7 @@ impl IHierarchical {
                 leaf_tag: 0,
                 rail_tag: 0,
                 phase,
+                phase_t0: 0.0,
             });
         }
         let leaf_tag = topo.leaf().next_coll_tag(CollKind::Ihierarchical);
@@ -176,12 +185,13 @@ impl IHierarchical {
             leaf_tag,
             rail_tag,
             phase: Phase::Done,
+            phase_t0: comm.clock(),
         };
         let t = Arc::clone(&op_state.topo);
         t.sync_clock_in(comm.clock());
         let res = if op_state.s == 1 {
             // Every rank its own node: pure inter phase (= flat rab).
-            op_state.enter_inter(&t, data)
+            op_state.enter_inter(comm, &t, data)
         } else {
             op_state.post_rs_send(t.leaf(), data, 1)
         };
@@ -256,18 +266,33 @@ impl IHierarchical {
     /// Reduce-scatter finished: this rank owns one node-reduced chunk.
     /// Start the inter-node Rabenseifner over it on the rail comm, with
     /// the tag reserved at `start`.
-    fn enter_inter<T: Reducible>(&mut self, topo: &Topology, data: &mut [T]) -> MpiResult<()> {
+    fn enter_inter<T: Reducible>(
+        &mut self,
+        comm: &Communicator,
+        topo: &Topology,
+        data: &mut [T],
+    ) -> MpiResult<()> {
         let (clo, _) = self.window_before(self.s); // single chunk [clo, clo+1)
         let span = self.span(clo, clo + 1);
         let inner =
             IRabenseifner::start_with_tag(topo.rail(), self.op, &mut data[span.clone()], self.rail_tag)?;
         if inner.is_complete() {
             // Single-node topology (rail size 1): nothing inter-node.
+            self.mark_phase(comm, topo, TraceKind::HierInter);
             self.enter_allgather(topo, data)
         } else {
             self.phase = Phase::Inter { inner, span };
             Ok(())
         }
+    }
+
+    /// Close the span of the phase that just ended (`[phase_t0, now)` on
+    /// the subcomm timeline) through the parent comm's tracer, and open
+    /// the next phase at `now`. No-op cost when no tracer is installed.
+    fn mark_phase(&mut self, comm: &Communicator, topo: &Topology, kind: TraceKind) {
+        let now = topo.max_clock();
+        comm.trace_rec(Lane::Comm, kind, self.leaf_tag, self.phase_t0, now);
+        self.phase_t0 = now;
     }
 
     /// Inter phase finished: redistribute the reduced chunks node-wide.
@@ -284,6 +309,7 @@ impl IHierarchical {
     /// it.
     fn on_intra_message<T: Reducible>(
         &mut self,
+        comm: &Communicator,
         topo: &Topology,
         data: &mut [T],
         incoming: &[T],
@@ -302,7 +328,8 @@ impl IHierarchical {
                 if next < self.s {
                     self.post_rs_send(topo.leaf(), data, next)
                 } else {
-                    self.enter_inter(topo, data)
+                    self.mark_phase(comm, topo, TraceKind::HierIntraRs);
+                    self.enter_inter(comm, topo, data)
                 }
             }
             Phase::IntraAg { mask } => {
@@ -324,6 +351,7 @@ impl IHierarchical {
                 if next >= 1 {
                     self.post_ag_send(topo.leaf(), data, next)
                 } else {
+                    self.mark_phase(comm, topo, TraceKind::HierIntraAg);
                     self.phase = Phase::Done;
                     Ok(())
                 }
@@ -368,7 +396,7 @@ impl IHierarchical {
         }
         let topo = Arc::clone(&self.topo);
         topo.sync_clock_in(comm.clock());
-        let out = self.drive_regular_once(&topo, data, scratch);
+        let out = self.drive_regular_once(comm, &topo, data, scratch);
         let t = topo.max_clock();
         if t > comm.clock() {
             comm.set_clock(t);
@@ -381,6 +409,7 @@ impl IHierarchical {
 
     fn drive_regular_once<T: Reducible>(
         &mut self,
+        comm: &Communicator,
         topo: &Topology,
         data: &mut [T],
         scratch: &mut [T],
@@ -390,7 +419,7 @@ impl IHierarchical {
                 let src = self.j ^ *mask;
                 let (cnt, _) = topo.leaf().recv_into(Some(src), self.leaf_tag, &mut scratch[..self.n])?;
                 let (incoming, _) = scratch.split_at(cnt);
-                self.on_intra_message(topo, data, incoming)?;
+                self.on_intra_message(comm, topo, data, incoming)?;
                 Ok(true)
             }
             Phase::Inter { inner, span } => {
@@ -398,6 +427,7 @@ impl IHierarchical {
                 let len = sp.end - sp.start;
                 let advanced = inner.drive_one_round(topo.rail(), &mut data[sp], &mut scratch[..len])?;
                 if inner.is_complete() {
+                    self.mark_phase(comm, topo, TraceKind::HierInter);
                     self.enter_allgather(topo, data)?;
                     Ok(true)
                 } else {
@@ -430,7 +460,7 @@ impl IHierarchical {
         }
         let topo = Arc::clone(&self.topo);
         topo.sync_clock_in(comm.clock());
-        let out = self.test_regular(&topo, data, scratch);
+        let out = self.test_regular(comm, &topo, data, scratch);
         let t = topo.max_clock();
         if t > comm.clock() {
             comm.set_clock(t);
@@ -443,6 +473,7 @@ impl IHierarchical {
 
     fn test_regular<T: Reducible>(
         &mut self,
+        comm: &Communicator,
         topo: &Topology,
         data: &mut [T],
         scratch: &mut [T],
@@ -458,7 +489,7 @@ impl IHierarchical {
                     {
                         Some((cnt, _)) => {
                             let (incoming, _) = scratch.split_at(cnt);
-                            self.on_intra_message(topo, data, incoming)?;
+                            self.on_intra_message(comm, topo, data, incoming)?;
                         }
                         None => return Ok(false),
                     }
@@ -467,6 +498,7 @@ impl IHierarchical {
                     let sp = span.clone();
                     let len = sp.end - sp.start;
                     if inner.test(topo.rail(), &mut data[sp], &mut scratch[..len])? {
+                        self.mark_phase(comm, topo, TraceKind::HierInter);
                         self.enter_allgather(topo, data)?;
                     } else {
                         return Ok(false);
@@ -496,7 +528,7 @@ impl IHierarchical {
         }
         let topo = Arc::clone(&self.topo);
         topo.sync_clock_in(comm.clock());
-        let out = self.wait_regular(&topo, data, scratch);
+        let out = self.wait_regular(comm, &topo, data, scratch);
         let t = topo.max_clock();
         if t > comm.clock() {
             comm.set_clock(t);
@@ -509,6 +541,7 @@ impl IHierarchical {
 
     fn wait_regular<T: Reducible>(
         &mut self,
+        comm: &Communicator,
         topo: &Topology,
         data: &mut [T],
         scratch: &mut [T],
@@ -521,12 +554,13 @@ impl IHierarchical {
                     let (cnt, _) =
                         topo.leaf().recv_into(Some(src), self.leaf_tag, &mut scratch[..self.n])?;
                     let (incoming, _) = scratch.split_at(cnt);
-                    self.on_intra_message(topo, data, incoming)?;
+                    self.on_intra_message(comm, topo, data, incoming)?;
                 }
                 Phase::Inter { inner, span } => {
                     let sp = span.clone();
                     let len = sp.end - sp.start;
                     inner.wait(topo.rail(), &mut data[sp], &mut scratch[..len])?;
+                    self.mark_phase(comm, topo, TraceKind::HierInter);
                     self.enter_allgather(topo, data)?;
                 }
                 Phase::Flat(_) => unreachable!("flat phase handled by the wrapper"),

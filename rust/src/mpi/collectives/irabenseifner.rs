@@ -79,6 +79,7 @@ use crate::mpi::comm::{CollKind, Communicator};
 use crate::mpi::datatype::{reduce_in_place, Reducible, ReduceOp};
 use crate::mpi::error::{MpiError, MpiResult};
 use crate::mpi::Tag;
+use crate::trace::{Kind as TraceKind, Lane};
 
 #[cfg(doc)]
 use crate::mpi::IAllreduce;
@@ -115,6 +116,9 @@ pub struct IRabenseifner {
     /// Rank id within the power-of-two core (-1 = retired even pre-rank).
     newrank: isize,
     phase: Phase,
+    /// Virtual time the current traced phase (pre / RS half / AG half /
+    /// post) began — start stamp for the span emitted at its transition.
+    phase_t0: f64,
 }
 
 impl IRabenseifner {
@@ -155,6 +159,7 @@ impl IRabenseifner {
                 rem: 0,
                 newrank: 0,
                 phase: Phase::Done,
+                phase_t0: comm.clock(),
             });
         }
         let pof2 = pof2_core(p);
@@ -168,6 +173,7 @@ impl IRabenseifner {
             rem,
             newrank: 0,
             phase: Phase::Done,
+            phase_t0: comm.clock(),
         };
         if me < 2 * rem {
             if me % 2 == 0 {
@@ -184,6 +190,7 @@ impl IRabenseifner {
             op_state.newrank = (me - rem) as isize;
             op_state.enter_core(comm, data)?;
         }
+        op_state.phase_t0 = comm.clock();
         Ok(op_state)
     }
 
@@ -293,7 +300,10 @@ impl IRabenseifner {
         match self.phase {
             Phase::PreRecv => {
                 reduce_in_place(self.op, data, incoming)?;
-                self.enter_core(comm, data)
+                comm.trace_span(Lane::Comm, TraceKind::CollPre, self.tag, self.phase_t0);
+                self.enter_core(comm, data)?;
+                self.phase_t0 = comm.clock();
+                Ok(())
             }
             Phase::ReduceScatter { mask } => {
                 let (clo, chi) = self.window_before(mask);
@@ -312,7 +322,10 @@ impl IRabenseifner {
                     // Reduce-scatter complete: this rank's window is one
                     // fully reduced chunk. Allgather runs the same peers
                     // in reverse mask order, widest first.
-                    self.post_ag_send(comm, data, self.pof2 >> 1)
+                    comm.trace_span(Lane::Comm, TraceKind::CollRs, self.tag, self.phase_t0);
+                    self.post_ag_send(comm, data, self.pof2 >> 1)?;
+                    self.phase_t0 = comm.clock();
+                    Ok(())
                 }
             }
             Phase::Allgather { mask } => {
@@ -338,6 +351,7 @@ impl IRabenseifner {
                 } else {
                     // Core finished. Odd pre-phase ranks hand the final
                     // vector back to their retired even partner.
+                    comm.trace_span(Lane::Comm, TraceKind::CollAg, self.tag, self.phase_t0);
                     if self.me < 2 * self.rem {
                         comm.send(self.me - 1, self.tag, data)?;
                     }
@@ -353,6 +367,7 @@ impl IRabenseifner {
                     });
                 }
                 data.copy_from_slice(incoming);
+                comm.trace_span(Lane::Comm, TraceKind::CollPost, self.tag, self.phase_t0);
                 self.phase = Phase::Done;
                 Ok(())
             }

@@ -20,6 +20,7 @@ use super::error::{MpiError, MpiResult};
 use super::events::DeliverySeq;
 use super::netmodel::{fold_arrival, NetProfile};
 use super::pool::BufferPool;
+use crate::trace::{Kind as TraceKind, Lane, Tracer};
 
 /// Global (per-`World`) state shared by every communicator.
 #[derive(Debug)]
@@ -154,6 +155,10 @@ pub struct Communicator {
     /// Optional chaos/replay session (`RefCell`, not `Rc`: the communicator
     /// must stay `Send` — it is moved into its rank's thread at spawn).
     events: RefCell<Option<DeliverySeq>>,
+    /// Optional virtual-clock span tracer (same ownership pattern as
+    /// `events`: per-rank, `Send`, moved by `shrink`, absent by default so
+    /// every hook site is a borrow + `None` check when tracing is off).
+    tracer: RefCell<Option<Tracer>>,
 }
 
 impl Communicator {
@@ -172,6 +177,7 @@ impl Communicator {
             coll_seq: Cell::new(0),
             stats: Cell::new(CommStats::default()),
             events: RefCell::new(None),
+            tracer: RefCell::new(None),
         }
     }
 
@@ -196,6 +202,55 @@ impl Communicator {
 
     pub fn has_events(&self) -> bool {
         self.events.borrow().is_some()
+    }
+
+    // ---- virtual-clock tracing ------------------------------------------
+
+    /// Install a span [`Tracer`]: collectives, the pipeline engine, and
+    /// the trainers start recording virtual-clock spans through this comm
+    /// (see `crate::trace`).
+    pub fn install_tracer(&self, t: Tracer) {
+        *self.tracer.borrow_mut() = Some(t);
+    }
+
+    /// Remove and return the tracer (e.g. to serialize its records).
+    pub fn take_tracer(&self) -> Option<Tracer> {
+        self.tracer.borrow_mut().take()
+    }
+
+    /// Run `f` on the installed tracer, if any. The disabled path is one
+    /// `RefCell` borrow and a `None` check — no allocation, no clock
+    /// effect.
+    pub fn with_tracer<R>(&self, f: impl FnOnce(&mut Tracer) -> R) -> Option<R> {
+        self.tracer.borrow_mut().as_mut().map(f)
+    }
+
+    pub fn has_tracer(&self) -> bool {
+        self.tracer.borrow().is_some()
+    }
+
+    /// Record a span from `t0` to the current virtual clock.
+    pub fn trace_span(&self, lane: Lane, kind: TraceKind, arg: u32, t0: f64) {
+        let t1 = self.clock.get();
+        self.with_tracer(|t| t.record(lane, kind, arg, t0, t1));
+    }
+
+    /// Record a span with explicit stamps (for virtual-data-pure sites
+    /// whose begin/end are not "now", e.g. the PS consistency gate).
+    pub fn trace_rec(&self, lane: Lane, kind: TraceKind, arg: u32, t0: f64, t1: f64) {
+        self.with_tracer(|t| t.record(lane, kind, arg, t0, t1));
+    }
+
+    /// Record an instant at the current virtual clock.
+    pub fn trace_instant(&self, lane: Lane, kind: TraceKind, arg: u32) {
+        let t = self.clock.get();
+        self.with_tracer(|tr| tr.instant(lane, kind, arg, t));
+    }
+
+    /// Record a counter sample at the current virtual clock.
+    pub fn trace_counter(&self, lane: Lane, kind: TraceKind, arg: u32, value: f64) {
+        let t = self.clock.get();
+        self.with_tracer(|tr| tr.counter(lane, kind, arg, t, value));
     }
 
     // ---- identity -------------------------------------------------------
@@ -359,6 +414,9 @@ impl Communicator {
                 tag,
             )
         }) {
+            if f != 1.0 {
+                self.trace_instant(Lane::Comm, TraceKind::ChaosDelay, (f as f32).to_bits());
+            }
             transit *= f;
         }
         let arrival = self.clock.get() + transit;
@@ -677,8 +735,11 @@ impl Communicator {
         // The chaos/replay session follows the rank through recovery (the
         // shrunk comm replaces the parent); `split` deliberately does NOT
         // move it — PS ranks use parent and sub-communicator concurrently,
-        // and the session lives with the parent.
+        // and the session lives with the parent. The tracer moves the same
+        // way, so recovery and post-shrink spans stay in one per-rank
+        // stream (subcomms from `split` are untraced by design).
         *comm.events.borrow_mut() = self.events.borrow_mut().take();
+        *comm.tracer.borrow_mut() = self.tracer.borrow_mut().take();
         Ok(comm)
     }
 
@@ -946,6 +1007,30 @@ mod tests {
         assert!(!c0.has_events(), "session must move, not copy");
         assert!(small.has_events());
         assert!(small.take_events().is_some());
+    }
+
+    #[test]
+    fn tracer_installs_records_and_moves_on_shrink() {
+        let world = WorldState::new(3);
+        let group = Arc::new(CommGroup::new(0, vec![0, 1, 2]));
+        let profile = Arc::new(NetProfile::zero());
+        let c0 = Communicator::new(0, group.clone(), world.clone(), profile.clone());
+        let c2 = Communicator::new(2, group, world, profile);
+        // No tracer: every emission is a no-op.
+        c0.trace_instant(Lane::Comm, TraceKind::Fault, 2);
+        assert!(!c0.has_tracer());
+        c0.install_tracer(Tracer::with_capacity(0, 16));
+        c0.advance(1.5);
+        c0.trace_span(Lane::Compute, TraceKind::Compute, 0, 0.5);
+        c0.trace_counter(Lane::Comm, TraceKind::SyncExposedS, 0, 0.25);
+        c2.fail_self();
+        let t0 = c0.clock();
+        let small = c0.shrink().unwrap();
+        small.trace_span(Lane::Comm, TraceKind::Shrink, 0, t0);
+        assert!(!c0.has_tracer(), "tracer must move, not copy");
+        let tr = small.take_tracer().expect("survivor holds the tracer");
+        assert_eq!(tr.len(), 3);
+        assert_eq!(tr.rank(), 0);
     }
 
     #[test]

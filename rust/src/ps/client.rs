@@ -16,6 +16,7 @@ use super::{ShardMap, KIND_DONE, KIND_PULL, KIND_PUSH, KIND_SYNC_PULL, REQ_HEADE
 use super::{TAG_PS_REQ, TAG_PS_RESP};
 use crate::mpi::comm::Communicator;
 use crate::mpi::{MpiError, MpiResult};
+use crate::trace::{Kind as TraceKind, Lane};
 
 /// Per-worker client handle (one per era; rebuilt after a re-shard).
 pub struct PsClient {
@@ -127,6 +128,10 @@ impl PsClient {
             self.staleness_max = self.staleness_max.max(self.clock.saturating_sub(min_clock));
             params[range].copy_from_slice(&self.resp_buf[1..want]);
         }
+        // One RPC span per logical pull (requests + gated responses); its
+        // duration is exactly the `pull_wait_s` increment, which is what
+        // makes the trace-derived exposed time match the counter.
+        comm.trace_span(Lane::Comm, TraceKind::PsPull, self.pulls as u32, t0);
         self.pull_wait_s += comm.clock() - t0;
         self.pulls += 1;
         Ok(())
@@ -142,11 +147,13 @@ impl PsClient {
                 grads.len()
             )));
         }
+        let t0 = comm.clock();
         for shard in 0..self.map.n_shards() {
             let range = self.map.shard_range(shard);
             self.push_bytes += (range.len() * 4) as u64;
             self.request(comm, shard, KIND_PUSH, Some(&grads[range]))?;
         }
+        comm.trace_span(Lane::Comm, TraceKind::PsPush, self.clock as u32, t0);
         self.clock += 1;
         Ok(())
     }

@@ -37,6 +37,7 @@ use super::{TAG_PS_REQ, TAG_PS_RESP, TAG_PS_SEED};
 use crate::mpi::comm::Communicator;
 use crate::mpi::ulfm::FaultPlan;
 use crate::mpi::{pof2_core, Datatype, MpiError, MpiResult};
+use crate::trace::{Kind as TraceKind, Lane};
 
 /// How a serve loop ended (errors propagate separately for ULFM recovery).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -322,6 +323,10 @@ impl ShardServer {
         }
         self.clocks[w] = clock + 1;
         self.push_arrivals[w].push(arrival);
+        // Stamp the apply at the push's *virtual arrival*, not the loop's
+        // consumption time — wall-clock poll order must not leak into the
+        // trace (the same purity rule the gate stamps follow).
+        comm.trace_rec(Lane::Apply, TraceKind::PsPushApply, w as u32, arrival, arrival);
         self.advance_min(comm, fault)
     }
 
@@ -367,6 +372,7 @@ impl ShardServer {
             // Clock-axis fault injection: die *after* applying step k —
             // mid-epoch whenever the epoch spans more steps.
             if fault.dies(k as usize, comm.world_rank()) {
+                comm.trace_rec(Lane::Comm, TraceKind::Fault, k as u32, t, t);
                 comm.fail_self();
                 return Ok(Some(ServeOutcome::Died));
             }
@@ -421,6 +427,10 @@ impl ShardServer {
     ) -> MpiResult<()> {
         let t_gate = self.min_vtime[need as usize];
         let t_svc = arrival.max(t_gate);
+        // Gate-wait span with explicit virtual stamps ([arrival, service))
+        // — pure in the request's virtual data, independent of when the
+        // poll loop happened to consume it.
+        comm.trace_rec(Lane::Comm, TraceKind::PsGate, worker_rank as u32, arrival, t_svc);
         self.max_svc_vtime = self.max_svc_vtime.max(t_svc);
         comm.set_clock(t_svc);
         self.resp_buf.clear();

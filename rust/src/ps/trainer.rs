@@ -38,9 +38,11 @@ use crate::coordinator::trainer::evaluate;
 use crate::data::{load_train_test, scatter_dataset, BatchIter, Dataset};
 use crate::mpi::comm::Communicator;
 use crate::mpi::{
-    allreduce_with, bcast, AllreduceAlgorithm, CommStats, MpiError, MpiResult, ReduceOp,
+    allreduce_with, bcast, gather_vecs, AllreduceAlgorithm, CommStats, MpiError, MpiResult,
+    ReduceOp,
 };
 use crate::runtime::Manifest;
+use crate::trace::{Kind as TraceKind, Lane, Tracer};
 use crate::util::rng::Rng;
 use crate::Result;
 
@@ -79,6 +81,12 @@ pub fn train_rank_ps(
     // recovery; it is harvested into `metrics.event_log` below.
     if let Some(session) = cfg.chaos.session_for(comm.world_rank()) {
         comm.install_events(session);
+    }
+    // Virtual-clock tracing: same lifecycle as the event session — the
+    // tracer stays on the parent communicator through splits (pull/push
+    // RPC spans) and moves across shrinks.
+    if cfg.trace {
+        comm.install_tracer(Tracer::new(comm.world_rank()));
     }
     let mut state = PsRank {
         cfg,
@@ -138,6 +146,23 @@ pub fn train_rank_ps(
     metrics.wall_s = wall0.elapsed().as_secs_f64();
     metrics.final_world = comm.size();
     metrics.event_log = comm.take_events().map(|s| s.into_log_bytes());
+    // Trace harvest — mirrors the allreduce trainer: stamp the exposed
+    // aggregate (pull stalls for PS workers), serialize, gather survivor
+    // blobs to rank 0 over the final communicator.
+    if comm.has_tracer() {
+        comm.trace_counter(Lane::Comm, TraceKind::SyncExposedS, 0, metrics.sync_exposed_s);
+        let blob = comm.take_tracer().map(|t| t.to_bytes());
+        if !metrics.died {
+            if let Some(b) = blob.as_ref() {
+                match gather_vecs::<u8>(&comm, 0, b) {
+                    Ok(world) => metrics.trace_world = world,
+                    Err(MpiError::ProcFailed { .. }) | Err(MpiError::Revoked) => {}
+                    Err(e) => return Err(e.into()),
+                }
+            }
+        }
+        metrics.trace = blob;
+    }
     Ok(metrics)
 }
 
@@ -209,6 +234,7 @@ impl PsRank<'_> {
         if let Some(t) = self.cfg.chaos.clock_kill_for(comm.world_rank()) {
             if comm.clock() >= t {
                 comm.with_events(|s| s.record_kill(self.epoch, comm.world_rank()));
+                comm.trace_instant(Lane::Comm, TraceKind::Fault, self.epoch as u32);
                 comm.fail_self();
                 self.metrics.died = true;
                 return Ok(EraEnd::Died);
@@ -371,6 +397,7 @@ impl PsRank<'_> {
         };
         while self.epoch < cfg.epochs {
             if cfg.fault_plan.apply(self.epoch, comm) {
+                comm.trace_instant(Lane::Comm, TraceKind::Fault, self.epoch as u32);
                 self.metrics.died = true;
                 return Ok(EraEnd::Died);
             }
@@ -472,6 +499,7 @@ impl PsRank<'_> {
                     comm.with_events(|s| {
                         s.record_kill(self.metrics.steps as usize, comm.world_rank())
                     });
+                    comm.trace_instant(Lane::Comm, TraceKind::Fault, self.metrics.steps as u32);
                     comm.fail_self();
                     self.metrics.died = true;
                     return Ok([loss_sum, loss_n as f64]);
@@ -492,7 +520,9 @@ impl PsRank<'_> {
             let (outcome, secs) = replica
                 .step(SyncMode::GradientAverage)
                 .map_err(|e| MpiError::Inconsistent(format!("replica step failed: {e:#}")))?;
+            let ct0 = comm.clock();
             comm.advance(secs);
+            comm.trace_span(Lane::Compute, TraceKind::Compute, self.metrics.steps as u32, ct0);
             self.metrics.compute_s += secs;
             self.metrics.steps += 1;
             self.metrics.samples_trained += replica.batch as u64;

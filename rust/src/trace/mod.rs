@@ -1,0 +1,1120 @@
+//! Deterministic virtual-clock tracing (ISSUE 8 tentpole).
+//!
+//! A per-rank [`Tracer`] records spans, instants, and counters stamped on
+//! the simulated MPI substrate's **virtual clock** — never on wall time —
+//! so the same seed produces byte-identical traces, composing with the
+//! event-log record/replay harness (`mpi/events.rs`). The tracer rides on
+//! the [`Communicator`] exactly like the chaos/replay `DeliverySeq`
+//! session (a `RefCell<Option<Tracer>>`): collectives, the pipeline
+//! engine, both trainers, and the PS client/server all emit through the
+//! comm they already hold, with no signature changes, and `shrink()`
+//! migrates the tracer to the survivor comm so recovery spans land in the
+//! same per-rank stream.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Disabled = free.** The tracer slot is `Option`; every emission
+//!    goes through `Communicator::with_tracer`, which is a `RefCell`
+//!    borrow + `None` check when tracing is off — no allocation, no clock
+//!    perturbation, so the counting-allocator pins and bitwise-parity
+//!    digests hold unchanged.
+//! 2. **Enabled = steady-state allocation-free.** The record buffer is
+//!    preallocated at install ([`Tracer::with_capacity`]); when full, new
+//!    records are counted as dropped rather than reallocating.
+//! 3. **Byte-identical export.** Records carry explicit `(t0, t1)`
+//!    stamps; [`Tracer::to_bytes`] sorts by `(lane, t0, t1, kind, arg)`
+//!    before serializing, so any wall-clock emission-order jitter (e.g.
+//!    `test()`-polling drains in Record mode) collapses as long as the
+//!    record *multiset* is deterministic. Hook sites only emit at state
+//!    transitions of the virtual-time state machines.
+//!
+//! End of training, each surviving rank's buffer is serialized
+//! (`DTFTRACE` header, self-identifying world rank) and gathered to rank
+//! 0 over the existing `gather_vecs` collective, then exported as Chrome
+//! trace-event JSON (`--trace out.json`): one "process" per rank, the
+//! compute/comm/apply lanes as named threads — loadable in Perfetto or
+//! chrome://tracing. `dtf trace {summarize,critical-path,overlap}` reads
+//! the JSON back (via `util::json`) and prints per-rank breakdowns, the
+//! top-k longest exposed bucket stalls, overlap efficiency (cross-checked
+//! against the trainer's `sync_exposed_s` aggregate to ±1e-9), and a
+//! straggler table.
+//!
+//! [`Communicator`]: crate::mpi::comm::Communicator
+
+use std::fmt::Write as _;
+
+use crate::util::json::{self, Value};
+
+/// Magic bytes opening one rank's serialized trace.
+pub const TRACE_MAGIC: &[u8; 8] = b"DTFTRACE";
+/// Per-rank blob format version.
+pub const TRACE_VERSION: u32 = 1;
+/// Default ring capacity (records) for a trainer-installed tracer:
+/// ~1.4 MiB/rank, far above what a capped quickcheck/CI run emits.
+pub const DEFAULT_RING_CAP: usize = 1 << 16;
+
+/// Which timeline lane (Chrome "thread") a record renders on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Lane {
+    Compute = 0,
+    Comm = 1,
+    Apply = 2,
+}
+
+impl Lane {
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::Compute => "compute",
+            Lane::Comm => "comm",
+            Lane::Apply => "apply",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Lane> {
+        match v {
+            0 => Some(Lane::Compute),
+            1 => Some(Lane::Comm),
+            2 => Some(Lane::Apply),
+            _ => None,
+        }
+    }
+}
+
+/// What a record describes. Spans unless noted; instants stamp one
+/// moment (`t1 == t0`), counters carry their value in `t1`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Kind {
+    /// Local forward+backward compute (arg = step, or bucket in the
+    /// pipelined drain where each bucket's slice is advanced separately).
+    Compute = 0,
+    /// One step's synchronization window, `sync_t0 → sync done`
+    /// (arg = step). Compute overlapped under it is what the pipeline
+    /// hides; the remainder is the exposed cost.
+    SyncWindow = 1,
+    /// Optimizer/weight apply at step granularity (arg = step).
+    Apply = 2,
+    /// Instant: a bucket's nonblocking collective started (arg = bucket).
+    BucketLaunch = 3,
+    /// One progress round driven on a bucket's collective (arg = bucket).
+    BucketDrive = 4,
+    /// Blocking wait for a bucket to complete — the exposed stall
+    /// (arg = bucket).
+    BucketWait = 5,
+    /// Applying one bucket's reduced gradients (arg = bucket).
+    BucketApply = 6,
+    /// Non-power-of-two pre-fold phase of rd/Rabenseifner (arg = op tag).
+    CollPre = 7,
+    /// One recursive-doubling exchange round (arg = op tag).
+    CollRound = 8,
+    /// Rabenseifner reduce-scatter half (arg = op tag).
+    CollRs = 9,
+    /// Rabenseifner allgather half (arg = op tag).
+    CollAg = 10,
+    /// Non-power-of-two post-broadcast phase (arg = op tag).
+    CollPost = 11,
+    /// Hierarchical intra-node reduce-scatter phase (arg = op tag).
+    HierIntraRs = 12,
+    /// Hierarchical inter-node (rail) phase (arg = op tag).
+    HierInter = 13,
+    /// Hierarchical intra-node allgather phase (arg = op tag).
+    HierIntraAg = 14,
+    /// PS client push RPC, send → ack (arg = shard).
+    PsPush = 15,
+    /// PS client pull RPC, request → payload (arg = shard).
+    PsPull = 16,
+    /// PS server consistency-gate wait: request arrival → service time
+    /// (arg = gated version/step).
+    PsGate = 17,
+    /// Instant: PS server applied a pushed gradient (arg = source rank).
+    PsPushApply = 18,
+    /// Instant: ULFM revoke observed (arg = epoch).
+    Revoke = 19,
+    /// ULFM shrink: revoke observed → survivor comm built (arg = epoch).
+    Shrink = 20,
+    /// Post-shrink state rebuild (re-shard, re-seed) (arg = epoch).
+    Rebuild = 21,
+    /// Instant: chaos fault fired here (arg = victim world rank).
+    Fault = 22,
+    /// Instant: chaos delay stretched an outgoing message
+    /// (arg = f32 bits of the factor).
+    ChaosDelay = 23,
+    /// Counter: the trainer's end-of-run `sync_exposed_s` aggregate
+    /// (value in `t1`) — lets analysis cross-check its own derivation.
+    SyncExposedS = 24,
+}
+
+/// All kinds, for name↔kind mapping and validation.
+const KINDS: [Kind; 25] = [
+    Kind::Compute,
+    Kind::SyncWindow,
+    Kind::Apply,
+    Kind::BucketLaunch,
+    Kind::BucketDrive,
+    Kind::BucketWait,
+    Kind::BucketApply,
+    Kind::CollPre,
+    Kind::CollRound,
+    Kind::CollRs,
+    Kind::CollAg,
+    Kind::CollPost,
+    Kind::HierIntraRs,
+    Kind::HierInter,
+    Kind::HierIntraAg,
+    Kind::PsPush,
+    Kind::PsPull,
+    Kind::PsGate,
+    Kind::PsPushApply,
+    Kind::Revoke,
+    Kind::Shrink,
+    Kind::Rebuild,
+    Kind::Fault,
+    Kind::ChaosDelay,
+    Kind::SyncExposedS,
+];
+
+impl Kind {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::Compute => "compute",
+            Kind::SyncWindow => "sync_window",
+            Kind::Apply => "apply",
+            Kind::BucketLaunch => "bucket_launch",
+            Kind::BucketDrive => "bucket_drive",
+            Kind::BucketWait => "bucket_wait",
+            Kind::BucketApply => "bucket_apply",
+            Kind::CollPre => "coll_pre",
+            Kind::CollRound => "coll_round",
+            Kind::CollRs => "coll_rs",
+            Kind::CollAg => "coll_ag",
+            Kind::CollPost => "coll_post",
+            Kind::HierIntraRs => "hier_intra_rs",
+            Kind::HierInter => "hier_inter",
+            Kind::HierIntraAg => "hier_intra_ag",
+            Kind::PsPush => "ps_push",
+            Kind::PsPull => "ps_pull",
+            Kind::PsGate => "ps_gate",
+            Kind::PsPushApply => "ps_push_apply",
+            Kind::Revoke => "revoke",
+            Kind::Shrink => "shrink",
+            Kind::Rebuild => "rebuild",
+            Kind::Fault => "fault",
+            Kind::ChaosDelay => "chaos_delay",
+            Kind::SyncExposedS => "sync_exposed_s",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Kind> {
+        KINDS.iter().copied().find(|k| k.name() == name)
+    }
+
+    fn from_u8(v: u8) -> Option<Kind> {
+        KINDS.get(v as usize).copied()
+    }
+
+    /// Instants render as Chrome "i" events (`t1 == t0`).
+    pub fn is_instant(self) -> bool {
+        matches!(
+            self,
+            Kind::BucketLaunch
+                | Kind::PsPushApply
+                | Kind::Revoke
+                | Kind::Fault
+                | Kind::ChaosDelay
+        )
+    }
+
+    /// Counters render as Chrome "C" events (value in `t1`).
+    pub fn is_counter(self) -> bool {
+        matches!(self, Kind::SyncExposedS)
+    }
+}
+
+/// One trace record. Spans: `[t0, t1]` virtual seconds. Instants:
+/// `t1 == t0`. Counters: stamp in `t0`, value in `t1`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Rec {
+    pub t0: f64,
+    pub t1: f64,
+    pub arg: u32,
+    pub kind: Kind,
+    pub lane: Lane,
+}
+
+impl Rec {
+    pub fn dur(&self) -> f64 {
+        (self.t1 - self.t0).max(0.0)
+    }
+}
+
+/// Total order making export byte-deterministic even when records were
+/// emitted in a wall-clock-dependent order (same multiset ⇒ same bytes).
+fn rec_cmp(a: &Rec, b: &Rec) -> std::cmp::Ordering {
+    (a.lane as u8)
+        .cmp(&(b.lane as u8))
+        .then(a.t0.total_cmp(&b.t0))
+        .then(a.t1.total_cmp(&b.t1))
+        .then((a.kind as u8).cmp(&(b.kind as u8)))
+        .then(a.arg.cmp(&b.arg))
+}
+
+const REC_BYTES: usize = 22;
+const HEADER_BYTES: usize = 24;
+
+/// Per-rank span/instant/counter recorder on the virtual clock.
+///
+/// Installed on a [`Communicator`] via `install_tracer`; absent (the
+/// common case) every hook site is a no-op. The buffer is preallocated:
+/// steady-state recording never allocates, and overflow drops (counted)
+/// instead of growing.
+///
+/// [`Communicator`]: crate::mpi::comm::Communicator
+#[derive(Debug)]
+pub struct Tracer {
+    rank: u32,
+    recs: Vec<Rec>,
+    cap: usize,
+    dropped: u32,
+}
+
+impl Tracer {
+    pub fn new(world_rank: usize) -> Tracer {
+        Tracer::with_capacity(world_rank, DEFAULT_RING_CAP)
+    }
+
+    pub fn with_capacity(world_rank: usize, cap: usize) -> Tracer {
+        Tracer {
+            rank: world_rank as u32,
+            recs: Vec::with_capacity(cap),
+            cap,
+            dropped: 0,
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank as usize
+    }
+
+    pub fn len(&self) -> usize {
+        self.recs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.recs.is_empty()
+    }
+
+    pub fn dropped(&self) -> u32 {
+        self.dropped
+    }
+
+    /// Record a span `[t0, t1]`. Inverted stamps (fp jitter) clamp to a
+    /// zero-length span rather than corrupting the sort order.
+    pub fn record(&mut self, lane: Lane, kind: Kind, arg: u32, t0: f64, t1: f64) {
+        if self.recs.len() >= self.cap {
+            self.dropped = self.dropped.saturating_add(1);
+            return;
+        }
+        let t1 = if kind.is_counter() { t1 } else { t1.max(t0) };
+        self.recs.push(Rec {
+            t0,
+            t1,
+            arg,
+            kind,
+            lane,
+        });
+    }
+
+    /// Record an instant at `t`.
+    pub fn instant(&mut self, lane: Lane, kind: Kind, arg: u32, t: f64) {
+        self.record(lane, kind, arg, t, t);
+    }
+
+    /// Record a counter sample (`value` carried in the `t1` slot).
+    pub fn counter(&mut self, lane: Lane, kind: Kind, arg: u32, t: f64, value: f64) {
+        self.record(lane, kind, arg, t, value);
+    }
+
+    /// Serialize: `DTFTRACE ver rank dropped nrecs recs…`, records sorted
+    /// by [`rec_cmp`] so the bytes are a pure function of the record
+    /// multiset. End-of-run only — this allocates.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut recs = self.recs.clone();
+        recs.sort_by(rec_cmp);
+        let mut out = Vec::with_capacity(HEADER_BYTES + recs.len() * REC_BYTES);
+        out.extend_from_slice(TRACE_MAGIC);
+        out.extend_from_slice(&TRACE_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.rank.to_le_bytes());
+        out.extend_from_slice(&self.dropped.to_le_bytes());
+        out.extend_from_slice(&(recs.len() as u32).to_le_bytes());
+        for r in &recs {
+            out.extend_from_slice(&r.t0.to_le_bytes());
+            out.extend_from_slice(&r.t1.to_le_bytes());
+            out.extend_from_slice(&r.arg.to_le_bytes());
+            out.push(r.kind as u8);
+            out.push(r.lane as u8);
+        }
+        out
+    }
+}
+
+/// One rank's decoded trace (records in serialized = sorted order).
+#[derive(Debug, Clone)]
+pub struct RankTrace {
+    pub rank: u32,
+    pub dropped: u32,
+    pub recs: Vec<Rec>,
+}
+
+fn read_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+}
+
+fn read_f64(b: &[u8], at: usize) -> f64 {
+    let mut a = [0u8; 8];
+    a.copy_from_slice(&b[at..at + 8]);
+    f64::from_le_bytes(a)
+}
+
+/// Parse one rank's serialized trace blob.
+pub fn decode_rank(bytes: &[u8]) -> Result<RankTrace, String> {
+    if bytes.len() < HEADER_BYTES || &bytes[..8] != TRACE_MAGIC {
+        return Err("not a trace blob (bad magic)".into());
+    }
+    let version = read_u32(bytes, 8);
+    if version != TRACE_VERSION {
+        return Err(format!(
+            "trace version {version} unsupported (this build reads {TRACE_VERSION})"
+        ));
+    }
+    let rank = read_u32(bytes, 12);
+    let dropped = read_u32(bytes, 16);
+    let n = read_u32(bytes, 20) as usize;
+    if bytes.len() != HEADER_BYTES + n * REC_BYTES {
+        return Err(format!(
+            "trace blob length mismatch: {} bytes for {n} records",
+            bytes.len()
+        ));
+    }
+    let mut recs = Vec::with_capacity(n);
+    for i in 0..n {
+        let at = HEADER_BYTES + i * REC_BYTES;
+        let kind = Kind::from_u8(bytes[at + 20])
+            .ok_or_else(|| format!("trace record {i}: bad kind {}", bytes[at + 20]))?;
+        let lane = Lane::from_u8(bytes[at + 21])
+            .ok_or_else(|| format!("trace record {i}: bad lane {}", bytes[at + 21]))?;
+        recs.push(Rec {
+            t0: read_f64(bytes, at),
+            t1: read_f64(bytes, at + 8),
+            arg: read_u32(bytes, at + 16),
+            kind,
+            lane,
+        });
+    }
+    Ok(RankTrace {
+        rank,
+        dropped,
+        recs,
+    })
+}
+
+/// Decode a gathered set of per-rank blobs (empty/missing entries are
+/// skipped — dead ranks don't gather), deduped by self-identified world
+/// rank and sorted by it.
+pub fn decode_world(blobs: &[Vec<u8>]) -> Result<Vec<RankTrace>, String> {
+    let mut out: Vec<RankTrace> = Vec::new();
+    for blob in blobs {
+        if blob.is_empty() {
+            continue;
+        }
+        let rt = decode_rank(blob)?;
+        if !out.iter().any(|o| o.rank == rt.rank) {
+            out.push(rt);
+        }
+    }
+    out.sort_by_key(|r| r.rank);
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event export / import
+// ---------------------------------------------------------------------------
+
+const SECS_TO_US: f64 = 1e6;
+
+fn push_event_common(out: &mut String, name: &str, ph: char, pid: u32, tid: u8, ts_us: f64) {
+    // f64 Display is the shortest round-tripping decimal — deterministic
+    // for a given bit pattern, which is what byte-identical export needs.
+    let _ = write!(
+        out,
+        "{{\"name\":\"{name}\",\"ph\":\"{ph}\",\"pid\":{pid},\"tid\":{tid},\"ts\":{ts_us}"
+    );
+}
+
+/// Render decoded rank traces as a Chrome trace-event JSON document: one
+/// process per rank, lanes as threads, loadable in Perfetto /
+/// chrome://tracing. Output bytes are a pure function of the input.
+pub fn chrome_trace_json(ranks: &[RankTrace]) -> String {
+    let mut ranks: Vec<&RankTrace> = ranks.iter().collect();
+    ranks.sort_by_key(|r| r.rank);
+    let mut out = String::new();
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+    let mut first = true;
+    let sep = |out: &mut String, first: &mut bool| {
+        if !*first {
+            out.push_str(",\n");
+        }
+        *first = false;
+    };
+    for rt in &ranks {
+        sep(&mut out, &mut first);
+        let label = if rt.dropped > 0 {
+            format!("rank {} (dropped {})", rt.rank, rt.dropped)
+        } else {
+            format!("rank {}", rt.rank)
+        };
+        let _ = write!(
+            out,
+            "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{},\"args\":{{\"name\":\"{label}\"}}}}",
+            rt.rank
+        );
+        for lane in [Lane::Compute, Lane::Comm, Lane::Apply] {
+            sep(&mut out, &mut first);
+            let _ = write!(
+                out,
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{},\"tid\":{},\"args\":{{\"name\":\"{}\"}}}}",
+                rt.rank,
+                lane as u8,
+                lane.name()
+            );
+        }
+    }
+    for rt in &ranks {
+        for r in &rt.recs {
+            sep(&mut out, &mut first);
+            let ts = r.t0 * SECS_TO_US;
+            if r.kind.is_counter() {
+                push_event_common(&mut out, r.kind.name(), 'C', rt.rank, r.lane as u8, ts);
+                let _ = write!(out, ",\"args\":{{\"value\":{}}}}}", r.t1);
+            } else if r.kind.is_instant() {
+                push_event_common(&mut out, r.kind.name(), 'i', rt.rank, r.lane as u8, ts);
+                let _ = write!(out, ",\"s\":\"t\",\"args\":{{\"arg\":{}}}}}", r.arg);
+            } else {
+                push_event_common(&mut out, r.kind.name(), 'X', rt.rank, r.lane as u8, ts);
+                let _ = write!(
+                    out,
+                    ",\"dur\":{},\"args\":{{\"arg\":{}}}}}",
+                    r.dur() * SECS_TO_US,
+                    r.arg
+                );
+            }
+        }
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Parse a Chrome trace-event JSON document (as written by
+/// [`chrome_trace_json`]) back into per-rank records. Timestamps round-
+/// trip through microseconds, so reconstructed stamps agree with the
+/// originals to ≪1e-9 virtual seconds. Unknown event names are skipped
+/// (forward compatibility).
+pub fn parse_chrome_trace(text: &str) -> Result<Vec<RankTrace>, String> {
+    let doc = json::parse(text).map_err(|e| format!("trace json: {e}"))?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(Value::as_arr)
+        .ok_or("trace json: no traceEvents array")?;
+    let mut ranks: Vec<RankTrace> = Vec::new();
+    for ev in events {
+        let ph = ev.get("ph").and_then(Value::as_str).unwrap_or("");
+        let pid = ev.get("pid").and_then(Value::as_f64).unwrap_or(0.0) as u32;
+        let rt = match ranks.iter_mut().find(|r| r.rank == pid) {
+            Some(rt) => rt,
+            None => {
+                ranks.push(RankTrace {
+                    rank: pid,
+                    dropped: 0,
+                    recs: Vec::new(),
+                });
+                ranks.last_mut().unwrap()
+            }
+        };
+        if ph == "M" {
+            if let Some(name) = ev
+                .get("args")
+                .and_then(|a| a.get("name"))
+                .and_then(Value::as_str)
+            {
+                if let Some(d) = name
+                    .split("(dropped ")
+                    .nth(1)
+                    .and_then(|s| s.trim_end_matches(')').parse::<u32>().ok())
+                {
+                    rt.dropped = d;
+                }
+            }
+            continue;
+        }
+        let name = ev.get("name").and_then(Value::as_str).unwrap_or("");
+        let kind = match Kind::from_name(name) {
+            Some(k) => k,
+            None => continue,
+        };
+        let lane = Lane::from_u8(ev.get("tid").and_then(Value::as_f64).unwrap_or(0.0) as u8)
+            .ok_or_else(|| format!("trace json: bad tid for {name}"))?;
+        let t0 = ev.get("ts").and_then(Value::as_f64).unwrap_or(0.0) / SECS_TO_US;
+        let arg = ev
+            .get("args")
+            .and_then(|a| a.get("arg"))
+            .and_then(Value::as_f64)
+            .unwrap_or(0.0) as u32;
+        let t1 = match ph {
+            "X" => t0 + ev.get("dur").and_then(Value::as_f64).unwrap_or(0.0) / SECS_TO_US,
+            "i" => t0,
+            "C" => ev
+                .get("args")
+                .and_then(|a| a.get("value"))
+                .and_then(Value::as_f64)
+                .unwrap_or(0.0),
+            other => return Err(format!("trace json: unsupported phase {other:?}")),
+        };
+        rt.recs.push(Rec {
+            t0,
+            t1,
+            arg,
+            kind,
+            lane,
+        });
+    }
+    for rt in &mut ranks {
+        rt.recs.sort_by(rec_cmp);
+    }
+    ranks.sort_by_key(|r| r.rank);
+    Ok(ranks)
+}
+
+// ---------------------------------------------------------------------------
+// Analysis (`dtf trace …`)
+// ---------------------------------------------------------------------------
+
+/// Total length of the union of (possibly overlapping) intervals.
+fn union_len(mut iv: Vec<(f64, f64)>) -> f64 {
+    iv.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut total = 0.0;
+    let mut cur: Option<(f64, f64)> = None;
+    for (a, b) in iv {
+        match cur {
+            Some((ca, cb)) if a <= cb => cur = Some((ca, cb.max(b))),
+            Some((ca, cb)) => {
+                total += cb - ca;
+                cur = Some((a, b));
+            }
+            None => cur = Some((a, b)),
+        }
+    }
+    if let Some((ca, cb)) = cur {
+        total += cb - ca;
+    }
+    total
+}
+
+/// Overlap between `[a, b]` and the union of sorted intervals.
+fn overlap_with(a: f64, b: f64, sorted: &[(f64, f64)]) -> f64 {
+    let mut acc = 0.0;
+    for &(s0, s1) in sorted {
+        if s0 >= b {
+            break;
+        }
+        acc += (s1.min(b) - s0.max(a)).max(0.0);
+    }
+    acc
+}
+
+/// Per-rank virtual-time breakdown derived from trace records.
+#[derive(Debug, Clone)]
+pub struct RankStats {
+    pub rank: u32,
+    /// Span extent: max `t1` − min `t0` over non-counter records.
+    pub wall_s: f64,
+    /// Busy time on the compute lane (interval union).
+    pub compute_s: f64,
+    /// Busy time on the comm lane (interval union).
+    pub comm_s: f64,
+    /// Busy time on the apply lane (interval union).
+    pub apply_s: f64,
+    /// Exposed (non-hidden) communication, derived from the trace: per
+    /// sync window, `window − compute overlapped under it` (allreduce
+    /// modes); Σ pull-wait durations (PS modes).
+    pub exposed_trace_s: f64,
+    /// The trainer's own `sync_exposed_s` counter, when recorded.
+    pub exposed_counter_s: Option<f64>,
+    pub sync_windows: usize,
+    pub ps_mode: bool,
+    pub dropped: u32,
+    /// Σ sync-window durations (not unioned) — the overlap-efficiency
+    /// denominator for allreduce modes.
+    pub window_total_s: f64,
+}
+
+impl RankStats {
+    /// Fraction of communication hidden under compute, in `[0, 1]`.
+    pub fn overlap_efficiency(&self) -> f64 {
+        let denom = if self.ps_mode {
+            self.comm_s
+        } else {
+            // Exposed is bounded by the window; efficiency is measured
+            // against total sync-window time.
+            self.windows_or_comm()
+        };
+        if denom <= 0.0 {
+            return 1.0;
+        }
+        (1.0 - self.exposed_trace_s / denom).clamp(0.0, 1.0)
+    }
+
+    fn windows_or_comm(&self) -> f64 {
+        if self.window_total_s > 0.0 {
+            self.window_total_s
+        } else {
+            self.comm_s
+        }
+    }
+}
+
+impl RankStats {
+    fn new(rank: u32) -> RankStats {
+        RankStats {
+            rank,
+            wall_s: 0.0,
+            compute_s: 0.0,
+            comm_s: 0.0,
+            apply_s: 0.0,
+            exposed_trace_s: 0.0,
+            exposed_counter_s: None,
+            sync_windows: 0,
+            ps_mode: false,
+            dropped: 0,
+            window_total_s: 0.0,
+        }
+    }
+}
+
+/// Compute [`RankStats`] for one decoded rank trace.
+pub fn rank_stats(rt: &RankTrace) -> RankStats {
+    let mut st = RankStats::new(rt.rank);
+    st.dropped = rt.dropped;
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    let mut lanes: [Vec<(f64, f64)>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+    let mut windows: Vec<(f64, f64)> = Vec::new();
+    let mut compute: Vec<(f64, f64)> = Vec::new();
+    let mut pull_s = 0.0;
+    for r in &rt.recs {
+        if r.kind.is_counter() {
+            if r.kind == Kind::SyncExposedS {
+                st.exposed_counter_s = Some(r.t1);
+            }
+            continue;
+        }
+        lo = lo.min(r.t0);
+        hi = hi.max(r.t1);
+        if !r.kind.is_instant() {
+            lanes[r.lane as usize].push((r.t0, r.t1));
+        }
+        match r.kind {
+            Kind::SyncWindow => {
+                windows.push((r.t0, r.t1));
+                st.sync_windows += 1;
+            }
+            Kind::Compute => compute.push((r.t0, r.t1)),
+            Kind::PsPull => {
+                st.ps_mode = true;
+                pull_s += r.dur();
+            }
+            Kind::PsPush | Kind::PsGate | Kind::PsPushApply => st.ps_mode = true,
+            _ => {}
+        }
+    }
+    st.wall_s = if hi > lo { hi - lo } else { 0.0 };
+    let [l0, l1, l2] = lanes;
+    st.compute_s = union_len(l0);
+    st.comm_s = union_len(l1);
+    st.apply_s = union_len(l2);
+    compute.sort_by(|a, b| a.0.total_cmp(&b.0));
+    if st.ps_mode {
+        // PS workers: the exposed cost is the pull wait (pushes are
+        // fire-and-forget; the gate shows up as pull latency).
+        st.exposed_trace_s = pull_s;
+    } else {
+        windows.sort_by(|a, b| a.0.total_cmp(&b.0));
+        for &(a, b) in &windows {
+            st.window_total_s += b - a;
+            st.exposed_trace_s += ((b - a) - overlap_with(a, b, &compute)).max(0.0);
+        }
+    }
+    st
+}
+
+fn fmt_s(v: f64) -> String {
+    format!("{:.6}", v)
+}
+
+/// `dtf trace summarize`: per-rank breakdown + cross-check + stragglers.
+pub fn summarize(ranks: &[RankTrace], top_k: usize) -> String {
+    let stats: Vec<RankStats> = ranks.iter().map(rank_stats).collect();
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:>5} {:>12} {:>12} {:>12} {:>12} {:>12} {:>12}  {}",
+        "rank", "wall_s", "compute_s", "comm_s", "apply_s", "exposed_s", "counter_s", "overlap"
+    );
+    for st in &stats {
+        let counter = st
+            .exposed_counter_s
+            .map(fmt_s)
+            .unwrap_or_else(|| "-".into());
+        let _ = writeln!(
+            out,
+            "{:>5} {:>12} {:>12} {:>12} {:>12} {:>12} {:>12}  {:.1}%",
+            st.rank,
+            fmt_s(st.wall_s),
+            fmt_s(st.compute_s),
+            fmt_s(st.comm_s),
+            fmt_s(st.apply_s),
+            fmt_s(st.exposed_trace_s),
+            counter,
+            st.overlap_efficiency() * 100.0
+        );
+        if st.dropped > 0 {
+            let _ = writeln!(
+                out,
+                "      ! rank {} dropped {} records (ring full) — times are lower bounds",
+                st.rank, st.dropped
+            );
+        }
+    }
+    if let Some(mismatch) = stats.iter().find(|st| {
+        st.exposed_counter_s
+            .map(|c| (c - st.exposed_trace_s).abs() > 1e-9)
+            .unwrap_or(false)
+    }) {
+        let _ = writeln!(
+            out,
+            "! rank {}: trace-derived exposed {} differs from sync_exposed_s counter {} by more than 1e-9",
+            mismatch.rank,
+            fmt_s(mismatch.exposed_trace_s),
+            fmt_s(mismatch.exposed_counter_s.unwrap())
+        );
+    } else if stats.iter().any(|s| s.exposed_counter_s.is_some()) {
+        let _ = writeln!(out, "exposed-time cross-check vs sync_exposed_s: ok (<=1e-9)");
+    }
+    out.push_str(&straggler_table(&stats));
+    out.push_str(&top_exposed(ranks, top_k));
+    out
+}
+
+fn straggler_table(stats: &[RankStats]) -> String {
+    let mut out = String::new();
+    if stats.is_empty() {
+        return out;
+    }
+    let mean: f64 = stats.iter().map(|s| s.compute_s).sum::<f64>() / stats.len() as f64;
+    let _ = writeln!(out, "stragglers (compute_s vs mean {}):", fmt_s(mean));
+    let mut by_compute: Vec<&RankStats> = stats.iter().collect();
+    by_compute.sort_by(|a, b| b.compute_s.total_cmp(&a.compute_s));
+    for st in by_compute {
+        let rel = if mean > 0.0 { st.compute_s / mean } else { 1.0 };
+        let _ = writeln!(
+            out,
+            "  rank {:>3}  compute {}  ({:.2}x mean)",
+            st.rank,
+            fmt_s(st.compute_s),
+            rel
+        );
+    }
+    out
+}
+
+/// `dtf trace critical-path`: top-k longest exposed stalls. Bucketed
+/// runs rank stalls by `bucket_wait`; flat/PS runs fall back to the
+/// longest sync windows / pulls.
+pub fn critical_path(ranks: &[RankTrace], top_k: usize) -> String {
+    let mut out = String::new();
+    let mut waits: Vec<(u32, &Rec)> = Vec::new();
+    for rt in ranks {
+        for r in &rt.recs {
+            if r.kind == Kind::BucketWait {
+                waits.push((rt.rank, r));
+            }
+        }
+    }
+    let fallback = waits.is_empty();
+    if fallback {
+        for rt in ranks {
+            for r in &rt.recs {
+                if matches!(r.kind, Kind::SyncWindow | Kind::PsPull) {
+                    waits.push((rt.rank, r));
+                }
+            }
+        }
+    }
+    waits.sort_by(|a, b| {
+        b.1.dur()
+            .total_cmp(&a.1.dur())
+            .then(a.0.cmp(&b.0))
+            .then(a.1.t0.total_cmp(&b.1.t0))
+    });
+    let what = if fallback {
+        "sync windows / pulls (no bucket_wait spans in trace)"
+    } else {
+        "bucket_wait stalls"
+    };
+    let _ = writeln!(out, "top {} {}:", top_k.min(waits.len()), what);
+    let _ = writeln!(
+        out,
+        "  {:>5} {:>8} {:>12} {:>12} {}",
+        "rank", "arg", "start_s", "dur_s", "kind"
+    );
+    for (rank, r) in waits.iter().take(top_k) {
+        let _ = writeln!(
+            out,
+            "  {:>5} {:>8} {:>12} {:>12} {}",
+            rank,
+            r.arg,
+            fmt_s(r.t0),
+            fmt_s(r.dur()),
+            r.kind.name()
+        );
+    }
+    out
+}
+
+/// `dtf trace overlap`: per-rank and aggregate overlap efficiency.
+pub fn overlap_report(ranks: &[RankTrace]) -> String {
+    let stats: Vec<RankStats> = ranks.iter().map(rank_stats).collect();
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:>5} {:>12} {:>12} {:>12}  {}",
+        "rank", "comm_s", "exposed_s", "hidden_s", "overlap"
+    );
+    let mut tot_denom = 0.0;
+    let mut tot_exposed = 0.0;
+    for st in &stats {
+        let denom = if st.ps_mode {
+            st.comm_s
+        } else {
+            st.windows_or_comm()
+        };
+        tot_denom += denom;
+        tot_exposed += st.exposed_trace_s;
+        let _ = writeln!(
+            out,
+            "{:>5} {:>12} {:>12} {:>12}  {:.1}%",
+            st.rank,
+            fmt_s(denom),
+            fmt_s(st.exposed_trace_s),
+            fmt_s((denom - st.exposed_trace_s).max(0.0)),
+            st.overlap_efficiency() * 100.0
+        );
+    }
+    let agg = aggregate_overlap_efficiency(&stats);
+    let _ = writeln!(
+        out,
+        "aggregate: comm {}  exposed {}  overlap efficiency {:.1}%",
+        fmt_s(tot_denom),
+        fmt_s(tot_exposed),
+        agg * 100.0
+    );
+    out
+}
+
+/// World overlap efficiency: `1 − Σ exposed / Σ sync-window` (clamped to
+/// `[0, 1]`) — the same definition as `TrainReport::overlap_efficiency`.
+pub fn aggregate_overlap_efficiency(stats: &[RankStats]) -> f64 {
+    let denom: f64 = stats
+        .iter()
+        .map(|s| if s.ps_mode { s.comm_s } else { s.windows_or_comm() })
+        .sum();
+    let exposed: f64 = stats.iter().map(|s| s.exposed_trace_s).sum();
+    if denom <= 0.0 {
+        return 1.0;
+    }
+    (1.0 - exposed / denom).clamp(0.0, 1.0)
+}
+
+fn top_exposed(ranks: &[RankTrace], top_k: usize) -> String {
+    // Reuse the critical-path ranking inside summarize output.
+    critical_path(ranks, top_k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(rank: usize) -> Tracer {
+        Tracer::with_capacity(rank, 64)
+    }
+
+    #[test]
+    fn record_sort_serialize_roundtrip() {
+        let mut t = mk(3);
+        // Inserted out of order; export must sort.
+        t.record(Lane::Comm, Kind::SyncWindow, 1, 2.0, 5.0);
+        t.record(Lane::Compute, Kind::Compute, 1, 2.5, 4.0);
+        t.instant(Lane::Comm, Kind::BucketLaunch, 0, 2.25);
+        t.counter(Lane::Comm, Kind::SyncExposedS, 0, 5.0, 1.5);
+        let bytes = t.to_bytes();
+        let rt = decode_rank(&bytes).unwrap();
+        assert_eq!(rt.rank, 3);
+        assert_eq!(rt.dropped, 0);
+        assert_eq!(rt.recs.len(), 4);
+        // Sorted: compute lane first, then comm lane by t0.
+        assert_eq!(rt.recs[0].kind, Kind::Compute);
+        assert_eq!(rt.recs[1].kind, Kind::SyncWindow);
+        assert_eq!(rt.recs[2].kind, Kind::BucketLaunch);
+        assert_eq!(rt.recs[3].kind, Kind::SyncExposedS);
+        assert_eq!(rt.recs[3].t1, 1.5);
+        assert!(decode_rank(&bytes[..10]).is_err());
+        assert!(decode_rank(b"NOTTRACE\0\0\0\0\0\0\0\0\0\0\0\0\0\0\0\0").is_err());
+    }
+
+    #[test]
+    fn export_is_emission_order_independent() {
+        let mut a = mk(0);
+        let mut b = mk(0);
+        let recs = [
+            (Lane::Comm, Kind::BucketDrive, 2u32, 1.0, 1.5),
+            (Lane::Comm, Kind::BucketDrive, 1u32, 0.5, 0.9),
+            (Lane::Compute, Kind::Compute, 0u32, 0.0, 0.4),
+        ];
+        for r in recs {
+            a.record(r.0, r.1, r.2, r.3, r.4);
+        }
+        for r in recs.iter().rev() {
+            b.record(r.0, r.1, r.2, r.3, r.4);
+        }
+        assert_eq!(a.to_bytes(), b.to_bytes());
+        let ja = chrome_trace_json(&[decode_rank(&a.to_bytes()).unwrap()]);
+        let jb = chrome_trace_json(&[decode_rank(&b.to_bytes()).unwrap()]);
+        assert_eq!(ja, jb);
+    }
+
+    #[test]
+    fn ring_overflow_drops_and_counts() {
+        let mut t = Tracer::with_capacity(1, 2);
+        for i in 0..5 {
+            t.instant(Lane::Comm, Kind::Fault, i, i as f64);
+        }
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.dropped(), 3);
+        let rt = decode_rank(&t.to_bytes()).unwrap();
+        assert_eq!(rt.dropped, 3);
+        // Dropped count survives the Chrome JSON round trip too.
+        let back = parse_chrome_trace(&chrome_trace_json(&[rt])).unwrap();
+        assert_eq!(back[0].dropped, 3);
+    }
+
+    #[test]
+    fn kind_names_are_bijective() {
+        for (i, k) in KINDS.iter().enumerate() {
+            assert_eq!(*k as u8 as usize, i);
+            assert_eq!(Kind::from_name(k.name()), Some(*k));
+            assert_eq!(Kind::from_u8(i as u8), Some(*k));
+        }
+        assert_eq!(Kind::from_name("nope"), None);
+        assert_eq!(Kind::from_u8(KINDS.len() as u8), None);
+    }
+
+    #[test]
+    fn chrome_json_roundtrips_records() {
+        let mut t = mk(2);
+        t.record(Lane::Compute, Kind::Compute, 7, 0.001, 0.0025);
+        t.record(Lane::Comm, Kind::SyncWindow, 7, 0.001, 0.004);
+        t.record(Lane::Comm, Kind::CollRound, 42, 0.0026, 0.003);
+        t.instant(Lane::Comm, Kind::ChaosDelay, 1.25f32.to_bits(), 0.0011);
+        t.counter(Lane::Comm, Kind::SyncExposedS, 0, 0.004, 0.0015);
+        t.record(Lane::Apply, Kind::BucketApply, 3, 0.004, 0.0041);
+        let rt = decode_rank(&t.to_bytes()).unwrap();
+        let json_text = chrome_trace_json(std::slice::from_ref(&rt));
+        let back = parse_chrome_trace(&json_text).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].rank, 2);
+        assert_eq!(back[0].recs.len(), rt.recs.len());
+        for (orig, got) in rt.recs.iter().zip(&back[0].recs) {
+            assert_eq!(orig.kind, got.kind);
+            assert_eq!(orig.lane, got.lane);
+            assert_eq!(orig.arg, got.arg);
+            assert!((orig.t0 - got.t0).abs() < 1e-12, "{orig:?} vs {got:?}");
+            assert!((orig.t1 - got.t1).abs() < 1e-12, "{orig:?} vs {got:?}");
+        }
+    }
+
+    #[test]
+    fn union_and_overlap_math() {
+        assert_eq!(union_len(vec![]), 0.0);
+        let u = union_len(vec![(0.0, 1.0), (0.5, 2.0), (3.0, 4.0)]);
+        assert!((u - 3.0).abs() < 1e-12);
+        let sorted = [(0.0, 1.0), (2.0, 3.0)];
+        assert!((overlap_with(0.5, 2.5, &sorted) - 1.0).abs() < 1e-12);
+        assert_eq!(overlap_with(4.0, 5.0, &sorted), 0.0);
+    }
+
+    #[test]
+    fn stats_derive_exposed_and_efficiency() {
+        let mut t = mk(0);
+        // Window [0, 10] with 6s of compute under it → 4s exposed.
+        t.record(Lane::Comm, Kind::SyncWindow, 0, 0.0, 10.0);
+        t.record(Lane::Compute, Kind::Compute, 0, 1.0, 4.0);
+        t.record(Lane::Compute, Kind::Compute, 1, 5.0, 8.0);
+        t.counter(Lane::Comm, Kind::SyncExposedS, 0, 10.0, 4.0);
+        let rt = decode_rank(&t.to_bytes()).unwrap();
+        let st = rank_stats(&rt);
+        assert!((st.exposed_trace_s - 4.0).abs() < 1e-12);
+        assert_eq!(st.exposed_counter_s, Some(4.0));
+        assert!((st.overlap_efficiency() - 0.6).abs() < 1e-12);
+        let text = summarize(std::slice::from_ref(&rt), 3);
+        assert!(text.contains("cross-check vs sync_exposed_s: ok"), "{text}");
+
+        // PS mode: exposed = pull durations.
+        let mut p = mk(1);
+        p.record(Lane::Comm, Kind::PsPull, 0, 0.0, 2.0);
+        p.record(Lane::Comm, Kind::PsPush, 0, 2.0, 2.5);
+        let pst = rank_stats(&decode_rank(&p.to_bytes()).unwrap());
+        assert!(pst.ps_mode);
+        assert!((pst.exposed_trace_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn critical_path_ranks_bucket_waits() {
+        let mut t = mk(0);
+        t.record(Lane::Comm, Kind::BucketWait, 2, 0.0, 0.5);
+        t.record(Lane::Comm, Kind::BucketWait, 7, 1.0, 3.0);
+        t.record(Lane::Comm, Kind::BucketWait, 1, 4.0, 4.1);
+        let rt = decode_rank(&t.to_bytes()).unwrap();
+        let text = critical_path(std::slice::from_ref(&rt), 2);
+        let b7 = text.find("       7").expect("bucket 7 listed");
+        let b2 = text.find("       2").expect("bucket 2 listed");
+        assert!(b7 < b2, "longest wait first:\n{text}");
+        assert!(!text.contains("       1"), "top-2 only:\n{text}");
+    }
+
+    #[test]
+    fn world_decode_dedupes_and_sorts() {
+        let mut a = mk(4);
+        a.instant(Lane::Comm, Kind::Fault, 0, 1.0);
+        let mut b = mk(2);
+        b.instant(Lane::Comm, Kind::Fault, 0, 2.0);
+        let blobs = vec![
+            a.to_bytes(),
+            Vec::new(),
+            b.to_bytes(),
+            a.to_bytes(), // duplicate world rank — first wins
+        ];
+        let world = decode_world(&blobs).unwrap();
+        assert_eq!(world.len(), 2);
+        assert_eq!(world[0].rank, 2);
+        assert_eq!(world[1].rank, 4);
+    }
+}

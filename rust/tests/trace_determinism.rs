@@ -1,0 +1,280 @@
+//! ISSUE 8 acceptance: the deterministic virtual-clock tracer.
+//!
+//! * Two runs with the same seed produce byte-identical Chrome-trace JSON
+//!   — on the seeded opportunistic allreduce path and the PS-BSP path.
+//! * Replaying a recorded event log is trace-deterministic: two replays
+//!   of the same log emit identical traces (and the recorded digests).
+//! * Tracing is a pure observer: digests and per-rank virtual clocks are
+//!   bitwise-equal with the tracer on and off.
+//! * Per rank, the trace-derived exposed communication matches the
+//!   trainer's own `sync_exposed_s` counter to ±1e-9 virtual seconds
+//!   (the `dtf trace summarize` cross-check), across flat, bucketed,
+//!   and parameter-server configs.
+//! * Spans are well-formed (`t1 ≥ t0`, one sync window per step), and
+//!   ULFM recovery leaves revoke/shrink/rebuild spans in survivor traces.
+//!
+//! Sim-mode throughout — no AOT artifacts needed.
+
+use std::sync::Arc;
+
+use dtf::coordinator::{
+    run_training, DrainOrder, ExecMode, SyncMode, SyncStrategy, TrainConfig, TrainMode,
+    TrainReport,
+};
+use dtf::mpi::ulfm::FaultPlan;
+use dtf::mpi::{AllreduceAlgorithm, NetProfile};
+use dtf::ps::Consistency;
+use dtf::runtime::Manifest;
+use dtf::trace::{self, Kind, RankTrace};
+
+fn manifest() -> Arc<Manifest> {
+    Manifest::sim_mlp("trd", 96, 256, 8, 4096, 16)
+}
+
+/// Bucketed allreduce config (deterministic priority drain by default).
+fn bucketed_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::new("trd")
+        .with_epochs(2)
+        .with_sync(SyncMode::GradientAverage)
+        .with_mode(ExecMode::Sim {
+            secs_per_sample: 2e-5,
+        })
+        .with_scale(1.0)
+        .with_steps_cap(8)
+        .with_strategy(SyncStrategy::Bucketed {
+            max_bytes: 16 * 1024,
+        })
+        .with_trace(true);
+    cfg.allreduce = AllreduceAlgorithm::RecursiveDoubling;
+    cfg
+}
+
+fn flat_cfg() -> TrainConfig {
+    TrainConfig::new("trd")
+        .with_epochs(2)
+        .with_sync(SyncMode::GradientAverage)
+        .with_mode(ExecMode::Sim {
+            secs_per_sample: 2e-5,
+        })
+        .with_scale(1.0)
+        .with_steps_cap(8)
+        .with_trace(true)
+}
+
+fn ps_cfg(consistency: Consistency) -> TrainConfig {
+    flat_cfg().with_train_mode(TrainMode::ParameterServer {
+        servers: 2,
+        consistency,
+    })
+}
+
+fn run(cfg: TrainConfig, ranks: usize) -> TrainReport {
+    run_training(cfg, manifest(), ranks, NetProfile::infiniband_fdr()).unwrap()
+}
+
+fn digest(report: &TrainReport) -> u64 {
+    report
+        .per_rank
+        .iter()
+        .find(|r| !r.died && !r.is_server)
+        .expect("a surviving worker")
+        .params_digest
+}
+
+/// The gathered world trace as the `--trace` file's bytes.
+fn trace_json(report: &TrainReport) -> String {
+    let blobs = report
+        .per_rank
+        .iter()
+        .find_map(|r| r.trace_world.clone())
+        .expect("the gather root holds the world traces");
+    trace::chrome_trace_json(&trace::decode_world(&blobs).unwrap())
+}
+
+fn world_traces(report: &TrainReport) -> Vec<RankTrace> {
+    let blobs = report
+        .per_rank
+        .iter()
+        .find_map(|r| r.trace_world.clone())
+        .expect("the gather root holds the world traces");
+    trace::decode_world(&blobs).unwrap()
+}
+
+#[test]
+fn same_seed_bucketed_traces_are_byte_identical() {
+    let seeded = || {
+        let mut c = bucketed_cfg()
+            .with_drain(DrainOrder::Opportunistic)
+            .with_chaos_seed(0xC0FFEE);
+        c.chaos.delay_max = 0.5;
+        c
+    };
+    let a = run(seeded(), 4);
+    let b = run(seeded(), 4);
+    assert_eq!(digest(&a), digest(&b), "same seed must give the same bits");
+    let (ja, jb) = (trace_json(&a), trace_json(&b));
+    assert_eq!(ja, jb, "same-seed traces diverged");
+    // The JSON actually carries the span taxonomy the analysis reads.
+    for name in ["sync_window", "compute", "bucket_launch", "bucket_drive"] {
+        assert!(ja.contains(name), "trace is missing {name} events");
+    }
+    // Per-rank binary blobs agree too (the gathered form).
+    let (ta, tb) = (world_traces(&a), world_traces(&b));
+    assert_eq!(ta.len(), 4);
+    for (ra, rb) in ta.iter().zip(&tb) {
+        assert_eq!(ra.rank, rb.rank);
+        assert_eq!(ra.recs, rb.recs, "rank {} records diverged", ra.rank);
+    }
+}
+
+#[test]
+fn same_seed_ps_traces_are_byte_identical() {
+    let seeded = || {
+        let mut c = ps_cfg(Consistency::Bsp).with_chaos_seed(0xFEED);
+        c.chaos.delay_max = 0.5;
+        c
+    };
+    let a = run(seeded(), 6);
+    let b = run(seeded(), 6);
+    assert_eq!(digest(&a), digest(&b));
+    let ja = trace_json(&a);
+    assert_eq!(ja, trace_json(&b), "same-seed PS traces diverged");
+    for name in ["ps_pull", "ps_push", "ps_gate", "ps_push_apply"] {
+        assert!(ja.contains(name), "PS trace is missing {name} events");
+    }
+}
+
+#[test]
+fn replaying_a_recorded_run_is_trace_deterministic() {
+    // Record under genuine wall-clock opportunism (trace off — Record
+    // mode's poll order is wall-clock-dependent by design).
+    let mut rec_cfg = bucketed_cfg().with_drain(DrainOrder::Opportunistic);
+    rec_cfg.trace = false;
+    rec_cfg.chaos.record = true;
+    let recorded = run(rec_cfg, 4);
+    let logs: Vec<Vec<u8>> = recorded
+        .per_rank
+        .iter()
+        .map(|r| r.event_log.clone().expect("record session on every rank"))
+        .collect();
+    let replay = || {
+        let mut c = bucketed_cfg().with_drain(DrainOrder::Opportunistic);
+        c.chaos.replay = Some(Arc::new(logs.clone()));
+        run(c, 4)
+    };
+    let a = replay();
+    let b = replay();
+    assert_eq!(digest(&recorded), digest(&a), "replay must reproduce the bits");
+    assert_eq!(
+        trace_json(&a),
+        trace_json(&b),
+        "two replays of one log emitted different traces"
+    );
+}
+
+#[test]
+fn tracing_does_not_perturb_digests_or_clocks() {
+    let mut off = bucketed_cfg();
+    off.trace = false;
+    let base = run(off, 4);
+    let traced = run(bucketed_cfg(), 4);
+    assert_eq!(digest(&base), digest(&traced), "tracer must not change the model");
+    for (rb, rt) in base.per_rank.iter().zip(&traced.per_rank) {
+        assert_eq!(
+            rb.clock_s.to_bits(),
+            rt.clock_s.to_bits(),
+            "rank {}: tracer perturbed the virtual clock",
+            rb.world_rank
+        );
+        assert_eq!(rb.sync_exposed_s.to_bits(), rt.sync_exposed_s.to_bits());
+    }
+}
+
+#[test]
+fn exposed_time_cross_checks_against_sync_exposed_s() {
+    // Flat, bucketed/priority, bucketed/launch, and PS-BSP: in every
+    // mode the trace-derived exposed communication must match the
+    // trainer's counter to 1e-9 virtual seconds.
+    let grid: Vec<(TrainConfig, usize)> = vec![
+        (flat_cfg(), 4),
+        (bucketed_cfg(), 4),
+        (bucketed_cfg().with_drain(DrainOrder::Launch), 8),
+        (ps_cfg(Consistency::Bsp), 6),
+    ];
+    for (cfg, ranks) in grid {
+        let report = run(cfg, ranks);
+        let traces = world_traces(&report);
+        assert_eq!(traces.len(), ranks);
+        for rt in &traces {
+            let st = trace::rank_stats(rt);
+            let counter = st
+                .exposed_counter_s
+                .expect("every rank records the sync_exposed_s counter");
+            assert!(
+                (st.exposed_trace_s - counter).abs() <= 1e-9,
+                "rank {}: trace exposed {} vs counter {}",
+                rt.rank,
+                st.exposed_trace_s,
+                counter
+            );
+            // The counter in the trace is the trainer's own aggregate.
+            let m = &report.per_rank[rt.rank as usize];
+            assert_eq!(counter.to_bits(), m.sync_exposed_s.to_bits());
+            // Well-formedness: spans never run backwards; workers get
+            // exactly one sync window (or one pull) per step.
+            for r in &rt.recs {
+                if !r.kind.is_counter() {
+                    assert!(r.t1 >= r.t0, "rank {}: inverted span {r:?}", rt.rank);
+                }
+            }
+            if !m.is_server {
+                let windows =
+                    rt.recs.iter().filter(|r| r.kind == Kind::SyncWindow).count() as u64;
+                let pulls = rt.recs.iter().filter(|r| r.kind == Kind::PsPull).count() as u64;
+                if st.ps_mode {
+                    // One pull per step plus the end-of-training sync flush
+                    // (one per era).
+                    assert!(pulls > m.steps, "rank {}: {pulls} pulls", rt.rank);
+                } else {
+                    assert_eq!(windows, m.steps, "rank {}", rt.rank);
+                }
+                assert!(
+                    rt.recs.iter().any(|r| r.kind == Kind::Compute),
+                    "rank {}: no compute spans",
+                    rt.rank
+                );
+            }
+        }
+        let text = trace::summarize(&traces, 3);
+        assert!(
+            text.contains("cross-check vs sync_exposed_s: ok"),
+            "summarize cross-check failed:\n{text}"
+        );
+    }
+}
+
+#[test]
+fn recovery_spans_survive_a_rank_failure() {
+    let mut cfg = bucketed_cfg();
+    cfg.epochs = 5;
+    cfg.fault_plan = FaultPlan::kill_at(2, 1); // world rank 1 dies at epoch 2
+    let report = run(cfg, 3);
+    assert!(report.per_rank.iter().any(|r| r.died));
+    // Survivors gathered their traces over the shrunken comm; the dead
+    // rank is simply absent from the world decode.
+    let traces = world_traces(&report);
+    assert_eq!(traces.len(), 2);
+    assert!(traces.iter().all(|t| t.rank != 1));
+    // (The `fault` instant lands in the dead rank's local trace only —
+    // it cannot join the gather, so survivors carry the recovery spans.)
+    let json = trace_json(&report);
+    for name in ["revoke", "shrink", "rebuild"] {
+        assert!(json.contains(name), "recovery trace is missing {name} events");
+    }
+    // The round trip the `dtf trace` CLI performs.
+    let back = trace::parse_chrome_trace(&json).unwrap();
+    assert_eq!(back.len(), 2);
+    assert!(back
+        .iter()
+        .any(|rt| rt.recs.iter().any(|r| r.kind == Kind::Shrink)));
+}
