@@ -14,6 +14,10 @@
 //!    note otherwise): the paper's argument — "the critical data
 //!    structures are automatically replicated for fault tolerance", so
 //!    recovery is one averaging all-reduce on the shrunk communicator.
+//! 3. **Elastic shrink-then-grow** (Sim-mode, always runs): a planned
+//!    leave at one epoch boundary, then a scheduled joiner admitted at
+//!    the next — the world goes 4 → 3 → 4, shards rebalance each time,
+//!    and the continuing replicas stay bitwise identical throughout.
 
 use std::sync::Arc;
 
@@ -118,8 +122,60 @@ fn allreduce_rank_failure(manifest: Arc<Manifest>) -> dtf::Result<()> {
     Ok(())
 }
 
+/// Scenario 3: elastic shrink-then-grow on the allreduce path (Sim-mode).
+/// World rank 2 leaves at the epoch-2 boundary (4 → 3), world rank 4
+/// joins at the epoch-4 boundary (3 → 4); BSP keeps every continuing
+/// replica bitwise identical across both boundaries.
+fn elastic_shrink_then_grow() -> dtf::Result<()> {
+    let mut cfg = TrainConfig::new("psf")
+        .with_epochs(6)
+        .with_mode(ExecMode::Sim {
+            secs_per_sample: 2e-5,
+        })
+        .with_scale(1.0)
+        .with_steps_cap(6);
+    cfg.verbose = false;
+    cfg.elastic.enabled = true;
+    cfg.elastic.leaves = vec![(2, 2)];
+    cfg.elastic.joins = vec![(4, 4)];
+
+    let report = run_training(cfg, sim_manifest(), 4, NetProfile::infiniband_fdr())?;
+
+    println!("=== fault_tolerance/elastic: 4 ranks -> leave(2)@e2 -> join(4)@e4 ===");
+    for r in &report.per_rank {
+        let status = if r.left {
+            "left    "
+        } else if r.joined_at.is_some() {
+            "joined  "
+        } else {
+            "initial "
+        };
+        println!(
+            "  rank {} [{status}]: epochs {} | final world {}",
+            r.world_rank,
+            r.epoch_losses.len(),
+            r.final_world
+        );
+    }
+    let leaver = report.per_rank.iter().find(|r| r.left).expect("leaver");
+    assert_eq!(leaver.world_rank, 2);
+    let joiner = report
+        .per_rank
+        .iter()
+        .find(|r| r.joined_at.is_some())
+        .expect("joiner");
+    assert_eq!((joiner.world_rank, joiner.joined_at), (4, Some(4)));
+    for r in report.per_rank.iter().filter(|r| !r.left && !r.died) {
+        assert_eq!(r.final_world, 4, "world must regrow to 4");
+    }
+    assert!(report.replicas_bitwise_identical());
+    println!("  shrink to 3, regrow to 4: OK, continuing replicas bitwise identical\n");
+    Ok(())
+}
+
 fn main() -> dtf::Result<()> {
     ps_shard_failure()?;
+    elastic_shrink_then_grow()?;
     match Manifest::load(Manifest::default_dir()) {
         Ok(m) => allreduce_rank_failure(Arc::new(m))?,
         Err(e) => {

@@ -36,6 +36,14 @@ pub struct ChaosPlan {
     pub straggler: Option<(usize, f64)>,
     /// Message-transit stretch bound for the delivery session.
     pub delay_max: f64,
+    /// Elastic joins `(epoch, world_rank)` — budgeted ranks beyond the
+    /// launch world admitted at an epoch boundary (installed as
+    /// `ElasticConfig::joins`; only [`ChaosPlan::generate_elastic`]
+    /// produces them).
+    pub joins: Vec<(usize, usize)>,
+    /// Scheduled joiners that *flap*: announce not-ready at their
+    /// boundary, degrading the join to the survivor membership.
+    pub flaps: Vec<usize>,
 }
 
 impl ChaosPlan {
@@ -100,7 +108,41 @@ impl ChaosPlan {
             clock_kills,
             straggler,
             delay_max,
+            joins: Vec::new(),
+            flaps: Vec::new(),
         }
+    }
+
+    /// [`ChaosPlan::generate`] plus an elastic join schedule: each
+    /// budgeted seat beyond the launch world (`world..budget`) joins at a
+    /// seeded interior epoch boundary with probability ~0.6, and a joiner
+    /// flaps (announces not-ready) with probability ~0.25. The join
+    /// stream uses its own seed mix, so the kill/straggler/delay
+    /// ingredients are identical to the non-elastic plan for the same
+    /// seed.
+    pub fn generate_elastic(
+        seed: u64,
+        world: usize,
+        budget: usize,
+        epochs: usize,
+        max_step: usize,
+        horizon_s: f64,
+        protected: &[usize],
+    ) -> ChaosPlan {
+        let mut plan = Self::generate(seed, world, max_step, horizon_s, protected);
+        let mut rng = Rng::new(seed ^ 0xE1A5_11C5);
+        for r in world..budget {
+            // Joins land on interior boundaries only (1..epochs): epoch 0
+            // has no boundary and a join *at* the final epoch would never
+            // train.
+            if epochs >= 2 && rng.uniform() < 0.6 {
+                plan.joins.push((1 + rng.below(epochs - 1), r));
+                if rng.uniform() < 0.25 {
+                    plan.flaps.push(r);
+                }
+            }
+        }
+        plan
     }
 
     /// Nothing left to remove — the empty schedule.
@@ -109,6 +151,8 @@ impl ChaosPlan {
             && self.clock_kills.is_empty()
             && self.straggler.is_none()
             && self.delay_max == 0.0
+            && self.joins.is_empty()
+            && self.flaps.is_empty()
     }
 
     /// Total removable ingredients (shrink-progress measure).
@@ -117,6 +161,8 @@ impl ChaosPlan {
             + self.clock_kills.len()
             + usize::from(self.straggler.is_some())
             + usize::from(self.delay_max > 0.0)
+            + self.joins.len()
+            + self.flaps.len()
     }
 
     /// The step-axis kills as a [`FaultPlan`].
@@ -141,6 +187,11 @@ impl ChaosPlan {
         if let Some((rank, mult)) = self.straggler {
             cfg.straggler = Some((rank, mult));
         }
+        if !self.joins.is_empty() {
+            cfg.elastic.enabled = true;
+            cfg.elastic.joins = self.joins.clone();
+            cfg.elastic.flaps = self.flaps.clone();
+        }
         cfg
     }
 
@@ -164,6 +215,23 @@ impl ChaosPlan {
         for &(_, r) in &self.clock_kills {
             if self.step_kills.iter().any(|&(_, sr)| sr == r) {
                 return Err(format!("rank {r} is killed on both axes"));
+            }
+        }
+        let mut joined = Vec::new();
+        for &(_, r) in &self.joins {
+            if r < world {
+                return Err(format!(
+                    "join rank {r} collides with the {world}-rank launch world"
+                ));
+            }
+            if joined.contains(&r) {
+                return Err(format!("rank {r} joins twice"));
+            }
+            joined.push(r);
+        }
+        for &f in &self.flaps {
+            if !joined.contains(&f) {
+                return Err(format!("flap rank {f} has no scheduled join"));
             }
         }
         Ok(())
@@ -191,6 +259,19 @@ impl ChaosPlan {
         if self.delay_max > 0.0 {
             let mut p = self.clone();
             p.delay_max = 0.0;
+            out.push(p);
+        }
+        for i in 0..self.joins.len() {
+            let mut p = self.clone();
+            // Dropping a join also drops its flap — a flap without a
+            // scheduled join is structurally invalid.
+            let (_, r) = p.joins.remove(i);
+            p.flaps.retain(|&f| f != r);
+            out.push(p);
+        }
+        for i in 0..self.flaps.len() {
+            let mut p = self.clone();
+            p.flaps.remove(i);
             out.push(p);
         }
         out
@@ -265,6 +346,8 @@ mod tests {
             clock_kills: vec![(0.5, 3)],
             straggler: Some((1, 2.0)),
             delay_max: 0.25,
+            joins: vec![],
+            flaps: vec![],
         };
         let cfg = plan.apply_to(TrainConfig::new("t"));
         assert_eq!(cfg.fault_plan.failures, vec![(1, 2)]);
@@ -282,6 +365,8 @@ mod tests {
             clock_kills: vec![(0.1, 2)],
             straggler: Some((0, 2.0)),
             delay_max: 0.5,
+            joins: vec![],
+            flaps: vec![],
         };
         let cands = plan.shrink();
         assert_eq!(cands.len(), plan.weight());
@@ -294,9 +379,73 @@ mod tests {
             clock_kills: vec![],
             straggler: None,
             delay_max: 0.0,
+            joins: vec![],
+            flaps: vec![],
         };
         assert!(trivial.is_trivial());
         assert!(trivial.shrink().is_empty());
+    }
+
+    #[test]
+    fn elastic_generation_is_pure_and_structurally_safe() {
+        for seed in 0..200u64 {
+            let a = ChaosPlan::generate_elastic(seed, 4, 7, 4, 6, 1.0, &[]);
+            let b = ChaosPlan::generate_elastic(seed, 4, 7, 4, 6, 1.0, &[]);
+            assert_eq!(a, b, "seed {seed}: generation must be pure");
+            a.validate(4)
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            // Kill/straggler/delay ingredients match the non-elastic plan.
+            let base = ChaosPlan::generate(seed, 4, 6, 1.0, &[]);
+            assert_eq!(a.step_kills, base.step_kills, "seed {seed}");
+            assert_eq!(a.clock_kills, base.clock_kills, "seed {seed}");
+            assert_eq!(a.straggler, base.straggler, "seed {seed}");
+            for &(e, r) in &a.joins {
+                assert!((1..4).contains(&e), "seed {seed}: join epoch {e}");
+                assert!((4..7).contains(&r), "seed {seed}: join rank {r}");
+            }
+            for &f in &a.flaps {
+                assert!(a.joins.iter().any(|&(_, j)| j == f), "seed {seed}");
+            }
+        }
+        // No budget headroom or too few epochs → no joins.
+        assert!(ChaosPlan::generate_elastic(1, 4, 4, 4, 6, 1.0, &[])
+            .joins
+            .is_empty());
+        assert!(ChaosPlan::generate_elastic(1, 4, 8, 1, 6, 1.0, &[])
+            .joins
+            .is_empty());
+    }
+
+    #[test]
+    fn shrinking_a_join_drops_its_flap() {
+        let plan = ChaosPlan {
+            seed: 3,
+            step_kills: vec![],
+            clock_kills: vec![],
+            straggler: None,
+            delay_max: 0.0,
+            joins: vec![(1, 4), (2, 5)],
+            flaps: vec![5],
+        };
+        plan.validate(4).unwrap();
+        let cands = plan.shrink();
+        // 2 join-drops + 1 flap-drop.
+        assert_eq!(cands.len(), 3);
+        for c in &cands {
+            c.validate(4)
+                .unwrap_or_else(|e| panic!("shrink candidate invalid: {e}"));
+            assert!(c.weight() < plan.weight());
+        }
+        let dropped_5 = cands
+            .iter()
+            .find(|c| !c.joins.iter().any(|&(_, r)| r == 5))
+            .unwrap();
+        assert!(dropped_5.flaps.is_empty(), "orphaned flap after join drop");
+        // apply_to wires the schedule into the elastic config.
+        let cfg = plan.apply_to(TrainConfig::new("t"));
+        assert!(cfg.elastic.enabled);
+        assert_eq!(cfg.elastic.joins, vec![(1, 4), (2, 5)]);
+        assert_eq!(cfg.elastic.flaps, vec![5]);
     }
 
     #[test]
@@ -310,6 +459,8 @@ mod tests {
             clock_kills: vec![(0.1, 2), (0.7, 4)],
             straggler: Some((0, 2.5)),
             delay_max: 0.9,
+            joins: vec![],
+            flaps: vec![],
         };
         let fails =
             |p: &ChaosPlan| p.step_kills.iter().any(|&(_, r)| r == 3);

@@ -6,7 +6,7 @@ use std::sync::Arc;
 use super::pipeline::{BucketAlg, DrainOrder, MIN_BUCKET_BYTES};
 use crate::mpi::events::DeliverySeq;
 use crate::mpi::ulfm::FaultPlan;
-use crate::mpi::AllreduceAlgorithm;
+use crate::mpi::{AllreduceAlgorithm, HeartbeatConfig};
 use crate::ps::Consistency;
 
 /// How replicas synchronize (§3.3.2–3.3.3).
@@ -294,6 +294,210 @@ impl ChaosConfig {
     }
 }
 
+/// Elastic-membership knobs (ISSUE 9 tentpole). World membership may
+/// grow or shrink at epoch boundaries: scheduled joiners announce to the
+/// rendezvous and park until the leader (world rank 0) posts an admission
+/// ticket; scheduled leavers depart before the resize; every resize
+/// re-balances data shards (speed-weighted under `--straggler`) and
+/// re-seeds the per-rank RNG streams so a fixed seed yields bitwise
+/// reproducible runs across membership changes.
+#[derive(Debug, Clone, Default)]
+pub struct ElasticConfig {
+    /// Master switch (`--elastic`). Off, the launcher uses the fixed-world
+    /// path and every other field must be empty.
+    pub enabled: bool,
+    /// Scheduled joins `(epoch, world_rank)` (`--join E:R`): the rank
+    /// announces at launch and is admitted at the start of `epoch`.
+    pub joins: Vec<(usize, usize)>,
+    /// Planned leaves `(epoch, world_rank)` (`--leave E:R`): the rank
+    /// departs at the start of `epoch`, before the resize.
+    pub leaves: Vec<(usize, usize)>,
+    /// Join ranks that flap (`--flap R`): they announce *not ready* — the
+    /// mid-join failure drill. The boundary degrades gracefully to the
+    /// survivor membership.
+    pub flaps: Vec<usize>,
+    /// Total rank-thread seats (`--rank-budget`); `None` = just enough
+    /// for the initial world plus every scheduled joiner.
+    pub rank_budget: Option<usize>,
+    /// Liveness tuning: heartbeat interval, per-probe timeout, retry
+    /// count, and exponential backoff (`--hb-*`). Failure confirmation
+    /// charges [`HeartbeatConfig::detection_latency_s`] to the survivors'
+    /// virtual clocks before the shrink.
+    pub heartbeat: HeartbeatConfig,
+}
+
+impl ElasticConfig {
+    /// World ranks scheduled to join at the start of `epoch` (sorted).
+    pub fn joins_at(&self, epoch: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .joins
+            .iter()
+            .filter(|&&(e, _)| e == epoch)
+            .map(|&(_, r)| r)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// World ranks scheduled to leave at the start of `epoch` (sorted).
+    pub fn leaves_at(&self, epoch: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .leaves
+            .iter()
+            .filter(|&&(e, _)| e == epoch)
+            .map(|&(_, r)| r)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Is `world_rank` a scheduled joiner that flaps mid-protocol?
+    pub fn is_flap(&self, world_rank: usize) -> bool {
+        self.flaps.contains(&world_rank)
+    }
+
+    /// The epoch at which `world_rank` is scheduled to join, if any.
+    pub fn join_epoch_of(&self, world_rank: usize) -> Option<usize> {
+        self.joins
+            .iter()
+            .find(|&&(_, r)| r == world_rank)
+            .map(|&(e, _)| e)
+    }
+
+    /// Sorted, deduplicated epochs at which membership changes — the era
+    /// boundaries both allreduce and PS trainers resize at.
+    pub fn membership_epochs(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .joins
+            .iter()
+            .chain(self.leaves.iter())
+            .map(|&(e, _)| e)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Rank-thread seats to spawn: enough for the initial world and every
+    /// scheduled joiner, or the explicit `rank_budget` override.
+    pub fn budget(&self, initial_ranks: usize) -> usize {
+        let needed = self
+            .joins
+            .iter()
+            .map(|&(_, r)| r + 1)
+            .max()
+            .unwrap_or(0)
+            .max(initial_ranks);
+        self.rank_budget.unwrap_or(needed).max(needed)
+    }
+
+    /// Launch-time validation with named-bound diagnostics, in the same
+    /// spirit as [`ChaosConfig::validate`]. Needs the initial world size
+    /// and epoch count, so the launcher (not `TrainConfig::validate`)
+    /// calls it.
+    pub fn validate(&self, initial_ranks: usize, epochs: usize) -> Result<(), String> {
+        if !self.enabled {
+            if !self.joins.is_empty() || !self.leaves.is_empty() || !self.flaps.is_empty() {
+                return Err(
+                    "join/leave/flap schedules need elastic membership: pass --elastic".into(),
+                );
+            }
+            return Ok(());
+        }
+        for (i, &(e, r)) in self.joins.iter().enumerate() {
+            if e == 0 || e >= epochs {
+                return Err(format!(
+                    "join for world rank {r} at epoch {e}: epoch boundaries run 1..{epochs} \
+                     (a rank cannot join before the first epoch or after the last)"
+                ));
+            }
+            if r < initial_ranks {
+                return Err(format!(
+                    "join world rank {r} collides with the initial {initial_ranks}-rank world; \
+                     joiners must use fresh ranks >= {initial_ranks}"
+                ));
+            }
+            if self.joins[..i].iter().any(|&(_, r2)| r2 == r) {
+                return Err(format!(
+                    "world rank {r} is scheduled to join twice; a seat joins at most once"
+                ));
+            }
+        }
+        for (i, &(e, r)) in self.leaves.iter().enumerate() {
+            if r == 0 {
+                return Err(
+                    "world rank 0 is the membership leader and cannot leave".into(),
+                );
+            }
+            if e == 0 || e >= epochs {
+                return Err(format!(
+                    "leave for world rank {r} at epoch {e}: epoch boundaries run 1..{epochs}"
+                ));
+            }
+            if r >= initial_ranks {
+                let joined_before = self
+                    .join_epoch_of(r)
+                    .is_some_and(|je| je < e && !self.is_flap(r));
+                if !joined_before {
+                    return Err(format!(
+                        "leave targets world rank {r}, which never joins before epoch {e}"
+                    ));
+                }
+            }
+            if self.leaves[..i].iter().any(|&(_, r2)| r2 == r) {
+                return Err(format!(
+                    "world rank {r} is scheduled to leave twice; a rank leaves at most once"
+                ));
+            }
+        }
+        for &f in &self.flaps {
+            if self.join_epoch_of(f).is_none() {
+                return Err(format!(
+                    "flap names world rank {f}, which has no scheduled join to flap"
+                ));
+            }
+        }
+        let hb = &self.heartbeat;
+        if !hb.interval_s.is_finite() || hb.interval_s <= 0.0 {
+            return Err(format!(
+                "heartbeat interval must be a finite positive number of seconds, got {}",
+                hb.interval_s
+            ));
+        }
+        if !hb.timeout_s.is_finite() || hb.timeout_s < hb.interval_s {
+            return Err(format!(
+                "heartbeat timeout ({}s) must be finite and at least the interval ({}s)",
+                hb.timeout_s, hb.interval_s
+            ));
+        }
+        if hb.retries > 16 {
+            return Err(format!(
+                "heartbeat retries capped at 16 probes, got {}",
+                hb.retries
+            ));
+        }
+        if !hb.backoff.is_finite() || hb.backoff < 1.0 {
+            return Err(format!(
+                "heartbeat backoff must be a finite multiplier >= 1.0, got {}",
+                hb.backoff
+            ));
+        }
+        if let Some(b) = self.rank_budget {
+            if b < initial_ranks {
+                return Err(format!(
+                    "rank budget {b} below the initial {initial_ranks}-rank world"
+                ));
+            }
+            if let Some(&(_, r)) = self.joins.iter().find(|&&(_, r)| r >= b) {
+                return Err(format!(
+                    "join world rank {r} exceeds the rank budget {b} (seats are 0..{b})"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
     /// Table-1 architecture id (e.g. "mnist_dnn").
@@ -336,6 +540,9 @@ pub struct TrainConfig {
     pub fault_plan: FaultPlan,
     /// Seeded chaos / record / replay session configuration (ISSUE 6).
     pub chaos: ChaosConfig,
+    /// Elastic membership: epoch-boundary join/leave schedule, heartbeat
+    /// liveness tuning, and speed-weighted rebalancing (ISSUE 9).
+    pub elastic: ElasticConfig,
     /// Ranks per simulated node (`--cores-per-node`): overlays node
     /// structure on the network profile (intra-node links get
     /// shared-memory pricing, `NetProfile::on_nodes`) and lets the
@@ -382,6 +589,7 @@ impl TrainConfig {
             seed: 0xD7F,
             fault_plan: FaultPlan::none(),
             chaos: ChaosConfig::default(),
+            elastic: ElasticConfig::default(),
             cores_per_node: None,
             pool_trim: None,
             trace: false,
@@ -458,6 +666,11 @@ impl TrainConfig {
     /// (deterministic opportunistic drain / reproducible logs).
     pub fn with_chaos_seed(mut self, seed: u64) -> Self {
         self.chaos.seed = Some(seed);
+        self
+    }
+
+    pub fn with_elastic(mut self, e: ElasticConfig) -> Self {
+        self.elastic = e;
         self
     }
 
@@ -690,6 +903,129 @@ mod tests {
         assert_eq!(ck.clock_kill_for(2), Some(0.2));
         assert_eq!(ck.clock_kill_for(0), None);
         assert!(ck.active());
+    }
+
+    #[test]
+    fn elastic_config_schedule_helpers() {
+        let e = ElasticConfig {
+            enabled: true,
+            joins: vec![(2, 4), (2, 5), (3, 6)],
+            leaves: vec![(1, 3)],
+            flaps: vec![5],
+            ..Default::default()
+        };
+        assert_eq!(e.joins_at(2), vec![4, 5]);
+        assert_eq!(e.joins_at(1), Vec::<usize>::new());
+        assert_eq!(e.leaves_at(1), vec![3]);
+        assert_eq!(e.membership_epochs(), vec![1, 2, 3]);
+        assert_eq!(e.join_epoch_of(6), Some(3));
+        assert_eq!(e.join_epoch_of(0), None);
+        assert!(e.is_flap(5) && !e.is_flap(4));
+        // Budget: enough seats for the highest joiner, floored at the
+        // initial world, overridable upward only.
+        assert_eq!(e.budget(4), 7);
+        assert_eq!(ElasticConfig::default().budget(4), 4);
+        let wide = ElasticConfig {
+            rank_budget: Some(10),
+            ..e.clone()
+        };
+        assert_eq!(wide.budget(4), 10);
+    }
+
+    #[test]
+    fn elastic_config_validation_names_the_bound() {
+        let ok = ElasticConfig {
+            enabled: true,
+            joins: vec![(2, 4), (2, 5)],
+            leaves: vec![(1, 3)],
+            flaps: vec![5],
+            ..Default::default()
+        };
+        ok.validate(4, 3).unwrap();
+        // Disabled configs must carry no schedule.
+        let e = ElasticConfig {
+            joins: vec![(1, 4)],
+            ..Default::default()
+        }
+        .validate(4, 3)
+        .unwrap_err();
+        assert!(e.contains("--elastic"), "{e}");
+        ElasticConfig::default().validate(4, 3).unwrap();
+        // Join epoch bounds, rank collision, duplicates.
+        let bad = |j: Vec<(usize, usize)>| ElasticConfig {
+            enabled: true,
+            joins: j,
+            ..Default::default()
+        };
+        assert!(bad(vec![(0, 4)]).validate(4, 3).unwrap_err().contains("1..3"));
+        assert!(bad(vec![(3, 4)]).validate(4, 3).unwrap_err().contains("1..3"));
+        let e = bad(vec![(1, 2)]).validate(4, 3).unwrap_err();
+        assert!(e.contains("collides") && e.contains(">= 4"), "{e}");
+        assert!(bad(vec![(1, 4), (2, 4)]).validate(4, 3).unwrap_err().contains("twice"));
+        // Leaves: leader pinned, epoch bounds, must reference a live rank.
+        let badl = |l: Vec<(usize, usize)>| ElasticConfig {
+            enabled: true,
+            leaves: l,
+            ..Default::default()
+        };
+        assert!(badl(vec![(1, 0)]).validate(4, 3).unwrap_err().contains("leader"));
+        assert!(badl(vec![(0, 1)]).validate(4, 3).unwrap_err().contains("1..3"));
+        assert!(badl(vec![(1, 7)]).validate(4, 3).unwrap_err().contains("never joins"));
+        assert!(badl(vec![(1, 2), (2, 2)]).validate(4, 3).unwrap_err().contains("twice"));
+        // A joined rank may leave later (join epoch strictly earlier).
+        ElasticConfig {
+            enabled: true,
+            joins: vec![(1, 4)],
+            leaves: vec![(2, 4)],
+            ..Default::default()
+        }
+        .validate(4, 4)
+        .unwrap();
+        // Flap must name a scheduled joiner.
+        let e = ElasticConfig {
+            enabled: true,
+            flaps: vec![4],
+            ..Default::default()
+        }
+        .validate(4, 3)
+        .unwrap_err();
+        assert!(e.contains("no scheduled join"), "{e}");
+        // Heartbeat bounds.
+        let mut hb = ElasticConfig {
+            enabled: true,
+            ..Default::default()
+        };
+        hb.heartbeat.interval_s = 0.0;
+        assert!(hb.validate(4, 3).unwrap_err().contains("interval"));
+        hb.heartbeat.interval_s = 1.0;
+        hb.heartbeat.timeout_s = 0.5;
+        assert!(hb.validate(4, 3).unwrap_err().contains("timeout"));
+        hb.heartbeat.timeout_s = 2.0;
+        hb.heartbeat.retries = 99;
+        assert!(hb.validate(4, 3).unwrap_err().contains("16"));
+        hb.heartbeat.retries = 3;
+        hb.heartbeat.backoff = 0.5;
+        assert!(hb.validate(4, 3).unwrap_err().contains("backoff"));
+        hb.heartbeat.backoff = 2.0;
+        hb.validate(4, 3).unwrap();
+        // Rank budget: floored at the world, must cover every joiner.
+        let e = ElasticConfig {
+            enabled: true,
+            rank_budget: Some(2),
+            ..Default::default()
+        }
+        .validate(4, 3)
+        .unwrap_err();
+        assert!(e.contains("budget 2"), "{e}");
+        let e = ElasticConfig {
+            enabled: true,
+            joins: vec![(1, 6)],
+            rank_budget: Some(5),
+            ..Default::default()
+        }
+        .validate(4, 3)
+        .unwrap_err();
+        assert!(e.contains("exceeds the rank budget"), "{e}");
     }
 
     #[test]

@@ -5,9 +5,9 @@ use std::sync::Arc;
 
 use super::config::{SyncEvery, SyncMode, TrainConfig, TrainMode};
 use super::metrics::TrainReport;
-use super::trainer::train_rank;
-use crate::mpi::{NetProfile, World};
-use crate::ps::train_rank_ps;
+use super::trainer::{train_rank, train_rank_joiner};
+use crate::mpi::{NetProfile, Seat, World};
+use crate::ps::{train_rank_ps, train_rank_ps_joiner};
 use crate::runtime::Manifest;
 use crate::Result;
 use anyhow::{anyhow, ensure};
@@ -75,6 +75,50 @@ pub fn run_training(
              chaos clock kill; a rank can die only once"
         );
     }
+    // Elastic membership (ISSUE 9): validate the join/leave schedule and
+    // heartbeat bounds, then its interactions with the other failure axes.
+    cfg.elastic
+        .validate(ranks, cfg.epochs)
+        .map_err(|m| anyhow!(m))?;
+    if cfg.elastic.enabled {
+        ensure!(
+            cfg.chaos.replay.is_none(),
+            "elastic membership cannot replay a recorded event log: a resize changes \
+             the message schedule the log was recorded against (record a fresh log)"
+        );
+        ensure!(
+            !cfg.fault_plan.failures.iter().any(|&(_, r)| r == 0)
+                && !cfg.chaos.clock_kills.iter().any(|&(_, r)| r == 0),
+            "world rank 0 is the elastic membership leader and cannot be killed"
+        );
+        for &(_, r) in &cfg.elastic.leaves {
+            ensure!(
+                !cfg.fault_plan.failures.iter().any(|&(_, k)| k == r)
+                    && !cfg.chaos.clock_kills.iter().any(|&(_, k)| k == r),
+                "world rank {r} both leaves at an elastic boundary and is killed; \
+                 a rank exits at most once"
+            );
+        }
+        if let TrainMode::ParameterServer { servers, .. } = cfg.train_mode {
+            // Joiners enter as workers and rank 0 (a worker) never leaves,
+            // so workers stay >= 1; servers only ever shrink — every
+            // boundary must keep at least one alive.
+            let mut live_servers = servers;
+            for e in cfg.elastic.membership_epochs() {
+                live_servers -= cfg
+                    .elastic
+                    .leaves_at(e)
+                    .iter()
+                    .filter(|&&r| r >= ranks - servers && r < ranks)
+                    .count();
+                ensure!(
+                    live_servers >= 1,
+                    "elastic leave schedule drops every parameter server by epoch {e}; \
+                     at least one of the {servers} server ranks must remain"
+                );
+            }
+        }
+    }
     let arch = cfg.arch.clone();
     let mut cfg = cfg;
     let mut profile = profile;
@@ -101,12 +145,45 @@ pub fn run_training(
     }
     let world = World::new(ranks, profile);
     let cfg = Arc::new(cfg);
-    let results = world.run(move |comm| match cfg.train_mode {
-        TrainMode::Allreduce => train_rank(comm, &cfg, manifest.clone()),
-        TrainMode::ParameterServer { .. } => train_rank_ps(comm, &cfg, manifest.clone()),
-    });
+    let results = if cfg.elastic.enabled {
+        // Elastic launch: spawn the full rank budget; seats beyond the
+        // initial world park on the rendezvous until their scheduled
+        // epoch boundary admits them.
+        let budget = cfg.elastic.budget(ranks);
+        let initial_ranks = ranks;
+        world.run_elastic(budget, move |seat| match seat {
+            Seat::Initial(comm) => {
+                // Close contract: the leader (world rank 0, never killed —
+                // validated above) must release parked joiners on *every*
+                // exit path, success or error.
+                let world_state = comm.world().clone();
+                let lead = comm.world_rank() == 0;
+                let res = match cfg.train_mode {
+                    TrainMode::Allreduce => train_rank(comm, &cfg, manifest.clone()),
+                    TrainMode::ParameterServer { .. } => {
+                        train_rank_ps(comm, &cfg, manifest.clone())
+                    }
+                };
+                if lead {
+                    world_state.membership().close();
+                }
+                res
+            }
+            Seat::Joiner(seat) => match cfg.train_mode {
+                TrainMode::Allreduce => train_rank_joiner(seat, &cfg, manifest.clone()),
+                TrainMode::ParameterServer { .. } => {
+                    train_rank_ps_joiner(seat, &cfg, manifest.clone(), initial_ranks)
+                }
+            },
+        })
+    } else {
+        world.run(move |comm| match cfg.train_mode {
+            TrainMode::Allreduce => train_rank(comm, &cfg, manifest.clone()),
+            TrainMode::ParameterServer { .. } => train_rank_ps(comm, &cfg, manifest.clone()),
+        })
+    };
 
-    let mut per_rank = Vec::with_capacity(ranks);
+    let mut per_rank = Vec::with_capacity(results.len());
     for (r, res) in results.into_iter().enumerate() {
         per_rank.push(res.map_err(|e| anyhow!("rank {r}: {e:#}"))?);
     }

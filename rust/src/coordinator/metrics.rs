@@ -74,6 +74,13 @@ pub struct RankMetrics {
     pub evals: Vec<EvalPoint>,
     /// True if this rank was killed by the fault plan.
     pub died: bool,
+    /// True if this rank departed at a scheduled elastic leave boundary —
+    /// its replica froze at that epoch's entry state, so consistency
+    /// checks skip it like a dead rank (but it exited cleanly).
+    pub left: bool,
+    /// Elastic mode: the epoch at which this rank was admitted as a
+    /// joiner (`None` for initial ranks and never-admitted spare seats).
+    pub joined_at: Option<usize>,
     /// Communicator size at the end (after any shrinks).
     pub final_world: usize,
     /// FNV-1a digest of the final parameter bits — synchronized replicas
@@ -119,6 +126,8 @@ impl RankMetrics {
             epoch_losses: Vec::new(),
             evals: Vec::new(),
             died: false,
+            left: false,
+            joined_at: None,
             final_world: 0,
             params_digest: 0,
             event_log: None,
@@ -230,12 +239,13 @@ impl TrainReport {
 
     /// Do all surviving replicas hold bitwise-identical parameters?
     /// Parameter-server ranks are skipped — they hold one shard, not a
-    /// replica.
+    /// replica. Ranks that left at an elastic boundary are skipped too:
+    /// their replica froze at the departure epoch's entry state.
     pub fn replicas_bitwise_identical(&self) -> bool {
         let mut digests = self
             .per_rank
             .iter()
-            .filter(|r| !r.died && !r.is_server)
+            .filter(|r| !r.died && !r.left && !r.is_server)
             .map(|r| r.params_digest);
         match digests.next() {
             Some(first) => digests.all(|d| d == first),
@@ -306,7 +316,7 @@ impl TrainReport {
     pub fn final_eval(&self) -> Option<EvalPoint> {
         self.per_rank
             .iter()
-            .find(|r| !r.died)
+            .find(|r| !r.died && !r.left)
             .and_then(|r| r.evals.last().copied())
     }
 }
@@ -403,6 +413,12 @@ mod tests {
         r.per_rank[1].params_digest = 8;
         assert!(!r.replicas_bitwise_identical());
         r.per_rank[1].died = true;
+        assert!(r.replicas_bitwise_identical());
+        // A rank that left at an elastic boundary is skipped the same way
+        // (its replica froze at the departure epoch's entry state).
+        r.per_rank[1].died = false;
+        assert!(!r.replicas_bitwise_identical());
+        r.per_rank[1].left = true;
         assert!(r.replicas_bitwise_identical());
     }
 }

@@ -23,7 +23,8 @@ pub mod sync;
 pub mod trainer;
 
 pub use config::{
-    ChaosConfig, ExecMode, SyncEvery, SyncMode, SyncStrategy, TrainConfig, TrainMode,
+    ChaosConfig, ElasticConfig, ExecMode, SyncEvery, SyncMode, SyncStrategy, TrainConfig,
+    TrainMode,
 };
 pub use launcher::run_training;
 pub use metrics::{EvalPoint, RankMetrics, TrainReport};
@@ -31,4 +32,4 @@ pub use pipeline::{
     BucketAlg, BucketPlan, DrainOrder, GradBucket, PipelineEngine, MIN_BUCKET_BYTES,
 };
 pub use replica::{Replica, StepOutcome};
-pub use trainer::train_rank;
+pub use trainer::{train_rank, train_rank_joiner};

@@ -9,6 +9,19 @@
 //! recovery (§2.2) wraps the epoch: on a peer failure the survivors cancel
 //! any in-flight buckets, revoke, shrink, re-align their replicas with one
 //! averaging all-reduce, and keep training.
+//!
+//! Elastic membership (ISSUE 9) generalizes the shrink to a *resize*: at
+//! every scheduled epoch boundary the leader (world rank 0) collects
+//! joiner announcements from the rendezvous, posts an admission ticket,
+//! and every continuing member re-forms the communicator over the new
+//! membership — then rebuilds the topology, broadcasts the replica to the
+//! joiners, re-balances the data shards (speed-weighted under
+//! `--straggler`), and re-seeds the per-rank RNG streams from
+//! `(seed, epoch, comm rank)` so a fixed seed yields bitwise reproducible
+//! runs across membership changes. Failures inside an epoch restore the
+//! epoch-entry snapshot locally (BSP replicas are identical, so no
+//! collective is needed) and retry on the shrunken world, after the
+//! heartbeat tracker charges its detection latency to the virtual clocks.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -18,10 +31,13 @@ use super::metrics::{EvalPoint, RankMetrics};
 use super::pipeline::{BucketAlg, PipelineEngine};
 use super::replica::Replica;
 use super::sync::{sync_metrics, sync_replica};
-use crate::data::{load_train_test, scatter_dataset, BatchIter, Dataset};
+use crate::data::{
+    load_train_test, scatter_dataset, scatter_dataset_weighted, BatchIter, Dataset,
+};
 use crate::mpi::comm::Communicator;
 use crate::mpi::{
-    allreduce_with, bcast, gather_vecs, AllreduceAlgorithm, MpiError, ReduceOp, Topology,
+    allreduce_with, bcast, gather_vecs, AllreduceAlgorithm, JoinSeat, MpiError, PeerTracker,
+    ReduceOp, Ticket, Topology,
 };
 use crate::runtime::Manifest;
 use crate::trace::{Kind as TraceKind, Lane, Tracer};
@@ -37,6 +53,7 @@ pub fn train_rank(
     let wall0 = Instant::now();
     let mut metrics = RankMetrics::new(comm.world_rank());
     let spec = manifest.arch(&cfg.arch)?.clone();
+    let elastic = cfg.elastic.enabled;
     // Chaos / record / replay: install this rank's delivery session before
     // any message moves; it follows the rank through ULFM shrinks and is
     // harvested into `metrics.event_log` on every exit path below.
@@ -60,9 +77,26 @@ pub fn train_rank(
         (None, None)
     };
     comm.advance(t_io.elapsed().as_secs_f64());
-    let train_shard = scatter_dataset(&comm, 0, full_train.as_ref())?;
-    let test_shard = scatter_dataset(&comm, 0, full_test.as_ref())?;
-    drop(full_train);
+    // Elastic runs shard speed-weighted from the start, so the initial
+    // partition agrees with what every later rebalance would produce for
+    // the same membership (equal weights reproduce the even split bit for
+    // bit, so non-straggler runs are unchanged).
+    let (train_shard, test_shard) = if elastic {
+        let weights = rebalance_weights(cfg, comm.world_ranks());
+        (
+            scatter_dataset_weighted(&comm, 0, full_train.as_ref(), &weights)?,
+            scatter_dataset_weighted(&comm, 0, full_test.as_ref(), &weights)?,
+        )
+    } else {
+        (
+            scatter_dataset(&comm, 0, full_train.as_ref())?,
+            scatter_dataset(&comm, 0, full_test.as_ref())?,
+        )
+    };
+    // Elastic keeps the full datasets on the leader: every resize and
+    // recovery re-scatters from them. The fixed-world path frees the
+    // training set as before.
+    let full_train = if elastic { full_train } else { None };
     metrics.io_s = comm.clock();
     // Comm accounting below is training-only: waiting on the rank-0
     // scatter is IO, not synchronization overhead.
@@ -90,7 +124,7 @@ pub fn train_rank(
     }
 
     // Per-rank shuffle stream: epoch order differs per rank and per epoch.
-    let mut rng = Rng::new(cfg.seed ^ (0xA5A5 + comm.world_rank() as u64));
+    let rng = Rng::new(cfg.seed ^ (0xA5A5 + comm.world_rank() as u64));
 
     // Bucketed strategy: build the (step-invariant) bucket plan and the
     // pipelined engine once — identical on every rank since it derives
@@ -110,7 +144,7 @@ pub fn train_rank(
     // shared config + profile, so every rank calls it or none does — and
     // it must be re-evaluated after every shrink (the old subcomms die
     // with the revoked parent).
-    let mut topo = if pipeline.is_some() && wants_topology(cfg, &comm) {
+    let topo = if pipeline.is_some() && wants_topology(cfg, &comm) {
         Some(Topology::build(&comm)?)
     } else {
         None
@@ -119,140 +153,511 @@ pub fn train_rank(
         engine.set_topology(Some(Arc::clone(t)));
     }
 
-    // ---- epochs ----------------------------------------------------------
-    let mut epoch = 0usize;
-    while epoch < cfg.epochs {
-        if cfg.fault_plan.apply(epoch, &comm) {
-            comm.trace_instant(Lane::Comm, TraceKind::Fault, epoch as u32);
-            metrics.died = true;
-            break;
-        }
-        match run_epoch(
-            &comm,
-            cfg,
-            &mut replica,
-            &train_shard,
-            &mut rng,
-            &mut metrics,
-            pipeline.as_mut(),
-        ) {
-            Ok(mean_loss) => {
-                if metrics.died {
-                    // A clock-axis chaos kill fired inside the epoch
-                    // (see `run_epoch`); this rank is already failed.
-                    break;
-                }
-                metrics.epoch_losses.push(mean_loss);
-                if cfg.verbose && comm.rank() == 0 && replica.is_real() {
-                    eprintln!(
-                        "[{}] epoch {:>3}  loss {:.4}  (p={}, vclock {:.3}s)",
-                        cfg.arch,
-                        epoch,
-                        mean_loss,
-                        comm.size(),
-                        comm.clock()
-                    );
-                }
-                if cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0 && replica.is_real()
-                {
-                    if let Ok(ev) = evaluate(&comm, &mut replica, &test_shard, epoch) {
-                        metrics.evals.push(ev);
+    let tracker = elastic.then(|| PeerTracker::new(cfg.elastic.heartbeat, comm.world_ranks()));
+    let mut run = RankRun {
+        cfg,
+        comm,
+        replica,
+        train_shard,
+        test_shard,
+        full_train,
+        full_test,
+        rng,
+        pipeline,
+        topo,
+        tracker,
+        metrics,
+        comm_at_train_start,
+        wall0,
+    };
+    run.epoch_loop(0)?;
+    run.finish()
+}
+
+/// Entry point for a spare elastic seat: announce to the rendezvous, park
+/// until the scheduled epoch-boundary ticket admits this rank, then run
+/// the tail of training on the resized communicator.
+pub fn train_rank_joiner(
+    seat: JoinSeat,
+    cfg: &TrainConfig,
+    manifest: Arc<Manifest>,
+) -> Result<RankMetrics> {
+    let wall0 = Instant::now();
+    let mut metrics = RankMetrics::new(seat.world_rank());
+    let Some(join_epoch) = cfg.elastic.join_epoch_of(seat.world_rank()) else {
+        // Spare budget seat with no scheduled join: never announces, so
+        // the leader never waits on it.
+        return Ok(metrics);
+    };
+    let flap = cfg.elastic.is_flap(seat.world_rank());
+    seat.announce(!flap);
+    if flap {
+        // Mid-join flap drill: the seat announced *not ready* (dead
+        // between rendezvous and admission); the boundary degrades
+        // gracefully to the survivor membership.
+        metrics.died = true;
+        return Ok(metrics);
+    }
+    let Some(mut comm) = seat.await_admission(join_epoch)? else {
+        // World closed (training finished or the launch failed) before
+        // the boundary — a benign non-admission.
+        return Ok(metrics);
+    };
+    metrics.joined_at = Some(join_epoch);
+    if let Some(session) = cfg.chaos.session_for(comm.world_rank()) {
+        comm.install_events(session);
+    }
+    if cfg.trace {
+        comm.install_tracer(Tracer::new(comm.world_rank()));
+    }
+    let comm_at_train_start = comm.stats().comm_vtime;
+    let mut replica = Replica::new(
+        &manifest,
+        &cfg.arch,
+        cfg.effective_mode(comm.world_rank()),
+        cfg.lr,
+        cfg.seed,
+    )?;
+    let mut pipeline = match cfg.sync_strategy {
+        SyncStrategy::Bucketed { max_bytes } => Some(
+            PipelineEngine::for_params(&replica.params, max_bytes)
+                .with_alg(cfg.bucket_alg)
+                .with_drain(cfg.drain),
+        ),
+        SyncStrategy::Flat => None,
+    };
+    // Mirror of the continuing members' post-resize sequence — the
+    // collective order must match `RankRun::sync_new_membership` exactly:
+    // topology build, replica broadcast, weighted shard scatters.
+    let topo = if pipeline.is_some() && wants_topology(cfg, &comm) {
+        Some(Topology::build(&comm)?)
+    } else {
+        None
+    };
+    if let (Some(engine), Some(t)) = (pipeline.as_mut(), topo.as_ref()) {
+        engine.set_topology(Some(Arc::clone(t)));
+    }
+    let mut flat = replica.params.flat().to_vec();
+    bcast(&comm, 0, &mut flat)?;
+    replica.params.flat_mut().copy_from_slice(&flat);
+    let rebalance_t0 = comm.clock();
+    let weights = rebalance_weights(cfg, comm.world_ranks());
+    let train_shard = scatter_dataset_weighted(&comm, 0, None, &weights)?;
+    let test_shard = scatter_dataset_weighted(&comm, 0, None, &weights)?;
+    metrics.io_s = comm.clock();
+    let rng = Rng::new(elastic_stream_seed(cfg.seed, join_epoch, comm.rank()));
+    comm.trace_span(Lane::Comm, TraceKind::Rebalance, join_epoch as u32, rebalance_t0);
+
+    let tracker = Some(PeerTracker::new(cfg.elastic.heartbeat, comm.world_ranks()));
+    let mut run = RankRun {
+        cfg,
+        comm,
+        replica,
+        train_shard,
+        test_shard,
+        full_train: None,
+        full_test: None,
+        rng,
+        pipeline,
+        topo,
+        tracker,
+        metrics,
+        comm_at_train_start,
+        wall0,
+    };
+    run.epoch_loop(join_epoch)?;
+    run.finish()
+}
+
+/// Everything a rank carries through the epoch loop — shared between the
+/// from-launch path (`train_rank`, epoch 0) and the joiner path
+/// (`train_rank_joiner`, from its admission epoch), so membership changes
+/// and recovery behave identically no matter when a rank entered.
+struct RankRun<'a> {
+    cfg: &'a TrainConfig,
+    comm: Communicator,
+    replica: Replica,
+    train_shard: Dataset,
+    test_shard: Dataset,
+    /// Leader only, elastic only: retained full datasets backing every
+    /// rebalance re-scatter.
+    full_train: Option<Dataset>,
+    full_test: Option<Dataset>,
+    rng: Rng,
+    pipeline: Option<PipelineEngine>,
+    topo: Option<Arc<Topology>>,
+    /// Elastic only: heartbeat liveness tracker over the current
+    /// membership.
+    tracker: Option<PeerTracker>,
+    metrics: RankMetrics,
+    comm_at_train_start: f64,
+    wall0: Instant,
+}
+
+impl RankRun<'_> {
+    fn epoch_loop(&mut self, start_epoch: usize) -> Result<()> {
+        let cfg = self.cfg;
+        let elastic = cfg.elastic.enabled;
+        let mut epoch = start_epoch;
+        let mut boundary_done = start_epoch;
+        let mut snapshot: Vec<f32> = Vec::new();
+        while epoch < cfg.epochs {
+            // ---- elastic epoch-boundary membership changes ---------------
+            // Processed once per boundary (a failure-retry of the same
+            // epoch must not re-run the resize — the joiners are already
+            // admitted). The joiner path starts *after* its own boundary,
+            // hence `boundary_done = start_epoch`.
+            let mut boundary_err: Option<MpiError> = None;
+            if elastic && epoch > boundary_done {
+                boundary_done = epoch;
+                let leaves = cfg.elastic.leaves_at(epoch);
+                let joins = cfg.elastic.joins_at(epoch);
+                if !leaves.is_empty() || !joins.is_empty() {
+                    if leaves.contains(&self.comm.world_rank()) {
+                        // Planned departure: freeze at this epoch's entry
+                        // state and exit cleanly before the resize.
+                        self.metrics.left = true;
+                        return Ok(());
+                    }
+                    if let Err(e) = self.boundary_resize(epoch, &leaves, &joins) {
+                        boundary_err = Some(e);
                     }
                 }
-                // Epoch boundary: optionally trim the shared group pool
-                // back to a small per-shelf depth (ROADMAP "Pool
-                // follow-ups" (b)). Each rank calls this as *it* crosses
-                // the boundary — the pool is shared, so later calls are
-                // mostly no-ops, and a straggler mid-collective is safe
-                // (trim only shrinks free shelves; see `trim_to`). The
-                // next epoch's first steps re-warm the shelves; steady
-                // state within an epoch stays allocation-free either way.
-                if let Some(keep) = cfg.pool_trim {
-                    comm.pool().trim_to(keep);
-                }
-                epoch += 1;
             }
-            Err(MpiError::ProcFailed { .. }) | Err(MpiError::Revoked) => {
-                // ULFM recovery: cancel any in-flight bucket allreduces
-                // (their envelopes die with the revoked group), revoke the
-                // topology subcomms *and* the parent so every survivor
-                // aborts — a peer parked in a leaf/rail recv only wakes on
-                // its own subcomm's revocation — then shrink, rebuild the
-                // topology over the survivors, re-align replicas, and
-                // retry this epoch.
-                comm.trace_instant(Lane::Comm, TraceKind::Revoke, epoch as u32);
-                if let Some(engine) = pipeline.as_mut() {
-                    engine.cancel_all();
+            snapshot.clear();
+            if boundary_err.is_none() {
+                if cfg.fault_plan.apply(epoch, &self.comm) {
+                    self.comm
+                        .trace_instant(Lane::Comm, TraceKind::Fault, epoch as u32);
+                    self.metrics.died = true;
+                    return Ok(());
                 }
-                if let Some(t) = topo.as_ref() {
-                    t.revoke_all();
-                }
-                comm.revoke();
-                let shrink_t0 = comm.clock();
-                comm = comm.shrink()?;
-                comm.trace_span(Lane::Comm, TraceKind::Shrink, epoch as u32, shrink_t0);
-                let rebuild_t0 = comm.clock();
-                topo = if pipeline.is_some() && wants_topology(cfg, &comm) {
-                    Some(Topology::build(&comm)?)
-                } else {
-                    None
-                };
-                if let Some(engine) = pipeline.as_mut() {
-                    engine.set_topology(topo.clone());
-                }
-                realign(&comm, &mut replica)?;
-                comm.trace_span(Lane::Comm, TraceKind::Rebuild, epoch as u32, rebuild_t0);
-                if cfg.verbose && comm.rank() == 0 {
-                    eprintln!(
-                        "[{}] recovered from rank failure; continuing with p={}",
-                        cfg.arch,
-                        comm.size()
-                    );
+                if elastic {
+                    // Epoch-entry snapshot: identical on every BSP replica,
+                    // so a failure inside the epoch restores locally — no
+                    // collective — before the weighted re-scatter and
+                    // retry. (If the boundary itself failed, params are
+                    // still at entry state: snapshot stays empty, no
+                    // restore.)
+                    snapshot.extend_from_slice(self.replica.params.flat());
                 }
             }
-            Err(e) => return Err(e.into()),
-        }
-    }
-
-    metrics.train_done_clock_s = comm.clock();
-
-    // ---- final evaluation -------------------------------------------------
-    if !metrics.died && replica.is_real() {
-        match evaluate(&comm, &mut replica, &test_shard, cfg.epochs) {
-            Ok(ev) => metrics.evals.push(ev),
-            Err(MpiError::ProcFailed { .. }) | Err(MpiError::Revoked) => {}
-            Err(e) => return Err(e.into()),
-        }
-    }
-
-    let mut final_stats = comm.stats();
-    final_stats.comm_vtime -= comm_at_train_start;
-    metrics.absorb_comm(final_stats);
-    metrics.params_digest = replica.params.bits_digest();
-    metrics.clock_s = comm.clock();
-    metrics.wall_s = wall0.elapsed().as_secs_f64();
-    metrics.final_world = comm.size();
-    metrics.event_log = comm.take_events().map(|s| s.into_log_bytes());
-    // Trace harvest: stamp the trainer's exposed-time aggregate into the
-    // trace (the `dtf trace summarize` cross-check target), serialize the
-    // per-rank buffer, then gather every survivor's blob to rank 0 over
-    // the final communicator. Dead ranks keep their local blob but cannot
-    // join the collective.
-    if comm.has_tracer() {
-        comm.trace_counter(Lane::Comm, TraceKind::SyncExposedS, 0, metrics.sync_exposed_s);
-        let blob = comm.take_tracer().map(|t| t.to_bytes());
-        if !metrics.died {
-            if let Some(b) = blob.as_ref() {
-                match gather_vecs::<u8>(&comm, 0, b) {
-                    Ok(world) => metrics.trace_world = world,
-                    Err(MpiError::ProcFailed { .. }) | Err(MpiError::Revoked) => {}
-                    Err(e) => return Err(e.into()),
+            let res = match boundary_err {
+                Some(e) => Err(e),
+                None => run_epoch(
+                    &self.comm,
+                    cfg,
+                    &mut self.replica,
+                    &self.train_shard,
+                    &mut self.rng,
+                    &mut self.metrics,
+                    self.pipeline.as_mut(),
+                ),
+            };
+            match res {
+                Ok(mean_loss) => {
+                    if self.metrics.died {
+                        // A clock-axis chaos kill fired inside the epoch
+                        // (see `run_epoch`); this rank is already failed.
+                        return Ok(());
+                    }
+                    self.metrics.epoch_losses.push(mean_loss);
+                    if cfg.verbose && self.comm.rank() == 0 && self.replica.is_real() {
+                        eprintln!(
+                            "[{}] epoch {:>3}  loss {:.4}  (p={}, vclock {:.3}s)",
+                            cfg.arch,
+                            epoch,
+                            mean_loss,
+                            self.comm.size(),
+                            self.comm.clock()
+                        );
+                    }
+                    if cfg.eval_every > 0
+                        && (epoch + 1) % cfg.eval_every == 0
+                        && self.replica.is_real()
+                    {
+                        if let Ok(ev) =
+                            evaluate(&self.comm, &mut self.replica, &self.test_shard, epoch)
+                        {
+                            self.metrics.evals.push(ev);
+                        }
+                    }
+                    // Epoch boundary: optionally trim the shared group pool
+                    // back to a small per-shelf depth (ROADMAP "Pool
+                    // follow-ups" (b)). Each rank calls this as *it* crosses
+                    // the boundary — the pool is shared, so later calls are
+                    // mostly no-ops, and a straggler mid-collective is safe
+                    // (trim only shrinks free shelves; see `trim_to`). The
+                    // next epoch's first steps re-warm the shelves; steady
+                    // state within an epoch stays allocation-free either way.
+                    if let Some(keep) = cfg.pool_trim {
+                        self.comm.pool().trim_to(keep);
+                    }
+                    epoch += 1;
                 }
+                Err(MpiError::ProcFailed { .. }) | Err(MpiError::Revoked) => {
+                    // ULFM recovery: cancel any in-flight bucket allreduces
+                    // (their envelopes die with the revoked group), revoke
+                    // the topology subcomms *and* the parent so every
+                    // survivor aborts — a peer parked in a leaf/rail recv
+                    // only wakes on its own subcomm's revocation — then
+                    // shrink, rebuild the topology over the survivors,
+                    // re-align replicas, and retry this epoch.
+                    //
+                    // Elastic first confirms the failure through the
+                    // heartbeat tracker, charging the modelled detection
+                    // latency (interval + backed-off probe timeouts) to
+                    // this rank's virtual clock — survivors don't learn of
+                    // a death for free.
+                    if let Some(tracker) = self.tracker.as_mut() {
+                        let hb_t0 = self.comm.clock();
+                        let (confirmed, latency) = tracker.confirm_failures(self.comm.world());
+                        if latency > 0.0 {
+                            self.comm.advance(latency);
+                            for &w in &confirmed {
+                                self.comm.trace_span(
+                                    Lane::Comm,
+                                    TraceKind::Heartbeat,
+                                    w as u32,
+                                    hb_t0,
+                                );
+                            }
+                        }
+                    }
+                    self.comm
+                        .trace_instant(Lane::Comm, TraceKind::Revoke, epoch as u32);
+                    if let Some(engine) = self.pipeline.as_mut() {
+                        engine.cancel_all();
+                    }
+                    if let Some(t) = self.topo.as_ref() {
+                        t.revoke_all();
+                    }
+                    self.comm.revoke();
+                    let shrink_t0 = self.comm.clock();
+                    self.comm = self.comm.shrink()?;
+                    self.comm
+                        .trace_span(Lane::Comm, TraceKind::Shrink, epoch as u32, shrink_t0);
+                    let rebuild_t0 = self.comm.clock();
+                    self.rebuild_topology()?;
+                    if elastic {
+                        if let Some(tracker) = self.tracker.as_mut() {
+                            tracker.rebuild(self.comm.world_ranks());
+                        }
+                        // Deterministic retry: restore the epoch-entry
+                        // snapshot, re-balance shards onto the survivor
+                        // membership, re-seed the shuffle streams. The
+                        // retried epoch is bitwise identical to one that
+                        // started on this membership at a planned boundary.
+                        if !snapshot.is_empty() {
+                            self.replica.params.flat_mut().copy_from_slice(&snapshot);
+                        }
+                        self.rebalance(epoch)?;
+                    } else {
+                        realign(&self.comm, &mut self.replica)?;
+                    }
+                    self.comm
+                        .trace_span(Lane::Comm, TraceKind::Rebuild, epoch as u32, rebuild_t0);
+                    if cfg.verbose && self.comm.rank() == 0 {
+                        eprintln!(
+                            "[{}] recovered from rank failure; continuing with p={}",
+                            cfg.arch,
+                            self.comm.size()
+                        );
+                    }
+                }
+                Err(e) => return Err(e.into()),
             }
         }
-        metrics.trace = blob;
+        Ok(())
     }
-    Ok(metrics)
+
+    /// The leader collects joiner announcements and posts the admission
+    /// ticket; every continuing member re-forms the communicator over the
+    /// ticket membership and runs the post-resize lockstep sequence.
+    fn boundary_resize(
+        &mut self,
+        epoch: usize,
+        leaves: &[usize],
+        joins: &[usize],
+    ) -> std::result::Result<(), MpiError> {
+        self.comm = negotiate_resize(&self.comm, epoch, leaves, joins)?;
+        self.sync_new_membership(epoch)
+    }
+
+    /// Collective sequence every member of a freshly resized communicator
+    /// runs in lockstep (joiners mirror it in `train_rank_joiner`):
+    /// topology rebuild, replica broadcast (seeds the joiners; a no-op
+    /// bit-wise for BSP-identical continuers), speed-weighted shard
+    /// rebalance, RNG re-seed.
+    fn sync_new_membership(&mut self, epoch: usize) -> std::result::Result<(), MpiError> {
+        if let Some(tracker) = self.tracker.as_mut() {
+            tracker.rebuild(self.comm.world_ranks());
+        }
+        self.rebuild_topology()?;
+        let mut flat = self.replica.params.flat().to_vec();
+        bcast(&self.comm, 0, &mut flat)?;
+        self.replica.params.flat_mut().copy_from_slice(&flat);
+        self.rebalance(epoch)
+    }
+
+    /// Re-evaluate the topology gate over the current communicator and
+    /// rewire the pipeline (identical to the fixed-world recovery path).
+    fn rebuild_topology(&mut self) -> std::result::Result<(), MpiError> {
+        self.topo = if self.pipeline.is_some() && wants_topology(self.cfg, &self.comm) {
+            Some(Topology::build(&self.comm)?)
+        } else {
+            None
+        };
+        if let Some(engine) = self.pipeline.as_mut() {
+            engine.set_topology(self.topo.clone());
+        }
+        Ok(())
+    }
+
+    /// Speed-weighted shard rebalance onto the current membership + a
+    /// deterministic re-seed of the shuffle stream: both are pure
+    /// functions of `(seed, epoch, membership)`, which is what makes a
+    /// shrink-then-grow run bitwise equal to an uninterrupted run of the
+    /// same membership schedule.
+    fn rebalance(&mut self, epoch: usize) -> std::result::Result<(), MpiError> {
+        let t0 = self.comm.clock();
+        let weights = rebalance_weights(self.cfg, self.comm.world_ranks());
+        self.train_shard =
+            scatter_dataset_weighted(&self.comm, 0, self.full_train.as_ref(), &weights)?;
+        self.test_shard =
+            scatter_dataset_weighted(&self.comm, 0, self.full_test.as_ref(), &weights)?;
+        self.rng = Rng::new(elastic_stream_seed(self.cfg.seed, epoch, self.comm.rank()));
+        self.comm
+            .trace_span(Lane::Comm, TraceKind::Rebalance, epoch as u32, t0);
+        Ok(())
+    }
+
+    /// Final evaluation + metric harvest (both entry paths end here).
+    fn finish(mut self) -> Result<RankMetrics> {
+        self.metrics.train_done_clock_s = self.comm.clock();
+        let finished = !self.metrics.died && !self.metrics.left;
+
+        // ---- final evaluation ------------------------------------------
+        if finished && self.replica.is_real() {
+            match evaluate(&self.comm, &mut self.replica, &self.test_shard, self.cfg.epochs) {
+                Ok(ev) => self.metrics.evals.push(ev),
+                Err(MpiError::ProcFailed { .. }) | Err(MpiError::Revoked) => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+
+        let mut final_stats = self.comm.stats();
+        final_stats.comm_vtime -= self.comm_at_train_start;
+        self.metrics.absorb_comm(final_stats);
+        self.metrics.params_digest = self.replica.params.bits_digest();
+        self.metrics.clock_s = self.comm.clock();
+        self.metrics.wall_s = self.wall0.elapsed().as_secs_f64();
+        self.metrics.final_world = self.comm.size();
+        self.metrics.event_log = self.comm.take_events().map(|s| s.into_log_bytes());
+        // Trace harvest: stamp the trainer's exposed-time aggregate into
+        // the trace (the `dtf trace summarize` cross-check target),
+        // serialize the per-rank buffer, then gather every survivor's blob
+        // to rank 0 over the final communicator. Dead ranks — and ranks
+        // that left at an elastic boundary — keep their local blob but
+        // cannot join the collective.
+        if self.comm.has_tracer() {
+            self.comm.trace_counter(
+                Lane::Comm,
+                TraceKind::SyncExposedS,
+                0,
+                self.metrics.sync_exposed_s,
+            );
+            let blob = self.comm.take_tracer().map(|t| t.to_bytes());
+            if finished {
+                if let Some(b) = blob.as_ref() {
+                    match gather_vecs::<u8>(&self.comm, 0, b) {
+                        Ok(world) => self.metrics.trace_world = world,
+                        Err(MpiError::ProcFailed { .. }) | Err(MpiError::Revoked) => {}
+                        Err(e) => return Err(e.into()),
+                    }
+                }
+            }
+            self.metrics.trace = blob;
+        }
+        Ok(self.metrics)
+    }
+}
+
+/// Per-member rebalance weights, indexed by comm rank: the reciprocal of
+/// the straggler's compute multiplier (a 2x-slower rank gets a 0.5-weight
+/// shard), 1.0 for everyone else. Pure in `(cfg, membership)`, so every
+/// member computes the identical vector.
+pub(crate) fn rebalance_weights(cfg: &TrainConfig, world_ranks: &[usize]) -> Vec<f64> {
+    world_ranks
+        .iter()
+        .map(|&w| match cfg.straggler {
+            Some((r, mult)) if r == w && mult > 0.0 => 1.0 / mult,
+            _ => 1.0,
+        })
+        .collect()
+}
+
+/// The epoch-boundary resize protocol, shared by the allreduce and
+/// parameter-server drivers. The leader (world rank 0) filters failed and
+/// leaving members out of the current membership, waits for each scheduled
+/// joiner's terminal announcement (a flapped joiner announced *not ready*,
+/// degrading the boundary to the survivor membership), and posts the
+/// admission ticket; every continuing member then re-forms the
+/// communicator over the ticket membership. Emits the JoinAnnounce /
+/// JoinAdmit instants and the Resize span.
+pub(crate) fn negotiate_resize(
+    comm: &Communicator,
+    epoch: usize,
+    leaves: &[usize],
+    joins: &[usize],
+) -> std::result::Result<Communicator, MpiError> {
+    let resize_t0 = comm.clock();
+    if comm.world_rank() == 0 {
+        let world = comm.world();
+        let mut members: Vec<usize> = comm
+            .world_ranks()
+            .iter()
+            .copied()
+            .filter(|&w| !world.is_failed(w) && !leaves.contains(&w))
+            .collect();
+        for &j in joins {
+            comm.trace_instant(Lane::Comm, TraceKind::JoinAnnounce, j as u32);
+            if world.membership().await_announced(j) {
+                members.push(j);
+            }
+        }
+        members.sort_unstable();
+        world.membership().post_ticket(Ticket {
+            epoch,
+            members,
+            clock: comm.clock(),
+        });
+    }
+    let ticket = comm
+        .world()
+        .membership()
+        .await_ticket(epoch)
+        .ok_or(MpiError::Revoked)?;
+    let new_comm = comm.resize(epoch, &ticket.members)?;
+    for &j in joins {
+        if ticket.members.contains(&j) {
+            new_comm.trace_instant(Lane::Comm, TraceKind::JoinAdmit, j as u32);
+        }
+    }
+    new_comm.trace_span(Lane::Comm, TraceKind::Resize, epoch as u32, resize_t0);
+    Ok(new_comm)
+}
+
+/// Deterministic shuffle-stream seed for elastic membership points: a
+/// splitmix64 mix of `(seed, epoch, comm rank)`. Every member re-seeds
+/// from this at a resize or recovery, so the downstream batch order is a
+/// pure function of the membership schedule — not of *how* the membership
+/// came to be (planned leave vs mid-epoch failure).
+pub(crate) fn elastic_stream_seed(seed: u64, epoch: usize, comm_rank: usize) -> u64 {
+    let mut z = seed ^ 0xE1A5 ^ ((epoch as u64) << 32) ^ comm_rank as u64;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
 }
 
 /// One epoch of lockstep local steps + synchronization.
@@ -265,8 +670,10 @@ fn run_epoch(
     metrics: &mut RankMetrics,
     mut pipeline: Option<&mut PipelineEngine>,
 ) -> std::result::Result<f64, MpiError> {
-    // Lockstep step count: shards differ by ≤1 sample, but a synchronous
-    // collective per step requires every rank to agree exactly.
+    // Lockstep step count: shards differ by ≤1 sample (more under the
+    // speed-weighted elastic split), but a synchronous collective per step
+    // requires every rank to agree exactly — Min gates on the smallest
+    // shard.
     let mut local_batches = [shard.len() as f64 / replica.batch as f64];
     local_batches[0] = local_batches[0].floor();
     allreduce_with(

@@ -13,4 +13,4 @@ pub mod synthetic;
 pub use batch::{BatchIter, PAD_LABEL};
 pub use dataset::Dataset;
 pub use loader::{load_train_test, Source};
-pub use shard::scatter_dataset;
+pub use shard::{scatter_dataset, scatter_dataset_weighted};

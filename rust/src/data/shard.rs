@@ -9,13 +9,36 @@
 use super::dataset::Dataset;
 use crate::mpi::collectives::{bcast, scatterv};
 use crate::mpi::comm::Communicator;
-use crate::mpi::{chunk_range, MpiResult};
+use crate::mpi::{chunk_range, weighted_shares, MpiResult};
 
 /// Scatter `full` (present at `root` only) into per-rank shards.
 pub fn scatter_dataset(
     comm: &Communicator,
     root: usize,
     full: Option<&Dataset>,
+) -> MpiResult<Dataset> {
+    scatter_dataset_with(comm, root, full, None)
+}
+
+/// Speed-weighted scatter: per-rank sample counts apportioned by
+/// largest remainder over `weights` (indexed by comm rank), so a
+/// straggling rank receives a proportionally smaller shard. The elastic
+/// rebalance path uses this at every resize; `weights = None` (or all
+/// equal) reproduces the even `chunk_range` split bit for bit.
+pub fn scatter_dataset_weighted(
+    comm: &Communicator,
+    root: usize,
+    full: Option<&Dataset>,
+    weights: &[f64],
+) -> MpiResult<Dataset> {
+    scatter_dataset_with(comm, root, full, Some(weights))
+}
+
+fn scatter_dataset_with(
+    comm: &Communicator,
+    root: usize,
+    full: Option<&Dataset>,
+    weights: Option<&[f64]>,
 ) -> MpiResult<Dataset> {
     // Header broadcast: [n, dim, n_classes] so non-roots can validate.
     let mut header: Vec<i32> = if comm.rank() == root {
@@ -28,12 +51,18 @@ pub fn scatter_dataset(
     let (n, dim, n_classes) = (header[0] as usize, header[1] as usize, header[2] as usize);
 
     let p = comm.size();
-    let sample_counts: Vec<usize> = (0..p)
-        .map(|r| {
-            let (s, e) = chunk_range(n, p, r);
-            e - s
-        })
-        .collect();
+    let sample_counts: Vec<usize> = match weights {
+        Some(w) => {
+            debug_assert_eq!(w.len(), p, "one weight per comm rank");
+            weighted_shares(n, w)
+        }
+        None => (0..p)
+            .map(|r| {
+                let (s, e) = chunk_range(n, p, r);
+                e - s
+            })
+            .collect(),
+    };
     let x_counts: Vec<usize> = sample_counts.iter().map(|c| c * dim).collect();
 
     let x = scatterv(
@@ -93,6 +122,31 @@ mod tests {
             Ok(scatter_dataset(&c, 0, Some(&d))?)
         });
         assert_eq!(out[0], full());
+    }
+
+    #[test]
+    fn weighted_scatter_partitions_with_smaller_straggler_shard() {
+        let w = World::new(3, NetProfile::zero());
+        let out = w.run_unwrap(|c| {
+            let d = if c.rank() == 0 { Some(full()) } else { None };
+            // Rank 2 runs at half speed → half-weight shard.
+            Ok(scatter_dataset_weighted(&c, 0, d.as_ref(), &[1.0, 1.0, 0.5])?)
+        });
+        let f = full();
+        let merged_x: Vec<f32> = out.iter().flat_map(|d| d.x.clone()).collect();
+        let merged_y: Vec<i32> = out.iter().flat_map(|d| d.y.clone()).collect();
+        assert_eq!(merged_x, f.x, "weighted shards must still cover in order");
+        assert_eq!(merged_y, f.y);
+        assert!(out[2].len() < out[0].len(), "straggler shard must shrink");
+        // Uniform weights reproduce the even split exactly.
+        let even = World::new(3, NetProfile::zero()).run_unwrap(|c| {
+            let d = if c.rank() == 0 { Some(full()) } else { None };
+            Ok(scatter_dataset_weighted(&c, 0, d.as_ref(), &[1.0; 3])?)
+        });
+        assert_eq!(
+            even.iter().map(|d| d.len()).collect::<Vec<_>>(),
+            vec![4, 3, 3]
+        );
     }
 
     #[test]

@@ -59,6 +59,9 @@ USAGE:
             [--scale F] [--steps-cap N] [--eval-every N] [--seed N] [--quiet]
             [--chaos-seed N] [--chaos-delay F]
             [--record-events FILE] [--replay-events FILE] [--trace FILE]
+            [--elastic] [--join E:R]... [--leave E:R]... [--flap R]...
+            [--rank-budget N] [--hb-interval F] [--hb-timeout F]
+            [--hb-retries N] [--hb-backoff F]
   dtf figures [--id fig1..fig6|higgs|ablate-*|all] [--epochs N] [--out-dir D]
               [--profile ib|...] [--sps F]
   dtf inspect [--archs] [--artifacts]
@@ -94,6 +97,18 @@ re-runs them byte-for-byte (pass the same train flags as the recorded run).
 --drain opportunistic applies whichever bucket completes first (still
 bitwise-equal to launch order; deterministic under --chaos-seed/replay).
 
+Elastic membership (README §Elastic membership): --elastic turns epoch
+boundaries into membership boundaries. --leave E:R retires world rank R at
+epoch E; --join E:R admits a new rank R (>= the launch world) at epoch E —
+the world re-forms with dense renumbering, parameters broadcast to joiners,
+and data/PS shards rebalance onto the new size (speed-weighted under
+--straggler, so a slow rank holds a proportionally smaller shard). --flap R
+makes scheduled joiner R announce not-ready: the boundary degrades to the
+survivors. --rank-budget N caps the spawned seats (default: max join rank
++ 1). Failure detection charges heartbeat liveness latency — --hb-interval,
+--hb-timeout, --hb-retries, --hb-backoff bound the timeout/retry/backoff
+sequence. Same seed + same schedule => bitwise-identical digests and logs.
+
 Tracing (README §Observability): --trace FILE installs a per-rank span
 tracer on the virtual clock (zero perturbation — digests match the untraced
 run bit-for-bit) and writes a Chrome trace-event JSON at exit: one process
@@ -127,6 +142,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         "pool-trim", "train-mode", "ps-servers", "consistency", "straggler", "profile",
         "sim", "scale", "steps-cap", "eval-every", "seed", "quiet", "broadcast-init",
         "chaos-seed", "chaos-delay", "record-events", "replay-events", "trace",
+        "elastic", "join", "leave", "flap", "rank-budget",
+        "hb-interval", "hb-timeout", "hb-retries", "hb-backoff",
     ])?;
     let manifest = load_manifest()?;
     let arch = args
@@ -273,6 +290,40 @@ fn cmd_train(args: &Args) -> Result<()> {
             .map_err(|m| anyhow::anyhow!("--replay-events {path:?}: {m}"))?;
         cfg.chaos.replay = Some(Arc::new(logs));
     }
+
+    // Elastic membership (ISSUE 9): epoch-boundary join/leave schedule,
+    // flapping joiners, rank budget, and heartbeat liveness bounds. The
+    // schedule is validated against named bounds in the launcher.
+    cfg.elastic.enabled = args.has("elastic");
+    let parse_er = |flag: &str, spec: &str| {
+        spec.split_once(':')
+            .and_then(|(e, r)| Some((e.parse::<usize>().ok()?, r.parse::<usize>().ok()?)))
+            .ok_or_else(|| anyhow::anyhow!("--{flag} expects EPOCH:RANK, got {spec:?}"))
+    };
+    for spec in args.get_all("join") {
+        cfg.elastic.joins.push(parse_er("join", spec)?);
+    }
+    for spec in args.get_all("leave") {
+        cfg.elastic.leaves.push(parse_er("leave", spec)?);
+    }
+    for spec in args.get_all("flap") {
+        cfg.elastic.flaps.push(
+            spec.parse()
+                .map_err(|_| anyhow::anyhow!("--flap expects a world rank, got {spec:?}"))?,
+        );
+    }
+    if let Some(b) = args.get("rank-budget") {
+        cfg.elastic.rank_budget = Some(
+            b.parse()
+                .map_err(|_| anyhow::anyhow!("--rank-budget must be a rank count, got {b:?}"))?,
+        );
+    }
+    cfg.elastic.heartbeat.interval_s =
+        args.f64_or("hb-interval", cfg.elastic.heartbeat.interval_s)?;
+    cfg.elastic.heartbeat.timeout_s = args.f64_or("hb-timeout", cfg.elastic.heartbeat.timeout_s)?;
+    cfg.elastic.heartbeat.retries =
+        args.usize_or("hb-retries", cfg.elastic.heartbeat.retries as usize)? as u32;
+    cfg.elastic.heartbeat.backoff = args.f64_or("hb-backoff", cfg.elastic.heartbeat.backoff)?;
 
     let profile = parse_profile(args)?;
     let report = run_training(cfg, manifest, ranks, profile)?;

@@ -18,6 +18,7 @@ use super::channel::{Envelope, Mailbox, Tag};
 use super::datatype::{Buffer, Datatype};
 use super::error::{MpiError, MpiResult};
 use super::events::DeliverySeq;
+use super::membership::{resize_context, Rendezvous};
 use super::netmodel::{fold_arrival, NetProfile};
 use super::pool::BufferPool;
 use crate::trace::{Kind as TraceKind, Lane, Tracer};
@@ -31,6 +32,10 @@ pub struct WorldState {
     /// member ranks of a `split`/`shrink` all attach to the same group
     /// object without any out-of-band channel.
     groups: Mutex<HashMap<u64, Arc<CommGroup>>>,
+    /// Elastic-membership rendezvous point: joiner announcements and
+    /// epoch-boundary admission tickets (see `mpi::membership`). Always
+    /// present (it is two empty maps when the world is static).
+    membership: Rendezvous,
 }
 
 impl WorldState {
@@ -39,7 +44,13 @@ impl WorldState {
             n,
             failed: (0..n).map(|_| AtomicBool::new(false)).collect(),
             groups: Mutex::new(HashMap::new()),
+            membership: Rendezvous::default(),
         })
+    }
+
+    /// The world's elastic-membership rendezvous point.
+    pub fn membership(&self) -> &Rendezvous {
+        &self.membership
     }
 
     /// Perfect failure detector: the in-process substrate can read failure
@@ -57,7 +68,7 @@ impl WorldState {
         (0..self.n).filter(|&r| !self.is_failed(r)).count()
     }
 
-    fn get_or_create_group(
+    pub(crate) fn get_or_create_group(
         &self,
         context: u64,
         world_ranks: &[usize],
@@ -743,6 +754,33 @@ impl Communicator {
         Ok(comm)
     }
 
+    /// Elastic resize: `shrink` generalized to an arbitrary new
+    /// membership — grow or shrink — with the same dense renumbering
+    /// (new rank = position in the sorted member list). Every continuing
+    /// member must call this with the *same* `(epoch, members)` pair (the
+    /// leader's ticket); joiners attach to the identical group through
+    /// `JoinSeat::await_admission`, which derives the same
+    /// [`resize_context`]. Like `shrink`, the chaos/replay session and
+    /// the tracer follow the rank into the new communicator.
+    pub fn resize(&self, epoch: usize, members: &[usize]) -> MpiResult<Communicator> {
+        debug_assert!(
+            members.windows(2).all(|w| w[0] < w[1]),
+            "resize membership must be sorted and duplicate-free"
+        );
+        let me = self.world_rank();
+        let new_rank = members
+            .iter()
+            .position(|&w| w == me)
+            .ok_or(MpiError::ProcFailed { rank: self.rank })?;
+        let context = resize_context(epoch, members);
+        let group = self.world.get_or_create_group(context, members);
+        let comm = Communicator::new(new_rank, group, self.world.clone(), self.profile.clone());
+        comm.set_clock(self.clock());
+        *comm.events.borrow_mut() = self.events.borrow_mut().take();
+        *comm.tracer.borrow_mut() = self.tracer.borrow_mut().take();
+        Ok(comm)
+    }
+
     /// ULFM `MPI_Comm_agree`: fault-tolerant logical AND over the survivors.
     pub fn agree(&self, flag: bool) -> MpiResult<bool> {
         let tag = self.next_coll_tag(CollKind::Agree);
@@ -1031,6 +1069,50 @@ mod tests {
         let tr = small.take_tracer().expect("survivor holds the tracer");
         assert_eq!(tr.len(), 3);
         assert_eq!(tr.rank(), 0);
+    }
+
+    #[test]
+    fn resize_renumbers_grows_and_moves_sessions() {
+        use crate::mpi::events::DeliverySeq;
+        use crate::mpi::membership::JoinSeat;
+        // Budget of 4 seats, initial world {0, 1}; seat 3 joins at epoch 1.
+        let world = WorldState::new(4);
+        let group = Arc::new(CommGroup::new(0, vec![0, 1]));
+        let profile = Arc::new(NetProfile::zero());
+        let c0 = Communicator::new(0, group.clone(), world.clone(), profile.clone());
+        let c1 = Communicator::new(1, group, world.clone(), profile.clone());
+        c0.install_events(DeliverySeq::seeded(1, 0.5));
+        c0.install_tracer(Tracer::with_capacity(0, 16));
+        c0.advance(2.0);
+        let members = vec![0, 1, 3];
+        let r0 = c0.resize(1, &members).unwrap();
+        let r1 = c1.resize(1, &members).unwrap();
+        assert_eq!((r0.rank(), r0.size()), (0, 3));
+        assert_eq!((r1.rank(), r1.size()), (1, 3));
+        assert_eq!(r0.world_ranks(), &[0, 1, 3]);
+        assert_eq!(r0.clock(), 2.0, "resize carries the caller's clock");
+        assert!(!c0.has_events() && r0.has_events(), "session moves");
+        assert!(!c0.has_tracer() && r0.has_tracer(), "tracer moves");
+        // The joiner attaches to the *same* group via the ticket.
+        let seat = JoinSeat::new(3, world.clone(), profile);
+        seat.announce(true);
+        world.membership().post_ticket(crate::mpi::membership::Ticket {
+            epoch: 1,
+            members: members.clone(),
+            clock: 2.0,
+        });
+        let j = seat.await_admission(1).unwrap().expect("admitted");
+        assert_eq!((j.rank(), j.size(), j.world_rank()), (2, 3, 3));
+        assert_eq!(j.clock(), 2.0, "joiner starts on the ticket clock");
+        // Same group object: messages flow between old members and joiner.
+        r0.send(2, 7, &[42i32]).unwrap();
+        let (v, src) = j.recv::<i32>(Some(0), 7).unwrap();
+        assert_eq!((v, src), (vec![42], 0));
+        // A member not in the ticket cannot resize onto it.
+        assert!(matches!(
+            r1.resize(2, &[0, 3]),
+            Err(MpiError::ProcFailed { .. })
+        ));
     }
 
     #[test]

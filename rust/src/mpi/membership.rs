@@ -1,0 +1,478 @@
+//! Elastic membership: the rendezvous join protocol, heartbeat liveness
+//! model, and speed-weighted rebalancing arithmetic (ROADMAP item 3).
+//!
+//! MPI's world is static — a rank lost is capacity lost forever. This
+//! module generalizes the ULFM shrink path to *resize*: new ranks announce
+//! themselves to a [`Rendezvous`] point shared by every thread of a
+//! `World`, and the active members re-form the communicator over a new
+//! (grown or shrunk) membership at the next epoch boundary via
+//! [`Communicator::resize`](super::comm::Communicator::resize).
+//!
+//! # Join protocol
+//!
+//! 1. A joiner thread (spawned parked by `World::run_elastic`) posts its
+//!    terminal status — `Ready`, or `Dead` for a scheduled flap — exactly
+//!    once via [`JoinSeat::announce`], then spins on the boundary ticket.
+//! 2. At the epoch boundary the *leader* (world rank 0, which is never
+//!    killed, never scheduled to leave, and therefore comm rank 0 of every
+//!    membership) waits for every scheduled joiner's terminal status,
+//!    computes the new member list (survivors − planned leavers + admitted
+//!    joiners, sorted by world rank), and publishes a [`Ticket`] carrying
+//!    the list and its own virtual clock.
+//! 3. Every continuing member calls `resize` with the ticketed list; a
+//!    joiner materializes its communicator from the ticket directly
+//!    ([`JoinSeat::await_admission`]). Both derive the same context id
+//!    from [`resize_context`] — a pure function of `(epoch, members)`, so
+//!    no out-of-band channel is needed and a fixed schedule yields the
+//!    same group on every run.
+//!
+//! A joiner that flapped (announced `Dead`) is simply never listed; a
+//! boundary whose joins *all* flapped degrades to the survivor world —
+//! the epoch completes on whoever is left, which is the graceful-
+//! degradation contract the robustness suite pins.
+//!
+//! # Liveness
+//!
+//! The in-process substrate has a perfect failure detector
+//! ([`WorldState::is_failed`]); real ULFM approximates it with
+//! heartbeats. [`PeerTracker`] models that layer explicitly: when a
+//! collective aborts, the tracker sweeps the failure flags and charges
+//! the *modelled* detection latency — one missed heartbeat interval, a
+//! probe timeout, then `retries` re-probes under exponential backoff
+//! ([`HeartbeatConfig::detection_latency_s`]) — to the survivor's virtual
+//! clock before the shrink. The latency is a pure function of the knobs,
+//! so a fixed chaos seed still yields byte-identical event logs and
+//! traces.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{BTreeMap, HashMap};
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::comm::{Communicator, WorldState};
+use super::error::{MpiError, MpiResult};
+use super::netmodel::NetProfile;
+
+/// Deterministic context id for an elastic resize: a pure function of the
+/// boundary epoch and the sorted member list, so actives (holding the old
+/// communicator) and joiners (holding only the ticket) derive the same
+/// group without communicating.
+pub fn resize_context(epoch: usize, members: &[usize]) -> u64 {
+    let mut h = DefaultHasher::new();
+    "elastic-resize".hash(&mut h);
+    epoch.hash(&mut h);
+    members.hash(&mut h);
+    h.finish()
+}
+
+/// Admission record published by the leader at an epoch boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ticket {
+    /// Epoch about to run on the new membership.
+    pub epoch: usize,
+    /// Sorted world ranks of the re-formed communicator.
+    pub members: Vec<usize>,
+    /// Leader's virtual clock at publication — joiners start here, so a
+    /// joiner's timeline is deterministic (never wall-clock dependent).
+    pub clock: f64,
+}
+
+/// Shared rendezvous point for one `World`: joiner announcements and
+/// boundary tickets. Lives inside [`WorldState`] so every communicator
+/// and every parked joiner reaches the same instance.
+#[derive(Debug, Default)]
+pub struct Rendezvous {
+    /// world rank → terminal announcement (`true` = ready to join,
+    /// `false` = flapped/dead before admission).
+    announced: Mutex<HashMap<usize, bool>>,
+    /// epoch → published admission ticket.
+    tickets: Mutex<HashMap<usize, Ticket>>,
+    /// Set when training ends so parked joiners stop waiting.
+    closed: AtomicBool,
+}
+
+impl Rendezvous {
+    /// Post a joiner's terminal status. Exactly-once per rank by protocol
+    /// (later posts are ignored so a flap cannot be upgraded).
+    pub fn announce(&self, world_rank: usize, ready: bool) {
+        self.announced
+            .lock()
+            .unwrap()
+            .entry(world_rank)
+            .or_insert(ready);
+    }
+
+    /// Terminal status of a joiner, if it has announced.
+    pub fn announced(&self, world_rank: usize) -> Option<bool> {
+        self.announced.lock().unwrap().get(&world_rank).copied()
+    }
+
+    /// Spin until `world_rank` posts a terminal status. Joiner threads
+    /// announce first thing after spawn, so this converges; `closed` is
+    /// still honoured as a backstop (treated as a flap).
+    pub fn await_announced(&self, world_rank: usize) -> bool {
+        loop {
+            if let Some(ready) = self.announced(world_rank) {
+                return ready;
+            }
+            if self.is_closed() {
+                return false;
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    /// Leader publishes the boundary ticket (first post wins).
+    pub fn post_ticket(&self, ticket: Ticket) {
+        self.tickets
+            .lock()
+            .unwrap()
+            .entry(ticket.epoch)
+            .or_insert(ticket);
+    }
+
+    pub fn ticket(&self, epoch: usize) -> Option<Ticket> {
+        self.tickets.lock().unwrap().get(&epoch).cloned()
+    }
+
+    /// Spin for the boundary ticket; `None` once the world closed without
+    /// publishing it (training ended before the boundary).
+    pub fn await_ticket(&self, epoch: usize) -> Option<Ticket> {
+        loop {
+            if let Some(t) = self.ticket(epoch) {
+                return Some(t);
+            }
+            if self.is_closed() {
+                return None;
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    /// Training is over: release every parked joiner.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
+    }
+}
+
+/// A spare rank seat handed to threads spawned beyond the initial world
+/// by `World::run_elastic`: enough state to announce, wait for admission,
+/// and materialize a [`Communicator`] from the leader's ticket.
+pub struct JoinSeat {
+    world_rank: usize,
+    world: Arc<WorldState>,
+    profile: Arc<NetProfile>,
+}
+
+impl JoinSeat {
+    pub fn new(world_rank: usize, world: Arc<WorldState>, profile: Arc<NetProfile>) -> JoinSeat {
+        JoinSeat {
+            world_rank,
+            world,
+            profile,
+        }
+    }
+
+    pub fn world_rank(&self) -> usize {
+        self.world_rank
+    }
+
+    pub fn world(&self) -> &Arc<WorldState> {
+        &self.world
+    }
+
+    /// Post this seat's terminal status. A flap (`ready = false`) also
+    /// marks the rank failed in the world, mirroring a real process that
+    /// died between announcing and admission.
+    pub fn announce(&self, ready: bool) {
+        if !ready {
+            self.world.mark_failed(self.world_rank);
+        }
+        self.world.membership().announce(self.world_rank, ready);
+    }
+
+    /// Wait for the boundary ticket of `epoch` and build this rank's
+    /// communicator from it. `Ok(None)` when training closed before the
+    /// boundary, or the ticket excludes this rank (the admission was
+    /// withdrawn) — both degrade gracefully to "never admitted".
+    pub fn await_admission(&self, epoch: usize) -> MpiResult<Option<Communicator>> {
+        let Some(ticket) = self.world.membership().await_ticket(epoch) else {
+            return Ok(None);
+        };
+        let Some(rank) = ticket.members.iter().position(|&w| w == self.world_rank) else {
+            return Ok(None);
+        };
+        let context = resize_context(ticket.epoch, &ticket.members);
+        let group = self.world.get_or_create_group(context, &ticket.members);
+        let comm = Communicator::new(rank, group, self.world.clone(), self.profile.clone());
+        comm.set_clock(ticket.clock);
+        Ok(Some(comm))
+    }
+}
+
+/// Heartbeat liveness knobs: probe cadence, per-probe timeout, and the
+/// retry/backoff schedule run before a silent peer is declared dead.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HeartbeatConfig {
+    /// Seconds between liveness probes to each peer.
+    pub interval_s: f64,
+    /// Seconds a probe waits for an ack before it counts as missed.
+    pub timeout_s: f64,
+    /// Re-probes after the first miss before declaring the peer dead.
+    pub retries: u32,
+    /// Multiplier applied to the timeout on each successive re-probe.
+    pub backoff: f64,
+}
+
+impl Default for HeartbeatConfig {
+    fn default() -> Self {
+        HeartbeatConfig {
+            interval_s: 0.5,
+            timeout_s: 2.0,
+            retries: 3,
+            backoff: 2.0,
+        }
+    }
+}
+
+impl HeartbeatConfig {
+    /// Modelled seconds from a peer going silent to it being declared
+    /// dead: one probe interval to notice, the first timeout, then
+    /// `retries` re-probes with exponentially backed-off timeouts —
+    /// `interval + timeout * (1 + backoff + … + backoff^retries)`.
+    /// Pure in the knobs, so detection cost is byte-reproducible.
+    pub fn detection_latency_s(&self) -> f64 {
+        let mut total = self.interval_s + self.timeout_s;
+        let mut w = self.timeout_s;
+        for _ in 0..self.retries {
+            w *= self.backoff;
+            total += w;
+        }
+        total
+    }
+}
+
+/// Modelled per-peer liveness state (the explicit layer over the
+/// substrate's perfect failure detector).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeerState {
+    Alive,
+    Dead,
+}
+
+/// Tracks peer liveness across a membership and converts substrate
+/// failure flags into heartbeat-confirmed deaths with a deterministic
+/// detection cost.
+#[derive(Debug, Clone)]
+pub struct PeerTracker {
+    cfg: HeartbeatConfig,
+    peers: BTreeMap<usize, PeerState>,
+}
+
+impl PeerTracker {
+    pub fn new(cfg: HeartbeatConfig, members: &[usize]) -> PeerTracker {
+        let peers = members.iter().map(|&w| (w, PeerState::Alive)).collect();
+        PeerTracker { cfg, peers }
+    }
+
+    /// Re-track a resized membership: new members start `Alive`, departed
+    /// members are dropped, already-confirmed deaths are remembered (so a
+    /// rank is never charged for the same death twice).
+    pub fn rebuild(&mut self, members: &[usize]) {
+        let old = std::mem::take(&mut self.peers);
+        self.peers = members
+            .iter()
+            .map(|&w| (w, old.get(&w).copied().unwrap_or(PeerState::Alive)))
+            .collect();
+    }
+
+    pub fn state(&self, world_rank: usize) -> Option<PeerState> {
+        self.peers.get(&world_rank).copied()
+    }
+
+    /// Sweep the substrate's failure flags: peers newly seen dead are
+    /// confirmed through the modelled probe sequence. Returns the sorted
+    /// newly-confirmed world ranks and the virtual seconds the caller
+    /// must charge for detection (probes to all suspects run
+    /// concurrently, so one schedule covers the sweep; zero when nothing
+    /// new died).
+    pub fn confirm_failures(&mut self, world: &WorldState) -> (Vec<usize>, f64) {
+        let mut newly = Vec::new();
+        for (&w, st) in self.peers.iter_mut() {
+            if *st == PeerState::Alive && world.is_failed(w) {
+                *st = PeerState::Dead;
+                newly.push(w);
+            }
+        }
+        let latency = if newly.is_empty() {
+            0.0
+        } else {
+            self.cfg.detection_latency_s()
+        };
+        (newly, latency)
+    }
+}
+
+/// Largest-remainder apportionment of `total` items over `weights`
+/// (Hamilton's method, ties to the lowest index): the speed-weighted
+/// shard arithmetic. Equal weights reproduce `chunk_range`'s even split
+/// exactly (first `total % p` shares get the extra item), so the
+/// unweighted paths stay bit-identical. When `total >= weights.len()`,
+/// every share is at least 1 (a rank with an empty shard would stall the
+/// per-epoch Min step agreement).
+pub fn weighted_shares(total: usize, weights: &[f64]) -> Vec<usize> {
+    let p = weights.len();
+    if p == 0 {
+        return Vec::new();
+    }
+    let sum: f64 = weights.iter().sum();
+    assert!(
+        sum > 0.0 && weights.iter().all(|&w| w >= 0.0),
+        "weights must be non-negative with a positive sum"
+    );
+    let quotas: Vec<f64> = weights.iter().map(|&w| total as f64 * w / sum).collect();
+    let mut shares: Vec<usize> = quotas.iter().map(|&q| q.floor() as usize).collect();
+    let mut assigned: usize = shares.iter().sum();
+    // Hand the remainder out by descending fractional part, lowest index
+    // first on ties — the ordering that makes equal weights match
+    // `chunk_range`.
+    let mut order: Vec<usize> = (0..p).collect();
+    order.sort_by(|&a, &b| {
+        let (fa, fb) = (quotas[a] - quotas[a].floor(), quotas[b] - quotas[b].floor());
+        fb.total_cmp(&fa).then(a.cmp(&b))
+    });
+    let mut i = 0;
+    while assigned < total {
+        shares[order[i % p]] += 1;
+        assigned += 1;
+        i += 1;
+    }
+    // Floor of one sample per rank (when feasible): steal from the
+    // largest share, lowest index on ties.
+    if total >= p {
+        for z in 0..p {
+            while shares[z] == 0 {
+                let donor = (0..p)
+                    .max_by(|&a, &b| shares[a].cmp(&shares[b]).then(b.cmp(&a)))
+                    .expect("non-empty");
+                if shares[donor] <= 1 {
+                    break;
+                }
+                shares[donor] -= 1;
+                shares[z] += 1;
+            }
+        }
+    }
+    debug_assert_eq!(shares.iter().sum::<usize>(), total);
+    shares
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::chunk_range;
+
+    #[test]
+    fn resize_context_is_pure_and_membership_sensitive() {
+        let a = resize_context(2, &[0, 1, 2, 4]);
+        assert_eq!(a, resize_context(2, &[0, 1, 2, 4]));
+        assert_ne!(a, resize_context(3, &[0, 1, 2, 4]));
+        assert_ne!(a, resize_context(2, &[0, 1, 2]));
+    }
+
+    #[test]
+    fn rendezvous_announce_is_sticky_and_tickets_first_post_wins() {
+        let r = Rendezvous::default();
+        assert_eq!(r.announced(4), None);
+        r.announce(4, false);
+        r.announce(4, true); // cannot upgrade a flap
+        assert_eq!(r.announced(4), Some(false));
+        assert!(!r.await_announced(4));
+        r.post_ticket(Ticket {
+            epoch: 1,
+            members: vec![0, 1, 2],
+            clock: 1.5,
+        });
+        r.post_ticket(Ticket {
+            epoch: 1,
+            members: vec![0, 1],
+            clock: 9.0,
+        });
+        let t = r.ticket(1).unwrap();
+        assert_eq!((t.members.as_slice(), t.clock), (&[0usize, 1, 2][..], 1.5));
+        assert_eq!(r.ticket(2), None);
+        r.close();
+        assert_eq!(r.await_ticket(2), None, "closed rendezvous releases waiters");
+        assert!(!r.await_announced(9), "closed rendezvous treats silence as flap");
+    }
+
+    #[test]
+    fn detection_latency_is_the_closed_form() {
+        let hb = HeartbeatConfig {
+            interval_s: 0.5,
+            timeout_s: 2.0,
+            retries: 3,
+            backoff: 2.0,
+        };
+        // 0.5 + 2 * (1 + 2 + 4 + 8) = 30.5
+        assert!((hb.detection_latency_s() - 30.5).abs() < 1e-12);
+        let none = HeartbeatConfig {
+            retries: 0,
+            ..hb
+        };
+        assert!((none.detection_latency_s() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn peer_tracker_confirms_once_and_survives_rebuild() {
+        let world = WorldState::new(4);
+        let mut t = PeerTracker::new(HeartbeatConfig::default(), &[0, 1, 2, 3]);
+        assert_eq!(t.confirm_failures(&world), (vec![], 0.0));
+        world.mark_failed(2);
+        let (dead, lat) = t.confirm_failures(&world);
+        assert_eq!(dead, vec![2]);
+        assert!((lat - HeartbeatConfig::default().detection_latency_s()).abs() < 1e-12);
+        // Already confirmed: no double charge.
+        assert_eq!(t.confirm_failures(&world), (vec![], 0.0));
+        // Rebuild keeps the confirmed death, adds the newcomer alive.
+        t.rebuild(&[0, 1, 2, 5]);
+        assert_eq!(t.state(2), Some(PeerState::Dead));
+        assert_eq!(t.state(5), Some(PeerState::Alive));
+        assert_eq!(t.state(3), None);
+        assert_eq!(t.confirm_failures(&world), (vec![], 0.0));
+    }
+
+    #[test]
+    fn equal_weights_match_chunk_range() {
+        for total in [0usize, 1, 7, 10, 100, 101] {
+            for p in [1usize, 2, 3, 4, 7] {
+                let shares = weighted_shares(total, &vec![1.0; p]);
+                let even: Vec<usize> = (0..p)
+                    .map(|r| {
+                        let (s, e) = chunk_range(total, p, r);
+                        e - s
+                    })
+                    .collect();
+                assert_eq!(shares, even, "total={total} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_shares_cover_and_favor_fast_ranks() {
+        let shares = weighted_shares(100, &[1.0, 1.0, 0.5]);
+        assert_eq!(shares.iter().sum::<usize>(), 100);
+        assert!(shares[2] < shares[0] && shares[2] < shares[1]);
+        // Monotone: slowing a rank down never grows its share.
+        let slower = weighted_shares(100, &[1.0, 1.0, 0.25]);
+        assert!(slower[2] <= shares[2]);
+        // Everyone gets at least one sample when feasible.
+        let tiny = weighted_shares(3, &[1.0, 1.0, 1e-6]);
+        assert!(tiny.iter().all(|&s| s >= 1), "{tiny:?}");
+    }
+}

@@ -72,6 +72,7 @@ pub mod compat;
 pub mod datatype;
 pub mod error;
 pub mod events;
+pub mod membership;
 pub mod netmodel;
 pub mod pool;
 pub mod request;
@@ -91,9 +92,13 @@ pub use error::{MpiError, MpiResult};
 pub use events::{
     decode_world, encode_world, DeliverySeq, DrainSchedule, Event, EventLog, EventMode,
 };
+pub use membership::{
+    resize_context, weighted_shares, HeartbeatConfig, JoinSeat, PeerState, PeerTracker,
+    Rendezvous, Ticket,
+};
 pub use netmodel::{fold_arrival, NetProfile};
 pub use pool::{BufferPool, PooledScratch, PoolStats};
 pub use request::{wait_all, RecvRequest, SendRequest};
 pub use topology::Topology;
 pub use ulfm::{try_collective, FaultPlan, Recovery};
-pub use world::World;
+pub use world::{Seat, World};

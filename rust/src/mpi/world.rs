@@ -12,7 +12,16 @@ use std::sync::Arc;
 use std::thread;
 
 use super::comm::{CommGroup, Communicator, WorldState};
+use super::membership::JoinSeat;
 use super::netmodel::NetProfile;
+
+/// What a rank thread receives from [`World::run_elastic`]: the initial
+/// ranks hold a communicator on the launch group; spare seats park on a
+/// [`JoinSeat`] until an epoch-boundary ticket admits them.
+pub enum Seat {
+    Initial(Communicator),
+    Joiner(JoinSeat),
+}
 
 /// Handle used to launch a set of ranks over one network profile.
 pub struct World {
@@ -82,6 +91,71 @@ impl World {
         results
     }
 
+    /// Elastic launch: spawn `budget` rank threads over one
+    /// [`WorldState`], but put only the first `self.size` on the launch
+    /// communicator — the remaining seats receive a [`Seat::Joiner`] and
+    /// are expected to announce to the rendezvous and park until an
+    /// epoch-boundary ticket admits them (or the world closes). Results
+    /// come back in world-rank order, joiner seats included.
+    ///
+    /// The caller owns the close contract: some always-alive rank
+    /// (protocol: world rank 0) must call
+    /// `comm.world().membership().close()` on every exit path, or parked
+    /// joiners spin forever.
+    pub fn run_elastic<T, F>(&self, budget: usize, f: F) -> Vec<crate::Result<T>>
+    where
+        T: Send + 'static,
+        F: Fn(Seat) -> crate::Result<T> + Send + Sync + 'static,
+    {
+        assert!(
+            budget >= self.size,
+            "rank budget {budget} below initial world size {}",
+            self.size
+        );
+        let world = WorldState::new(budget);
+        let group = Arc::new(CommGroup::new(0, (0..self.size).collect()));
+        let profile = Arc::new(self.profile.clone());
+        let f = Arc::new(f);
+
+        let handles: Vec<_> = (0..budget)
+            .map(|rank| {
+                let seat = if rank < self.size {
+                    Seat::Initial(Communicator::new(
+                        rank,
+                        group.clone(),
+                        world.clone(),
+                        profile.clone(),
+                    ))
+                } else {
+                    Seat::Joiner(JoinSeat::new(rank, world.clone(), profile.clone()))
+                };
+                let f = f.clone();
+                thread::Builder::new()
+                    .name(format!("rank-{rank}"))
+                    .stack_size(self.stack_bytes)
+                    .spawn(move || f(seat))
+                    .expect("spawn rank thread")
+            })
+            .collect();
+
+        let results: Vec<crate::Result<T>> = handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                Err(p) => {
+                    let msg = p
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| p.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "rank panicked".into());
+                    Err(anyhow::anyhow!("rank panicked: {msg}"))
+                }
+            })
+            .collect();
+        group.close_all();
+        results
+    }
+
     /// Like [`World::run`] but unwraps: returns values, panicking on the
     /// first rank error. Convenient for tests and examples.
     pub fn run_unwrap<T, F>(&self, f: F) -> Vec<T>
@@ -133,6 +207,78 @@ mod tests {
         });
         assert!(res[0].is_ok());
         assert!(res[1].is_err());
+    }
+
+    #[test]
+    fn elastic_world_admits_joiner_at_boundary() {
+        use crate::mpi::membership::Ticket;
+        let w = World::new(2, NetProfile::zero());
+        let out = w.run_elastic(3, |seat| match seat {
+            Seat::Initial(comm) => {
+                let members = vec![0usize, 1, 2];
+                if comm.world_rank() == 0 {
+                    assert!(comm.world().membership().await_announced(2));
+                    comm.world().membership().post_ticket(Ticket {
+                        epoch: 1,
+                        members: members.clone(),
+                        clock: comm.clock(),
+                    });
+                } else {
+                    comm.world().membership().await_ticket(1).expect("ticket");
+                }
+                let big = comm.resize(1, &members)?;
+                let right = (big.rank() + 1) % big.size();
+                let left = (big.rank() + big.size() - 1) % big.size();
+                big.send(right, 0, &[big.rank() as i32])?;
+                let (v, _) = big.recv::<i32>(Some(left), 0)?;
+                if big.world_rank() == 0 {
+                    big.world().membership().close();
+                }
+                Ok(v[0])
+            }
+            Seat::Joiner(seat) => {
+                seat.announce(true);
+                let comm = seat.await_admission(1)?.expect("admitted");
+                let right = (comm.rank() + 1) % comm.size();
+                let left = (comm.rank() + comm.size() - 1) % comm.size();
+                comm.send(right, 0, &[comm.rank() as i32])?;
+                let (v, _) = comm.recv::<i32>(Some(left), 0)?;
+                Ok(v[0])
+            }
+        });
+        let vals: Vec<i32> = out.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(vals, vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn elastic_flapped_joiner_degrades_to_survivors() {
+        use crate::mpi::membership::Ticket;
+        let w = World::new(2, NetProfile::zero());
+        let out = w.run_elastic(3, |seat| match seat {
+            Seat::Initial(comm) => {
+                if comm.world_rank() == 0 {
+                    // The flap is visible as a not-ready announcement; the
+                    // ticket degrades to the survivor membership.
+                    assert!(!comm.world().membership().await_announced(2));
+                    comm.world().membership().post_ticket(Ticket {
+                        epoch: 1,
+                        members: vec![0, 1],
+                        clock: comm.clock(),
+                    });
+                    comm.world().membership().close();
+                }
+                Ok(comm.size())
+            }
+            Seat::Joiner(seat) => {
+                seat.announce(false);
+                assert!(seat.world().is_failed(seat.world_rank()));
+                let admitted = seat.await_admission(1)?;
+                assert!(admitted.is_none(), "flapped seat must not be admitted");
+                Ok(0)
+            }
+        });
+        let vals: Vec<usize> = out.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(vals, vec![2, 2, 0]);
     }
 
     #[test]

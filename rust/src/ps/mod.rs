@@ -85,7 +85,7 @@ pub mod trainer;
 pub use client::PsClient;
 pub use server::{rd_order_sum, ServeOutcome, ServerStats, ShardServer};
 pub use shard::ShardMap;
-pub use trainer::train_rank_ps;
+pub use trainer::{train_rank_ps, train_rank_ps_joiner};
 
 use crate::mpi::Tag;
 

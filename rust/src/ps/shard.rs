@@ -12,7 +12,7 @@
 use std::ops::Range;
 
 use crate::model::ParamSet;
-use crate::mpi::chunk_range;
+use crate::mpi::{chunk_range, weighted_shares};
 
 /// The step-invariant partition of the flat vector over `n_shards`
 /// servers. Identical on every rank by construction (it is a pure
@@ -32,6 +32,26 @@ impl ShardMap {
             .map(|i| {
                 let (s, e) = chunk_range(n_elems, n_shards, i);
                 s..e
+            })
+            .collect();
+        ShardMap { ranges, n_elems }
+    }
+
+    /// Speed-weighted partition: contiguous ranges sized by
+    /// largest-remainder apportionment over `weights` (a slow server gets
+    /// a proportionally smaller shard), still disjoint and covering by
+    /// construction. Equal weights reproduce [`ShardMap::build`] exactly,
+    /// so the unweighted paths keep their pinned digests.
+    pub fn build_weighted(n_elems: usize, weights: &[f64]) -> ShardMap {
+        assert!(!weights.is_empty(), "shard map needs at least one shard");
+        let shares = weighted_shares(n_elems, weights);
+        let mut start = 0;
+        let ranges = shares
+            .iter()
+            .map(|&len| {
+                let r = start..start + len;
+                start += len;
+                r
             })
             .collect();
         ShardMap { ranges, n_elems }
@@ -107,5 +127,34 @@ mod tests {
     #[should_panic(expected = "at least one shard")]
     fn zero_shards_rejected() {
         let _ = ShardMap::build(10, 0);
+    }
+
+    #[test]
+    fn weighted_equal_weights_match_unweighted() {
+        for n in [1usize, 13, 100, 1000] {
+            for s in [1usize, 2, 3, 7] {
+                assert_eq!(
+                    ShardMap::build_weighted(n, &vec![1.0; s]),
+                    ShardMap::build(n, s),
+                    "n={n} s={s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_shards_cover_disjoint_and_shrink_slow_servers() {
+        let map = ShardMap::build_weighted(100, &[1.0, 1.0, 0.5]);
+        assert_eq!(map.n_shards(), 3);
+        // Contiguous + covering: ranges tile [0, n).
+        let mut end = 0;
+        for i in 0..map.n_shards() {
+            let r = map.shard_range(i);
+            assert_eq!(r.start, end);
+            end = r.end;
+        }
+        assert_eq!(end, map.n_elems());
+        // The slow shard is strictly smaller than the fast ones.
+        assert!(map.shard_range(2).len() < map.shard_range(0).len());
     }
 }

@@ -25,6 +25,21 @@
 //! server side by re-seeding shards from any surviving replica (for BSP
 //! the realign is a bitwise no-op, so recovery resumes exactly from the
 //! last applied clock).
+//!
+//! # Elastic membership
+//!
+//! Under `--elastic` the same era machinery handles *planned* resizes:
+//! the sorted join/leave epochs partition training into eras, and every
+//! non-final era ends with a full quiesce (sync-pull + deregister) so the
+//! servers' serve loop returns cleanly. The cross-era driver then runs
+//! the cooperative resize protocol (leader ticket over the world
+//! rendezvous — [`crate::coordinator::trainer::negotiate_resize`]);
+//! admitted joiners enter as *workers* (the shard layout keys on the
+//! initial server world ranks, which a joiner's rank is always beyond),
+//! and every worker re-scatters speed-weighted shards and re-seeds its
+//! shuffle stream so the downstream schedule is a pure function of the
+//! membership — not of how it came to be. Failures keep the ULFM path,
+//! extended with heartbeat-confirmed detection latency.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -34,12 +49,16 @@ use crate::coordinator::config::{SyncEvery, SyncMode, TrainConfig, TrainMode};
 use crate::coordinator::metrics::RankMetrics;
 use crate::coordinator::replica::{Replica, StepOutcome};
 use crate::coordinator::sync::sync_metrics;
-use crate::coordinator::trainer::evaluate;
-use crate::data::{load_train_test, scatter_dataset, BatchIter, Dataset};
+use crate::coordinator::trainer::{
+    elastic_stream_seed, evaluate, negotiate_resize, rebalance_weights,
+};
+use crate::data::{
+    load_train_test, scatter_dataset, scatter_dataset_weighted, BatchIter, Dataset,
+};
 use crate::mpi::comm::Communicator;
 use crate::mpi::{
-    allreduce_with, bcast, gather_vecs, AllreduceAlgorithm, CommStats, MpiError, MpiResult,
-    ReduceOp,
+    allreduce_with, bcast, gather_vecs, AllreduceAlgorithm, CommStats, JoinSeat, MpiError,
+    MpiResult, PeerTracker, ReduceOp,
 };
 use crate::runtime::Manifest;
 use crate::trace::{Kind as TraceKind, Lane, Tracer};
@@ -97,30 +116,166 @@ pub fn train_rank_ps(
         replica: None,
         train_shard: None,
         test_shard: None,
+        full_train: None,
+        full_test: None,
         rng: Rng::new(cfg.seed ^ (0xA5A5 + comm.world_rank() as u64)),
         epoch: 0,
         epoch_loss_acc: Vec::new(),
         recovered: false,
+        rescatter: false,
     };
     state.metrics.is_server = state.server_worlds.contains(&comm.world_rank());
+    drive(comm, state, wall0, 0)
+}
 
-    // Comm counters accumulate across eras: every shrink mints a fresh
-    // communicator with zeroed stats. (The worker subcomm's few-element
-    // per-epoch collectives are negligible next to the pull/push volume
-    // and are not folded in.)
+/// Entry point for a budgeted joiner seat in PS mode — dispatched by the
+/// launcher under `--elastic`. Announces to the rendezvous, waits for the
+/// leader's admission ticket at the scheduled epoch boundary, then enters
+/// the cross-era driver as a *worker* (`initial_ranks` keys the stable
+/// server-role layout, which a joiner's world rank is always beyond).
+pub fn train_rank_ps_joiner(
+    seat: JoinSeat,
+    cfg: &TrainConfig,
+    manifest: Arc<Manifest>,
+    initial_ranks: usize,
+) -> Result<RankMetrics> {
+    let TrainMode::ParameterServer {
+        servers,
+        consistency,
+    } = cfg.train_mode
+    else {
+        anyhow::bail!("train_rank_ps_joiner requires TrainMode::ParameterServer");
+    };
+    let wall0 = Instant::now();
+    let world_rank = seat.world_rank();
+    let metrics = RankMetrics::new(world_rank);
+    let Some(join_epoch) = cfg.elastic.join_epoch_of(world_rank) else {
+        // Budgeted seat with no scheduled join: never announces.
+        return Ok(metrics);
+    };
+    if cfg.elastic.is_flap(world_rank) {
+        // Mid-join flap: the announce arrives *not ready*, the boundary
+        // degrades to the survivor membership, and the seat dies.
+        seat.announce(false);
+        let mut metrics = metrics;
+        metrics.died = true;
+        return Ok(metrics);
+    }
+    seat.announce(true);
+    let Some(mut comm) = seat.await_admission(join_epoch)? else {
+        return Ok(metrics); // rendezvous closed before the boundary
+    };
+    if let Some(session) = cfg.chaos.session_for(world_rank) {
+        comm.install_events(session);
+    }
+    if cfg.trace {
+        comm.install_tracer(Tracer::new(world_rank));
+    }
+    let mut state = PsRank {
+        cfg,
+        manifest: &manifest,
+        consistency,
+        server_worlds: Roles::initial_server_worlds(initial_ranks, servers),
+        metrics,
+        replica: None,
+        train_shard: None,
+        test_shard: None,
+        full_train: None,
+        full_test: None,
+        rng: Rng::new(cfg.seed ^ (0xA5A5 + world_rank as u64)),
+        epoch: join_epoch,
+        epoch_loss_acc: Vec::new(),
+        recovered: false,
+        rescatter: false,
+    };
+    state.metrics.joined_at = Some(join_epoch);
+    // Resume the boundary sequence *after* the admitting one.
+    let boundary_idx = cfg
+        .elastic
+        .membership_epochs()
+        .iter()
+        .position(|&e| e == join_epoch)
+        .map_or(0, |i| i + 1);
+    drive(comm, state, wall0, boundary_idx)
+}
+
+/// Shared cross-era driver (initial ranks and admitted joiners): runs
+/// eras to completion, performing cooperative resizes at elastic epoch
+/// boundaries and ULFM shrink recovery on failure, then harvests the
+/// rank metrics over the final communicator.
+fn drive(
+    mut comm: Communicator,
+    mut state: PsRank,
+    wall0: Instant,
+    mut boundary_idx: usize,
+) -> Result<RankMetrics> {
+    let cfg = state.cfg;
+    let elastic = cfg.elastic.enabled;
+    let boundaries = cfg.elastic.membership_epochs();
+    let mut tracker =
+        elastic.then(|| PeerTracker::new(cfg.elastic.heartbeat, comm.world_ranks()));
+    // Comm counters accumulate across eras: every shrink or resize mints
+    // a fresh communicator with zeroed stats. (The worker subcomm's
+    // few-element per-epoch collectives are negligible next to the
+    // pull/push volume and are not folded in.)
     let mut acc = CommStats::default();
+    let fold = |acc: &mut CommStats, comm: &Communicator| {
+        let s = comm.stats();
+        acc.comm_vtime += s.comm_vtime;
+        acc.bytes_sent += s.bytes_sent;
+        acc.msgs_sent += s.msgs_sent;
+    };
     loop {
-        match state.run_era(&comm) {
-            Ok(EraEnd::Finished) => break,
-            Ok(EraEnd::Died) => break,
+        let era_end = boundaries
+            .get(boundary_idx)
+            .copied()
+            .unwrap_or(cfg.epochs)
+            .min(cfg.epochs);
+        match state.run_era(&comm, era_end) {
+            Ok(EraEnd::Finished) if elastic && era_end < cfg.epochs => {
+                // Planned epoch-boundary resize: the era quiesced cleanly
+                // (workers deregistered, serve loops returned). Leavers
+                // drop out here, frozen at their last synced pull;
+                // everyone else re-forms over the admission ticket.
+                if cfg.elastic.leaves_at(era_end).contains(&comm.world_rank()) {
+                    state.metrics.left = true;
+                    break;
+                }
+                fold(&mut acc, &comm);
+                let leaves = cfg.elastic.leaves_at(era_end);
+                let joins = cfg.elastic.joins_at(era_end);
+                comm = negotiate_resize(&comm, era_end, &leaves, &joins)?;
+                if let Some(t) = tracker.as_mut() {
+                    t.rebuild(comm.world_ranks());
+                }
+                state.rescatter = true;
+                boundary_idx += 1;
+            }
+            Ok(EraEnd::Finished) | Ok(EraEnd::Died) => break,
             Err(MpiError::ProcFailed { .. }) | Err(MpiError::Revoked) => {
-                let s = comm.stats();
-                acc.comm_vtime += s.comm_vtime;
-                acc.bytes_sent += s.bytes_sent;
-                acc.msgs_sent += s.msgs_sent;
+                fold(&mut acc, &comm);
+                // Heartbeat liveness: charge the timeout/retry/backoff
+                // detection latency for each newly-confirmed-dead peer
+                // before the survivors shrink.
+                if let Some(t) = tracker.as_mut() {
+                    let hb_t0 = comm.clock();
+                    let (confirmed, latency) = t.confirm_failures(comm.world());
+                    if latency > 0.0 {
+                        comm.advance(latency);
+                        for w in confirmed {
+                            comm.trace_span(Lane::Comm, TraceKind::Heartbeat, w as u32, hb_t0);
+                        }
+                    }
+                }
                 comm.revoke();
                 comm = comm.shrink()?;
+                if let Some(t) = tracker.as_mut() {
+                    t.rebuild(comm.world_ranks());
+                }
                 state.recovered = true;
+                if elastic {
+                    state.rescatter = true;
+                }
                 if cfg.verbose && comm.rank() == 0 {
                     eprintln!(
                         "[{}] ps: recovered from rank failure; continuing with p={}",
@@ -133,10 +288,7 @@ pub fn train_rank_ps(
         }
     }
 
-    let s = comm.stats();
-    acc.comm_vtime += s.comm_vtime;
-    acc.bytes_sent += s.bytes_sent;
-    acc.msgs_sent += s.msgs_sent;
+    fold(&mut acc, &comm);
     let mut metrics = state.metrics;
     metrics.absorb_comm(acc);
     if let Some(replica) = &state.replica {
@@ -148,11 +300,12 @@ pub fn train_rank_ps(
     metrics.event_log = comm.take_events().map(|s| s.into_log_bytes());
     // Trace harvest — mirrors the allreduce trainer: stamp the exposed
     // aggregate (pull stalls for PS workers), serialize, gather survivor
-    // blobs to rank 0 over the final communicator.
+    // blobs to rank 0 over the final communicator (leavers hold a
+    // pre-resize communicator and keep their blob local).
     if comm.has_tracer() {
         comm.trace_counter(Lane::Comm, TraceKind::SyncExposedS, 0, metrics.sync_exposed_s);
         let blob = comm.take_tracer().map(|t| t.to_bytes());
-        if !metrics.died {
+        if !metrics.died && !metrics.left {
             if let Some(b) = blob.as_ref() {
                 match gather_vecs::<u8>(&comm, 0, b) {
                     Ok(world) => metrics.trace_world = world,
@@ -178,6 +331,11 @@ struct PsRank<'a> {
     replica: Option<Replica>,
     train_shard: Option<Dataset>,
     test_shard: Option<Dataset>,
+    /// Full datasets, retained by the first worker under elastic
+    /// membership (every resize re-scatters from them); dropped right
+    /// after the one-time scatter otherwise.
+    full_train: Option<Dataset>,
+    full_test: Option<Dataset>,
     rng: Rng,
     /// Next epoch to run (a failed epoch is retried in the next era).
     epoch: usize,
@@ -187,12 +345,15 @@ struct PsRank<'a> {
     /// workers to the straggler at every epoch boundary.
     epoch_loss_acc: Vec<[f64; 2]>,
     recovered: bool,
+    /// Membership changed under elastic (resize or shrink): re-scatter
+    /// weighted shards and re-seed the shuffle stream in the next era.
+    rescatter: bool,
 }
 
 impl PsRank<'_> {
     /// One membership era: assign roles, split the worker subcomm, then
-    /// serve (server ranks) or train the remaining epochs (workers).
-    fn run_era(&mut self, comm: &Communicator) -> MpiResult<EraEnd> {
+    /// serve (server ranks) or train this era's epochs (workers).
+    fn run_era(&mut self, comm: &Communicator, era_end: usize) -> MpiResult<EraEnd> {
         let roles = Roles::assign(comm, &self.server_worlds);
         if roles.server_ranks.is_empty() {
             return Err(MpiError::Inconsistent(
@@ -210,7 +371,7 @@ impl PsRank<'_> {
         let res = if i_serve {
             self.serve_era(comm, &roles)
         } else {
-            self.work_era(comm, &sub, &roles)
+            self.work_era(comm, &sub, &roles, era_end)
         };
         if matches!(
             &res,
@@ -225,6 +386,25 @@ impl PsRank<'_> {
             comm.revoke();
         }
         res
+    }
+
+    /// The era's server shard map — a pure function of `(cfg,
+    /// membership)`, so servers and workers build identical maps without
+    /// exchanging them. Under elastic membership the shards are
+    /// speed-weighted: a straggling server holds a proportionally
+    /// smaller slice of the vector (and thus answers proportionally
+    /// less pull/push traffic).
+    fn server_shard_map(&self, comm: &Communicator, roles: &Roles, n_params: usize) -> ShardMap {
+        if self.cfg.elastic.enabled {
+            let server_worlds: Vec<usize> = roles
+                .server_ranks
+                .iter()
+                .map(|&cr| comm.world_ranks()[cr])
+                .collect();
+            ShardMap::build_weighted(n_params, &rebalance_weights(self.cfg, &server_worlds))
+        } else {
+            ShardMap::build(n_params, roles.server_ranks.len())
+        }
     }
 
     fn serve_era(&mut self, comm: &Communicator, roles: &Roles) -> MpiResult<EraEnd> {
@@ -242,7 +422,7 @@ impl PsRank<'_> {
         }
         let spec = self.manifest.arch(&self.cfg.arch).map_err(inc)?;
         let n_params: usize = spec.param_shapes.iter().map(|s| s.numel()).sum();
-        let map = ShardMap::build(n_params, roles.server_ranks.len());
+        let map = self.server_shard_map(comm, roles, n_params);
         let shard = roles.shard_id(comm.rank()).expect("assigned server role");
         let mut server = ShardServer::new(
             map.shard_range(shard),
@@ -267,25 +447,60 @@ impl PsRank<'_> {
         comm: &Communicator,
         wsub: &Communicator,
         roles: &Roles,
+        era_end: usize,
     ) -> MpiResult<EraEnd> {
         let cfg = self.cfg;
-        // ---- one-time data load + scatter over the workers ----
-        if self.train_shard.is_none() {
+        // ---- data load + scatter over the workers (once; an elastic
+        // membership change — or a joiner's empty shard — forces a
+        // weighted re-scatter from the first worker's retained fulls) ----
+        if self.train_shard.is_none() || self.rescatter {
             let spec = self.manifest.arch(&cfg.arch).map_err(inc)?.clone();
             wsub.set_clock(comm.clock());
+            let first = self.train_shard.is_none();
+            let rebal_t0 = comm.clock();
             let t_io = Instant::now();
-            let (full_train, full_test) = if wsub.rank() == 0 {
+            if wsub.rank() == 0 && self.full_train.is_none() {
                 let (tr, te, _src) =
                     load_train_test(&spec, cfg.data_scale, cfg.seed).map_err(inc)?;
-                (Some(tr), Some(te))
-            } else {
-                (None, None)
-            };
+                self.full_train = Some(tr);
+                self.full_test = Some(te);
+            }
             wsub.advance(t_io.elapsed().as_secs_f64());
-            self.train_shard = Some(scatter_dataset(wsub, 0, full_train.as_ref())?);
-            self.test_shard = Some(scatter_dataset(wsub, 0, full_test.as_ref())?);
+            if cfg.elastic.enabled {
+                // Speed-weighted shards + membership-keyed shuffle
+                // streams: the batch schedule downstream of any resize is
+                // a pure function of the membership, not of how it came
+                // to be. With no straggler the weights are all 1.0 and
+                // the split reproduces the even `scatter_dataset` layout
+                // bit-for-bit.
+                let weights = rebalance_weights(cfg, wsub.world_ranks());
+                self.train_shard = Some(scatter_dataset_weighted(
+                    wsub,
+                    0,
+                    self.full_train.as_ref(),
+                    &weights,
+                )?);
+                self.test_shard = Some(scatter_dataset_weighted(
+                    wsub,
+                    0,
+                    self.full_test.as_ref(),
+                    &weights,
+                )?);
+                self.rng = Rng::new(elastic_stream_seed(cfg.seed, self.epoch, wsub.rank()));
+            } else {
+                self.train_shard = Some(scatter_dataset(wsub, 0, self.full_train.as_ref())?);
+                self.test_shard = Some(scatter_dataset(wsub, 0, self.full_test.as_ref())?);
+                self.full_train = None;
+                self.full_test = None;
+            }
             comm.set_clock(wsub.clock().max(comm.clock()));
-            self.metrics.io_s = comm.clock();
+            if self.rescatter {
+                comm.trace_span(Lane::Comm, TraceKind::Rebalance, self.epoch as u32, rebal_t0);
+            }
+            self.rescatter = false;
+            if first {
+                self.metrics.io_s = comm.clock();
+            }
         }
         // ---- replica (persists across eras) ----
         if self.replica.is_none() {
@@ -337,13 +552,22 @@ impl PsRank<'_> {
                 &mut resume,
             )?;
             self.epoch = resume[0] as usize;
+            if cfg.elastic.enabled {
+                // Re-key the shuffle stream to the rolled-back epoch so
+                // the retried schedule matches a planned-membership run.
+                self.rng = Rng::new(elastic_stream_seed(cfg.seed, self.epoch, wsub.rank()));
+            }
             comm.set_clock(wsub.clock().max(comm.clock()));
             self.recovered = false;
         }
         // ---- (re-)shard and seed the servers from the first worker ----
         let mut client = {
             let replica = self.replica.as_ref().expect("worker replica");
-            let map = ShardMap::for_params(&replica.params, roles.server_ranks.len());
+            let map = if cfg.elastic.enabled {
+                self.server_shard_map(comm, roles, replica.params.flat().len())
+            } else {
+                ShardMap::for_params(&replica.params, roles.server_ranks.len())
+            };
             if comm.rank() == roles.worker_ranks[0] {
                 for (sid, &srv) in roles.server_ranks.iter().enumerate() {
                     comm.send(
@@ -356,7 +580,7 @@ impl PsRank<'_> {
             PsClient::new(map, roles.server_ranks.clone())
         };
         // ---- epochs ----
-        let res = self.run_epochs(comm, wsub, &mut client);
+        let res = self.run_epochs(comm, wsub, &mut client, era_end);
         // Fold the client's observability into the rank metrics on every
         // exit path (recovery included).
         self.metrics.staleness_max = self.metrics.staleness_max.max(client.staleness_max);
@@ -371,6 +595,7 @@ impl PsRank<'_> {
         comm: &Communicator,
         wsub: &Communicator,
         client: &mut PsClient,
+        era_end: usize,
     ) -> MpiResult<EraEnd> {
         let cfg = self.cfg;
         // Lockstep step count, agreed **once per era** (shards don't
@@ -395,7 +620,7 @@ impl PsRank<'_> {
             }
             steps
         };
-        while self.epoch < cfg.epochs {
+        while self.epoch < era_end {
             if cfg.fault_plan.apply(self.epoch, comm) {
                 comm.trace_instant(Lane::Comm, TraceKind::Fault, self.epoch as u32);
                 self.metrics.died = true;
@@ -436,6 +661,17 @@ impl PsRank<'_> {
                 comm.pool().trim_to(keep);
             }
             self.epoch += 1;
+        }
+        if era_end < cfg.epochs {
+            // Elastic era boundary: quiesce — every worker (ASP included)
+            // finishes the era on the fully-applied model and
+            // deregisters, so the serve loops return cleanly before the
+            // resize — but defer the end-of-training loss aggregation and
+            // evaluation to the final era.
+            let replica = self.replica.as_mut().expect("worker replica");
+            client.sync_pull(comm, replica.params.flat_mut())?;
+            client.finish(comm)?;
+            return Ok(EraEnd::Finished);
         }
         // Training window closes at the last push — the flush and the
         // loss aggregation below wait for the slowest worker and would

@@ -143,10 +143,25 @@ pub enum Kind {
     /// Counter: the trainer's end-of-run `sync_exposed_s` aggregate
     /// (value in `t1`) — lets analysis cross-check its own derivation.
     SyncExposedS = 24,
+    /// Instant: a joiner posted its rendezvous announcement
+    /// (arg = joiner world rank).
+    JoinAnnounce = 25,
+    /// Instant: an epoch-boundary ticket admitted a joiner
+    /// (arg = joiner world rank).
+    JoinAdmit = 26,
+    /// Elastic resize: boundary reached → re-formed communicator built
+    /// (arg = epoch).
+    Resize = 27,
+    /// Modelled heartbeat detection: peer went silent → declared dead
+    /// after timeout + backed-off retries (arg = confirmed world rank).
+    Heartbeat = 28,
+    /// Post-resize shard rebalance: re-scatter + re-seed onto the new
+    /// membership (arg = epoch).
+    Rebalance = 29,
 }
 
 /// All kinds, for name↔kind mapping and validation.
-const KINDS: [Kind; 25] = [
+const KINDS: [Kind; 30] = [
     Kind::Compute,
     Kind::SyncWindow,
     Kind::Apply,
@@ -172,6 +187,11 @@ const KINDS: [Kind; 25] = [
     Kind::Fault,
     Kind::ChaosDelay,
     Kind::SyncExposedS,
+    Kind::JoinAnnounce,
+    Kind::JoinAdmit,
+    Kind::Resize,
+    Kind::Heartbeat,
+    Kind::Rebalance,
 ];
 
 impl Kind {
@@ -202,6 +222,11 @@ impl Kind {
             Kind::Fault => "fault",
             Kind::ChaosDelay => "chaos_delay",
             Kind::SyncExposedS => "sync_exposed_s",
+            Kind::JoinAnnounce => "join_announce",
+            Kind::JoinAdmit => "join_admit",
+            Kind::Resize => "resize",
+            Kind::Heartbeat => "heartbeat",
+            Kind::Rebalance => "rebalance",
         }
     }
 
@@ -222,6 +247,8 @@ impl Kind {
                 | Kind::Revoke
                 | Kind::Fault
                 | Kind::ChaosDelay
+                | Kind::JoinAnnounce
+                | Kind::JoinAdmit
         )
     }
 

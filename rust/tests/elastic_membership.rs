@@ -1,0 +1,273 @@
+//! ISSUE 9 acceptance: elastic membership — epoch-boundary joins,
+//! heartbeat-charged failure detection, and speed-weighted rebalancing.
+//!
+//! * **Digest parity**: a BSP run that shrinks p → p−1 via a mid-training
+//!   kill and regrows to p at the next epoch boundary produces a
+//!   `params_digest` bitwise-equal to an uninterrupted run of the same
+//!   surviving schedule (a *planned* leave at the same boundary plus the
+//!   same join). Membership-keyed reseeding + epoch-entry snapshots make
+//!   the model bits a pure function of the membership schedule.
+//! * **Determinism**: the same chaos seed yields byte-identical DTFEVLOG
+//!   event logs and trace blobs across repeats of an elastic run, on both
+//!   the allreduce and parameter-server paths.
+//! * **Graceful flap**: a joiner that flaps mid-protocol degrades the
+//!   boundary to the survivor world; training completes.
+//! * **Rebalance invariants**: across every grow/shrink membership
+//!   sequence a generated `ChaosPlan` produces, weighted shares stay
+//!   disjoint, covering, ≥ 1, and monotone in the straggler factor.
+//!
+//! Sim-mode throughout — no AOT artifacts needed.
+
+use std::sync::Arc;
+
+use dtf::chaos::ChaosPlan;
+use dtf::coordinator::{
+    run_training, ExecMode, SyncMode, TrainConfig, TrainMode, TrainReport,
+};
+use dtf::mpi::{weighted_shares, NetProfile};
+use dtf::ps::{Consistency, ShardMap};
+use dtf::runtime::Manifest;
+
+fn manifest() -> Arc<Manifest> {
+    Manifest::sim_mlp("elm", 96, 256, 8, 4096, 16)
+}
+
+/// BSP allreduce base config (4 epochs, capped steps).
+fn base_cfg() -> TrainConfig {
+    TrainConfig::new("elm")
+        .with_epochs(4)
+        .with_sync(SyncMode::GradientAverage)
+        .with_mode(ExecMode::Sim {
+            secs_per_sample: 2e-5,
+        })
+        .with_scale(1.0)
+        .with_steps_cap(6)
+}
+
+fn ps_cfg(consistency: Consistency) -> TrainConfig {
+    base_cfg().with_train_mode(TrainMode::ParameterServer {
+        servers: 2,
+        consistency,
+    })
+}
+
+fn run(cfg: TrainConfig, ranks: usize) -> TrainReport {
+    run_training(cfg, manifest(), ranks, NetProfile::infiniband_fdr()).unwrap()
+}
+
+/// Digest of the first continuing (finished) worker rank.
+fn digest(report: &TrainReport) -> u64 {
+    report
+        .per_rank
+        .iter()
+        .find(|r| !r.died && !r.left && !r.is_server)
+        .expect("a finishing worker")
+        .params_digest
+}
+
+#[test]
+fn kill_then_regrow_matches_planned_leave_then_join_bitwise() {
+    // Run A: world rank 2 is *killed* at epoch 1 (p=4 → 3 via ULFM
+    // shrink + heartbeat confirmation), world rank 4 joins at the
+    // epoch-2 boundary (3 → 4).
+    let mut killed = base_cfg();
+    killed.elastic.enabled = true;
+    killed.elastic.joins = vec![(2, 4)];
+    killed.fault_plan = dtf::mpi::ulfm::FaultPlan::kill_at(1, 2);
+    let a = run(killed, 4);
+
+    // Run B: the same surviving schedule, uninterrupted — rank 2 *leaves*
+    // at the epoch-1 boundary, rank 4 joins at epoch 2.
+    let mut planned = base_cfg();
+    planned.elastic.enabled = true;
+    planned.elastic.leaves = vec![(1, 2)];
+    planned.elastic.joins = vec![(2, 4)];
+    let b = run(planned, 4);
+
+    assert!(a.replicas_bitwise_identical());
+    assert!(b.replicas_bitwise_identical());
+    assert_eq!(
+        digest(&a),
+        digest(&b),
+        "kill+regrow must be bitwise-equal to the planned leave+join schedule"
+    );
+    // Both worlds regrow to p=4 and the joiner is bitwise-aligned too.
+    for r in a.per_rank.iter().chain(&b.per_rank) {
+        if !r.died && !r.left {
+            assert_eq!(r.final_world, 4, "rank {}", r.world_rank);
+        }
+    }
+    let joiner = a
+        .per_rank
+        .iter()
+        .find(|r| r.joined_at.is_some())
+        .expect("admitted joiner");
+    assert_eq!((joiner.world_rank, joiner.joined_at), (4, Some(2)));
+    assert_eq!(joiner.params_digest, digest(&a));
+    // The killed run paid heartbeat detection latency on top of the
+    // planned run's schedule; the model bits must not see it.
+    assert!(a.per_rank[2].died && !b.per_rank[2].died && b.per_rank[2].left);
+}
+
+#[test]
+fn same_seed_elastic_runs_are_byte_identical_allreduce() {
+    let seeded = || {
+        let mut c = base_cfg().with_chaos_seed(0xE1A5);
+        c.chaos.delay_max = 0.5;
+        c.trace = true;
+        c.elastic.enabled = true;
+        c.elastic.leaves = vec![(1, 3)];
+        c.elastic.joins = vec![(2, 4), (2, 5)];
+        c
+    };
+    let a = run(seeded(), 4);
+    let b = run(seeded(), 4);
+    assert_eq!(digest(&a), digest(&b), "same seed, same bits");
+    for (ra, rb) in a.per_rank.iter().zip(&b.per_rank) {
+        let (la, lb) = (
+            ra.event_log.clone().unwrap_or_default(),
+            rb.event_log.clone().unwrap_or_default(),
+        );
+        assert_eq!(la, lb, "rank {} event logs diverged", ra.world_rank);
+        assert_eq!(
+            ra.trace, rb.trace,
+            "rank {} trace blobs diverged",
+            ra.world_rank
+        );
+        assert_eq!(
+            ra.clock_s.to_bits(),
+            rb.clock_s.to_bits(),
+            "rank {} clocks diverged",
+            ra.world_rank
+        );
+    }
+    // p = 4 → 3 → 5: the resize events and rebalances are in the logs.
+    assert!(a
+        .per_rank
+        .iter()
+        .any(|r| r.event_log.as_ref().is_some_and(|l| !l.is_empty())));
+    for r in a.per_rank.iter().filter(|r| !r.died && !r.left) {
+        assert_eq!(r.final_world, 5);
+    }
+}
+
+#[test]
+fn same_seed_elastic_runs_are_byte_identical_ps() {
+    let seeded = |cons| {
+        let mut c = ps_cfg(cons).with_chaos_seed(0x5EED);
+        c.chaos.delay_max = 0.5;
+        c.trace = true;
+        c.elastic.enabled = true;
+        c.elastic.leaves = vec![(1, 2)];
+        c.elastic.joins = vec![(2, 6)];
+        c
+    };
+    // 6 ranks = 4 workers + 2 servers; worker 2 leaves, worker 6 joins.
+    let a = run(seeded(Consistency::Bsp), 6);
+    let b = run(seeded(Consistency::Bsp), 6);
+    assert!(a.replicas_bitwise_identical());
+    assert_eq!(digest(&a), digest(&b), "PS BSP: same seed, same bits");
+    for (ra, rb) in a.per_rank.iter().zip(&b.per_rank) {
+        assert_eq!(
+            ra.event_log.clone().unwrap_or_default(),
+            rb.event_log.clone().unwrap_or_default(),
+            "rank {} event logs diverged",
+            ra.world_rank
+        );
+        assert_eq!(ra.trace, rb.trace, "rank {} traces diverged", ra.world_rank);
+    }
+    let joiner = a
+        .per_rank
+        .iter()
+        .find(|r| r.joined_at.is_some())
+        .expect("admitted PS joiner");
+    assert!(!joiner.is_server, "joiners enter as workers");
+    assert_eq!(joiner.joined_at, Some(2));
+    // ASP is inexact across orders but the within-run invariant holds.
+    let asp = run(seeded(Consistency::Asp), 6);
+    assert!(asp.replicas_bitwise_identical());
+}
+
+#[test]
+fn mid_join_flap_degrades_to_the_survivor_world() {
+    let mut cfg = base_cfg();
+    cfg.elastic.enabled = true;
+    cfg.elastic.leaves = vec![(1, 3)];
+    cfg.elastic.joins = vec![(2, 4)];
+    cfg.elastic.flaps = vec![4];
+    let report = run(cfg, 4);
+    // The flapped joiner announced not-ready and died at the rendezvous;
+    // the epoch-2 boundary re-formed over the survivors only.
+    let flapped = &report.per_rank[4];
+    assert!(flapped.died && flapped.joined_at.is_none());
+    for r in report.per_rank.iter().filter(|r| !r.died && !r.left) {
+        assert_eq!(r.final_world, 3, "rank {}", r.world_rank);
+        assert_eq!(r.epoch_losses.len(), 4, "every epoch must complete");
+    }
+    assert!(report.replicas_bitwise_identical());
+}
+
+#[test]
+fn rebalance_invariants_hold_across_generated_membership_sequences() {
+    for seed in 0..60u64 {
+        let plan = ChaosPlan::generate_elastic(seed, 4, 7, 5, 6, 1.0, &[]);
+        plan.validate(4).unwrap();
+        // Evolve the membership through the plan: kills remove a rank,
+        // admitted (non-flapped) joins add theirs at their epoch.
+        let mut members: Vec<usize> = (0..4).collect();
+        let mut kills: Vec<usize> = plan
+            .step_kills
+            .iter()
+            .map(|&(_, r)| r)
+            .chain(plan.clock_kills.iter().map(|&(_, r)| r))
+            .collect();
+        for epoch in 0..5usize {
+            if let Some(k) = kills.pop() {
+                members.retain(|&m| m != k);
+            }
+            for &(e, r) in &plan.joins {
+                if e == epoch && !plan.flaps.contains(&r) {
+                    members.push(r);
+                }
+            }
+            members.sort_unstable();
+            let n = 4096 + 97 * seed as usize;
+            let straggler = members[members.len() / 2];
+            let mut prev_share = usize::MAX;
+            for mult in [1.0f64, 1.5, 2.0, 4.0, 8.0] {
+                let weights: Vec<f64> = members
+                    .iter()
+                    .map(|&m| if m == straggler { 1.0 / mult } else { 1.0 })
+                    .collect();
+                let shares = weighted_shares(n, &weights);
+                assert_eq!(shares.len(), members.len());
+                assert_eq!(shares.iter().sum::<usize>(), n, "shares must cover");
+                assert!(shares.iter().all(|&s| s >= 1), "share floor");
+                // Weighted ShardMap ranges tile the vector: disjoint,
+                // covering, in shard order.
+                let map = ShardMap::build_weighted(n, &weights);
+                let mut covered = 0usize;
+                for (i, &s) in shares.iter().enumerate() {
+                    let r = map.shard_range(i);
+                    assert_eq!(r.start, covered, "seed {seed}: shard {i} gap/overlap");
+                    assert_eq!(r.end - r.start, s, "seed {seed}: map/share mismatch");
+                    covered = r.end;
+                }
+                assert_eq!(covered, n, "seed {seed}: shards must cover the vector");
+                // Speed-weighting is monotone: a slower straggler never
+                // gains elements.
+                let si = members.iter().position(|&m| m == straggler).unwrap();
+                assert!(
+                    shares[si] <= prev_share,
+                    "seed {seed}: straggler share grew with its multiplier"
+                );
+                prev_share = shares[si];
+                // Equal speeds reproduce the even split exactly.
+                if mult == 1.0 {
+                    let even_w = vec![1.0; members.len()];
+                    assert_eq!(shares, weighted_shares(n, &even_w));
+                }
+            }
+        }
+    }
+}
