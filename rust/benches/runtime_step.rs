@@ -21,7 +21,12 @@
 //!    state machines over the simulated transport at 8 MiB. CI fails the
 //!    bench-smoke job unless the modelled Rabenseifner time is strictly
 //!    lower than rd (by ≥30%) at 64 MiB.
-//! 4. **PJRT execution latency** per architecture and entry point
+//! 4. **Compression vs raw wire** (always runs, ISSUE 10): modelled
+//!    bytes-on-wire per rank at the 64 MiB / p=8 acceptance point — raw
+//!    Rabenseifner against the codec allgather under top-k 1% (CI fails
+//!    the bench-smoke job unless the reduction is ≥4x) — plus a live
+//!    `ICodecGather` virtual-clock cross-check at 8 MiB.
+//! 5. **PJRT execution latency** per architecture and entry point
 //!    (skipped with a note when the AOT artifacts are absent).
 //!
 //! Emits `BENCH_allreduce.json` (override path with `DTF_BENCH_JSON`);
@@ -31,6 +36,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use dtf::codec::{Codec, ICodecGather};
 use dtf::coordinator::{BucketPlan, PipelineEngine, SyncStrategy};
 use dtf::model::init_xavier;
 use dtf::mpi::compat::ref_ring;
@@ -277,6 +283,84 @@ fn bench_rabenseifner_vs_rd() -> RabVsRd {
     }
 }
 
+/// The ISSUE-10 compression comparison at the 64 MiB / p=8 acceptance
+/// point: modelled bytes-on-wire per rank for uncompressed Rabenseifner
+/// vs the codec allgather under top-k 1% (and fp16 as the cautionary
+/// counter-example — a 2x shrink loses to the gather's byte ratio at
+/// p=8), plus a live virtual-clock cross-check driving the real
+/// `ICodecGather` state machine at a memory-friendly size.
+struct CompressionVsRaw {
+    large_bucket_bytes: usize,
+    raw_bytes_per_rank: usize,
+    topk_k: usize,
+    topk_wire_bytes_per_rank: usize,
+    topk_reduction: f64,
+    fp16_wire_bytes_per_rank: usize,
+    modelled_raw_rab_s: f64,
+    modelled_topk_s: f64,
+    sim_bucket_bytes: usize,
+    sim_raw_rab_s: f64,
+    sim_topk_s: f64,
+}
+
+/// Max-over-ranks virtual seconds of one wait-driven compressed-bucket
+/// exchange of `n_elems` f32 at p=[`SYNC_P`] on the InfiniBand model
+/// (error feedback on, scratch pre-sized like the pipeline engine does).
+fn sim_codec_gather(codec: Codec, n_elems: usize) -> f64 {
+    let w = World::new(SYNC_P, NetProfile::infiniband_fdr());
+    let clocks = w.run_unwrap(move |c| {
+        barrier(&c)?;
+        let base = c.clock();
+        let mut v = vec![1.0f32; n_elems];
+        let mut residual = vec![0.0f32; n_elems];
+        let mut scratch = vec![0.0f32; codec.wire_len(n_elems)];
+        let mut idx = Vec::with_capacity(n_elems);
+        let send_buf = Vec::with_capacity(codec.wire_len(n_elems));
+        let mut op = ICodecGather::start(
+            &c,
+            codec,
+            &mut v,
+            Some(&mut residual),
+            send_buf,
+            &mut idx,
+        )?;
+        op.wait(&c, &mut v, &mut scratch)?;
+        Ok(c.clock() - base)
+    });
+    clocks.into_iter().fold(0.0, f64::max)
+}
+
+fn bench_compression_vs_raw() -> CompressionVsRaw {
+    let prof = NetProfile::infiniband_fdr();
+    let large = 64usize << 20;
+    let n_elems = large / 4;
+    let k = n_elems / 100; // top-k at 1% density
+    let topk = Codec::TopK { k, error_feedback: true };
+    let raw = NetProfile::rabenseifner_bytes_per_rank(SYNC_P, large);
+    let topk_bytes =
+        NetProfile::codec_gather_bytes_per_rank(SYNC_P, topk.wire_bytes(n_elems));
+    // Live-sim size: 8 MiB buckets, same as the rabenseifner cross-check.
+    let sim_bytes = 8usize << 20;
+    let sim_elems = sim_bytes / 4;
+    let sim_topk = Codec::TopK { k: sim_elems / 100, error_feedback: true };
+    CompressionVsRaw {
+        large_bucket_bytes: large,
+        raw_bytes_per_rank: raw,
+        topk_k: k,
+        topk_wire_bytes_per_rank: topk_bytes,
+        topk_reduction: raw as f64 / topk_bytes as f64,
+        fp16_wire_bytes_per_rank: NetProfile::codec_gather_bytes_per_rank(
+            SYNC_P,
+            Codec::Fp16.wire_bytes(n_elems),
+        ),
+        modelled_raw_rab_s: prof.rabenseifner_allreduce_time(SYNC_P, large),
+        modelled_topk_s: prof.codec_allgather_time(SYNC_P, topk.wire_bytes(n_elems)),
+        sim_bucket_bytes: sim_bytes,
+        sim_raw_rab_s: sim_nonblocking_allreduce(true, sim_elems),
+        sim_topk_s: sim_codec_gather(sim_topk, sim_elems),
+    }
+}
+
 /// ISSUE-7 acceptance grid: 16 ranks as 4 nodes of 4 on the InfiniBand
 /// model, flat-vs-hierarchical at the 64 MiB point.
 const HIER_P: usize = 16;
@@ -365,6 +449,7 @@ fn emit_json(
     n_buckets: usize,
     rab: &RabVsRd,
     hier: &HierVsFlat,
+    comp: &CompressionVsRaw,
 ) {
     let improvement = (base - pooled) / base;
     let crossover = match rab.crossover_bytes {
@@ -409,6 +494,20 @@ fn emit_json(
          \"sim_flat_rabenseifner_virtual_s\": {hsrab:.9},\n    \
          \"sim_hierarchical_virtual_s\": {hsh:.9},\n    \
          \"sim_speedup\": {hssp:.4}\n  }},\n  \
+         \"compression_vs_raw\": {{\n    \"p\": {SYNC_P},\n    \
+         \"large_bucket_bytes\": {clbb},\n    \
+         \"raw_rabenseifner_bytes_per_rank\": {craw},\n    \
+         \"topk_k\": {ctk},\n    \
+         \"topk_wire_bytes_per_rank\": {ctw},\n    \
+         \"topk_wire_reduction_vs_raw\": {ctred:.4},\n    \
+         \"fp16_wire_bytes_per_rank\": {cfw},\n    \
+         \"modelled_raw_rabenseifner_s\": {cmraw:.9},\n    \
+         \"modelled_topk_gather_s\": {cmtopk:.9},\n    \
+         \"modelled_speedup\": {cmsp:.4},\n    \
+         \"sim_bucket_bytes\": {csbb},\n    \
+         \"sim_raw_rabenseifner_virtual_s\": {csraw:.9},\n    \
+         \"sim_topk_gather_virtual_s\": {cstopk:.9},\n    \
+         \"sim_speedup\": {cssp:.4}\n  }},\n  \
          \"note\": \"baseline = pre-pool allocating transport (fresh Vec per hop); \
          pooled = BufferPool + recv_into. overlap section: flat_ring = compute then one \
          blocking ring allreduce (the trainer's Auto pick at this size); flat_rd = same \
@@ -432,6 +531,15 @@ fn emit_json(
          hierarchical is >=20% lower); sim_* drive the real state machines at 4 MiB \
          as the emergent cross-check; hier_crossover_bytes is where BucketAlg::Auto \
          upgrades buckets to IHierarchical on this topology. \
+         compression_vs_raw section (ISSUE 10): bytes-per-rank on the wire at the \
+         64 MiB / p=8 acceptance point — raw Rabenseifner moves ~2n(p-1)/p per rank, \
+         the codec path's allgather-of-compressed moves wire*(p-1); CI fails the \
+         bench-smoke job unless top-k at 1% density models >=4x fewer bytes than raw. \
+         fp16_wire_bytes_per_rank is the cautionary counter-example: a 2x shrink \
+         loses to the gather's byte ratio at p=8, which is why fp16 earns its keep on \
+         the PS push path rather than large-bucket allreduce. sim_* drive the real \
+         ICodecGather state machine (top-k 1%, error feedback on) against \
+         IRabenseifner at 8 MiB. \
          Regenerate with `cargo bench --bench runtime_step`.\"\n}}\n",
         bucket_bytes = SyncStrategy::DEFAULT_BUCKET_BYTES,
         frw = flat_ring.0,
@@ -460,6 +568,19 @@ fn emit_json(
         hsrab = hier.sim_flat_rab_s,
         hsh = hier.sim_hier_s,
         hssp = hier.sim_flat_rab_s / hier.sim_hier_s,
+        clbb = comp.large_bucket_bytes,
+        craw = comp.raw_bytes_per_rank,
+        ctk = comp.topk_k,
+        ctw = comp.topk_wire_bytes_per_rank,
+        ctred = comp.topk_reduction,
+        cfw = comp.fp16_wire_bytes_per_rank,
+        cmraw = comp.modelled_raw_rab_s,
+        cmtopk = comp.modelled_topk_s,
+        cmsp = comp.modelled_raw_rab_s / comp.modelled_topk_s,
+        csbb = comp.sim_bucket_bytes,
+        csraw = comp.sim_raw_rab_s,
+        cstopk = comp.sim_topk_s,
+        cssp = comp.sim_raw_rab_s / comp.sim_topk_s,
     );
     match std::fs::write(path, body) {
         Ok(()) => println!("wrote {path}"),
@@ -571,6 +692,29 @@ fn main() {
         },
     );
 
+    // ---- compressed wire vs raw (ISSUE 10) -------------------------------
+    let comp = bench_compression_vs_raw();
+    println!(
+        "\ncompression vs raw wire (p={SYNC_P}, InfiniBand model):\n  \
+         modelled bytes/rank @ {} MiB: raw rab {} MiB   topk-1% {:.2} MiB   \
+         ({:.1}x fewer)   fp16 {} MiB (loses to the gather at this p)\n  \
+         modelled time @ {} MiB: raw rab {:>12}   topk gather {:>12}   ({:.2}x)\n  \
+         simulated @ {} MiB: raw rab {:>12}   topk gather {:>12}   ({:.2}x)",
+        comp.large_bucket_bytes >> 20,
+        comp.raw_bytes_per_rank >> 20,
+        comp.topk_wire_bytes_per_rank as f64 / (1 << 20) as f64,
+        comp.topk_reduction,
+        comp.fp16_wire_bytes_per_rank >> 20,
+        comp.large_bucket_bytes >> 20,
+        fmt_secs(comp.modelled_raw_rab_s),
+        fmt_secs(comp.modelled_topk_s),
+        comp.modelled_raw_rab_s / comp.modelled_topk_s,
+        comp.sim_bucket_bytes >> 20,
+        fmt_secs(comp.sim_raw_rab_s),
+        fmt_secs(comp.sim_topk_s),
+        comp.sim_raw_rab_s / comp.sim_topk_s,
+    );
+
     // Default to the tracked repo-root record (cargo bench runs with cwd
     // rust/, which would otherwise leave an untracked copy behind).
     let json_path = std::env::var("DTF_BENCH_JSON").unwrap_or_else(|_| {
@@ -578,7 +722,7 @@ fn main() {
     });
     emit_json(
         &json_path, iters, base, pooled, compute_s, flat_ring, flat_rd, bucketed, overlap_eff,
-        n_buckets, &rab, &hier,
+        n_buckets, &rab, &hier, &comp,
     );
 
     // ---- PJRT execution latency (needs AOT artifacts) --------------------

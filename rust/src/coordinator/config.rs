@@ -4,6 +4,7 @@
 use std::sync::Arc;
 
 use super::pipeline::{BucketAlg, DrainOrder, MIN_BUCKET_BYTES};
+use crate::codec::Codec;
 use crate::mpi::events::DeliverySeq;
 use crate::mpi::ulfm::FaultPlan;
 use crate::mpi::{AllreduceAlgorithm, HeartbeatConfig};
@@ -516,6 +517,16 @@ pub struct TrainConfig {
     /// Drain order of the bucket pipeline (`Bucketed` only): launch order
     /// or front-layers-first priority drain (`--drain`).
     pub drain: DrainOrder,
+    /// Wire codec for gradient payloads (`--codec`): identity (the
+    /// default — byte-for-byte the uncompressed paths, no codec machinery
+    /// engaged), fp16/int8 quantization, or top-k sparsification with
+    /// error feedback (see [`crate::codec`]). Lossy codecs compress
+    /// *gradients*, so they require `SyncMode::GradientAverage`; on the
+    /// allreduce path they additionally require `SyncStrategy::Bucketed`
+    /// (compressed payloads ride the bucket pipeline's
+    /// allgather-of-compressed collective — the flat blocking path stays
+    /// uncompressed). PS mode compresses the push direction only.
+    pub codec: Codec,
     pub allreduce: AllreduceAlgorithm,
     /// Collective allreduce (the paper) vs sharded parameter server with
     /// BSP/ASP/SSP consistency (`sync_strategy`/`allreduce` are the
@@ -578,6 +589,7 @@ impl TrainConfig {
                 threshold_bytes: None,
             },
             drain: DrainOrder::Priority,
+            codec: Codec::Identity,
             allreduce: AllreduceAlgorithm::Auto,
             train_mode: TrainMode::Allreduce,
             mode: ExecMode::Real,
@@ -647,6 +659,11 @@ impl TrainConfig {
         self
     }
 
+    pub fn with_codec(mut self, codec: Codec) -> Self {
+        self.codec = codec;
+        self
+    }
+
     pub fn with_train_mode(mut self, m: TrainMode) -> Self {
         self.train_mode = m;
         self
@@ -695,6 +712,26 @@ impl TrainConfig {
             return Err(
                 "cores-per-node must be at least 1 rank per node, got 0".into(),
             );
+        }
+        if self.codec.is_lossy() {
+            if self.sync != SyncMode::GradientAverage {
+                return Err(format!(
+                    "codec {} compresses gradients and needs --sync grad \
+                     (weight averaging would quantize the weights themselves, \
+                     compounding error every step instead of feeding it back)",
+                    self.codec
+                ));
+            }
+            if matches!(self.train_mode, TrainMode::Allreduce)
+                && !matches!(self.sync_strategy, SyncStrategy::Bucketed { .. })
+            {
+                return Err(format!(
+                    "codec {} on the allreduce path requires --sync-strategy bucketed: \
+                     compressed payloads ride the bucket pipeline's \
+                     allgather-of-compressed; the flat blocking path stays uncompressed",
+                    self.codec
+                ));
+            }
         }
         Ok(())
     }
@@ -1026,6 +1063,43 @@ mod tests {
         .validate(4, 3)
         .unwrap_err();
         assert!(e.contains("exceeds the rank budget"), "{e}");
+    }
+
+    #[test]
+    fn codec_gating_is_validated() {
+        // Identity is the default and engages no codec machinery — valid
+        // under every mode/strategy combination.
+        let id = TrainConfig::new("t");
+        assert_eq!(id.codec, Codec::Identity);
+        id.validate().unwrap();
+        // Lossy codecs compress gradients: weight averaging is rejected by
+        // name...
+        let mut cfg = TrainConfig::new("t").with_codec(Codec::Fp16);
+        let e = cfg.validate().unwrap_err();
+        assert!(e.contains("--sync grad") && e.contains("fp16"), "{e}");
+        // ...and on the allreduce path the flat strategy is too (compressed
+        // payloads only ride the bucket pipeline).
+        cfg = cfg.with_sync(SyncMode::GradientAverage);
+        let e = cfg.validate().unwrap_err();
+        assert!(e.contains("bucketed"), "{e}");
+        cfg = cfg.with_strategy(SyncStrategy::Bucketed {
+            max_bytes: SyncStrategy::DEFAULT_BUCKET_BYTES,
+        });
+        cfg.validate().unwrap();
+        // PS mode compresses the push direction and has no strategy
+        // requirement (sync_strategy is an allreduce-path knob).
+        TrainConfig::new("t")
+            .with_sync(SyncMode::GradientAverage)
+            .with_train_mode(TrainMode::ParameterServer {
+                servers: 1,
+                consistency: Consistency::Bsp,
+            })
+            .with_codec(Codec::TopK {
+                k: 8,
+                error_feedback: true,
+            })
+            .validate()
+            .unwrap();
     }
 
     #[test]

@@ -56,6 +56,20 @@
 //! byte-reproducible log. See `mpi::events` for the session modes and
 //! `tests/replay_determinism.rs` for the pinned guarantees.
 //!
+//! **Wire compression** ([`PipelineEngine::with_codec`], ISSUE 10): a
+//! lossy [`Codec`] (fp16 / int8 / top-k with error feedback) compresses
+//! each bucket at launch and routes it through [`ICodecGather`] — an
+//! allgather-of-compressed, because quantized and sparse payloads don't
+//! close under the reduce combines the dense algorithms rely on. The
+//! decode-accumulate runs in fixed sender-rank order, so lossy results
+//! are still bitwise identical *across ranks* (replica consistency
+//! holds); they are **not** bitwise equal to the uncompressed paths —
+//! that's the point of compressing — so the `Bucketed == Flat` parity pin
+//! applies to `Codec::Identity` only, which bypasses this machinery
+//! entirely. Error-feedback residuals live on the engine, indexed by the
+//! step-invariant bucket ranges; send buffers are pooled per bucket so
+//! the compressed step path stays allocation-free.
+//!
 //! **Replica consistency:** every rank builds the identical plan (same
 //! specs), launches buckets in the same order, resolves the same
 //! per-bucket algorithm, and both schedules' combine trees are
@@ -75,6 +89,7 @@ use std::sync::Arc;
 
 use super::config::SyncMode;
 use super::replica::{Replica, StepOutcome};
+use crate::codec::{Codec, ICodecGather};
 use crate::mpi::collectives::chunk_range;
 use crate::mpi::comm::Communicator;
 use crate::mpi::datatype::ReduceOp;
@@ -260,12 +275,14 @@ impl DrainOrder {
 }
 
 /// One in-flight bucket operation — rd, Rabenseifner, or hierarchical,
-/// per [`BucketAlg`]; all three expose the same drive surface.
+/// per [`BucketAlg`], or the allgather-of-compressed when a lossy
+/// [`Codec`] is installed; all four expose the same drive surface.
 #[derive(Debug)]
 enum BucketOp {
     Rd(IAllreduce),
     Rabenseifner(IRabenseifner),
     Hierarchical(IHierarchical),
+    Codec(ICodecGather),
 }
 
 impl BucketOp {
@@ -279,6 +296,7 @@ impl BucketOp {
             BucketOp::Rd(op) => op.drive_one_round(comm, data, scratch),
             BucketOp::Rabenseifner(op) => op.drive_one_round(comm, data, scratch),
             BucketOp::Hierarchical(op) => op.drive_one_round(comm, data, scratch),
+            BucketOp::Codec(op) => op.drive_one_round(comm, data, scratch),
         }
     }
 
@@ -292,6 +310,7 @@ impl BucketOp {
             BucketOp::Rd(op) => op.wait(comm, data, scratch),
             BucketOp::Rabenseifner(op) => op.wait(comm, data, scratch),
             BucketOp::Hierarchical(op) => op.wait(comm, data, scratch),
+            BucketOp::Codec(op) => op.wait(comm, data, scratch),
         }
     }
 
@@ -307,6 +326,7 @@ impl BucketOp {
             BucketOp::Rd(op) => op.test(comm, data, scratch),
             BucketOp::Rabenseifner(op) => op.test(comm, data, scratch),
             BucketOp::Hierarchical(op) => op.test(comm, data, scratch),
+            BucketOp::Codec(op) => op.test(comm, data, scratch),
         }
     }
 
@@ -315,6 +335,7 @@ impl BucketOp {
             BucketOp::Rd(op) => op.is_complete(),
             BucketOp::Rabenseifner(op) => op.is_complete(),
             BucketOp::Hierarchical(op) => op.is_complete(),
+            BucketOp::Codec(op) => op.is_complete(),
         }
     }
 
@@ -323,6 +344,7 @@ impl BucketOp {
             BucketOp::Rd(op) => op.cancel(),
             BucketOp::Rabenseifner(op) => op.cancel(),
             BucketOp::Hierarchical(op) => op.cancel(),
+            BucketOp::Codec(op) => op.cancel(),
         }
     }
 }
@@ -423,6 +445,24 @@ pub struct PipelineEngine {
     /// one or none — the launch schedule requires agreement) and swapped
     /// out after ULFM shrink ([`Self::set_topology`]).
     topo: Option<Arc<Topology>>,
+    /// Wire codec ([`Self::with_codec`]). `Identity` (the default) engages
+    /// none of the codec machinery — every bucket runs the dense
+    /// [`BucketAlg`] path untouched, preserving the bitwise `Bucketed ==
+    /// Flat` pin. A lossy codec routes **every** bucket through
+    /// [`ICodecGather`] instead (`bucket_alg` is moot: compressed payloads
+    /// don't close under the reduce combines).
+    codec: Codec,
+    /// Error-feedback residual over the whole flat vector, indexed by each
+    /// bucket's range (the plan is step-invariant, so bucket `i` always
+    /// meets its own residual slice). Empty unless the codec feeds back.
+    residual: Vec<f32>,
+    /// Per-bucket send buffers lent to the in-flight [`ICodecGather`] and
+    /// reclaimed at completion — allocated once to each bucket's wire
+    /// length in [`Self::with_codec`], so the steady-state step path stays
+    /// allocation-free. Empty for `Identity`.
+    codec_send_bufs: Vec<Vec<f32>>,
+    /// Top-k selection scratch reused across encodes.
+    idx_scratch: Vec<u32>,
     states: Vec<Option<BucketOp>>,
     scratch: Vec<f32>,
     /// Virtual seconds the last drain spent before the front-most layer's
@@ -443,6 +483,10 @@ impl PipelineEngine {
             alg: BucketAlg::Rd,
             drain_order: DrainOrder::Launch,
             topo: None,
+            codec: Codec::Identity,
+            residual: Vec::new(),
+            codec_send_bufs: Vec::new(),
+            idx_scratch: Vec::new(),
             states,
             scratch,
             front_apply_last_s: 0.0,
@@ -461,6 +505,29 @@ impl PipelineEngine {
 
     pub fn with_drain(mut self, order: DrainOrder) -> PipelineEngine {
         self.drain_order = order;
+        self
+    }
+
+    /// Install a wire [`Codec`]. Lossy codecs pre-allocate everything the
+    /// per-step compress path needs — the error-feedback residual (when
+    /// the codec feeds back), one send buffer per bucket at its exact wire
+    /// length, and the top-k selection scratch — so the steady-state step
+    /// stays allocation-free (`tests/alloc_free_pipeline.rs`).
+    /// `Codec::Identity` is a no-op: the dense paths run untouched.
+    pub fn with_codec(mut self, codec: Codec) -> PipelineEngine {
+        self.codec = codec;
+        if codec.is_lossy() {
+            if codec.uses_error_feedback() {
+                self.residual = vec![0.0; self.plan.n_elems()];
+            }
+            self.codec_send_bufs = self
+                .plan
+                .buckets
+                .iter()
+                .map(|b| Vec::with_capacity(codec.wire_len(b.range.len())))
+                .collect();
+            self.idx_scratch = Vec::with_capacity(self.plan.max_bucket_len());
+        }
         self
     }
 
@@ -483,6 +550,22 @@ impl PipelineEngine {
 
     pub fn plan(&self) -> &BucketPlan {
         &self.plan
+    }
+
+    /// Bytes one rank's step payload occupies on the wire per peer, summed
+    /// over the buckets: the compressed wire lengths under a lossy codec
+    /// (including per-bucket passthrough, where encoding wouldn't shrink),
+    /// the dense vector under `Identity`.
+    pub fn wire_bytes_per_peer(&self) -> usize {
+        if self.codec.is_lossy() {
+            self.plan
+                .buckets
+                .iter()
+                .map(|b| self.codec.wire_bytes(b.range.len()))
+                .sum()
+        } else {
+            self.plan.n_elems() * std::mem::size_of::<f32>()
+        }
     }
 
     /// Virtual seconds the last `sync_step`/`allreduce_overlapped` drain
@@ -542,7 +625,28 @@ impl PipelineEngine {
             comm.advance(compute_secs * range.len() as f64 / total);
             comm.trace_span(Lane::Compute, TraceKind::Compute, i as u32, ct0);
             let nbytes = range.len() * std::mem::size_of::<f32>();
-            let started = if self.alg.picks_hierarchical(comm, self.topo.as_ref(), nbytes)
+            let started = if self.codec.is_lossy() {
+                // Compressed payloads don't close under the reduce
+                // combines, so every bucket rides the allgather-of-
+                // compressed instead of the BucketAlg pick. The send
+                // buffer is lent from the per-bucket pool and reclaimed
+                // at the bucket's apply site.
+                let send_buf = std::mem::take(&mut self.codec_send_bufs[i]);
+                let residual = if self.codec.uses_error_feedback() {
+                    Some(&mut self.residual[range.clone()])
+                } else {
+                    None
+                };
+                ICodecGather::start(
+                    comm,
+                    self.codec,
+                    &mut data[range],
+                    residual,
+                    send_buf,
+                    &mut self.idx_scratch,
+                )
+                .map(BucketOp::Codec)
+            } else if self.alg.picks_hierarchical(comm, self.topo.as_ref(), nbytes)
             {
                 let topo = Arc::clone(self.topo.as_ref().expect("picks_hierarchical"));
                 IHierarchical::start(topo, comm, ReduceOp::Sum, &mut data[range])
@@ -629,6 +733,9 @@ impl PipelineEngine {
                 return Err(e);
             }
             comm.trace_span(Lane::Comm, TraceKind::BucketWait, i as u32, wt0);
+            if let BucketOp::Codec(g) = &mut op {
+                self.codec_send_bufs[i] = g.take_send_buf();
+            }
             let at0 = comm.clock();
             apply(slice, &range);
             comm.trace_span(Lane::Apply, TraceKind::BucketApply, i as u32, at0);
@@ -685,6 +792,9 @@ impl PipelineEngine {
         macro_rules! apply_bucket {
             ($i:expr) => {{
                 let i = $i;
+                if let Some(BucketOp::Codec(g)) = self.states[i].as_mut() {
+                    self.codec_send_bufs[i] = g.take_send_buf();
+                }
                 self.states[i] = None;
                 let range = self.plan.buckets[i].range.clone();
                 let slice = &mut data[range.clone()];
@@ -921,7 +1031,14 @@ impl PipelineEngine {
                     Err(e) => Err(e),
                 };
                 replica.sync_scratch = g;
-                res.map(|()| n * 4)
+                // Report what actually crossed the wire: the compressed
+                // payload under a lossy codec, the dense vector otherwise.
+                let synced = if self.codec.is_lossy() {
+                    self.wire_bytes_per_peer()
+                } else {
+                    n * 4
+                };
+                res.map(|()| synced)
             }
             SyncMode::None => unreachable!(),
         }
@@ -1370,6 +1487,52 @@ mod tests {
         );
         for (a, b) in launch_v.iter().zip(&prio_v) {
             assert_eq!(a.to_bits(), b.to_bits(), "drain order must not change values");
+        }
+    }
+
+    #[test]
+    fn codec_engine_replicas_agree_bitwise_and_reuse_buffers() {
+        use crate::codec::Codec;
+        // A lossy engine can't match the dense paths bitwise (that's the
+        // point of compressing), but all replicas must still agree bit for
+        // bit — the gather folds in fixed sender-rank order — across
+        // drains, and the second step must find its per-bucket send
+        // buffers back in the pool (reclaim happened at every apply site).
+        for drain in [DrainOrder::Launch, DrainOrder::Priority, DrainOrder::Opportunistic] {
+            for p in [2usize, 3, 4] {
+                let sizes = [17usize, 64, 9, 33];
+                let n: usize = sizes.iter().sum();
+                let w = World::new(p, NetProfile::zero());
+                let out = w.run_unwrap(move |c| {
+                    let mut eng = PipelineEngine::new(BucketPlan::build(&ranges(&sizes), 256))
+                        .with_drain(drain)
+                        .with_codec(Codec::TopK {
+                            k: 4,
+                            error_feedback: true,
+                        });
+                    let mut v: Vec<f32> = (0..n)
+                        .map(|i| ((c.rank() * 31 + i * 17) % 101) as f32 * 0.25 - 12.0)
+                        .collect();
+                    eng.allreduce_overlapped(&c, &mut v, 0.0)?;
+                    // Second step through the same engine: exercises
+                    // buffer reclaim and residual reuse.
+                    eng.allreduce_overlapped(&c, &mut v, 0.0)?;
+                    assert!(eng
+                        .codec_send_bufs
+                        .iter()
+                        .all(|b| b.capacity() > 0), "send buffers must return to the pool");
+                    Ok(v)
+                });
+                for r in 1..p {
+                    for i in 0..n {
+                        assert_eq!(
+                            out[0][i].to_bits(),
+                            out[r][i].to_bits(),
+                            "drain={drain:?} p={p} rank={r} i={i}"
+                        );
+                    }
+                }
+            }
         }
     }
 

@@ -135,7 +135,8 @@ pub fn train_rank(
         SyncStrategy::Bucketed { max_bytes } => Some(
             PipelineEngine::for_params(&replica.params, max_bytes)
                 .with_alg(cfg.bucket_alg)
-                .with_drain(cfg.drain),
+                .with_drain(cfg.drain)
+                .with_codec(cfg.codec),
         ),
         SyncStrategy::Flat => None,
     };
@@ -222,7 +223,8 @@ pub fn train_rank_joiner(
         SyncStrategy::Bucketed { max_bytes } => Some(
             PipelineEngine::for_params(&replica.params, max_bytes)
                 .with_alg(cfg.bucket_alg)
-                .with_drain(cfg.drain),
+                .with_drain(cfg.drain)
+                .with_codec(cfg.codec),
         ),
         SyncStrategy::Flat => None,
     };

@@ -38,9 +38,14 @@
 //!   tracer riding on the `Communicator`, Chrome trace-event export
 //!   (`--trace out.json`, Perfetto-loadable), and the `dtf trace`
 //!   analysis commands (summarize / critical-path / overlap).
+//! * [`codec`] — gradient compression for the wire: fp16/int8
+//!   quantization and top-k sparsification with exact error-feedback
+//!   residuals, plus the allgather-of-compressed collective the bucketed
+//!   pipeline and PS push path run lossy payloads through.
 
 
 pub mod chaos;
+pub mod codec;
 pub mod coordinator;
 pub mod data;
 pub mod dataflow;

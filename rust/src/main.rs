@@ -9,6 +9,7 @@
 
 use std::sync::Arc;
 
+use dtf::codec::Codec;
 use dtf::coordinator::{
     run_training, BucketAlg, DrainOrder, ExecMode, SyncEvery, SyncMode, SyncStrategy,
     TrainConfig, TrainMode,
@@ -52,6 +53,7 @@ USAGE:
             [--sync-every step|epoch] [--sync-strategy flat|bucketed[:BYTES]]
             [--bucket-alg rd|rabenseifner|hier|auto[:BYTES]] [--bucket-alg-threshold BYTES]
             [--drain priority|launch] [--cores-per-node N]
+            [--codec identity|fp16|int8|topk:<k>[:noef]]
             [--alg auto|ring|rd|tree] [--pool-trim N]
             [--train-mode allreduce|ps] [--ps-servers N]
             [--consistency bsp|asp|ssp:<s>] [--straggler RANK:MULT]
@@ -79,6 +81,16 @@ on the profile (shared-memory pricing inside each N-rank node) — hier needs
 it unless the profile has its own (socket). --drain priority applies
 front-layer buckets first (MaTEx-style), shrinking the front-layer apply
 latency the training report prints.
+
+Gradient compression (`--codec`, README §Gradient compression): compress the
+gradient stream on the wire — fp16 (2x, round-to-nearest-even), int8 (~4x,
+per-bucket power-of-two scale), or topk:<k> (keep the k largest-magnitude
+entries per bucket). All lossy codecs carry exact error-feedback residuals
+(append :noef to topk to ablate them) and require --sync grad; in allreduce
+mode they also require --sync-strategy bucketed (compressed buckets ride an
+allgather-of-compressed), in ps mode only the push direction is compressed.
+identity (the default) bypasses the codec machinery and stays bitwise equal
+to the uncompressed paths.
 
 Parameter-server mode (`--train-mode ps`): the last --ps-servers ranks shard
 the model and serve pull/push; --consistency picks bulk-synchronous (bsp,
@@ -138,7 +150,7 @@ fn parse_profile(args: &Args) -> Result<NetProfile> {
 fn cmd_train(args: &Args) -> Result<()> {
     args.check_known(&[
         "arch", "ranks", "epochs", "lr", "sync", "sync-every", "sync-strategy",
-        "bucket-alg", "bucket-alg-threshold", "drain", "cores-per-node", "alg",
+        "bucket-alg", "bucket-alg-threshold", "drain", "codec", "cores-per-node", "alg",
         "pool-trim", "train-mode", "ps-servers", "consistency", "straggler", "profile",
         "sim", "scale", "steps-cap", "eval-every", "seed", "quiet", "broadcast-init",
         "chaos-seed", "chaos-delay", "record-events", "replay-events", "trace",
@@ -245,6 +257,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     cfg.drain = DrainOrder::by_name(args.str_or("drain", "priority"))
         .ok_or_else(|| anyhow::anyhow!("--drain must be priority|launch|opportunistic"))?;
+    cfg.codec = Codec::parse(args.str_or("codec", "identity"))
+        .map_err(|m| anyhow::anyhow!("--codec: {m}"))?;
     if let Some(cpn) = args.get("cores-per-node") {
         cfg.cores_per_node = Some(cpn.parse().map_err(|_| {
             anyhow::anyhow!("--cores-per-node must be a rank count, got {cpn:?}")

@@ -151,6 +151,10 @@ pub enum CollKind {
     /// the leaf subcomm (the inter-node phase draws an `Irabenseifner`
     /// tag on the rail subcomm at `start`, keeping counters symmetric).
     Ihierarchical = 13,
+    /// Nonblocking allgather-of-compressed (`codec::ICodecGather`) — its
+    /// own kind so codec'd bucket pipelines keep per-operation tag
+    /// uniqueness alongside any dense collective in flight.
+    CodecGather = 14,
 }
 
 const COLL_BIT: Tag = 1 << 31;

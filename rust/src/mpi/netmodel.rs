@@ -160,6 +160,42 @@ impl NetProfile {
         t
     }
 
+    /// Bytes each rank sends under the Rabenseifner schedule for an
+    /// `nbytes` allreduce over `p` ranks: `~2n·(p-1)/p`. The uncompressed
+    /// baseline the codec gather competes against (see
+    /// [`Self::codec_gather_bytes_per_rank`]).
+    pub fn rabenseifner_bytes_per_rank(p: usize, nbytes: usize) -> usize {
+        if p <= 1 {
+            0
+        } else {
+            2 * nbytes * (p - 1) / p
+        }
+    }
+
+    /// Bytes each rank sends under the codec path's allgather-of-
+    /// compressed ([`crate::codec::ICodecGather`]): the `wire_bytes`
+    /// payload to each of the `p-1` peers. Compression wins on the wire
+    /// when `wire_bytes·(p-1) < 2·nbytes·(p-1)/p`, i.e. when the codec
+    /// shrinks the payload by more than `~p/2` — trivially true for
+    /// top-k at realistic densities, false for fp16 beyond `p = 4`.
+    pub fn codec_gather_bytes_per_rank(p: usize, wire_bytes: usize) -> usize {
+        wire_bytes * p.saturating_sub(1)
+    }
+
+    /// Closed-form alpha-beta time of one compressed-bucket exchange:
+    /// `p-1` buffered sends of `wire_bytes` each, serialized on the
+    /// sender's NIC (the model's per-send overhead + latency + bytes).
+    /// Decode is compute, priced at zero like every other fold.
+    pub fn codec_allgather_time(&self, p: usize, wire_bytes: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let hop = |bytes: f64| {
+            self.send_overhead_s + self.alpha_s + bytes / self.beta_bytes_per_s
+        };
+        (p - 1) as f64 * hop(wire_bytes as f64)
+    }
+
     /// Smallest message size (bytes) at which the Rabenseifner schedule's
     /// modelled time beats recursive doubling at world size `p` — the
     /// size-adaptive crossover `BucketAlg::Auto` uses when no explicit
@@ -413,6 +449,40 @@ mod tests {
         let t1 = p.p2p_time(1_000_000);
         assert!((t0 - p.alpha_s).abs() < 1e-12);
         assert!((t1 - t0 - 1_000_000.0 / p.beta_bytes_per_s).abs() < 1e-12);
+    }
+
+    /// Pins the acceptance math for the compression bench: at 64 MiB and
+    /// p = 8, a 1% top-k gather moves ≥ 4× fewer modelled bytes per rank
+    /// than uncompressed Rabenseifner (and is faster end to end), while
+    /// fp16's 2× shrink loses to the gather's (p-1)/p-vs-2/p byte ratio.
+    #[test]
+    fn codec_gather_bytes_and_time_model() {
+        use crate::codec::Codec;
+        let p = 8usize;
+        let n_elems = 16 * 1024 * 1024; // 64 MiB of f32
+        let raw = NetProfile::rabenseifner_bytes_per_rank(p, n_elems * 4);
+        let k = n_elems / 100;
+        let topk = NetProfile::codec_gather_bytes_per_rank(
+            p,
+            Codec::TopK { k, error_feedback: true }.wire_bytes(n_elems),
+        );
+        assert!(
+            topk * 4 <= raw,
+            "top-k 1% must model ≥4× fewer bytes on the wire: {topk} vs {raw}"
+        );
+        let fp16 = NetProfile::codec_gather_bytes_per_rank(
+            p,
+            Codec::Fp16.wire_bytes(n_elems),
+        );
+        assert!(fp16 > raw, "fp16's 2x shrink loses to the gather at p=8");
+        let prof = NetProfile::infiniband_fdr();
+        let t_topk = prof.codec_allgather_time(
+            p,
+            Codec::TopK { k, error_feedback: true }.wire_bytes(n_elems),
+        );
+        assert!(t_topk < prof.rabenseifner_allreduce_time(p, n_elems * 4));
+        assert_eq!(prof.codec_allgather_time(1, 1024), 0.0);
+        assert_eq!(NetProfile::rabenseifner_bytes_per_rank(1, 1024), 0);
     }
 
     #[test]

@@ -14,6 +14,7 @@
 
 use super::{ShardMap, KIND_DONE, KIND_PULL, KIND_PUSH, KIND_SYNC_PULL, REQ_HEADER};
 use super::{TAG_PS_REQ, TAG_PS_RESP};
+use crate::codec::Codec;
 use crate::mpi::comm::Communicator;
 use crate::mpi::{MpiError, MpiResult};
 use crate::trace::{Kind as TraceKind, Lane};
@@ -27,6 +28,21 @@ pub struct PsClient {
     clock: u64,
     req_buf: Vec<f32>,
     resp_buf: Vec<f32>,
+    /// Wire codec for the **push** direction ([`Self::with_codec`]).
+    /// Pulls stay full precision: the authoritative model travels exact;
+    /// only the gradient stream — whose error the residual can absorb —
+    /// is compressed. `Identity` leaves the push path byte-identical to
+    /// the uncompressed protocol.
+    codec: Codec,
+    /// Error-feedback residual across the whole parameter span, indexed
+    /// by shard range (shards are era-invariant). Empty unless the codec
+    /// feeds back.
+    residual: Vec<f32>,
+    /// Per-shard staging slice the residual is folded into before
+    /// encoding (`e = g + r` must not mutate the caller's gradients).
+    fold_scratch: Vec<f32>,
+    /// Top-k selection scratch reused across encodes.
+    idx_scratch: Vec<u32>,
     /// Max observed `own clock − min_clock` across pulls.
     pub staleness_max: u64,
     /// Virtual seconds spent waiting on pulls (requests + gated responses).
@@ -44,6 +60,10 @@ impl PsClient {
         PsClient {
             req_buf: Vec::with_capacity(REQ_HEADER + max_len),
             resp_buf: vec![0.0; max_len + 1],
+            codec: Codec::Identity,
+            residual: Vec::new(),
+            fold_scratch: Vec::new(),
+            idx_scratch: Vec::new(),
             map,
             server_ranks,
             clock: 0,
@@ -52,6 +72,22 @@ impl PsClient {
             push_bytes: 0,
             pulls: 0,
         }
+    }
+
+    /// Install a push-direction wire [`Codec`], pre-allocating the
+    /// error-feedback residual and encode scratch so the per-step push
+    /// stays allocation-free. The server side must be constructed with
+    /// the same codec ([`super::server::ShardServer::with_codec`]).
+    pub fn with_codec(mut self, codec: Codec) -> PsClient {
+        self.codec = codec;
+        if codec.is_lossy() {
+            if codec.uses_error_feedback() {
+                self.residual = vec![0.0; self.map.n_elems()];
+            }
+            self.fold_scratch = vec![0.0; self.map.max_shard_len()];
+            self.idx_scratch = Vec::with_capacity(self.map.max_shard_len());
+        }
+        self
     }
 
     /// Steps pushed so far.
@@ -148,10 +184,44 @@ impl PsClient {
             )));
         }
         let t0 = comm.clock();
-        for shard in 0..self.map.n_shards() {
-            let range = self.map.shard_range(shard);
-            self.push_bytes += (range.len() * 4) as u64;
-            self.request(comm, shard, KIND_PUSH, Some(&grads[range]))?;
+        if self.codec.is_lossy() {
+            // Compressed push: fold the residual into a staging copy of
+            // the shard slice (the caller's gradients stay untouched),
+            // encode straight into the request buffer after the header,
+            // and account the bytes that actually cross the wire.
+            let codec = self.codec;
+            for shard in 0..self.map.n_shards() {
+                let range = self.map.shard_range(shard);
+                let len = range.len();
+                let wire = codec.wire_len(len);
+                self.fold_scratch[..len].copy_from_slice(&grads[range.clone()]);
+                let residual = if codec.uses_error_feedback() {
+                    Some(&mut self.residual[range])
+                } else {
+                    None
+                };
+                self.req_buf.clear();
+                self.req_buf.push(KIND_PUSH as f32);
+                self.req_buf.push(self.clock as f32);
+                self.req_buf.resize(REQ_HEADER + wire, 0.0);
+                let et0 = comm.clock();
+                let written = codec.encode(
+                    &mut self.fold_scratch[..len],
+                    residual,
+                    &mut self.req_buf[REQ_HEADER..],
+                    &mut self.idx_scratch,
+                );
+                debug_assert_eq!(written, wire);
+                comm.trace_rec(Lane::Compute, TraceKind::CodecEncode, wire as u32, et0, et0);
+                self.push_bytes += (wire * 4) as u64;
+                comm.send(self.server_ranks[shard], TAG_PS_REQ, &self.req_buf)?;
+            }
+        } else {
+            for shard in 0..self.map.n_shards() {
+                let range = self.map.shard_range(shard);
+                self.push_bytes += (range.len() * 4) as u64;
+                self.request(comm, shard, KIND_PUSH, Some(&grads[range]))?;
+            }
         }
         comm.trace_span(Lane::Comm, TraceKind::PsPush, self.clock as u32, t0);
         self.clock += 1;

@@ -143,6 +143,14 @@ impl Consistency {
 // One f32 message per request keeps the whole protocol on the pooled f32
 // shelves (no mixed-type framing): `[kind, clock, payload…]`. Kind and
 // clock ride as f32 — exact for any realistic step count (< 2^24).
+//
+// Under a push codec (`--codec`, ISSUE 10) the `KIND_PUSH` payload is the
+// shard's *compressed* wire image — `codec.wire_len(shard_len)` words in
+// the format `crate::codec` documents — instead of the dense slice. Both
+// sides derive the expected length from the shared (codec, shard map)
+// pair, so no length or format flag travels. Pulls and seeds always stay
+// dense full-precision: only the gradient stream, whose loss the
+// error-feedback residual absorbs, is compressed.
 
 /// Worker → server requests (`[kind, clock, payload…]`).
 pub const TAG_PS_REQ: Tag = 0x5A_5001;

@@ -34,6 +34,7 @@ use std::time::Duration;
 
 use super::{Consistency, KIND_DONE, KIND_PULL, KIND_PUSH, KIND_SYNC_PULL, REQ_HEADER};
 use super::{TAG_PS_REQ, TAG_PS_RESP, TAG_PS_SEED};
+use crate::codec::Codec;
 use crate::mpi::comm::Communicator;
 use crate::mpi::ulfm::FaultPlan;
 use crate::mpi::{pof2_core, Datatype, MpiError, MpiResult};
@@ -54,7 +55,8 @@ pub struct ServerStats {
     pub pulls_served: u64,
     pub pulls_deferred: u64,
     pub pushes_applied: u64,
-    /// Gradient payload bytes received and applied.
+    /// Gradient payload bytes received and applied — **wire** bytes, so a
+    /// push codec shrinks this in step with the client's `push_bytes`.
     pub push_bytes: u64,
     /// BSP rounds combined and applied.
     pub rounds_applied: u64,
@@ -141,6 +143,14 @@ pub struct ShardServer {
     min_vtime: Vec<f64>,
     pending: Vec<PendingPull>,
     resp_buf: Vec<f32>,
+    /// Push-direction wire codec ([`Self::with_codec`]) — must match the
+    /// workers' [`super::client::PsClient`] codec. `Identity` keeps every
+    /// push on the untouched dense path (bitwise-pinned by
+    /// `tests/ps_parity.rs`).
+    codec: Codec,
+    /// Dense staging buffer lossy pushes decode into before the eager
+    /// ASP/SSP apply. Empty for `Identity`.
+    decode_scratch: Vec<f32>,
     max_svc_vtime: f64,
     pub stats: ServerStats,
 }
@@ -167,10 +177,23 @@ impl ShardServer {
             min_vtime: vec![0.0],
             pending: Vec::new(),
             resp_buf: Vec::with_capacity(len + 1),
+            codec: Codec::Identity,
+            decode_scratch: Vec::new(),
             max_svc_vtime: 0.0,
             worker_ranks,
             stats: ServerStats::default(),
         }
+    }
+
+    /// Install the push-direction wire [`Codec`] (the workers must push
+    /// with the same one). Pre-allocates the decode staging buffer so the
+    /// serve loop stays allocation-free.
+    pub fn with_codec(mut self, codec: Codec) -> ShardServer {
+        self.codec = codec;
+        if codec.is_lossy() {
+            self.decode_scratch = vec![0.0; self.range.len()];
+        }
+        self
     }
 
     /// Slowest worker's clock.
@@ -291,11 +314,16 @@ impl ShardServer {
         grads: &[f32],
         arrival: f64,
     ) -> MpiResult<Option<ServeOutcome>> {
-        if grads.len() != self.range.len() {
+        // Under a codec the payload is the shard's *wire* length (equal
+        // to the dense length for Identity, so one check covers both).
+        let want = self.codec.wire_len(self.range.len());
+        if grads.len() != want {
             return Err(MpiError::Inconsistent(format!(
-                "push payload {} elems, shard holds {}",
+                "push payload {} words, shard expects {} ({} elems under codec {})",
                 grads.len(),
-                self.range.len()
+                want,
+                self.range.len(),
+                self.codec
             )));
         }
         if self.clocks[w] != clock {
@@ -307,17 +335,39 @@ impl ShardServer {
         self.stats.pushes_applied += 1;
         self.stats.push_bytes += (grads.len() * 4) as u64;
         let w_f = self.worker_ranks.len() as f32;
+        let lossy = self.codec.is_lossy();
+        if lossy {
+            comm.trace_rec(Lane::Comm, TraceKind::CodecDecode, w as u32, arrival, arrival);
+        }
         match self.consistency {
             // BSP: collect the round; combine in rd order when complete.
+            // Lossy pushes decode into the worker's (zeroed) round slot —
+            // the rd-order combine then runs over dense vectors exactly as
+            // in the uncompressed protocol. Identity keeps the straight
+            // copy: decode-add into a zeroed buffer is NOT a bitwise
+            // identity (it rewrites -0.0), and the parity pin needs one.
             Consistency::Bsp => {
-                self.round[w].copy_from_slice(grads);
+                if lossy {
+                    self.round[w].fill(0.0);
+                    self.codec.decode_add(grads, &mut self.round[w]);
+                } else {
+                    self.round[w].copy_from_slice(grads);
+                }
                 self.round_filled[w] = true;
             }
             // ASP/SSP: apply eagerly, scaled to the worker count so the
             // update magnitude matches the synchronous average.
             Consistency::Asp | Consistency::Ssp { .. } => {
-                for (p, g) in self.params.iter_mut().zip(grads) {
-                    *p -= *g / w_f;
+                if lossy {
+                    self.decode_scratch.fill(0.0);
+                    self.codec.decode_add(grads, &mut self.decode_scratch);
+                    for (p, g) in self.params.iter_mut().zip(&self.decode_scratch) {
+                        *p -= *g / w_f;
+                    }
+                } else {
+                    for (p, g) in self.params.iter_mut().zip(grads) {
+                        *p -= *g / w_f;
+                    }
                 }
             }
         }

@@ -428,7 +428,8 @@ impl PsRank<'_> {
             map.shard_range(shard),
             self.consistency,
             roles.worker_ranks.clone(),
-        );
+        )
+        .with_codec(self.cfg.codec);
         server.seed(comm, roles.worker_ranks[0])?;
         let outcome = server.serve(comm, &self.cfg.fault_plan);
         // Absorb traffic counters even when the era ends in recovery.
@@ -577,7 +578,7 @@ impl PsRank<'_> {
                     )?;
                 }
             }
-            PsClient::new(map, roles.server_ranks.clone())
+            PsClient::new(map, roles.server_ranks.clone()).with_codec(self.cfg.codec)
         };
         // ---- epochs ----
         let res = self.run_epochs(comm, wsub, &mut client, era_end);

@@ -158,10 +158,17 @@ pub enum Kind {
     /// Post-resize shard rebalance: re-scatter + re-seed onto the new
     /// membership (arg = epoch).
     Rebalance = 29,
+    /// Codec compression of one sync unit (arg = wire words). Zero-width
+    /// on the virtual clock — codec compute is not modelled — but marks
+    /// where in the timeline each unit was encoded.
+    CodecEncode = 30,
+    /// Codec decode-accumulate of one rank's contribution
+    /// (arg = sender rank). Zero-width like `CodecEncode`.
+    CodecDecode = 31,
 }
 
 /// All kinds, for name↔kind mapping and validation.
-const KINDS: [Kind; 30] = [
+const KINDS: [Kind; 32] = [
     Kind::Compute,
     Kind::SyncWindow,
     Kind::Apply,
@@ -192,6 +199,8 @@ const KINDS: [Kind; 30] = [
     Kind::Resize,
     Kind::Heartbeat,
     Kind::Rebalance,
+    Kind::CodecEncode,
+    Kind::CodecDecode,
 ];
 
 impl Kind {
@@ -227,6 +236,8 @@ impl Kind {
             Kind::Resize => "resize",
             Kind::Heartbeat => "heartbeat",
             Kind::Rebalance => "rebalance",
+            Kind::CodecEncode => "codec_encode",
+            Kind::CodecDecode => "codec_decode",
         }
     }
 

@@ -9,7 +9,10 @@
 //! to the same bar: `IRabenseifner::start` computes its windows
 //! arithmetically, owning no schedule storage, and `IHierarchical::start`
 //! holds only an `Arc` to the pre-built topology plus an inline inner
-//! Rabenseifner — no per-start heap.
+//! Rabenseifner — no per-start heap. The ISSUE-10 compressed path rides
+//! the same window: a fourth engine runs top-k + error feedback through
+//! `ICodecGather`, whose send buffers, residual, and selection scratch
+//! are all pooled at `with_codec` time and reclaimed every drain.
 //!
 //! Method: identical to the flat-path pin — counting `#[global_allocator]`
 //! with a process-wide tracking flag, pool shelves preloaded past peak
@@ -25,6 +28,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
+use dtf::codec::Codec;
 use dtf::coordinator::{
     BucketAlg, DrainOrder, ExecMode, PipelineEngine, Replica, StepOutcome, SyncMode,
 };
@@ -117,6 +121,13 @@ fn steady_state_pipelined_sync_performs_zero_allocations() {
             .with_alg(BucketAlg::Hierarchical)
             .with_topology(Arc::clone(&topo))
             .with_drain(DrainOrder::Priority);
+        // ISSUE 10: the compressed path's acceptance pin. `with_codec`
+        // pre-sizes the per-bucket send buffers (reclaimed from the
+        // gather every drain), the EF residual, and the top-k selection
+        // scratch — the steady state must allocate nothing.
+        let mut engine_codec = PipelineEngine::for_params(&replica.params, BUCKET_BYTES)
+            .with_drain(DrainOrder::Priority)
+            .with_codec(Codec::TopK { k: 2, error_feedback: true });
         let outcome = StepOutcome::Grads { loss: 1.0 };
 
         // Deterministic supply: stock every f32 shelf a bucket-sized
@@ -160,6 +171,7 @@ fn steady_state_pipelined_sync_performs_zero_allocations() {
             engine.sync_step(&c, &mut replica, &outcome, SyncMode::GradientAverage, 0.0)?;
             engine_rab.sync_step(&c, &mut replica, &outcome, SyncMode::GradientAverage, 0.0)?;
             engine_hier.sync_step(&c, &mut replica, &outcome, SyncMode::GradientAverage, 0.0)?;
+            engine_codec.sync_step(&c, &mut replica, &outcome, SyncMode::GradientAverage, 0.0)?;
         }
 
         barrier(&c)?;
@@ -173,6 +185,7 @@ fn steady_state_pipelined_sync_performs_zero_allocations() {
             engine.sync_step(&c, &mut replica, &outcome, SyncMode::GradientAverage, 0.0)?;
             engine_rab.sync_step(&c, &mut replica, &outcome, SyncMode::GradientAverage, 0.0)?;
             engine_hier.sync_step(&c, &mut replica, &outcome, SyncMode::GradientAverage, 0.0)?;
+            engine_codec.sync_step(&c, &mut replica, &outcome, SyncMode::GradientAverage, 0.0)?;
         }
 
         barrier(&c)?;

@@ -1,0 +1,190 @@
+//! Convergence envelope for lossy wire codecs (ISSUE 10).
+//!
+//! Lossy codecs forfeit the repo's bitwise-parity bar by design, so this
+//! suite pins the property that actually matters for training: under a
+//! codec, distributed SGD lands within a fixed envelope of the
+//! uncompressed loss trajectory — and top-k *without* error feedback
+//! demonstrably does not, which is the residual path earning its keep.
+//!
+//! The workload is a deterministic distributed quadratic, built so the
+//! failure mode is structural rather than statistical:
+//!
+//! * 16 coordinates, `loss(θ) = ½‖θ − θ*‖²`, full-batch gradients —
+//!   no data, no RNG, every run exactly reproducible.
+//! * 4 "noise" coordinates where the per-rank gradients carry large
+//!   antagonistic constants (±10, summing to zero across the 4 ranks):
+//!   individually loud, collectively silent — exactly the component
+//!   magnitude-top-k loves to transmit.
+//! * 12 "hidden" coordinates holding all of the real loss (initial
+//!   displacement 0.5..1.5, per-rank gradient ≤ 1.5): individually
+//!   quiet, so top-2 *never* selects them without error feedback — the
+//!   no-EF run provably plateaus at its initial loss while the EF
+//!   residual accumulates the hidden mass until it out-shouts the noise
+//!   and crosses the wire.
+//!
+//! A second test drives the full Sim-mode trainer under a lossy codec:
+//! the run completes, replicas stay bitwise identical (the codec'd
+//! gather folds in sender-rank order on every rank), and the final
+//! digest differs from the uncompressed run's — compression is really
+//! engaged, determinism really holds.
+
+use std::sync::Arc;
+
+use dtf::codec::Codec;
+use dtf::coordinator::{
+    run_training, BucketPlan, ExecMode, PipelineEngine, SyncMode, SyncStrategy,
+    TrainConfig, TrainReport,
+};
+use dtf::mpi::{NetProfile, World};
+use dtf::runtime::Manifest;
+
+const P: usize = 4;
+const D: usize = 16;
+const NOISE: usize = 4; // coords 0..4 carry the antagonistic constants
+const STEPS: usize = 400;
+const LR: f32 = 0.05;
+
+/// θ* = 0; noise coords start solved, hidden coords displaced.
+fn initial_theta() -> Vec<f32> {
+    let mut t = vec![0.0f32; D];
+    for (j, v) in t.iter_mut().enumerate().skip(NOISE) {
+        *v = 0.5 + (j - NOISE) as f32 / 11.0; // 0.5..≈1.5, all distinct
+    }
+    t
+}
+
+fn loss(theta: &[f32]) -> f64 {
+    theta.iter().map(|&v| v as f64 * v as f64).sum::<f64>() / 2.0
+}
+
+/// `STEPS` of synchronous distributed GD through the bucketed engine
+/// under `codec` (single 16-element bucket, so top-k sees the whole
+/// vector). Returns the final loss; panics if replicas diverge.
+fn train(codec: Codec) -> f64 {
+    let w = World::new(P, NetProfile::zero());
+    let out = w.run_unwrap(move |c| {
+        let mut eng = PipelineEngine::new(BucketPlan::build(&[0..D], 1 << 20))
+            .with_codec(codec);
+        let mut theta = initial_theta();
+        let r = c.rank();
+        let mut g = vec![0.0f32; D];
+        for _ in 0..STEPS {
+            for (gi, &ti) in g.iter_mut().zip(theta.iter()) {
+                *gi = ti; // ∇ = θ − θ*, shared by every rank
+            }
+            g[r] += 10.0; // rank-local noise, Σ over ranks = 0
+            g[(r + 1) % NOISE] -= 10.0;
+            eng.allreduce_overlapped(&c, &mut g, 1e-3)?;
+            for (ti, &gi) in theta.iter_mut().zip(g.iter()) {
+                *ti -= LR * gi / P as f32;
+            }
+        }
+        Ok(theta)
+    });
+    for r in 1..P {
+        for i in 0..D {
+            assert_eq!(
+                out[r][i].to_bits(),
+                out[0][i].to_bits(),
+                "{codec}: replicas diverged at rank {r} coord {i}"
+            );
+        }
+    }
+    loss(&out[0])
+}
+
+/// The envelope itself: every EF codec tracks the uncompressed
+/// trajectory to within its quantization-sized band, and the no-EF
+/// ablation demonstrably stalls.
+#[test]
+fn lossy_codecs_converge_within_envelope_and_noef_stalls() {
+    let l0 = loss(&initial_theta());
+    let base = train(Codec::Identity);
+    assert!(
+        base <= 1e-6 * l0,
+        "uncompressed GD must solve the quadratic: {base} vs L0 {l0}"
+    );
+
+    let fp16 = train(Codec::Fp16);
+    assert!(
+        fp16 <= 1e-2 * l0,
+        "fp16+EF outside envelope: {fp16} vs L0 {l0}"
+    );
+
+    let int8 = train(Codec::Int8);
+    assert!(
+        int8 <= 5e-2 * l0,
+        "int8+EF outside envelope: {int8} vs L0 {l0}"
+    );
+
+    let topk_ef = train(Codec::TopK { k: 2, error_feedback: true });
+    assert!(
+        topk_ef <= 0.25 * l0,
+        "top-2+EF outside envelope: {topk_ef} vs L0 {l0}"
+    );
+
+    // Without the residual, top-2 only ever transmits the loud noise
+    // coords: the hidden displacement — all of the loss — never crosses
+    // the wire and the run plateaus at its starting loss.
+    let topk_noef = train(Codec::TopK { k: 2, error_feedback: false });
+    assert!(
+        topk_noef >= 0.75 * l0,
+        "no-EF top-2 should stall near L0 {l0}, got {topk_noef}"
+    );
+    assert!(
+        topk_ef <= topk_noef / 3.0,
+        "error feedback must beat the ablation decisively: \
+         EF {topk_ef} vs no-EF {topk_noef}"
+    );
+}
+
+fn sim_manifest() -> Arc<Manifest> {
+    Manifest::sim_mlp("cvg", 96, 256, 8, 2048, 16)
+}
+
+fn sim_cfg() -> TrainConfig {
+    TrainConfig::new("cvg")
+        .with_epochs(2)
+        .with_sync(SyncMode::GradientAverage)
+        .with_mode(ExecMode::Sim { secs_per_sample: 2e-5 })
+        .with_scale(1.0)
+        .with_steps_cap(6)
+}
+
+fn digest(report: &TrainReport) -> u64 {
+    report
+        .per_rank
+        .iter()
+        .find(|r| !r.is_server)
+        .expect("at least one worker")
+        .params_digest
+}
+
+/// Full Sim-mode trainer under a lossy codec: completes, deterministic
+/// across replicas, and genuinely compressed (digest ≠ uncompressed).
+#[test]
+fn lossy_sim_training_is_deterministic_and_actually_compresses() {
+    let bucketed = |codec: Codec| {
+        let cfg = sim_cfg()
+            .with_strategy(SyncStrategy::Bucketed { max_bytes: 4096 })
+            .with_codec(codec);
+        run_training(cfg, sim_manifest(), 3, NetProfile::infiniband_fdr()).unwrap()
+    };
+    let base = bucketed(Codec::Identity);
+    let lossy = bucketed(Codec::TopK { k: 32, error_feedback: true });
+    assert!(base.replicas_bitwise_identical());
+    assert!(
+        lossy.replicas_bitwise_identical(),
+        "codec'd gather must fold identically on every rank"
+    );
+    assert_ne!(
+        digest(&base),
+        digest(&lossy),
+        "top-k digest matches uncompressed — codec not engaged?"
+    );
+    // Identity is pinned elsewhere to equal the no-codec path bitwise;
+    // here just confirm both runs trained.
+    for r in &base.per_rank {
+        assert!(r.steps > 0);
+    }
+}

@@ -1,0 +1,319 @@
+//! Property suite pinning the wire-codec contracts (ISSUE 10), via the
+//! in-tree quickprop harness (seeded, reproducible).
+//!
+//! Lossy codecs cannot meet the repo's bitwise-parity bar — changing the
+//! transmitted values is the point — so this suite pins what *is*
+//! invariant instead (see the `dtf::codec` module docs):
+//!
+//! * roundtrip error bounded by the quantization step (fp16: half-ulp
+//!   relative; int8: half the shared power-of-two scale),
+//! * top-k transmits exactly the `min(k, n)` largest magnitudes, ties to
+//!   the lower index, values verbatim,
+//! * error feedback is **exact**: decoded transmission + new residual
+//!   reconstructs the folded input `e = g + r`,
+//! * encoding is a pure function of the input — identical wire bits on
+//!   every rank, which is what makes the codec'd model replica-consistent,
+//! * degenerate units (empty, single-element, all-zero, passthrough-size)
+//!   are well-defined.
+
+use dtf::codec::Codec;
+use dtf::util::quickprop::{gen, run_prop, Config};
+use dtf::util::rng::Rng;
+
+/// All-lossy codec sample with a spread of top-k densities.
+fn lossy_codecs(rng: &mut Rng) -> Codec {
+    match rng.below(4) {
+        0 => Codec::Fp16,
+        1 => Codec::Int8,
+        2 => Codec::TopK { k: 1 + rng.below(8), error_feedback: true },
+        _ => Codec::TopK { k: 1 + rng.below(8), error_feedback: false },
+    }
+}
+
+/// Encode `data` (no residual) and decode into a zeroed buffer.
+fn roundtrip(codec: Codec, data: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let n = data.len();
+    let mut src = data.to_vec();
+    let mut wire = vec![0.0f32; codec.wire_len(n)];
+    let mut idx = Vec::new();
+    let w = codec.encode(&mut src, None, &mut wire, &mut idx);
+    assert_eq!(w, codec.wire_len(n), "{codec}: encode returned wrong length");
+    let mut dec = vec![0.0f32; n];
+    codec.decode_add(&wire[..w], &mut dec);
+    (wire, dec)
+}
+
+/// fp16 roundtrip error is bounded by the half-precision quantization
+/// step: half an ulp relative (2⁻¹¹·|x|) plus half the smallest
+/// subnormal half (2⁻²⁵) for values that land in the subnormal range.
+#[test]
+fn prop_fp16_roundtrip_error_within_half_ulp() {
+    run_prop(
+        "fp16-roundtrip-bound",
+        Config { cases: 200, seed: 0xC0DE_C001 },
+        |rng, _| {
+            let n = gen::usize_in(rng, 1, 300);
+            let data = gen::f32_vec(rng, n, 4.0);
+            let (_, dec) = roundtrip(Codec::Fp16, &data);
+            for (i, (&x, &y)) in data.iter().zip(dec.iter()).enumerate() {
+                let bound = x.abs() / 2048.0 + 3.0e-8;
+                let err = (x - y).abs();
+                if err > bound {
+                    return Err(format!("elem {i}: |{x} - {y}| = {err} > {bound}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// int8 roundtrip error is at most half the shared scale, and because
+/// `127 * scale >= max|x|` no value is distorted by the clamp.
+#[test]
+fn prop_int8_roundtrip_error_within_half_scale() {
+    run_prop(
+        "int8-roundtrip-bound",
+        Config { cases: 200, seed: 0xC0DE_C002 },
+        |rng, _| {
+            let n = gen::usize_in(rng, 5, 300); // ≥5 so int8 compresses
+            let data = gen::f32_vec(rng, n, 2.0);
+            let (wire, dec) = roundtrip(Codec::Int8, &data);
+            let scale = wire[0];
+            let max_abs = data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            if !(127.0 * scale >= max_abs) {
+                return Err(format!("scale {scale} too small for max |x| {max_abs}"));
+            }
+            for (i, (&x, &y)) in data.iter().zip(dec.iter()).enumerate() {
+                let err = (x - y).abs();
+                if err > scale / 2.0 {
+                    return Err(format!("elem {i}: |{x} - {y}| = {err} > scale/2 = {}", scale / 2.0));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Top-k transmits exactly the `min(k, n)` largest-magnitude elements
+/// (ties to the lower index), with indices sorted and values verbatim —
+/// checked against an independently sorted reference.
+#[test]
+fn prop_topk_keeps_exactly_k_largest_magnitudes() {
+    run_prop(
+        "topk-selection",
+        Config { cases: 200, seed: 0xC0DE_C003 },
+        |rng, _| {
+            let k = 1 + rng.below(12);
+            let codec = Codec::TopK { k, error_feedback: false };
+            let n = gen::usize_in(rng, 1, 200);
+            let mut data = gen::f32_vec(rng, n, 1.0);
+            // Inject duplicates so the tie-break rule is actually exercised.
+            if n >= 4 {
+                let dup = data[rng.below(n)];
+                data[rng.below(n)] = dup;
+                data[rng.below(n)] = -dup;
+            }
+            if codec.is_passthrough(n) {
+                let (_, dec) = roundtrip(codec, &data);
+                for i in 0..n {
+                    if dec[i].to_bits() != data[i].to_bits() {
+                        return Err(format!("passthrough elem {i} not verbatim"));
+                    }
+                }
+                return Ok(());
+            }
+            let (wire, _) = roundtrip(codec, &data);
+            let kk = wire[0].to_bits() as usize;
+            if kk != k.min(n) {
+                return Err(format!("wire count {kk} != min(k={k}, n={n})"));
+            }
+            // Reference selection: sort all indices by (|v| desc, idx asc).
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| {
+                data[b].abs().total_cmp(&data[a].abs()).then(a.cmp(&b))
+            });
+            let mut want: Vec<usize> = order[..kk].to_vec();
+            want.sort_unstable();
+            for (j, &wi) in want.iter().enumerate() {
+                let got = wire[1 + j].to_bits() as usize;
+                if got != wi {
+                    return Err(format!("kept index {j}: got {got}, want {wi}"));
+                }
+                if wire[1 + kk + j].to_bits() != data[wi].to_bits() {
+                    return Err(format!("kept value {j} not verbatim"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The EF contract, bitwise: after `encode` folds the residual into the
+/// input (`e = g + r`), the decoded transmission plus the new residual
+/// reconstructs `e` exactly — quantized/dropped mass moves to the
+/// residual, none of it is destroyed. This is the property the
+/// convergence envelope rides on.
+#[test]
+fn prop_error_feedback_reconstructs_input_exactly() {
+    run_prop(
+        "ef-exact-reconstruction",
+        Config { cases: 250, seed: 0xC0DE_C004 },
+        |rng, _| {
+            let codec = match rng.below(3) {
+                0 => Codec::Fp16,
+                1 => Codec::Int8,
+                _ => Codec::TopK { k: 1 + rng.below(8), error_feedback: true },
+            };
+            let n = gen::usize_in(rng, 1, 160);
+            let g = gen::f32_vec(rng, n, 2.0);
+            let r0 = gen::f32_vec(rng, n, 0.25);
+            let mut data = g.clone();
+            let mut res = r0.clone();
+            let mut wire = vec![0.0f32; codec.wire_len(n)];
+            let mut idx = Vec::new();
+            let w = codec.encode(&mut data, Some(&mut res), &mut wire, &mut idx);
+            // `data` now holds the folded input e = g + r0.
+            for i in 0..n {
+                let e = g[i] + r0[i];
+                if data[i].to_bits() != e.to_bits() {
+                    return Err(format!("{codec}: fold at {i}: {} != {e}", data[i]));
+                }
+            }
+            let mut dec = vec![0.0f32; n];
+            codec.decode_add(&wire[..w], &mut dec);
+            for i in 0..n {
+                let recon = dec[i] + res[i];
+                if recon != data[i] {
+                    return Err(format!(
+                        "{codec}: elem {i}: decoded {} + residual {} = {recon} != folded {}",
+                        dec[i], res[i], data[i]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Without error feedback, top-k genuinely destroys the dropped mass:
+/// the decode has at most `k` nonzeros and every transmitted value is
+/// verbatim — the contrast the convergence suite demonstrates.
+#[test]
+fn prop_topk_without_ef_drops_mass() {
+    run_prop(
+        "topk-noef-drops",
+        Config { cases: 100, seed: 0xC0DE_C005 },
+        |rng, _| {
+            let k = 1 + rng.below(6);
+            let codec = Codec::TopK { k, error_feedback: false };
+            let n = gen::usize_in(rng, 20, 200);
+            if codec.is_passthrough(n) {
+                return Ok(());
+            }
+            let data = gen::f32_vec(rng, n, 1.0);
+            let (_, dec) = roundtrip(codec, &data);
+            let nonzero = dec.iter().filter(|v| **v != 0.0).count();
+            if nonzero > k {
+                return Err(format!("{nonzero} nonzeros survived top-{k}"));
+            }
+            for i in 0..n {
+                if dec[i] != 0.0 && dec[i].to_bits() != data[i].to_bits() {
+                    return Err(format!("transmitted value at {i} not verbatim"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Encoding is a pure function of the input: two independent encodes of
+/// the same unit (fresh scratch, fresh index buffers) produce identical
+/// wire bits. This is what lets every rank decode every peer's bucket to
+/// the same sum — replica consistency under compression.
+#[test]
+fn prop_encode_is_deterministic_across_ranks() {
+    run_prop(
+        "encode-determinism",
+        Config { cases: 150, seed: 0xC0DE_C006 },
+        |rng, _| {
+            let codec = lossy_codecs(rng);
+            let n = gen::usize_in(rng, 0, 200);
+            let data = gen::f32_vec(rng, n, 1.5);
+            let (wire_a, dec_a) = roundtrip(codec, &data);
+            let (wire_b, dec_b) = roundtrip(codec, &data);
+            for (j, (a, b)) in wire_a.iter().zip(wire_b.iter()).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("{codec}: wire word {j} differs across encodes"));
+                }
+            }
+            for (i, (a, b)) in dec_a.iter().zip(dec_b.iter()).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("{codec}: decode elem {i} differs"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Degenerate units: empty slices are no-ops, single elements and other
+/// passthrough sizes travel verbatim, and the all-zero unit encodes to
+/// an all-zero decode with a zero residual under every codec.
+#[test]
+fn degenerate_units_are_well_defined() {
+    let codecs = [
+        Codec::Fp16,
+        Codec::Int8,
+        Codec::TopK { k: 3, error_feedback: true },
+        Codec::TopK { k: 3, error_feedback: false },
+    ];
+    for codec in codecs {
+        // Empty unit.
+        let mut empty: [f32; 0] = [];
+        let mut idx = Vec::new();
+        assert_eq!(codec.encode(&mut empty, None, &mut [], &mut idx), 0, "{codec}");
+        codec.decode_add(&[], &mut []);
+
+        // Single element: every codec passes it through raw.
+        assert!(codec.is_passthrough(1), "{codec}");
+        let (_, dec) = roundtrip(codec, &[-3.75]);
+        assert_eq!(dec[0].to_bits(), (-3.75f32).to_bits(), "{codec}");
+
+        // All-zero unit: zero wire values, zero decode, zero residual.
+        let n = 32;
+        let mut data = vec![0.0f32; n];
+        let mut res = vec![0.0f32; n];
+        let mut wire = vec![1.0f32; codec.wire_len(n)];
+        let w = codec.encode(&mut data, Some(&mut res), &mut wire, &mut idx);
+        let mut dec = vec![0.0f32; n];
+        codec.decode_add(&wire[..w], &mut dec);
+        assert!(dec.iter().all(|v| *v == 0.0), "{codec}: zero decode");
+        assert!(res.iter().all(|v| *v == 0.0), "{codec}: zero residual");
+    }
+}
+
+/// Wire-length arithmetic: never longer than raw, passthrough exactly
+/// when encoding would not shrink, and the documented formats at
+/// representative sizes.
+#[test]
+fn prop_wire_len_never_exceeds_raw() {
+    run_prop(
+        "wire-len-bounds",
+        Config { cases: 200, seed: 0xC0DE_C007 },
+        |rng, _| {
+            let codec = lossy_codecs(rng);
+            let n = rng.below(4000);
+            let w = codec.wire_len(n);
+            if w > n {
+                return Err(format!("{codec}: wire {w} exceeds raw {n}"));
+            }
+            if codec.is_passthrough(n) != (codec.encoded_len(n) >= n) {
+                return Err(format!("{codec}: passthrough rule inconsistent at n={n}"));
+            }
+            if codec.wire_bytes(n) != w * 4 {
+                return Err(format!("{codec}: wire_bytes mismatch at n={n}"));
+            }
+            Ok(())
+        },
+    );
+}

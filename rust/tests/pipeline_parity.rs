@@ -25,6 +25,7 @@
 //!    respect the byte cap (splitting oversized tensors via
 //!    `chunk_range`), and appear in back-to-front launch order.
 
+use dtf::codec::Codec;
 use dtf::coordinator::{BucketAlg, BucketPlan, DrainOrder, PipelineEngine};
 use dtf::mpi::compat::ref_allreduce;
 use dtf::mpi::{
@@ -313,6 +314,81 @@ fn prop_bucketed_any_alg_and_drain_bitwise_matches_flat_rd() {
                         return Err(format!(
                             "p={p} sizes={sizes:?} cap={max_bytes}B alg={alg:?} \
                              drain={drain:?} rank={r} i={i}: piped {} vs flat {}",
+                            piped[i], flat[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bucketed_identity_codec_bitwise_matches_flat_rd() {
+    // ISSUE 10 satellite: `--codec identity` must be a true no-op — the
+    // engine bypasses the codec machinery entirely and the bucketed
+    // result stays bitwise identical to the flat blocking reference,
+    // across algorithms, drain orders, and every acceptance world size
+    // p ∈ {2,3,4,8} (swept deterministically before randomizing).
+    run_prop(
+        "bucketed + Codec::Identity == flat rd",
+        Config { cases: 25, seed: 101010 },
+        |rng, case| {
+            let p = match case {
+                0..=3 => [2usize, 3, 4, 8][case],
+                _ => gen::usize_in(rng, 1, 9),
+            };
+            let n_tensors = gen::usize_in(rng, 1, 8);
+            let sizes: Vec<usize> =
+                (0..n_tensors).map(|_| gen::usize_in(rng, 1, 300)).collect();
+            let n: usize = sizes.iter().sum();
+            let max_bytes = gen::usize_in(rng, 4, n * 8);
+            let alg = match rng.below(3) {
+                0 => BucketAlg::Rd,
+                1 => BucketAlg::Rabenseifner,
+                _ => BucketAlg::Auto {
+                    threshold_bytes: Some(gen::usize_in(rng, 4, n * 4)),
+                },
+            };
+            let drain = match rng.below(3) {
+                0 => DrainOrder::Launch,
+                1 => DrainOrder::Priority,
+                _ => DrainOrder::Opportunistic,
+            };
+            let inputs: Vec<Vec<f32>> =
+                (0..p).map(|_| gen::f32_vec(rng, n, 5.0)).collect();
+            let inputs2 = inputs.clone();
+            let sizes2 = sizes.clone();
+            let w = World::new(p, NetProfile::zero());
+            let out = w.run_unwrap(move |c| {
+                let mut ranges = Vec::new();
+                let mut off = 0usize;
+                for &s in &sizes2 {
+                    ranges.push(off..off + s);
+                    off += s;
+                }
+                let mut eng = PipelineEngine::new(BucketPlan::build(&ranges, max_bytes))
+                    .with_alg(alg)
+                    .with_drain(drain)
+                    .with_codec(Codec::Identity);
+                let mut piped = inputs2[c.rank()].clone();
+                eng.allreduce_overlapped(&c, &mut piped, 1e-3)?;
+                let mut flat = inputs2[c.rank()].clone();
+                allreduce_with(
+                    &c,
+                    AllreduceAlgorithm::RecursiveDoubling,
+                    ReduceOp::Sum,
+                    &mut flat,
+                )?;
+                Ok((piped, flat))
+            });
+            for (r, (piped, flat)) in out.iter().enumerate() {
+                for i in 0..n {
+                    if piped[i].to_bits() != flat[i].to_bits() {
+                        return Err(format!(
+                            "p={p} sizes={sizes:?} cap={max_bytes}B alg={alg:?} \
+                             drain={drain:?} rank={r} i={i}: identity-codec {} vs flat {}",
                             piped[i], flat[i]
                         ));
                     }

@@ -12,8 +12,9 @@
 
 use std::sync::Arc;
 
+use dtf::codec::Codec;
 use dtf::coordinator::{
-    run_training, ExecMode, SyncMode, TrainConfig, TrainMode, TrainReport,
+    run_training, ExecMode, SyncMode, SyncStrategy, TrainConfig, TrainMode, TrainReport,
 };
 use dtf::model::ParamSet;
 use dtf::mpi::{AllreduceAlgorithm, NetProfile};
@@ -113,6 +114,106 @@ fn ps_traffic_metrics_are_reported() {
     // The PS stall metric mirrors sync_exposed_s on the worker side.
     let w = report.per_rank.iter().find(|r| !r.is_server).unwrap();
     assert!((w.sync_exposed_s - w.pull_wait_s).abs() < 1e-12);
+}
+
+#[test]
+fn identity_codec_keeps_ps_and_bucketed_digests_pinned() {
+    // ISSUE 10 satellite: `--codec identity` must engage no codec
+    // machinery anywhere — BSP-PS and the bucketed allreduce trainer
+    // still end on the identical bits of the flat rd reference.
+    for (workers, servers) in [(2usize, 1usize), (3, 2), (4, 2)] {
+        let flat = run_flat_rd(workers);
+        let ps = {
+            let cfg = sim_cfg()
+                .with_train_mode(TrainMode::ParameterServer {
+                    servers,
+                    consistency: Consistency::Bsp,
+                })
+                .with_codec(Codec::Identity);
+            run_training(
+                cfg,
+                manifest(),
+                workers + servers,
+                NetProfile::infiniband_fdr(),
+            )
+            .unwrap()
+        };
+        assert_eq!(
+            worker_digest(&flat),
+            worker_digest(&ps),
+            "identity codec perturbed BSP-PS (w={workers}, s={servers})"
+        );
+        let bucketed = {
+            let cfg = sim_cfg()
+                .with_strategy(SyncStrategy::Bucketed { max_bytes: 4096 })
+                .with_codec(Codec::Identity);
+            run_training(cfg, manifest(), workers, NetProfile::infiniband_fdr()).unwrap()
+        };
+        assert_eq!(
+            worker_digest(&flat),
+            worker_digest(&bucketed),
+            "identity codec perturbed the bucketed path (w={workers})"
+        );
+    }
+}
+
+#[test]
+fn lossy_push_codec_stays_deterministic_and_shrinks_push_bytes() {
+    // ISSUE 10: compressed pushes (fp16 here) keep BSP deterministic —
+    // the server decodes every worker's contribution in worker order —
+    // while the reported push_bytes drop to the wire size (~half of
+    // dense for fp16). The digest must *differ* from the dense run:
+    // if it matched, the codec never touched the payload.
+    let dense = run_ps(3, 2, Consistency::Bsp);
+    let fp16 = {
+        let cfg = sim_cfg()
+            .with_train_mode(TrainMode::ParameterServer {
+                servers: 2,
+                consistency: Consistency::Bsp,
+            })
+            .with_codec(Codec::Fp16);
+        run_training(cfg, manifest(), 5, NetProfile::infiniband_fdr()).unwrap()
+    };
+    assert!(
+        fp16.replicas_bitwise_identical(),
+        "compressed BSP must still agree bitwise across workers"
+    );
+    assert_ne!(
+        worker_digest(&dense),
+        worker_digest(&fp16),
+        "fp16 digest equals dense — push codec not engaged?"
+    );
+    let pushed = |r: &TrainReport| -> u64 {
+        r.per_rank
+            .iter()
+            .filter(|x| !x.is_server)
+            .map(|x| x.push_bytes)
+            .sum()
+    };
+    assert!(
+        pushed(&fp16) * 10 <= pushed(&dense) * 6,
+        "fp16 wire accounting: pushed {} vs dense {}",
+        pushed(&fp16),
+        pushed(&dense)
+    );
+
+    // ASP + top-k with a straggler: unbounded staleness, compressed
+    // pushes, and the final sync-pull still lands everyone on one model.
+    let topk = {
+        let cfg = sim_cfg()
+            .with_train_mode(TrainMode::ParameterServer {
+                servers: 1,
+                consistency: Consistency::Asp,
+            })
+            .with_codec(Codec::TopK { k: 64, error_feedback: true })
+            .with_straggler(0, 2.0);
+        run_training(cfg, manifest(), 5, NetProfile::infiniband_fdr()).unwrap()
+    };
+    assert!(topk.replicas_bitwise_identical());
+    for r in topk.per_rank.iter().filter(|r| !r.is_server) {
+        assert!(r.steps > 0);
+        assert!(r.push_bytes > 0);
+    }
 }
 
 #[test]
